@@ -1,0 +1,78 @@
+//! Ablation — Algorithm 1 cost-model terms (DESIGN.md §5): exposed-latency
+//! term only, residency term only, both (default), neither (program
+//! order). Shows both terms are necessary: latency-only prefetches early
+//! (residency up), residency-only prefetches late (stalls), the combined
+//! cost gets both.
+
+use hyperoffload::graph::GraphBuilder;
+use hyperoffload::passes::{compile, prefetch_insert, refine, ExecOrderConfig, OffloadPolicy};
+use hyperoffload::sim::{simulate, HwConfig, MB};
+use hyperoffload::util::table::{f, Table};
+
+fn main() {
+    let hw = HwConfig::ascend910c_like();
+
+    let variants = [
+        ("program order (no Algorithm 1)", None),
+        ("latency term only", Some(ExecOrderConfig { residency_term: false, ..Default::default() })),
+        ("residency term only", Some(ExecOrderConfig { latency_term: false, ..Default::default() })),
+        ("both terms (default)", Some(ExecOrderConfig::default())),
+    ];
+
+    let mut t = Table::new(
+        "ablation — Algorithm 1 cost model terms",
+        &["variant", "makespan ms", "exposed ms", "peak MB", "residency GB*ms", "moved"],
+    );
+
+    for (name, cfg) in variants {
+        // Fresh workload per variant (compile mutates the graph).
+        let (mut g, _) = GraphBuilder::chain_with_remote_weights(16, 4e12, 32 * MB, 300 * MB);
+        let (order, moved) = match &cfg {
+            None => {
+                // Insertion only; simulate the raw topological order.
+                let order = g.topo_order().unwrap();
+                prefetch_insert::run(&mut g, &order, &hw, &OffloadPolicy::default());
+                (g.topo_order().unwrap(), 0)
+            }
+            Some(c) => {
+                let order0 = g.topo_order().unwrap();
+                prefetch_insert::run(&mut g, &order0, &hw, &OffloadPolicy::default());
+                let r = refine(&mut g, &hw, c);
+                (r.order, r.moved)
+            }
+        };
+        let sim = simulate(&g, &order, &hw);
+        t.row(&[
+            name.into(),
+            f(sim.makespan_us / 1e3, 2),
+            f(sim.exposed_comm_us / 1e3, 2),
+            f(sim.peak_device_bytes as f64 / 1e6, 0),
+            f(sim.residency_byte_time() / 1e12, 2),
+            moved.to_string(),
+        ]);
+    }
+    t.print();
+
+    // Alpha/beta sensitivity.
+    let mut t = Table::new(
+        "alpha/beta weight sweep (default alpha=beta=1)",
+        &["alpha", "beta", "makespan ms", "residency GB*ms"],
+    );
+    for (a, b) in [(1.0, 0.01), (1.0, 0.1), (1.0, 1.0), (1.0, 10.0), (0.1, 1.0)] {
+        let (mut g, _) = GraphBuilder::chain_with_remote_weights(16, 4e12, 32 * MB, 300 * MB);
+        let report = compile(
+            &mut g,
+            &hw,
+            &OffloadPolicy::default(),
+            &ExecOrderConfig { alpha: a, beta: b, ..Default::default() },
+        );
+        let sim = simulate(&g, &report.order, &hw);
+        t.row(&[
+            f(a, 2),
+            f(b, 2),
+            f(sim.makespan_us / 1e3, 2),
+            f(sim.residency_byte_time() / 1e12, 2),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,77 @@
+//! Fig. 3 + §3.1 motivation: serial vs runtime-driven prefetching vs
+//! statically-orchestrated (graph-driven) execution on an 8-NPU-node
+//! LLaMA-8B-like inference pass.
+//!
+//! Paper's measurement: baseline 5.5 s; runtime-driven prefetch 15 s
+//! (2.7x slowdown: 9 s unhidden compute+comm, 6.7 s compaction/management).
+//! We reproduce the ORDERING and the ~2-3x slowdown factor of the
+//! runtime-driven path, and show graph-driven scheduling removing it.
+
+use hyperoffload::graph::GraphBuilder;
+use hyperoffload::passes::{compile, ExecOrderConfig, OffloadPolicy};
+use hyperoffload::runtime_sched::{simulate_reactive, ReactiveConfig, ReactiveMode};
+use hyperoffload::sim::{simulate, HwConfig, MB};
+use hyperoffload::util::table::{f, Table};
+
+fn main() {
+    let hw = HwConfig::ascend910c_like();
+
+    // LLaMA-8B-like forward: 32 layers, ~170 ms compute each at this
+    // scale, each streaming a 500 MB weight+KV slice from the pool.
+    let (graph, _) = GraphBuilder::chain_with_remote_weights(32, 55e12, 256 * MB, 500 * MB);
+
+    let baseline = {
+        // "Baseline execution" = weights resident, no pool traffic: pure
+        // compute chain.
+        let g = GraphBuilder::linear_chain(32, 55e12, 256 * MB);
+        let order = g.topo_order().unwrap();
+        simulate(&g, &order, &hw)
+    };
+
+    // Runtime-driven prefetching (the 2.7x configuration): fine-grained
+    // firing with CPU control path on every transfer plus periodic
+    // compaction/management stalls.
+    // Calibrated to the paper's breakdown: §3.1 reports 6.7 s of the 15 s
+    // spent in compaction/system management — ~210 ms per transfer here.
+    let runtime = simulate_reactive(
+        &graph,
+        &ReactiveConfig {
+            mode: ReactiveMode::Prefetch { lookahead: 1 },
+            compaction_every: 1,
+            compaction_us: 210_000.0,
+        },
+        &hw,
+    );
+    let serial = simulate_reactive(&graph, &ReactiveConfig::default(), &hw);
+
+    let mut g = graph.clone();
+    let report = compile(&mut g, &hw, &OffloadPolicy::default(), &ExecOrderConfig::default());
+    let ours = simulate(&g, &report.order, &hw);
+
+    let base_s = baseline.makespan_us / 1e6;
+    let mut t = Table::new(
+        "Fig.3 / §3.1 — execution strategies on the pool-streaming workload",
+        &["strategy", "time s", "vs baseline", "exposed comm s", "bubbles s"],
+    );
+    for (name, r) in [
+        ("baseline (resident)", &baseline),
+        ("serial on-demand (3a)", &serial),
+        ("runtime-driven prefetch (3b)", &runtime),
+        ("HyperOffload static (3c)", &ours),
+    ] {
+        t.row(&[
+            name.into(),
+            f(r.makespan_us / 1e6, 2),
+            format!("{:.2}x", r.makespan_us / 1e6 / base_s),
+            f(r.exposed_comm_us / 1e6, 2),
+            f((r.makespan_us - r.compute_busy_us - r.exposed_comm_us).max(0.0) / 1e6, 2),
+        ]);
+    }
+    t.print();
+    println!(
+        "\npaper: runtime-driven = 2.7x baseline (5.5s -> 15s); ours: {:.2}x. \
+         graph-driven restores {:.2}x.",
+        runtime.makespan_us / baseline.makespan_us,
+        ours.makespan_us / baseline.makespan_us
+    );
+}

@@ -1,0 +1,47 @@
+//! Fig. 6(a) — LLaMA-8B end-to-end training step breakdown vs D2H
+//! bandwidth: exposed D2H, overlapped D2H, and computation/other, against
+//! the 2/2/2 baseline (5200 ms row of Table 1).
+//!
+//! Paper: parity with baseline at the measured 33.6 GB/s; +5.7%–21.5%
+//! improvement over 40–70 GB/s as execution-order optimization hides the
+//! remaining traffic.
+
+use hyperoffload::sim::HwConfig;
+use hyperoffload::training::{baseline_step, hierarchical_step, ModelPreset, ParallelCfg};
+use hyperoffload::util::table::{f, Table};
+
+fn main() {
+    let hw0 = HwConfig::ascend910c_like();
+    let m = ModelPreset::llama8b();
+    let base = baseline_step(&m, &ParallelCfg::llama_no2(), &hw0);
+    let hier_cfg = ParallelCfg::llama_hier();
+
+    println!(
+        "baseline (Table 1 No.2): {:.0} ms | hierarchical layout 8/1/1, batch 2, GBS 16",
+        base.total_ms
+    );
+
+    let mut t = Table::new(
+        "Fig.6(a) — LLaMA-8B step breakdown vs D2H bandwidth",
+        &["D2H GB/s", "exposed D2H ms", "overlapped D2H ms", "compute+other ms",
+          "total ms", "vs baseline", "peak GB"],
+    );
+    for bw in [20.0, 33.6, 40.0, 50.0, 60.0, 70.0] {
+        let s = hierarchical_step(&m, &hier_cfg, &hw0.clone().with_pool_bandwidth(bw));
+        let other = s.total_ms - s.exposed_d2h_ms - s.compute_ms;
+        t.row(&[
+            f(bw, 1),
+            f(s.exposed_d2h_ms, 0),
+            f(s.overlapped_d2h_ms, 0),
+            f(s.compute_ms + other.max(0.0), 0),
+            f(s.total_ms, 0),
+            format!("{:+.1}%", (base.total_ms - s.total_ms) / base.total_ms * 100.0),
+            f(s.peak_bytes / 1e9, 1),
+        ]);
+    }
+    t.print();
+    println!(
+        "\npaper shape: ~parity at 33.6 GB/s, +5.7%..+21.5% at 40-70 GB/s; exposed\n\
+         communication progressively eliminated as bandwidth rises."
+    );
+}

@@ -1,0 +1,48 @@
+//! Fig. 6(b) — DeepSeek-V3 end-to-end training step breakdown vs D2H
+//! bandwidth, against the 2/2/2/4 baseline (Table 2).
+//!
+//! Paper: +2%–12.3% over the bandwidth range; higher compute density means
+//! communication hides more easily than for LLaMA-8B.
+
+use hyperoffload::sim::HwConfig;
+use hyperoffload::training::{baseline_step, hierarchical_step, ModelPreset, ParallelCfg};
+use hyperoffload::util::table::{f, Table};
+
+fn main() {
+    let hw0 = HwConfig::ascend910c_like();
+    let m = ModelPreset::deepseek_v3_like();
+    let base = baseline_step(&m, &ParallelCfg::dsv3_baseline(), &hw0);
+    let hier_cfg = ParallelCfg::dsv3_hier();
+
+    println!(
+        "baseline (Table 2): {:.0} ms | hierarchical layout 8/1/1/4, batch 2, GBS 16",
+        base.total_ms
+    );
+
+    let mut t = Table::new(
+        "Fig.6(b) — DeepSeek-V3 step breakdown vs D2H bandwidth",
+        &["D2H GB/s", "exposed D2H ms", "overlapped D2H ms", "compute+other ms",
+          "total ms", "vs baseline", "peak GB"],
+    );
+    let mut gains = Vec::new();
+    for bw in [20.0, 33.6, 40.0, 50.0, 60.0, 70.0] {
+        let s = hierarchical_step(&m, &hier_cfg, &hw0.clone().with_pool_bandwidth(bw));
+        let other = s.total_ms - s.exposed_d2h_ms - s.compute_ms;
+        let gain = (base.total_ms - s.total_ms) / base.total_ms * 100.0;
+        gains.push(gain);
+        t.row(&[
+            f(bw, 1),
+            f(s.exposed_d2h_ms, 0),
+            f(s.overlapped_d2h_ms, 0),
+            f(s.compute_ms + other.max(0.0), 0),
+            f(s.total_ms, 0),
+            format!("{gain:+.1}%"),
+            f(s.peak_bytes / 1e9, 1),
+        ]);
+    }
+    t.print();
+    println!(
+        "\npaper shape: stable +2%..+12.3% gains across bandwidths (denser compute\n\
+         hides the traffic earlier than LLaMA-8B)."
+    );
+}

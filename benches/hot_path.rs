@@ -1,0 +1,154 @@
+//! Hot-path micro-benchmarks for the §Perf optimization pass: measures the
+//! L3 components that dominate wall-clock so before/after deltas can be
+//! recorded in EXPERIMENTS.md §Perf.
+//!
+//!   1. Algorithm 1 refinement on large graphs (positions x window scan)
+//!   2. simulate() list-scheduling throughput
+//!   3. DeviceAllocator alloc/free churn
+//!   4. serving engine decode iterations
+//!   5. PJRT decode step (real execution), if artifacts exist
+
+use std::time::Instant;
+
+use hyperoffload::graph::GraphBuilder;
+use hyperoffload::passes::{compile, prefetch_insert, refine, ExecOrderConfig, OffloadPolicy};
+use hyperoffload::memory::DeviceAllocator;
+use hyperoffload::serving::{EngineConfig, ModelCost, SimServingEngine, WorkloadConfig};
+use hyperoffload::sim::{simulate, HwConfig, MB};
+use hyperoffload::util::rng::Rng;
+use hyperoffload::util::table::{f, Table};
+
+fn time_it<F: FnMut()>(reps: usize, mut body: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        body();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    let hw = HwConfig::ascend910c_like();
+    let mut t = Table::new("hot-path timings", &["path", "size", "time/op", "derived"]);
+
+    // 1. Algorithm 1 on a large chain.
+    for n in [200usize, 800, 2000] {
+        let secs = time_it(3, || {
+            let (mut g, _) = GraphBuilder::chain_with_remote_weights(n, 4e12, MB, 64 * MB);
+            let order0 = g.topo_order().unwrap();
+            prefetch_insert::run(&mut g, &order0, &hw, &OffloadPolicy::default());
+            let r = refine(&mut g, &hw, &ExecOrderConfig::default());
+            std::hint::black_box(r.order.len());
+        });
+        t.row(&[
+            "Algorithm 1 (insert+refine)".into(),
+            format!("{n} ops"),
+            format!("{:.1} ms", secs * 1e3),
+            format!("{:.2} us/op", secs * 1e6 / n as f64),
+        ]);
+    }
+
+    // 2. Simulator throughput.
+    for n in [500usize, 2000, 8000] {
+        let g = GraphBuilder::linear_chain(n, 1e12, MB);
+        let order = g.topo_order().unwrap();
+        let secs = time_it(5, || {
+            std::hint::black_box(simulate(&g, &order, &hw).makespan_us);
+        });
+        t.row(&[
+            "simulate() list scheduling".into(),
+            format!("{n} ops"),
+            format!("{:.2} ms", secs * 1e3),
+            format!("{:.0} ns/op", secs * 1e9 / n as f64),
+        ]);
+    }
+
+    // 3. Allocator churn.
+    {
+        let secs = time_it(5, || {
+            let mut a = DeviceAllocator::new(1 << 30);
+            let mut rng = Rng::new(1);
+            let mut live = Vec::new();
+            for _ in 0..20_000 {
+                if rng.next_f64() < 0.55 || live.is_empty() {
+                    if let Ok((id, _)) = a.alloc(1 + rng.gen_range(0, 1 << 16)) {
+                        live.push(id);
+                    }
+                } else {
+                    let i = rng.usize(0, live.len());
+                    let id = live.swap_remove(i);
+                    a.free(id).unwrap();
+                }
+            }
+            std::hint::black_box(a.used());
+        });
+        t.row(&[
+            "DeviceAllocator churn".into(),
+            "20k ops".into(),
+            format!("{:.2} ms", secs * 1e3),
+            format!("{:.0} ns/alloc", secs * 1e9 / 20_000.0),
+        ]);
+    }
+
+    // 4. Serving engine decode iterations.
+    {
+        let model = ModelCost::dsv3_nsa_like();
+        let wl = WorkloadConfig::short_sequence(16, 3).generate();
+        let secs = time_it(3, || {
+            let r = SimServingEngine::new(EngineConfig::hierarchical(hw.clone(), model.clone()))
+                .run(wl.clone())
+                .unwrap();
+            std::hint::black_box(r.tokens_generated);
+        });
+        t.row(&[
+            "serving engine (16 reqs)".into(),
+            "sim".into(),
+            format!("{:.1} ms", secs * 1e3),
+            "".into(),
+        ]);
+    }
+
+    // 5. Compile pipeline end-to-end on the training graph.
+    {
+        use hyperoffload::training::{build_step_graph, ModelPreset, ParallelCfg};
+        let secs = time_it(3, || {
+            let mut sg = build_step_graph(&ModelPreset::llama8b(), &ParallelCfg::llama_hier());
+            let report = compile(
+                &mut sg.graph,
+                &hw,
+                &OffloadPolicy { min_bytes: 16 << 20, ..Default::default() },
+                &ExecOrderConfig::default(),
+            );
+            std::hint::black_box(simulate(&sg.graph, &report.order, &hw).makespan_us);
+        });
+        t.row(&[
+            "training step compile+sim".into(),
+            "llama8b".into(),
+            format!("{:.1} ms", secs * 1e3),
+            "".into(),
+        ]);
+    }
+
+    // 6. Real PJRT decode step if artifacts are present.
+    let dir = std::path::PathBuf::from("artifacts");
+    if dir.join("meta.txt").exists() {
+        use hyperoffload::runtime::ModelRuntime;
+        let client = xla::PjRtClient::cpu().unwrap();
+        let model = ModelRuntime::load(&client, &dir).unwrap();
+        let tokens: Vec<i32> = vec![1; model.spec.batch * model.spec.prefill_len];
+        let (logits, kc, vc) = model.run_prefill(&tokens).unwrap();
+        let next = model.argmax_tokens(&logits);
+        let p = model.spec.prefill_len as i32;
+        let secs = time_it(20, || {
+            let (l, _, _) = model.run_decode(&next, p, &kc, &vc).unwrap();
+            std::hint::black_box(l[0]);
+        });
+        t.row(&[
+            "PJRT decode step (real)".into(),
+            format!("B={}", model.spec.batch),
+            format!("{:.2} ms", secs * 1e3),
+            format!("{:.0} tok/s", model.spec.batch as f64 / secs),
+        ]);
+    }
+
+    t.print();
+}

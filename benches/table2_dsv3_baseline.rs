@@ -1,0 +1,41 @@
+//! Table 2 — DeepSeek-V3 training baseline configuration.
+//!
+//! Paper row: 2/2/2/4, batch 1, GBS 16, recompute disabled -> ~2500 ms.
+//! The preset is parameter-scaled to single-SuperNode-slice feasibility
+//! (DESIGN.md §2); the row reports the same breakdown columns.
+
+use hyperoffload::sim::HwConfig;
+use hyperoffload::training::{baseline_step, ModelPreset, ParallelCfg};
+use hyperoffload::util::table::{f, Table};
+
+fn main() {
+    let hw = HwConfig::ascend910c_like();
+    let m = ModelPreset::deepseek_v3_like();
+    let cfg = ParallelCfg::dsv3_baseline();
+    let s = baseline_step(&m, &cfg, &hw);
+
+    let mut t = Table::new(
+        "Table 2 — DeepSeek-V3 baseline configuration",
+        &["DP/TP/PP/EP", "batch", "GBS", "recomp", "compute ms", "comm ms",
+          "stall ms", "total ms", "demand GB", "paper"],
+    );
+    t.row(&[
+        format!("{}/{}/{}/{}", cfg.dp, cfg.tp, cfg.pp, cfg.ep),
+        cfg.micro_batch.to_string(),
+        cfg.gbs.to_string(),
+        if cfg.recompute { "On" } else { "Disabled" }.into(),
+        f(s.compute_ms, 0),
+        f(s.comm_ms, 0),
+        f(s.stall_ms, 0),
+        f(s.total_ms, 0),
+        f(s.demand_bytes / 1e9, 1),
+        "2500 ms".into(),
+    ]);
+    t.print();
+    println!(
+        "\nMoE sanity: active params {:.1}B of {:.0}B total per token ({:.1}%).",
+        m.active_params_per_layer() * m.n_layers as f64 / 1e9,
+        m.params / 1e9,
+        m.active_params_per_layer() * m.n_layers as f64 / m.params * 100.0
+    );
+}

@@ -1,0 +1,63 @@
+//! Table 5 — inference latency breakdown in short-sequence scenarios
+//! (low memory pressure, coarse sparse-block setting).
+//!
+//! Paper: prefill -0.48% (parity), decode 0.117 s -> 0.146 s (-25.47%,
+//! CPU-side sparse block processing), end-to-end 0.15% (negligible).
+
+use hyperoffload::kvcache::NsaConfig;
+use hyperoffload::serving::{EngineConfig, ModelCost, SimServingEngine, WorkloadConfig};
+use hyperoffload::sim::HwConfig;
+use hyperoffload::util::table::{f, pct, Table};
+
+fn main() {
+    let model = ModelCost::dsv3_nsa_like();
+    let mut hw = HwConfig::ascend910c_like();
+    hw.device_capacity = 64_000_000_000;
+
+    // The paper's "unfavourable block-size setting": coarse selection /
+    // sliding blocks inflate host-side block processing.
+    let coarse = NsaConfig::default().coarse(4);
+
+    let wl = WorkloadConfig::short_sequence(24, 3).generate();
+    let base = SimServingEngine::new(EngineConfig::baseline(hw.clone(), model.clone()))
+        .run(wl.clone())
+        .unwrap();
+    let hier = SimServingEngine::new(EngineConfig {
+        nsa: coarse,
+        ..EngineConfig::hierarchical(hw.clone(), model.clone())
+    })
+    .run(wl)
+    .unwrap();
+
+    let mut t = Table::new(
+        "Table 5 — short-sequence latency breakdown (coarse sparse blocks)",
+        &["stage", "baseline", "hierarchical", "change", "paper"],
+    );
+    t.row(&[
+        "prefill latency (s, mean)".into(),
+        f(base.prefill_latency_us.mean / 1e6, 3),
+        f(hier.prefill_latency_us.mean / 1e6, 3),
+        pct(hier.prefill_latency_us.mean, base.prefill_latency_us.mean),
+        "-0.48%".into(),
+    ]);
+    t.row(&[
+        "decode latency (s/token)".into(),
+        f(base.decode_per_token_us.mean / 1e6, 4),
+        f(hier.decode_per_token_us.mean / 1e6, 4),
+        pct(hier.decode_per_token_us.mean, base.decode_per_token_us.mean),
+        "-25.47% (0.117 -> 0.146)".into(),
+    ]);
+    t.row(&[
+        "end-to-end latency (s, mean)".into(),
+        f(base.e2e_latency_us.mean / 1e6, 3),
+        f(hier.e2e_latency_us.mean / 1e6, 3),
+        pct(hier.e2e_latency_us.mean, base.e2e_latency_us.mean),
+        "0.15%".into(),
+    ]);
+    t.print();
+    println!(
+        "\nnote: the paper reports the slowdown as negative change; decode overhead\n\
+         comes from CPU-side partial KV updates on coarse blocks, e2e stays ~flat\n\
+         because prefill dominates short-sequence requests."
+    );
+}

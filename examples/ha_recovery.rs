@@ -1,0 +1,54 @@
+//! High-availability case: failure injection comparing checkpoint-based
+//! recovery against SuperNode pool-resident state re-attachment (the
+//! paper's cluster-level availability claim, §7.1 baseline (c)).
+//!
+//! Run: `cargo run --release --example ha_recovery`
+
+use hyperoffload::ha::{
+    checkpoint_recovery_s, failure_campaign, pool_recovery_s, CheckpointCfg, StateFootprint,
+};
+use hyperoffload::sim::{HwConfig, GB};
+use hyperoffload::util::table::{f, Table};
+
+fn main() {
+    let hw = HwConfig::ascend910c_like();
+    let state = StateFootprint { weights: 16 * GB, optimizer: 8 * GB };
+    let cfg = CheckpointCfg::default();
+
+    // Single-failure anatomy at three points in the checkpoint interval.
+    let mut t = Table::new(
+        "single failure: recovery anatomy (LLaMA-8B states, 24 GB)",
+        &["failure at step (since ckpt)", "checkpoint path (s)", "pool path (s)"],
+    );
+    for since in [10u64, 250, 490] {
+        t.row(&[
+            since.to_string(),
+            f(checkpoint_recovery_s(state, &cfg, since), 1),
+            f(pool_recovery_s(state, &hw, cfg.restart_overhead_s), 1),
+        ]);
+    }
+    t.print();
+
+    // Campaign: 200 failures uniform over the interval.
+    let r = failure_campaign(state, &cfg, &hw, 200, 2026);
+    let mut t = Table::new(
+        "failure campaign (200 injected failures)",
+        &["metric", "checkpoint", "pool-resident"],
+    );
+    t.row(&[
+        "mean recovery (s)".into(),
+        f(r.mean_ckpt_recovery_s, 1),
+        f(r.mean_pool_recovery_s, 1),
+    ]);
+    t.row(&[
+        "training steps lost".into(),
+        r.total_lost_steps_ckpt.to_string(),
+        r.total_lost_steps_pool.to_string(),
+    ]);
+    t.row(&[
+        "speedup".into(),
+        "1.0x".into(),
+        format!("{:.1}x", r.mean_ckpt_recovery_s / r.mean_pool_recovery_s),
+    ]);
+    t.print();
+}

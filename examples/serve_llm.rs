@@ -1,0 +1,82 @@
+//! End-to-end driver (deliverable (b) / DESIGN.md §6): load the real
+//! AOT-compiled transformer and serve batched requests through the
+//! coordinator, baseline vs hierarchical KV policy, reporting latency and
+//! throughput. All three layers compose here: the Pallas decode-attention
+//! kernel (L1) is inside the jax-lowered decode step (L2), executed from
+//! the rust coordinator (L3) via PJRT.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_llm`
+
+use hyperoffload::coordinator::{Coordinator, ServeConfig};
+use hyperoffload::kvcache::KvPolicy;
+use hyperoffload::util::table::{f, Table};
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()),
+    );
+    if !dir.join("meta.txt").exists() {
+        anyhow::bail!("artifacts not found in {} — run `make artifacts`", dir.display());
+    }
+
+    let mut rows = Vec::new();
+    for (name, policy) in [
+        ("baseline (KV all-device)", KvPolicy::AllDevice),
+        ("hierarchical (KV offload)", KvPolicy::FullOffload),
+    ] {
+        let cfg = ServeConfig {
+            n_requests: 16,
+            gen_tokens: 48,
+            kv_policy: policy,
+            ..ServeConfig::new(dir.clone())
+        };
+        let coord = Coordinator::load(&cfg.artifacts_dir, cfg.kv_policy)?;
+        if rows.is_empty() {
+            let s = &coord.model.spec;
+            println!(
+                "model: {} layers, d={}, {} heads, vocab={}, batch={}, max_seq={}, kv_block={}",
+                s.n_layers, s.d_model, s.n_heads, s.vocab, s.batch, s.max_seq, s.kv_block
+            );
+        }
+        let r = coord.serve(&cfg)?;
+        println!(
+            "[{name}] sample generation: {:?}",
+            &r.sample_tokens[..r.sample_tokens.len().min(12)]
+        );
+        rows.push((name, r));
+    }
+
+    let mut t = Table::new(
+        "real-execution serving: baseline vs hierarchical (PJRT CPU)",
+        &[
+            "policy",
+            "requests",
+            "prefill ms",
+            "decode ms/step",
+            "tok/s",
+            "KV moved MB",
+            "KV device peak MB",
+        ],
+    );
+    for (name, r) in &rows {
+        t.row(&[
+            name.to_string(),
+            r.requests.to_string(),
+            f(r.prefill_ms.mean, 1),
+            f(r.decode_step_ms.mean, 2),
+            f(r.throughput_tok_s, 1),
+            f(r.kv_transfer_bytes as f64 / 1e6, 1),
+            f(r.kv_device_peak as f64 / 1e6, 2),
+        ]);
+    }
+    t.print();
+
+    // The two policies must generate IDENTICAL tokens — offload changes
+    // residency, never values.
+    assert_eq!(
+        rows[0].1.sample_tokens, rows[1].1.sample_tokens,
+        "offload changed model outputs!"
+    );
+    println!("\ntoken streams identical across policies ✓ (offload is value-transparent)");
+    Ok(())
+}

@@ -1,0 +1,162 @@
+"""AOT: lower the L2 model to HLO *text* artifacts for the rust runtime.
+
+Two gotchas drive this file's shape (see /opt/xla-example/README.md and
+DESIGN.md §3):
+
+1. HLO text (NOT ``.serialize()``) is the interchange format: jax >= 0.5
+   emits HloModuleProto with 64-bit instruction ids which xla_extension
+   0.5.1 (what the published ``xla`` 0.1.6 crate links) rejects
+   (``proto.id() <= INT_MAX``). The text parser reassigns ids.
+
+2. ``as_hlo_text()`` ELIDES large constants (``constant({...})``), so
+   weights must NOT be baked into the HLO via closure capture — they are
+   passed as runtime parameters and exported to ``weights.bin`` (raw f32
+   little-endian, concatenated in jax tree-flatten order) with the order
+   recorded in ``meta.txt``. The rust runtime reconstructs the argument
+   list from that manifest.
+
+Outputs (under --out-dir, default ../artifacts):
+  prefill.hlo.txt       (params..., tokens[B,P]) -> (logits, k_cache, v_cache)
+  decode.hlo.txt        (params..., token, pos, k_cache, v_cache) -> (logits, k', v')
+  attn_kernel.hlo.txt   standalone Pallas decode-attention (microbench)
+  weights.bin           concatenated f32 LE leaves
+  meta.txt / meta.json  config + weight manifest (txt for rust, json for humans)
+  golden_*.bin          test vectors: rust integration tests compare against
+                        python-computed logits for seeded inputs
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile.model import DEFAULT_CONFIG, decode_step, init_params, prefill
+from compile.kernels.attention import decode_attention_batched
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(fn, example_args, path):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    # Guard against silent constant elision: any '{...}' in the text means a
+    # large constant got baked in and its values were dropped.
+    assert "constant({...})" not in text.replace(" ", ""), (
+        f"{path}: large constant elided — weights leaked into the graph"
+    )
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text) / 1e6:.2f} MB)")
+    return text
+
+
+def flat_leaves(params):
+    """Leaves with dotted names, in the exact order jax.jit flattens them."""
+    paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    out = []
+    for kp, leaf in paths:
+        name = ".".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        out.append((name, np.asarray(leaf, np.float32)))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--seed", type=int, default=42)
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    cfg = DEFAULT_CONFIG
+    params = init_params(cfg, args.seed)
+    b, p, s = cfg.batch, cfg.prefill_len, cfg.max_seq
+    l, h, dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    cache = jax.ShapeDtypeStruct((l, b, h, s, dh), jnp.float32)
+    pshape = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+
+    def prefill_fn(params, tokens):
+        return prefill(params, cfg, tokens)
+
+    def decode_fn(params, token, pos, k_cache, v_cache):
+        return decode_step(params, cfg, token, pos, k_cache, v_cache)
+
+    emit(prefill_fn,
+         (pshape, jax.ShapeDtypeStruct((b, p), jnp.int32)),
+         os.path.join(out, "prefill.hlo.txt"))
+
+    emit(decode_fn,
+         (pshape, jax.ShapeDtypeStruct((b,), jnp.int32),
+          jax.ShapeDtypeStruct((), jnp.int32), cache, cache),
+         os.path.join(out, "decode.hlo.txt"))
+
+    emit(functools.partial(decode_attention_batched, block_s=cfg.kv_block),
+         (jax.ShapeDtypeStruct((b, h, 1, dh), jnp.float32),
+          jax.ShapeDtypeStruct((b, h, s, dh), jnp.float32),
+          jax.ShapeDtypeStruct((b, h, s, dh), jnp.float32),
+          jax.ShapeDtypeStruct((b, s), jnp.float32)),
+         os.path.join(out, "attn_kernel.hlo.txt"))
+
+    # --- weights in tree-flatten order (== jit parameter order) ---
+    leaves = flat_leaves(params)
+    with open(os.path.join(out, "weights.bin"), "wb") as f:
+        for _, arr in leaves:
+            f.write(arr.tobytes())
+    total = sum(a.size for _, a in leaves)
+    print(f"wrote weights.bin ({total} f32, {total * 4 / 1e6:.1f} MB, "
+          f"{len(leaves)} leaves)")
+
+    # --- golden vectors for the rust integration tests ---
+    rng = np.random.RandomState(7)
+    tokens = rng.randint(1, cfg.vocab, size=(b, p)).astype(np.int32)
+    g_logits, kc, vc = jax.jit(prefill_fn)(params, tokens)
+    nxt = jnp.argmax(g_logits, -1).astype(jnp.int32)
+    d_logits, _, _ = jax.jit(decode_fn)(params, nxt, jnp.int32(p), kc, vc)
+    np.asarray(tokens).tofile(os.path.join(out, "golden_tokens.bin"))
+    np.asarray(g_logits, np.float32).tofile(
+        os.path.join(out, "golden_prefill_logits.bin"))
+    np.asarray(nxt, np.int32).tofile(os.path.join(out, "golden_next_token.bin"))
+    np.asarray(d_logits, np.float32).tofile(
+        os.path.join(out, "golden_decode_logits.bin"))
+    print("wrote golden vectors")
+
+    # --- manifests ---
+    meta = {
+        "vocab": cfg.vocab, "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+        "n_layers": cfg.n_layers, "d_ff": cfg.d_ff, "max_seq": cfg.max_seq,
+        "prefill_len": cfg.prefill_len, "batch": cfg.batch,
+        "kv_block": cfg.kv_block, "head_dim": cfg.head_dim, "seed": args.seed,
+        "n_weights": len(leaves),
+        "weights": [{"name": n, "numel": int(a.size),
+                     "shape": list(a.shape)} for n, a in leaves],
+    }
+    with open(os.path.join(out, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    with open(os.path.join(out, "meta.txt"), "w") as f:
+        for k in ("vocab", "d_model", "n_heads", "n_layers", "d_ff",
+                  "max_seq", "prefill_len", "batch", "kv_block", "head_dim",
+                  "seed", "n_weights"):
+            f.write(f"{k}={meta[k]}\n")
+        for n, a in leaves:
+            shape = ",".join(str(d) for d in a.shape)
+            f.write(f"weight {n} {a.size} {shape}\n")
+    print("wrote meta.txt / meta.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""L1: Pallas blocked decode-attention kernel.
+
+This is the compute hot-spot of the serving path: one query token attends
+over a blocked KV cache. The KV blocking granularity (``block_s``) is the
+SAME granularity at which the rust KV-cache manager offloads blocks to the
+remote pool, so the HBM<->VMEM schedule expressed by the BlockSpec grid
+mirrors HyperOffload's Remote<->Device block schedule (DESIGN.md §4).
+
+Hardware adaptation (paper targets Ascend NPU tiles): we tile KV into
+``(block_s, head_dim)`` VMEM-resident blocks via BlockSpec and run an
+online-softmax (flash) accumulation across the sequential grid — the TPU
+analogue of the paper's per-tile DMA prefetch pipeline. ``interpret=True``
+is mandatory: real-TPU lowering emits a Mosaic custom-call the CPU PJRT
+plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, m_ref, l_ref, *, scale):
+    """One (head, kv-block) grid step of online-softmax decode attention.
+
+    Shapes inside the kernel (leading head dim blocked to 1):
+      q_ref:    (1, 1, D)   query for this head
+      k_ref:    (1, B, D)   one KV block
+      v_ref:    (1, B, D)
+      bias_ref: (B,)        additive mask (0 or -inf) for this block
+      o_ref:    (1, 1, D)   output accumulator (revisited across blocks)
+      m_ref:    (1, 1)      running max     (revisited)
+      l_ref:    (1, 1)      running denom   (revisited)
+    """
+    blk = pl.program_id(1)
+
+    q = q_ref[0].astype(jnp.float32)          # (1, D)
+    k = k_ref[0].astype(jnp.float32)          # (B, D)
+    v = v_ref[0].astype(jnp.float32)          # (B, D)
+    bias = bias_ref[...].astype(jnp.float32)  # (B,)
+
+    # scores for this block: (1, B)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale + bias[None, :]
+
+    @pl.when(blk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    m_prev = m_ref[...]                        # (1, 1)
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)  # (1, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+
+    p = jnp.exp(s - m_new)                     # (1, B)
+    alpha = jnp.exp(m_prev - m_new)            # (1, 1)
+
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc = o_ref[0].astype(jnp.float32) * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+    # Final block: normalise.
+    @pl.when(blk == pl.num_programs(1) - 1)
+    def _finalize():
+        o_ref[0] = (o_ref[0].astype(jnp.float32) / l_ref[...]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, bias, *, block_s=32):
+    """Blocked decode attention for a single sequence.
+
+    Args:
+      q:    (H, 1, D) query for the current token.
+      k:    (H, S, D) key cache (padded to max seq S).
+      v:    (H, S, D) value cache.
+      bias: (S,) additive mask, 0 for valid positions, -inf for padding.
+      block_s: KV block size; must divide S. This is the offload granule.
+
+    Returns:
+      (H, 1, D) attention output.
+    """
+    h, s, d = k.shape
+    assert s % block_s == 0, f"S={s} not divisible by block_s={block_s}"
+    nblk = s // block_s
+    scale = 1.0 / (d ** 0.5)
+
+    grid = (h, nblk)
+    out, _, _ = pl.pallas_call(
+        functools.partial(_decode_attn_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda hh, bb: (hh, 0, 0)),
+            pl.BlockSpec((1, block_s, d), lambda hh, bb: (hh, bb, 0)),
+            pl.BlockSpec((1, block_s, d), lambda hh, bb: (hh, bb, 0)),
+            pl.BlockSpec((block_s,), lambda hh, bb: (bb,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, d), lambda hh, bb: (hh, 0, 0)),
+            pl.BlockSpec((1, 1), lambda hh, bb: (hh, 0)),
+            pl.BlockSpec((1, 1), lambda hh, bb: (hh, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, 1, d), q.dtype),
+            jax.ShapeDtypeStruct((h, 1), jnp.float32),
+            jax.ShapeDtypeStruct((h, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, bias)
+    return out
+
+
+def decode_attention_batched(q, k, v, bias, *, block_s=32):
+    """vmap over batch: q (B,H,1,D), k/v (B,H,S,D), bias (B,S) -> (B,H,1,D)."""
+    return jax.vmap(
+        functools.partial(decode_attention, block_s=block_s)
+    )(q, k, v, bias)

@@ -1,0 +1,25 @@
+"""Pure-jnp correctness oracle for the Pallas decode-attention kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, bias):
+    """Reference decode attention.
+
+    q: (H, 1, D), k/v: (H, S, D), bias: (S,) additive -> (H, 1, D)
+    """
+    scale = 1.0 / (k.shape[-1] ** 0.5)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("hqd,hkd->hqk", qf, kf) * scale + bias[None, None, :]
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("hqk,hkd->hqd", p, vf)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref_batched(q, k, v, bias):
+    """q (B,H,1,D), k/v (B,H,S,D), bias (B,S) -> (B,H,1,D)."""
+    return jax.vmap(decode_attention_ref)(q, k, v, bias)

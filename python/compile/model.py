@@ -1,0 +1,202 @@
+"""L2: tiny transformer (prefill + decode step) in JAX, calling the L1 kernel.
+
+The model is the real-compute substrate for the end-to-end serving example:
+rust loads the lowered HLO and drives batched autoregressive decoding while
+the HyperOffload coordinator manages KV-block residency. Weights are seeded
+and baked into the HLO as constants so the artifact is self-contained (the
+rust side passes only tokens / position / caches).
+
+Architecture: pre-RMSNorm decoder, MHA with the Pallas blocked decode
+attention kernel on the decode path, SiLU MLP. All shapes static for AOT.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import decode_attention_batched
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 512
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 512
+    max_seq: int = 128       # S: KV cache capacity (padded)
+    prefill_len: int = 32    # P: static prompt length
+    batch: int = 4           # B: static batch for the AOT executable
+    kv_block: int = 32       # Pallas KV block == offload granule
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+
+DEFAULT_CONFIG = ModelConfig()
+
+
+def init_params(cfg: ModelConfig, seed: int = 42):
+    """Seeded parameter pytree (dict of arrays)."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 2 + cfg.n_layers)
+    scale = 0.02
+    params = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * scale,
+        "unembed": jax.random.normal(keys[1], (cfg.d_model, cfg.vocab)) * scale,
+        "final_norm": jnp.ones((cfg.d_model,)),
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(keys[2 + i], 7)
+        d, f = cfg.d_model, cfg.d_ff
+        params["layers"].append({
+            "attn_norm": jnp.ones((d,)),
+            "wq": jax.random.normal(lk[0], (d, d)) * scale,
+            "wk": jax.random.normal(lk[1], (d, d)) * scale,
+            "wv": jax.random.normal(lk[2], (d, d)) * scale,
+            "wo": jax.random.normal(lk[3], (d, d)) * scale,
+            "mlp_norm": jnp.ones((d,)),
+            "w_up": jax.random.normal(lk[4], (d, f)) * scale,
+            "w_gate": jax.random.normal(lk[5], (d, f)) * scale,
+            "w_down": jax.random.normal(lk[6], (f, d)) * scale,
+        })
+    return params
+
+
+def _rms_norm(x, w, eps=1e-6):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _split_heads(x, cfg):
+    # (B, T, d) -> (B, H, T, Dh)
+    b, t, _ = x.shape
+    return x.reshape(b, t, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    # (B, H, T, Dh) -> (B, T, d)
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def _mlp(x, lp):
+    return (jax.nn.silu(x @ lp["w_gate"]) * (x @ lp["w_up"])) @ lp["w_down"]
+
+
+def prefill(params, cfg: ModelConfig, tokens):
+    """Process a padded prompt, build KV caches.
+
+    tokens: (B, P) int32 (pad id 0; full P positions are attended causally —
+    the serving layer pads prompts and tracks true lengths itself).
+    Returns (logits[B, V] for the last position, k_cache, v_cache) where
+    caches are (L, B, H, S, Dh), positions >= P zero-filled.
+    """
+    b, p = tokens.shape
+    s = cfg.max_seq
+    x = params["embed"][tokens]  # (B, P, d)
+
+    causal = jnp.tril(jnp.ones((p, p), jnp.float32))
+    mask = jnp.where(causal == 1.0, 0.0, -1e30)
+
+    k_cache = jnp.zeros((cfg.n_layers, b, cfg.n_heads, s, cfg.head_dim), jnp.float32)
+    v_cache = jnp.zeros_like(k_cache)
+
+    scale = 1.0 / (cfg.head_dim ** 0.5)
+    for li, lp in enumerate(params["layers"]):
+        h = _rms_norm(x, lp["attn_norm"])
+        q = _split_heads(h @ lp["wq"], cfg)   # (B, H, P, Dh)
+        k = _split_heads(h @ lp["wk"], cfg)
+        v = _split_heads(h @ lp["wv"], cfg)
+
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k[None], (li, 0, 0, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v[None], (li, 0, 0, 0, 0))
+
+        sc = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale + mask[None, None]
+        pr = jax.nn.softmax(sc, axis=-1)
+        att = jnp.einsum("bhqk,bhkd->bhqd", pr, v)
+        x = x + _merge_heads(att) @ lp["wo"]
+        x = x + _mlp(_rms_norm(x, lp["mlp_norm"]), lp)
+
+    x = _rms_norm(x, params["final_norm"])
+    logits = x[:, -1, :] @ params["unembed"]  # (B, V)
+    return logits, k_cache, v_cache
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, k_cache, v_cache):
+    """One autoregressive decode step over blocked KV caches.
+
+    token: (B,) int32 current tokens; pos: () int32 write position (same for
+    the whole batch — the serving layer aligns batches); caches (L,B,H,S,Dh).
+    Returns (logits[B, V], k_cache', v_cache').
+    """
+    b = token.shape[0]
+    s = cfg.max_seq
+    x = params["embed"][token][:, None, :]  # (B, 1, d)
+
+    # Valid keys are 0..pos inclusive (the new token's k/v is written at pos).
+    bias = jnp.where(jnp.arange(s) <= pos, 0.0, -1e30).astype(jnp.float32)
+    bias_b = jnp.broadcast_to(bias, (b, s))
+
+    for li, lp in enumerate(params["layers"]):
+        h = _rms_norm(x, lp["attn_norm"])
+        q = _split_heads(h @ lp["wq"], cfg)   # (B, H, 1, Dh)
+        k = _split_heads(h @ lp["wk"], cfg)   # (B, H, 1, Dh)
+        v = _split_heads(h @ lp["wv"], cfg)
+
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k[None], (li, 0, 0, pos, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v[None], (li, 0, 0, pos, 0))
+
+        # L1 Pallas kernel over the blocked KV cache.
+        att = decode_attention_batched(
+            q, k_cache[li], v_cache[li], bias_b, block_s=cfg.kv_block)
+        x = x + _merge_heads(att) @ lp["wo"]
+        x = x + _mlp(_rms_norm(x, lp["mlp_norm"]), lp)
+
+    x = _rms_norm(x, params["final_norm"])
+    logits = x[:, 0, :] @ params["unembed"]  # (B, V)
+    return logits, k_cache, v_cache
+
+
+def decode_step_ref(params, cfg: ModelConfig, token, pos, k_cache, v_cache):
+    """decode_step with the pure-jnp attention oracle (for pytest)."""
+    from compile.kernels.ref import decode_attention_ref_batched
+
+    b = token.shape[0]
+    s = cfg.max_seq
+    x = params["embed"][token][:, None, :]
+    bias = jnp.where(jnp.arange(s) <= pos, 0.0, -1e30).astype(jnp.float32)
+    bias_b = jnp.broadcast_to(bias, (b, s))
+    for li, lp in enumerate(params["layers"]):
+        h = _rms_norm(x, lp["attn_norm"])
+        q = _split_heads(h @ lp["wq"], cfg)
+        k = _split_heads(h @ lp["wk"], cfg)
+        v = _split_heads(h @ lp["wv"], cfg)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k[None], (li, 0, 0, pos, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v[None], (li, 0, 0, pos, 0))
+        att = decode_attention_ref_batched(q, k_cache[li], v_cache[li], bias_b)
+        x = x + _merge_heads(att) @ lp["wo"]
+        x = x + _mlp(_rms_norm(x, lp["mlp_norm"]), lp)
+    x = _rms_norm(x, params["final_norm"])
+    return x[:, 0, :] @ params["unembed"], k_cache, v_cache
+
+
+def make_jit_fns(cfg: ModelConfig = DEFAULT_CONFIG, seed: int = 42):
+    """Return (prefill_fn, decode_fn, params) with params baked by closure.
+
+    Closing over params bakes the weights into the lowered HLO as constants:
+    the artifact is self-contained and rust never handles weight tensors.
+    """
+    params = init_params(cfg, seed)
+
+    def prefill_fn(tokens):
+        return prefill(params, cfg, tokens)
+
+    def decode_fn(token, pos, k_cache, v_cache):
+        return decode_step(params, cfg, token, pos, k_cache, v_cache)
+
+    return prefill_fn, decode_fn, params

@@ -1,0 +1,144 @@
+"""Kernel vs ref allclose — the CORE correctness signal for L1.
+
+Hypothesis sweeps shapes/dtypes per the project test policy.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import decode_attention, decode_attention_batched
+from compile.kernels.ref import decode_attention_ref, decode_attention_ref_batched
+
+
+def _mk(h, s, d, seed, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (h, 1, d), dtype)
+    k = jax.random.normal(ks[1], (h, s, d), dtype)
+    v = jax.random.normal(ks[2], (h, s, d), dtype)
+    return q, k, v
+
+
+def _bias(s, length):
+    return jnp.where(jnp.arange(s) < length, 0.0, -1e30).astype(jnp.float32)
+
+
+class TestDecodeAttentionBasic:
+    def test_matches_ref_full_length(self):
+        q, k, v = _mk(4, 128, 32, 0)
+        bias = _bias(128, 128)
+        out = decode_attention(q, k, v, bias)
+        ref = decode_attention_ref(q, k, v, bias)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_matches_ref_partial_length(self):
+        q, k, v = _mk(4, 128, 32, 1)
+        bias = _bias(128, 77)
+        np.testing.assert_allclose(
+            decode_attention(q, k, v, bias),
+            decode_attention_ref(q, k, v, bias),
+            rtol=2e-5, atol=2e-5)
+
+    def test_single_valid_position(self):
+        """length=1: attention must return exactly v[:, 0]."""
+        q, k, v = _mk(2, 64, 16, 2)
+        bias = _bias(64, 1)
+        out = decode_attention(q, k, v, bias)
+        np.testing.assert_allclose(out[:, 0], v[:, 0], rtol=1e-5, atol=1e-5)
+
+    def test_length_at_block_boundary(self):
+        q, k, v = _mk(2, 128, 32, 3)
+        for length in (32, 64, 96):
+            bias = _bias(128, length)
+            np.testing.assert_allclose(
+                decode_attention(q, k, v, bias),
+                decode_attention_ref(q, k, v, bias),
+                rtol=2e-5, atol=2e-5)
+
+    def test_block_size_invariance(self):
+        """Result must not depend on the offload granule."""
+        q, k, v = _mk(4, 128, 32, 4)
+        bias = _bias(128, 100)
+        outs = [decode_attention(q, k, v, bias, block_s=bs) for bs in (16, 32, 64, 128)]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=2e-5, atol=2e-5)
+
+    def test_rejects_indivisible_block(self):
+        q, k, v = _mk(2, 100, 16, 5)
+        with pytest.raises(AssertionError):
+            decode_attention(q, k, v, _bias(100, 50), block_s=32)
+
+    def test_softmax_scale_invariance_shift(self):
+        """Adding a constant to all scores must not change the output."""
+        q, k, v = _mk(2, 64, 16, 6)
+        bias0 = _bias(64, 64)
+        out0 = decode_attention(q, k, v, bias0)
+        out1 = decode_attention(q, k, v, bias0 + 3.0)
+        np.testing.assert_allclose(out0, out1, rtol=1e-4, atol=1e-4)
+
+    def test_batched_matches_per_sequence(self):
+        b, h, s, d = 3, 4, 64, 16
+        ks = jax.random.split(jax.random.PRNGKey(7), 3)
+        q = jax.random.normal(ks[0], (b, h, 1, d))
+        k = jax.random.normal(ks[1], (b, h, s, d))
+        v = jax.random.normal(ks[2], (b, h, s, d))
+        bias = jnp.stack([_bias(s, 10 * (i + 1)) for i in range(b)])
+        out = decode_attention_batched(q, k, v, bias)
+        for i in range(b):
+            np.testing.assert_allclose(
+                out[i], decode_attention(q[i], k[i], v[i], bias[i]),
+                rtol=2e-5, atol=2e-5)
+
+
+class TestDecodeAttentionHypothesis:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        h=st.sampled_from([1, 2, 4, 8]),
+        nblk=st.integers(1, 4),
+        d=st.sampled_from([8, 16, 32, 64]),
+        block_s=st.sampled_from([16, 32]),
+        length_frac=st.floats(0.05, 1.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_shapes_sweep(self, h, nblk, d, block_s, length_frac, seed):
+        s = nblk * block_s
+        length = max(1, int(s * length_frac))
+        q, k, v = _mk(h, s, d, seed)
+        bias = _bias(s, length)
+        out = decode_attention(q, k, v, bias, block_s=block_s)
+        ref = decode_attention_ref(q, k, v, bias)
+        np.testing.assert_allclose(out, ref, rtol=3e-5, atol=3e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        dtype=st.sampled_from(["float32", "bfloat16"]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_dtype_sweep(self, dtype, seed):
+        dt = jnp.dtype(dtype)
+        q, k, v = _mk(2, 64, 16, seed, dt)
+        bias = _bias(64, 50)
+        out = decode_attention(q, k, v, bias)
+        ref = decode_attention_ref(q, k, v, bias)
+        tol = 5e-2 if dtype == "bfloat16" else 3e-5
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            rtol=tol, atol=tol)
+        assert out.dtype == dt
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        scale=st.floats(0.01, 30.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_magnitude_sweep_numerical_stability(self, scale, seed):
+        """Online softmax must stay stable across score magnitudes."""
+        q, k, v = _mk(2, 64, 16, seed)
+        q = q * scale
+        bias = _bias(64, 64)
+        out = decode_attention(q, k, v, bias)
+        ref = decode_attention_ref(q, k, v, bias)
+        assert np.isfinite(np.asarray(out)).all()
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)

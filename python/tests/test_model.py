@@ -1,0 +1,106 @@
+"""L2 model tests: shapes, decode-vs-ref, prefill/decode cache consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    DEFAULT_CONFIG, ModelConfig, decode_step, decode_step_ref,
+    init_params, prefill,
+)
+
+CFG = ModelConfig(vocab=64, d_model=32, n_heads=2, n_layers=2, d_ff=64,
+                  max_seq=64, prefill_len=8, batch=2, kv_block=16)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, seed=0)
+
+
+class TestShapes:
+    def test_prefill_shapes(self, params):
+        tokens = jnp.zeros((CFG.batch, CFG.prefill_len), jnp.int32)
+        logits, kc, vc = prefill(params, CFG, tokens)
+        assert logits.shape == (CFG.batch, CFG.vocab)
+        assert kc.shape == (CFG.n_layers, CFG.batch, CFG.n_heads, CFG.max_seq, CFG.head_dim)
+        assert vc.shape == kc.shape
+
+    def test_decode_shapes(self, params):
+        cache = jnp.zeros((CFG.n_layers, CFG.batch, CFG.n_heads, CFG.max_seq, CFG.head_dim))
+        tok = jnp.zeros((CFG.batch,), jnp.int32)
+        logits, kc, vc = decode_step(params, CFG, tok, jnp.int32(0), cache, cache)
+        assert logits.shape == (CFG.batch, CFG.vocab)
+        assert kc.shape == cache.shape
+
+
+class TestCorrectness:
+    def test_decode_matches_ref(self, params):
+        """Pallas decode path == pure-jnp oracle path end-to-end."""
+        cache = jax.random.normal(
+            jax.random.PRNGKey(1),
+            (CFG.n_layers, CFG.batch, CFG.n_heads, CFG.max_seq, CFG.head_dim)) * 0.1
+        tok = jnp.array([3, 7], jnp.int32)
+        pos = jnp.int32(10)
+        lo, ko, vo = decode_step(params, CFG, tok, pos, cache, cache)
+        lr, kr, vr = decode_step_ref(params, CFG, tok, pos, cache, cache)
+        np.testing.assert_allclose(lo, lr, rtol=5e-5, atol=5e-5)
+        np.testing.assert_allclose(ko, kr, rtol=5e-5, atol=5e-5)
+        np.testing.assert_allclose(vo, vr, rtol=5e-5, atol=5e-5)
+
+    def test_decode_writes_cache_at_pos(self, params):
+        cache = jnp.zeros((CFG.n_layers, CFG.batch, CFG.n_heads, CFG.max_seq, CFG.head_dim))
+        tok = jnp.array([5, 9], jnp.int32)
+        pos = 7
+        _, kc, vc = decode_step(params, CFG, tok, jnp.int32(pos), cache, cache)
+        # Written exactly at pos, zero elsewhere.
+        assert float(jnp.abs(kc[:, :, :, pos]).sum()) > 0
+        mask = jnp.ones(CFG.max_seq, bool).at[pos].set(False)
+        assert float(jnp.abs(kc[:, :, :, mask]).sum()) == 0.0
+
+    def test_prefill_then_decode_consistent_with_full_prefill(self, params):
+        """Decoding token t after prefill(0..t-1) must match prefilling 0..t
+        (greedy continuation consistency)."""
+        p = CFG.prefill_len
+        tokens = jax.random.randint(jax.random.PRNGKey(2), (CFG.batch, p), 0, CFG.vocab)
+        logits_a, kc, vc = prefill(params, CFG, tokens)
+        nxt = jnp.argmax(logits_a, -1).astype(jnp.int32)
+        logits_b, _, _ = decode_step(params, CFG, nxt, jnp.int32(p), kc, vc)
+
+        # Full prefill over p+1 tokens (config with longer prefill_len).
+        tokens2 = jnp.concatenate([tokens, nxt[:, None]], axis=1)
+        logits_c, _, _ = prefill(params, CFG, tokens2)
+        np.testing.assert_allclose(logits_b, logits_c, rtol=1e-4, atol=1e-4)
+
+    def test_decode_deterministic(self, params):
+        cache = jnp.zeros((CFG.n_layers, CFG.batch, CFG.n_heads, CFG.max_seq, CFG.head_dim))
+        tok = jnp.array([1, 2], jnp.int32)
+        l1, _, _ = decode_step(params, CFG, tok, jnp.int32(0), cache, cache)
+        l2, _, _ = decode_step(params, CFG, tok, jnp.int32(0), cache, cache)
+        np.testing.assert_array_equal(l1, l2)
+
+    def test_params_seeded_reproducible(self):
+        p1 = init_params(CFG, seed=123)
+        p2 = init_params(CFG, seed=123)
+        np.testing.assert_array_equal(p1["embed"], p2["embed"])
+        p3 = init_params(CFG, seed=124)
+        assert not np.array_equal(p1["embed"], p3["embed"])
+
+
+class TestAotLowering:
+    def test_decode_lowers_to_hlo_text(self):
+        """The exact artifact path: jit -> stablehlo -> XlaComputation -> text."""
+        from compile.aot import to_hlo_text
+        from compile.model import make_jit_fns
+
+        cfg = CFG
+        _, decode_fn, _ = make_jit_fns(cfg, seed=0)
+        cache = jax.ShapeDtypeStruct(
+            (cfg.n_layers, cfg.batch, cfg.n_heads, cfg.max_seq, cfg.head_dim), jnp.float32)
+        lowered = jax.jit(decode_fn).lower(
+            jax.ShapeDtypeStruct((cfg.batch,), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32), cache, cache)
+        text = to_hlo_text(lowered)
+        assert "HloModule" in text
+        assert "ROOT" in text

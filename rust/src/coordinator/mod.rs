@@ -1,0 +1,169 @@
+//! L3 coordinator: ties the runtime (real PJRT execution), the KV-cache
+//! manager, and the serving metrics together — the process a deployment
+//! would actually run. The `hyperoffload` binary and `examples/serve_llm`
+//! drive this.
+//!
+//! Real compute, modelled memory: token generation runs the AOT-compiled
+//! transformer on the PJRT CPU client; KV residency/transfer timing is
+//! accounted by the same hierarchical-memory model the benches use (the
+//! CPU host has no NPU HBM to fragment — DESIGN.md §2 records the
+//! substitution).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::kvcache::{KvCacheManager, KvPolicy, NsaConfig};
+use crate::runtime::ModelRuntime;
+use crate::serving::{stats, Stats};
+use crate::sim::{HwConfig, GB};
+use crate::util::rng::Rng;
+
+/// Configuration for a real-execution serving run.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub artifacts_dir: std::path::PathBuf,
+    /// Total requests to serve (waves of the artifact's static batch).
+    pub n_requests: usize,
+    /// Tokens to generate per request.
+    pub gen_tokens: usize,
+    /// KV residency policy (AllDevice baseline vs FullOffload).
+    pub kv_policy: KvPolicy,
+    pub seed: u64,
+}
+
+impl ServeConfig {
+    pub fn new(artifacts_dir: impl Into<std::path::PathBuf>) -> Self {
+        Self {
+            artifacts_dir: artifacts_dir.into(),
+            n_requests: 16,
+            gen_tokens: 32,
+            kv_policy: KvPolicy::FullOffload,
+            seed: 7,
+        }
+    }
+}
+
+/// Outcome of a real serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub waves: usize,
+    pub prefill_ms: Stats,
+    pub decode_step_ms: Stats,
+    pub tokens_generated: u64,
+    pub wall_ms: f64,
+    pub throughput_tok_s: f64,
+    /// Modelled KV transfer volume (bytes) under the chosen policy.
+    pub kv_transfer_bytes: u64,
+    /// Modelled device-side KV footprint peak (bytes).
+    pub kv_device_peak: u64,
+    /// Sample of generated token ids (first sequence) for smoke checking.
+    pub sample_tokens: Vec<i32>,
+}
+
+/// The coordinator: owns the compiled model and the KV manager.
+pub struct Coordinator {
+    pub model: ModelRuntime,
+    pub kv: KvCacheManager,
+    pub hw: HwConfig,
+}
+
+impl Coordinator {
+    pub fn load(artifacts_dir: &Path, kv_policy: KvPolicy) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let model = ModelRuntime::load(&client, artifacts_dir)
+            .with_context(|| format!("loading artifacts from {}", artifacts_dir.display()))?;
+        let hw = HwConfig::ascend910c_like();
+        let nsa = NsaConfig {
+            block_tokens: model.spec.kv_block,
+            num_selected: 2,
+            sliding_tokens: model.spec.kv_block,
+            ..Default::default()
+        };
+        let kv = KvCacheManager::new(
+            kv_policy,
+            nsa,
+            model.spec.kv_bytes_per_token(),
+            GB, // device KV budget for the toy model
+        );
+        Ok(Self { model, kv, hw })
+    }
+
+    /// Serve `cfg.n_requests` requests in waves of the static batch size,
+    /// greedy decoding, measuring real execution latencies.
+    pub fn serve(mut self, cfg: &ServeConfig) -> Result<ServeReport> {
+        let spec = self.model.spec.clone();
+        let b = spec.batch;
+        let p = spec.prefill_len;
+        let gen = cfg.gen_tokens.min(spec.max_seq - p - 1);
+        let waves = cfg.n_requests.div_ceil(b);
+
+        let mut rng = Rng::new(cfg.seed);
+        let mut prefill_ms = Vec::new();
+        let mut decode_ms = Vec::new();
+        let mut kv_transfer = 0u64;
+        let mut sample_tokens = Vec::new();
+        let t0 = Instant::now();
+        let mut total_tokens = 0u64;
+
+        for wave in 0..waves {
+            // Seeded prompts (vocab ids 1..V, 0 is pad).
+            let tokens: Vec<i32> = (0..b * p)
+                .map(|_| rng.gen_range(1, spec.vocab as u64) as i32)
+                .collect();
+
+            // Admit sequences to the KV manager.
+            for s in 0..b {
+                let seq = (wave * b + s) as u64;
+                let admit = self.kv.admit(seq, p, &self.hw)?;
+                kv_transfer += admit.d2r_bytes + admit.r2d_bytes;
+            }
+
+            // Real prefill.
+            let tp = Instant::now();
+            let (logits, mut kc, mut vc) = self.model.run_prefill(&tokens)?;
+            prefill_ms.push(tp.elapsed().as_secs_f64() * 1e3);
+
+            let mut next = self.model.argmax_tokens(&logits);
+            // Greedy decode loop.
+            for step in 0..gen {
+                let pos = (p + step) as i32;
+                let td = Instant::now();
+                let (logits, kc2, vc2) = self.model.run_decode(&next, pos, &kc, &vc)?;
+                decode_ms.push(td.elapsed().as_secs_f64() * 1e3);
+                kc = kc2;
+                vc = vc2;
+                next = self.model.argmax_tokens(&logits);
+                if wave == 0 {
+                    sample_tokens.push(next[0]);
+                }
+                for s in 0..b {
+                    let seq = (wave * b + s) as u64;
+                    let c = self.kv.decode_step(seq, &self.hw)?;
+                    kv_transfer += c.r2d_bytes + c.d2r_bytes;
+                }
+                total_tokens += b as u64;
+            }
+
+            for s in 0..b {
+                self.kv.retire((wave * b + s) as u64)?;
+            }
+        }
+
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        Ok(ServeReport {
+            requests: waves * b,
+            waves,
+            prefill_ms: stats(&prefill_ms),
+            decode_step_ms: stats(&decode_ms),
+            tokens_generated: total_tokens,
+            wall_ms,
+            throughput_tok_s: total_tokens as f64 / (wall_ms / 1e3),
+            kv_transfer_bytes: kv_transfer,
+            kv_device_peak: self.kv.peak_device_kv,
+            sample_tokens,
+        })
+    }
+}

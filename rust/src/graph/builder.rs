@@ -1,0 +1,147 @@
+//! Convenience builders for common graph shapes (tests, benches, examples).
+
+use super::graph::Graph;
+use super::op::{OpId, OpKind};
+use super::tensor::{TensorId, Tier};
+
+/// Fluent builder over [`Graph`] for synthetic workloads.
+pub struct GraphBuilder {
+    pub graph: Graph,
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        Self { graph: Graph::new() }
+    }
+
+    pub fn tensor(&mut self, name: &str, bytes: u64, home: Tier) -> TensorId {
+        self.graph.add_tensor(name, bytes, home)
+    }
+
+    pub fn compute(
+        &mut self,
+        name: &str,
+        flops: f64,
+        bytes_accessed: u64,
+        inputs: Vec<TensorId>,
+        outputs: Vec<TensorId>,
+    ) -> OpId {
+        self.graph.add_op(name, OpKind::Compute { flops, bytes_accessed }, inputs, outputs)
+    }
+
+    pub fn prefetch(&mut self, name: &str, t: TensorId) -> OpId {
+        self.graph.add_op(name, OpKind::Prefetch { tensor: t }, vec![t], vec![])
+    }
+
+    pub fn store(&mut self, name: &str, t: TensorId) -> OpId {
+        self.graph.add_op(name, OpKind::Store { tensor: t }, vec![t], vec![])
+    }
+
+    pub fn detach(&mut self, name: &str, t: TensorId) -> OpId {
+        self.graph.add_op(name, OpKind::Detach { tensor: t }, vec![t], vec![])
+    }
+
+    pub fn collective(&mut self, name: &str, bytes: u64, deps: Vec<TensorId>) -> OpId {
+        self.graph.add_op(name, OpKind::Collective { bytes }, deps, vec![])
+    }
+
+    pub fn host(&mut self, name: &str, us: f64) -> OpId {
+        self.graph.add_op(name, OpKind::HostWork { us }, vec![], vec![])
+    }
+
+    pub fn dep(&mut self, op: OpId, dep: OpId) {
+        self.graph.add_control_dep(op, dep);
+    }
+
+    pub fn build(self) -> Graph {
+        self.graph
+    }
+
+    /// A linear chain of `n` compute ops (`op_i` consumes `t_{i-1}`,
+    /// produces `t_i`), each with the given cost — the simplest pipeline
+    /// for overlap experiments.
+    pub fn linear_chain(n: usize, flops: f64, act_bytes: u64) -> Graph {
+        let mut b = GraphBuilder::new();
+        let mut prev: Option<TensorId> = None;
+        for i in 0..n {
+            let out = b.tensor(&format!("act.{i}"), act_bytes, Tier::Device);
+            let inputs = prev.map(|t| vec![t]).unwrap_or_default();
+            b.compute(&format!("op.{i}"), flops, act_bytes, inputs, vec![out]);
+            prev = Some(out);
+        }
+        b.build()
+    }
+
+    /// A chain where every op additionally consumes one remote-resident
+    /// weight tensor — the canonical "weights streamed from the memory
+    /// pool" workload of Figure 4. Returns (graph, weight tensor ids).
+    pub fn chain_with_remote_weights(
+        n: usize,
+        flops: f64,
+        act_bytes: u64,
+        weight_bytes: u64,
+    ) -> (Graph, Vec<TensorId>) {
+        let mut b = GraphBuilder::new();
+        let mut prev: Option<TensorId> = None;
+        let mut weights = Vec::with_capacity(n);
+        for i in 0..n {
+            let w = b.tensor(&format!("w.{i}"), weight_bytes, Tier::Remote);
+            weights.push(w);
+            let out = b.tensor(&format!("act.{i}"), act_bytes, Tier::Device);
+            let mut inputs = vec![w];
+            if let Some(t) = prev {
+                inputs.push(t);
+            }
+            b.compute(&format!("op.{i}"), flops, act_bytes, inputs, vec![out]);
+            prev = Some(out);
+        }
+        (b.build(), weights)
+    }
+}
+
+impl Default for GraphBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_chain_shape() {
+        let g = GraphBuilder::linear_chain(5, 1e9, 1024);
+        assert_eq!(g.ops.len(), 5);
+        assert_eq!(g.tensors.len(), 5);
+        let order = g.topo_order().unwrap();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn chain_with_remote_weights_shape() {
+        let (g, ws) = GraphBuilder::chain_with_remote_weights(3, 1e9, 64, 4096);
+        assert_eq!(ws.len(), 3);
+        assert_eq!(g.ops.len(), 3);
+        for &w in &ws {
+            assert_eq!(g.tensor(w).home, Tier::Remote);
+            assert_eq!(g.consumers_of(w).len(), 1);
+        }
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn builder_cache_ops_validate() {
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 1 << 20, Tier::Remote);
+        let x = b.tensor("x", 64, Tier::Device);
+        let pf = b.prefetch("pf.w", w);
+        let c = b.compute("mm", 1e6, 64, vec![w], vec![x]);
+        b.dep(c, pf);
+        let st = b.store("st.x", x);
+        b.dep(st, c);
+        let g = b.build();
+        assert!(g.validate().is_ok());
+        assert_eq!(g.cache_ops().len(), 2);
+    }
+}

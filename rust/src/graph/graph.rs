@@ -1,0 +1,324 @@
+//! The computation graph: ops + tensors + dependency structure.
+//!
+//! Dependency edges come from two sources: data (producer → consumer through
+//! a tensor) and explicit control deps (wired by compiler passes around
+//! cache operators). The *relative order of independent operators is
+//! unspecified* — exactly the freedom Algorithm 1 exploits (§4.3).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::op::{Op, OpId, OpKind};
+use super::tensor::{TensorId, TensorInfo, Tier};
+
+/// A computation graph with first-class cache operators.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub ops: Vec<Op>,
+    pub tensors: Vec<TensorInfo>,
+    /// producer[t] = op producing tensor t (graph inputs have none).
+    producer: HashMap<TensorId, OpId>,
+    /// consumers[t] = ops reading tensor t, in insertion order.
+    consumers: HashMap<TensorId, Vec<OpId>>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a tensor; returns its id.
+    pub fn add_tensor(&mut self, name: impl Into<String>, bytes: u64, home: Tier) -> TensorId {
+        let id = self.tensors.len();
+        self.tensors.push(TensorInfo::new(id, name, bytes, home));
+        id
+    }
+
+    /// Append an op; data edges are derived from `inputs`/`outputs`.
+    pub fn add_op(
+        &mut self,
+        name: impl Into<String>,
+        kind: OpKind,
+        inputs: Vec<TensorId>,
+        outputs: Vec<TensorId>,
+    ) -> OpId {
+        let id = self.ops.len();
+        for &t in &inputs {
+            debug_assert!(t < self.tensors.len(), "input tensor {t} unknown");
+            self.consumers.entry(t).or_default().push(id);
+        }
+        for &t in &outputs {
+            debug_assert!(t < self.tensors.len(), "output tensor {t} unknown");
+            let prev = self.producer.insert(t, id);
+            debug_assert!(prev.is_none(), "tensor {t} produced twice");
+        }
+        self.ops.push(Op { id, name: name.into(), kind, inputs, outputs, control_deps: vec![] });
+        id
+    }
+
+    /// Add an explicit ordering edge `dep → op`.
+    pub fn add_control_dep(&mut self, op: OpId, dep: OpId) {
+        if !self.ops[op].control_deps.contains(&dep) {
+            self.ops[op].control_deps.push(dep);
+        }
+    }
+
+    pub fn op(&self, id: OpId) -> &Op {
+        &self.ops[id]
+    }
+
+    pub fn tensor(&self, id: TensorId) -> &TensorInfo {
+        &self.tensors[id]
+    }
+
+    pub fn producer_of(&self, t: TensorId) -> Option<OpId> {
+        self.producer.get(&t).copied()
+    }
+
+    pub fn consumers_of(&self, t: TensorId) -> &[OpId] {
+        self.consumers.get(&t).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// All dependency predecessors of `op` (data producers + control deps).
+    pub fn preds(&self, op: OpId) -> Vec<OpId> {
+        let o = &self.ops[op];
+        let mut out: Vec<OpId> = o
+            .inputs
+            .iter()
+            .filter_map(|t| self.producer_of(*t))
+            .collect();
+        out.extend(o.control_deps.iter().copied());
+        out.sort_unstable();
+        out.dedup();
+        out.retain(|&p| p != op);
+        out
+    }
+
+    /// All dependency successors of `op`.
+    pub fn succs(&self, op: OpId) -> Vec<OpId> {
+        let mut out = Vec::new();
+        for t in &self.ops[op].outputs {
+            out.extend(self.consumers_of(*t));
+        }
+        for other in &self.ops {
+            if other.control_deps.contains(&op) {
+                out.push(other.id);
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out.retain(|&s| s != op);
+        out
+    }
+
+    /// Deterministic topological order (Kahn; ties broken by smallest id,
+    /// i.e. insertion order — the "program order" a framework would emit).
+    pub fn topo_order(&self) -> Result<Vec<OpId>> {
+        let n = self.ops.len();
+        let mut indeg = vec![0usize; n];
+        let mut succs: Vec<Vec<OpId>> = vec![Vec::new(); n];
+        for op in &self.ops {
+            for p in self.preds(op.id) {
+                indeg[op.id] += 1;
+                succs[p].push(op.id);
+            }
+        }
+        let mut heap = std::collections::BinaryHeap::new();
+        for (i, &d) in indeg.iter().enumerate() {
+            if d == 0 {
+                heap.push(std::cmp::Reverse(i));
+            }
+        }
+        let mut order = Vec::with_capacity(n);
+        while let Some(std::cmp::Reverse(u)) = heap.pop() {
+            order.push(u);
+            for &v in &succs[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    heap.push(std::cmp::Reverse(v));
+                }
+            }
+        }
+        if order.len() != n {
+            bail!("graph has a dependency cycle ({} of {} ops ordered)", order.len(), n);
+        }
+        Ok(order)
+    }
+
+    /// Check that `order` is a permutation of all ops respecting every
+    /// dependency edge. This is the invariant Algorithm 1 must preserve —
+    /// property-tested in rust/tests/.
+    pub fn is_valid_order(&self, order: &[OpId]) -> bool {
+        if order.len() != self.ops.len() {
+            return false;
+        }
+        let mut pos = vec![usize::MAX; self.ops.len()];
+        for (i, &o) in order.iter().enumerate() {
+            if o >= self.ops.len() || pos[o] != usize::MAX {
+                return false; // out of range or duplicate
+            }
+            pos[o] = i;
+        }
+        for op in &self.ops {
+            for p in self.preds(op.id) {
+                if pos[p] >= pos[op.id] {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Structural sanity checks (used by tests and the pass manager).
+    pub fn validate(&self) -> Result<()> {
+        for op in &self.ops {
+            for &t in op.inputs.iter().chain(op.outputs.iter()) {
+                if t >= self.tensors.len() {
+                    bail!("op {} ({}) references unknown tensor {t}", op.id, op.name);
+                }
+            }
+            if let Some(t) = op.kind.cache_tensor() {
+                if !op.inputs.contains(&t) {
+                    bail!("cache op {} ({}) must list its tensor {t} as input", op.id, op.name);
+                }
+            }
+            for &d in &op.control_deps {
+                if d >= self.ops.len() {
+                    bail!("op {} control-dep on unknown op {d}", op.id);
+                }
+            }
+        }
+        self.topo_order().map(|_| ())
+    }
+
+    /// Ids of all cache operators.
+    pub fn cache_ops(&self) -> Vec<OpId> {
+        self.ops.iter().filter(|o| o.kind.is_cache_op()).map(|o| o.id).collect()
+    }
+
+    /// First consumer of a cache op's tensor *after* the cache op in
+    /// `order` — "u ← first consumer of c" in Algorithm 1.
+    pub fn first_consumer_after(&self, cache_op: OpId, order: &[OpId]) -> Option<OpId> {
+        let t = self.ops[cache_op].kind.cache_tensor()?;
+        let mut pos = vec![usize::MAX; self.ops.len()];
+        for (i, &o) in order.iter().enumerate() {
+            pos[o] = i;
+        }
+        // Consumers via data edge, or via control dep on the cache op.
+        let mut candidates: Vec<OpId> = self
+            .consumers_of(t)
+            .iter()
+            .copied()
+            .filter(|&c| c != cache_op && !self.ops[c].kind.is_cache_op())
+            .collect();
+        for other in &self.ops {
+            if other.control_deps.contains(&cache_op) && !other.kind.is_cache_op() {
+                candidates.push(other.id);
+            }
+        }
+        candidates.retain(|&c| pos[c] > pos[cache_op]);
+        candidates.into_iter().min_by_key(|&c| pos[c])
+    }
+
+    /// Total bytes of all tensors whose home tier is `tier`.
+    pub fn bytes_in_tier(&self, tier: Tier) -> u64 {
+        self.tensors.iter().filter(|t| t.home == tier).map(|t| t.bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Graph {
+        // a -> (b, c) -> d
+        let mut g = Graph::new();
+        let t0 = g.add_tensor("t0", 8, Tier::Device);
+        let t1 = g.add_tensor("t1", 8, Tier::Device);
+        let t2 = g.add_tensor("t2", 8, Tier::Device);
+        let t3 = g.add_tensor("t3", 8, Tier::Device);
+        g.add_op("a", OpKind::Compute { flops: 1.0, bytes_accessed: 8 }, vec![], vec![t0]);
+        g.add_op("b", OpKind::Compute { flops: 1.0, bytes_accessed: 8 }, vec![t0], vec![t1]);
+        g.add_op("c", OpKind::Compute { flops: 1.0, bytes_accessed: 8 }, vec![t0], vec![t2]);
+        g.add_op("d", OpKind::Compute { flops: 1.0, bytes_accessed: 8 }, vec![t1, t2], vec![t3]);
+        g
+    }
+
+    #[test]
+    fn topo_order_respects_deps() {
+        let g = diamond();
+        let order = g.topo_order().unwrap();
+        assert!(g.is_valid_order(&order));
+        assert_eq!(order[0], 0);
+        assert_eq!(order[3], 3);
+    }
+
+    #[test]
+    fn invalid_orders_rejected() {
+        let g = diamond();
+        assert!(!g.is_valid_order(&[3, 1, 2, 0])); // d before a
+        assert!(!g.is_valid_order(&[0, 1, 2]));    // missing op
+        assert!(!g.is_valid_order(&[0, 1, 1, 3])); // duplicate
+    }
+
+    #[test]
+    fn control_deps_enter_ordering() {
+        let mut g = diamond();
+        // force c before b
+        g.add_control_dep(1, 2);
+        let order = g.topo_order().unwrap();
+        let pos = |o: OpId| order.iter().position(|&x| x == o).unwrap();
+        assert!(pos(2) < pos(1));
+        assert!(g.is_valid_order(&order));
+        assert!(!g.is_valid_order(&[0, 1, 2, 3]));
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = diamond();
+        g.add_control_dep(0, 3); // a after d -> cycle
+        assert!(g.topo_order().is_err());
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn preds_and_succs() {
+        let g = diamond();
+        assert_eq!(g.preds(3), vec![1, 2]);
+        assert_eq!(g.succs(0), vec![1, 2]);
+        assert!(g.preds(0).is_empty());
+    }
+
+    #[test]
+    fn cache_ops_listed_and_first_consumer_found() {
+        let mut g = Graph::new();
+        let w = g.add_tensor("w", 1024, Tier::Remote);
+        let x = g.add_tensor("x", 64, Tier::Device);
+        let y = g.add_tensor("y", 64, Tier::Device);
+        let pf = g.add_op("pf.w", OpKind::Prefetch { tensor: w }, vec![w], vec![]);
+        let c0 = g.add_op("mm0", OpKind::Compute { flops: 1.0, bytes_accessed: 64 }, vec![], vec![x]);
+        let c1 = g.add_op("mm1", OpKind::Compute { flops: 1.0, bytes_accessed: 64 }, vec![x, w], vec![y]);
+        g.add_control_dep(c1, pf);
+        let order = g.topo_order().unwrap();
+        assert_eq!(g.cache_ops(), vec![pf]);
+        assert_eq!(g.first_consumer_after(pf, &order), Some(c1));
+        assert!(g.validate().is_ok());
+        let _ = c0;
+    }
+
+    #[test]
+    fn validate_rejects_cache_op_without_tensor_input() {
+        let mut g = Graph::new();
+        let w = g.add_tensor("w", 1024, Tier::Remote);
+        g.add_op("pf.bad", OpKind::Prefetch { tensor: w }, vec![], vec![]);
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn bytes_in_tier_sums() {
+        let g = diamond();
+        assert_eq!(g.bytes_in_tier(Tier::Device), 32);
+        assert_eq!(g.bytes_in_tier(Tier::Remote), 0);
+    }
+}

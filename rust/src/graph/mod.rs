@@ -1,0 +1,17 @@
+//! HyperOffload computation-graph IR (the paper's "MindIR" analogue).
+//!
+//! Cache operators — `Prefetch`, `Store`, `Detach` — are first-class nodes
+//! (§4.2.1): they participate in dependency inference and topological
+//! ordering, and the execution-order pass (Algorithm 1) schedules them like
+//! any other op. See DESIGN.md §3.
+
+mod builder;
+#[allow(clippy::module_inception)]
+mod graph;
+mod op;
+mod tensor;
+
+pub use builder::GraphBuilder;
+pub use graph::Graph;
+pub use op::{Op, OpId, OpKind};
+pub use tensor::{TensorId, TensorInfo, Tier};

@@ -1,0 +1,102 @@
+//! Operators in the HyperOffload IR.
+//!
+//! The paper's key move (§4.2): cache operations are *first-class graph
+//! nodes*, peers of compute operators — not runtime side effects. `Prefetch`,
+//! `Store` and `Detach` therefore appear here next to `Compute`, participate
+//! in dependency inference and topological ordering, and are scheduled by
+//! the same execution-order machinery.
+
+use super::tensor::TensorId;
+
+/// Index of an op inside its [`Graph`](super::Graph).
+pub type OpId = usize;
+
+/// What an operator does, and which execution stream it occupies.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Device computation (MXU/vector work). Runs on the compute stream.
+    Compute {
+        /// Floating-point work, drives the roofline cost model.
+        flops: f64,
+        /// HBM traffic (bytes read+written), the other roofline axis.
+        bytes_accessed: u64,
+    },
+    /// Remote → Device transfer of `tensor` (asynchronous DMA-in).
+    /// Correctness: completion must precede the first consumer (§4.2.1).
+    Prefetch { tensor: TensorId },
+    /// Device → Remote transfer of `tensor` (asynchronous DMA-out); device
+    /// residency is released at completion (§4.2.1).
+    Store { tensor: TensorId },
+    /// Release device residency of `tensor` without a transfer (§4.2.1).
+    Detach { tensor: TensorId },
+    /// Inter-device collective (TP/PP/EP traffic). Runs on the network
+    /// stream.
+    Collective { bytes: u64 },
+    /// CPU-side control work (runtime-driven scheduling overhead, sparse
+    /// block processing). Runs on the host stream.
+    HostWork { us: f64 },
+}
+
+impl OpKind {
+    /// True for the paper's cache operators (`Prefetch`/`Store`/`Detach`).
+    pub fn is_cache_op(&self) -> bool {
+        matches!(self, OpKind::Prefetch { .. } | OpKind::Store { .. } | OpKind::Detach { .. })
+    }
+
+    /// True for transfer ops that move bytes across the device boundary.
+    pub fn is_transfer(&self) -> bool {
+        matches!(self, OpKind::Prefetch { .. } | OpKind::Store { .. })
+    }
+
+    /// The tensor a cache operator manages, if any.
+    pub fn cache_tensor(&self) -> Option<TensorId> {
+        match self {
+            OpKind::Prefetch { tensor } | OpKind::Store { tensor } | OpKind::Detach { tensor } => {
+                Some(*tensor)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// A node in the computation graph.
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub id: OpId,
+    pub name: String,
+    pub kind: OpKind,
+    /// Tensors read. For cache ops this is the managed tensor.
+    pub inputs: Vec<TensorId>,
+    /// Tensors produced. Compute outputs materialise in their home tier.
+    pub outputs: Vec<TensorId>,
+    /// Explicit ordering edges beyond data dependencies (what the prefetch
+    /// insertion pass wires between cache ops and consumers).
+    pub control_deps: Vec<OpId>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_op_classification() {
+        assert!(OpKind::Prefetch { tensor: 0 }.is_cache_op());
+        assert!(OpKind::Store { tensor: 0 }.is_cache_op());
+        assert!(OpKind::Detach { tensor: 0 }.is_cache_op());
+        assert!(!OpKind::Compute { flops: 1.0, bytes_accessed: 1 }.is_cache_op());
+        assert!(!OpKind::Collective { bytes: 8 }.is_cache_op());
+    }
+
+    #[test]
+    fn transfer_classification() {
+        assert!(OpKind::Prefetch { tensor: 1 }.is_transfer());
+        assert!(OpKind::Store { tensor: 1 }.is_transfer());
+        assert!(!OpKind::Detach { tensor: 1 }.is_transfer());
+    }
+
+    #[test]
+    fn cache_tensor_extraction() {
+        assert_eq!(OpKind::Prefetch { tensor: 7 }.cache_tensor(), Some(7));
+        assert_eq!(OpKind::HostWork { us: 1.0 }.cache_tensor(), None);
+    }
+}

@@ -1,0 +1,57 @@
+//! Tensors in the HyperOffload computation-graph IR.
+//!
+//! A tensor is a logical value with a size and a *home tier*: where it lives
+//! when no cache operator has moved it. Cache operators (`Prefetch`, `Store`,
+//! `Detach`) change its *residency* at execution time; the home tier only
+//! decides the initial placement the memory planner assumes.
+
+/// Index of a tensor inside its [`Graph`](super::Graph).
+pub type TensorId = usize;
+
+/// Memory tier in the SuperNode hierarchy (DESIGN.md §2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tier {
+    /// On-device HBM — fast, scarce.
+    Device,
+    /// SuperNode shared memory pool reached over the Unified-Bus-like link.
+    Remote,
+    /// Host DRAM (staging tier; the paper's H2R/R2H primitives touch it).
+    Host,
+}
+
+/// Static description of a tensor in the graph.
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    pub id: TensorId,
+    pub name: String,
+    /// Payload size in bytes; drives transfer cost and residency accounting.
+    pub bytes: u64,
+    /// Tier the tensor materialises in when produced.
+    pub home: Tier,
+}
+
+impl TensorInfo {
+    pub fn new(id: TensorId, name: impl Into<String>, bytes: u64, home: Tier) -> Self {
+        Self { id, name: name.into(), bytes, home }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_info_fields() {
+        let t = TensorInfo::new(3, "act.7", 4096, Tier::Device);
+        assert_eq!(t.id, 3);
+        assert_eq!(t.bytes, 4096);
+        assert_eq!(t.home, Tier::Device);
+        assert_eq!(t.name, "act.7");
+    }
+
+    #[test]
+    fn tier_equality() {
+        assert_ne!(Tier::Device, Tier::Remote);
+        assert_eq!(Tier::Host, Tier::Host);
+    }
+}

@@ -1,0 +1,147 @@
+//! High availability at cluster level (the paper's third contribution:
+//! "ensures high availability at the cluster level").
+//!
+//! With model states resident in the SuperNode shared pool, a failed
+//! device's replacement re-attaches to pool-resident weights/optimizer
+//! states over the Unified Bus, instead of re-reading a checkpoint from
+//! cold storage and replaying lost steps. This module models both recovery
+//! paths and the failure-injection comparison the `ha_recovery` example
+//! runs.
+
+use crate::sim::HwConfig;
+use crate::util::rng::Rng;
+
+/// Checkpoint-based recovery parameters (the §7.1 baseline: "traditional
+/// checkpoint-based mechanisms").
+#[derive(Debug, Clone)]
+pub struct CheckpointCfg {
+    /// Cold-storage read bandwidth (GB/s) — object store / parallel fs.
+    pub storage_gbps: f64,
+    /// Steps between checkpoints.
+    pub interval_steps: u64,
+    /// Seconds per training step (to cost replay).
+    pub step_time_s: f64,
+    /// Fixed orchestration overhead (restart, process group rebuild) (s).
+    pub restart_overhead_s: f64,
+}
+
+impl Default for CheckpointCfg {
+    fn default() -> Self {
+        Self { storage_gbps: 5.0, interval_steps: 500, step_time_s: 5.2, restart_overhead_s: 60.0 }
+    }
+}
+
+/// One device's state footprint (bytes) that recovery must restore.
+#[derive(Debug, Clone, Copy)]
+pub struct StateFootprint {
+    pub weights: u64,
+    pub optimizer: u64,
+}
+
+impl StateFootprint {
+    pub fn total(&self) -> u64 {
+        self.weights + self.optimizer
+    }
+}
+
+/// Recovery time via checkpoint reload + replay of lost steps.
+///
+/// `steps_since_ckpt` ∈ [0, interval): how far past the last checkpoint the
+/// failure struck.
+pub fn checkpoint_recovery_s(
+    state: StateFootprint,
+    cfg: &CheckpointCfg,
+    steps_since_ckpt: u64,
+) -> f64 {
+    let reload = state.total() as f64 / (cfg.storage_gbps * 1e9);
+    let replay = steps_since_ckpt as f64 * cfg.step_time_s;
+    cfg.restart_overhead_s + reload + replay
+}
+
+/// Recovery time via pool-resident states: re-attach over the UB link.
+/// No replay — states are current as of the last completed step.
+pub fn pool_recovery_s(state: StateFootprint, hw: &HwConfig, restart_overhead_s: f64) -> f64 {
+    restart_overhead_s + state.total() as f64 / (hw.r2d_gbps * 1e9)
+}
+
+/// Summary of a failure-injection campaign.
+#[derive(Debug, Clone, Default)]
+pub struct HaReport {
+    pub failures: u64,
+    pub mean_ckpt_recovery_s: f64,
+    pub mean_pool_recovery_s: f64,
+    pub total_lost_steps_ckpt: u64,
+    pub total_lost_steps_pool: u64,
+}
+
+/// Inject `n_failures` uniformly over the checkpoint interval and compare.
+pub fn failure_campaign(
+    state: StateFootprint,
+    cfg: &CheckpointCfg,
+    hw: &HwConfig,
+    n_failures: u64,
+    seed: u64,
+) -> HaReport {
+    let mut rng = Rng::new(seed);
+    let mut ckpt_sum = 0.0;
+    let mut pool_sum = 0.0;
+    let mut lost_ckpt = 0u64;
+    for _ in 0..n_failures {
+        let since = rng.gen_range(0, cfg.interval_steps);
+        ckpt_sum += checkpoint_recovery_s(state, cfg, since);
+        pool_sum += pool_recovery_s(state, hw, cfg.restart_overhead_s);
+        lost_ckpt += since;
+    }
+    HaReport {
+        failures: n_failures,
+        mean_ckpt_recovery_s: ckpt_sum / n_failures.max(1) as f64,
+        mean_pool_recovery_s: pool_sum / n_failures.max(1) as f64,
+        total_lost_steps_ckpt: lost_ckpt,
+        total_lost_steps_pool: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::GB;
+
+    fn state() -> StateFootprint {
+        StateFootprint { weights: 16 * GB, optimizer: 8 * GB }
+    }
+
+    #[test]
+    fn pool_recovery_much_faster_than_checkpoint() {
+        let hw = HwConfig::ascend910c_like();
+        let cfg = CheckpointCfg::default();
+        let ck = checkpoint_recovery_s(state(), &cfg, 250);
+        let pl = pool_recovery_s(state(), &hw, cfg.restart_overhead_s);
+        assert!(pl < ck / 5.0, "pool {pl} vs ckpt {ck}");
+    }
+
+    #[test]
+    fn replay_dominates_when_far_from_checkpoint() {
+        let cfg = CheckpointCfg::default();
+        let near = checkpoint_recovery_s(state(), &cfg, 1);
+        let far = checkpoint_recovery_s(state(), &cfg, 499);
+        assert!(far > near + 2000.0);
+    }
+
+    #[test]
+    fn campaign_loses_no_steps_with_pool() {
+        let hw = HwConfig::ascend910c_like();
+        let r = failure_campaign(state(), &CheckpointCfg::default(), &hw, 50, 42);
+        assert_eq!(r.failures, 50);
+        assert_eq!(r.total_lost_steps_pool, 0);
+        assert!(r.total_lost_steps_ckpt > 0);
+        assert!(r.mean_pool_recovery_s < r.mean_ckpt_recovery_s);
+    }
+
+    #[test]
+    fn campaign_deterministic() {
+        let hw = HwConfig::ascend910c_like();
+        let a = failure_campaign(state(), &CheckpointCfg::default(), &hw, 10, 7);
+        let b = failure_campaign(state(), &CheckpointCfg::default(), &hw, 10, 7);
+        assert_eq!(a.total_lost_steps_ckpt, b.total_lost_steps_ckpt);
+    }
+}

@@ -1,0 +1,9 @@
+//! KV-cache substrate: paged blocks, residency policies (device vs remote
+//! pool), NSA sparse-attention block selection, and per-step transfer/CPU
+//! cost accounting. Consumed by [`crate::serving`] (Tables 3–6, §7.4).
+
+mod manager;
+pub mod nsa;
+
+pub use manager::{KvCacheManager, KvPolicy, StepCost};
+pub use nsa::NsaConfig;

@@ -1,0 +1,27 @@
+//! # HyperOffload — reproduction
+//!
+//! Graph-driven hierarchical memory management for LLMs on SuperNode
+//! architectures (Liu et al., CS.DC 2026), rebuilt as a three-layer
+//! rust + JAX + Pallas stack (see DESIGN.md).
+//!
+//! The paper's contribution — cache operators (`Prefetch`/`Store`/`Detach`)
+//! as first-class computation-graph nodes plus a graph-driven execution-order
+//! refinement (Algorithm 1) — lives in [`graph`] and [`passes`]. Everything
+//! the paper's evaluation depends on (SuperNode memory tiers, a reactive
+//! runtime baseline, a KV-cache manager, a serving stack, training-step
+//! simulation, high availability) is built as substrates in the sibling
+//! modules. Real model execution (the end-to-end serving example) goes
+//! through [`runtime`], which loads AOT-compiled HLO-text artifacts.
+
+pub mod coordinator;
+pub mod graph;
+pub mod ha;
+pub mod kvcache;
+pub mod memory;
+pub mod passes;
+pub mod runtime;
+pub mod serving;
+pub mod runtime_sched;
+pub mod sim;
+pub mod training;
+pub mod util;

@@ -1,0 +1,144 @@
+//! `hyperoffload` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands (hand-rolled parsing; clap is not in the offline mirror):
+//!   serve      real-execution serving demo over the AOT artifacts
+//!   train-sim  baseline vs hierarchical training step for a preset
+//!   graph-demo the compile pipeline on a synthetic graph, with timeline
+//!   ha-sim     checkpoint vs pool recovery comparison
+//!   info       artifact + platform info
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use hyperoffload::coordinator::{Coordinator, ServeConfig};
+use hyperoffload::graph::GraphBuilder;
+use hyperoffload::ha;
+use hyperoffload::kvcache::KvPolicy;
+use hyperoffload::passes::{compile, ExecOrderConfig, OffloadPolicy};
+use hyperoffload::sim::{simulate, HwConfig, GB};
+use hyperoffload::training::{baseline_step, hierarchical_step, ModelPreset, ParallelCfg};
+use hyperoffload::util::table::{f, Table};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flag = |name: &str| -> Option<String> {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    let has = |name: &str| args.iter().any(|a| a == name);
+
+    match cmd {
+        "serve" => {
+            let dir = flag("--artifacts").unwrap_or_else(|| "artifacts".into());
+            let mut cfg = ServeConfig::new(PathBuf::from(&dir));
+            if let Some(n) = flag("--requests") {
+                cfg.n_requests = n.parse()?;
+            }
+            if let Some(g) = flag("--gen") {
+                cfg.gen_tokens = g.parse()?;
+            }
+            if has("--no-offload") {
+                cfg.kv_policy = KvPolicy::AllDevice;
+            }
+            let coord = Coordinator::load(&cfg.artifacts_dir, cfg.kv_policy)?;
+            println!(
+                "loaded model: {} layers, d={}, vocab={}, batch={}, max_seq={}",
+                coord.model.spec.n_layers,
+                coord.model.spec.d_model,
+                coord.model.spec.vocab,
+                coord.model.spec.batch,
+                coord.model.spec.max_seq
+            );
+            let r = coord.serve(&cfg)?;
+            let mut t = Table::new("real-execution serving (PJRT CPU)", &["metric", "value"]);
+            t.row(&["requests".into(), r.requests.to_string()]);
+            t.row(&["waves".into(), r.waves.to_string()]);
+            t.row(&["prefill mean (ms)".into(), f(r.prefill_ms.mean, 2)]);
+            t.row(&["decode step mean (ms)".into(), f(r.decode_step_ms.mean, 2)]);
+            t.row(&["decode step p99 (ms)".into(), f(r.decode_step_ms.p99, 2)]);
+            t.row(&["tokens generated".into(), r.tokens_generated.to_string()]);
+            t.row(&["throughput (tok/s)".into(), f(r.throughput_tok_s, 1)]);
+            t.row(&["KV transfer (modelled, MB)".into(), f(r.kv_transfer_bytes as f64 / 1e6, 1)]);
+            t.row(&["KV device peak (modelled, MB)".into(), f(r.kv_device_peak as f64 / 1e6, 1)]);
+            t.print();
+            println!("sample tokens: {:?}", &r.sample_tokens[..r.sample_tokens.len().min(16)]);
+        }
+        "train-sim" => {
+            let model = flag("--model").unwrap_or_else(|| "llama8b".into());
+            let bw: f64 = flag("--bandwidth").map(|s| s.parse()).transpose()?.unwrap_or(33.6);
+            let hw = HwConfig::ascend910c_like().with_pool_bandwidth(bw);
+            let (preset, base_cfg, hier_cfg) = match model.as_str() {
+                "llama8b" => (ModelPreset::llama8b(), ParallelCfg::llama_no2(), ParallelCfg::llama_hier()),
+                "dsv3" => (ModelPreset::deepseek_v3_like(), ParallelCfg::dsv3_baseline(), ParallelCfg::dsv3_hier()),
+                other => bail!("unknown model {other} (llama8b|dsv3)"),
+            };
+            let base = baseline_step(&preset, &base_cfg, &hw);
+            let hier = hierarchical_step(&preset, &hier_cfg, &hw);
+            let mut t = Table::new(
+                format!("{} training step @ {bw} GB/s pool bandwidth", preset.name),
+                &["config", "compute ms", "comm ms", "exposed d2h", "overlapped", "stalls", "total ms", "peak GB"],
+            );
+            for (name, b) in [("baseline", &base), ("hierarchical", &hier)] {
+                t.row(&[
+                    name.into(),
+                    f(b.compute_ms + b.recompute_ms, 1),
+                    f(b.comm_ms, 1),
+                    f(b.exposed_d2h_ms, 1),
+                    f(b.overlapped_d2h_ms, 1),
+                    f(b.stall_ms, 1),
+                    f(b.total_ms, 1),
+                    f(b.peak_bytes / 1e9, 1),
+                ]);
+            }
+            t.print();
+        }
+        "graph-demo" => {
+            let hw = HwConfig::ascend910c_like();
+            let (mut g, _) = GraphBuilder::chain_with_remote_weights(8, 50e12, 0, 4 * GB / 10);
+            let report = compile(&mut g, &hw, &OffloadPolicy::default(), &ExecOrderConfig::default());
+            let sim = simulate(&g, &report.order, &hw);
+            println!(
+                "ops={} cache_ops={} moved={} makespan={:.1}ms exposed={:.2}ms overlap={:.0}%",
+                g.ops.len(),
+                g.cache_ops().len(),
+                report.moved,
+                sim.makespan_us / 1e3,
+                sim.exposed_comm_us / 1e3,
+                sim.overlap_efficiency() * 100.0
+            );
+        }
+        "ha-sim" => {
+            let hw = HwConfig::ascend910c_like();
+            let state = ha::StateFootprint { weights: 16 * GB, optimizer: 8 * GB };
+            let r = ha::failure_campaign(state, &ha::CheckpointCfg::default(), &hw, 100, 13);
+            let mut t = Table::new(
+                "recovery comparison (100 injected failures)",
+                &["path", "mean recovery (s)", "lost steps"],
+            );
+            t.row(&["checkpoint".into(), f(r.mean_ckpt_recovery_s, 1), r.total_lost_steps_ckpt.to_string()]);
+            t.row(&["pool-resident".into(), f(r.mean_pool_recovery_s, 1), r.total_lost_steps_pool.to_string()]);
+            t.print();
+        }
+        "info" => {
+            let client = xla::PjRtClient::cpu()?;
+            println!("PJRT platform: {} ({} devices)", client.platform_name(), client.device_count());
+        }
+        _ => {
+            println!(
+                "hyperoffload — graph-driven hierarchical memory management\n\
+                 usage: hyperoffload <serve|train-sim|graph-demo|ha-sim|info> [flags]\n\
+                 \n\
+                 serve      --artifacts DIR --requests N --gen N [--no-offload]\n\
+                 train-sim  --model llama8b|dsv3 --bandwidth GBPS\n\
+                 graph-demo\n\
+                 ha-sim\n\
+                 info"
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,254 @@
+//! Device HBM allocator with real fragmentation behaviour.
+//!
+//! First-fit free-list allocator over a simulated address space. When an
+//! allocation fails although enough *total* free bytes exist, the allocator
+//! performs a compaction pass ("memory defragmentation" in §7.3.2) —
+//! counting the event and the bytes moved, which the serving simulator
+//! converts into stall time. Table 4's defrag-event column comes from here.
+
+use anyhow::{bail, Result};
+
+/// Identifier of a live allocation.
+pub type AllocId = u64;
+
+#[derive(Debug, Clone, Copy)]
+struct Block {
+    addr: u64,
+    size: u64,
+    id: AllocId,
+}
+
+/// First-fit allocator with compaction.
+#[derive(Debug, Clone)]
+pub struct DeviceAllocator {
+    capacity: u64,
+    live: Vec<Block>, // sorted by addr
+    next_id: AllocId,
+    /// Number of compaction passes triggered by fragmentation.
+    pub defrag_events: u64,
+    /// Total bytes moved across all compactions.
+    pub defrag_bytes_moved: u64,
+    /// High-water mark of used bytes.
+    pub peak_used: u64,
+    /// Allocation failures even after compaction (hard OOM).
+    pub oom_events: u64,
+}
+
+impl DeviceAllocator {
+    pub fn new(capacity: u64) -> Self {
+        Self {
+            capacity,
+            live: Vec::new(),
+            next_id: 1,
+            defrag_events: 0,
+            defrag_bytes_moved: 0,
+            peak_used: 0,
+            oom_events: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used(&self) -> u64 {
+        self.live.iter().map(|b| b.size).sum()
+    }
+
+    pub fn free_total(&self) -> u64 {
+        self.capacity - self.used()
+    }
+
+    /// Largest contiguous free extent.
+    pub fn largest_free_extent(&self) -> u64 {
+        let mut largest = 0u64;
+        let mut cursor = 0u64;
+        for b in &self.live {
+            largest = largest.max(b.addr - cursor);
+            cursor = b.addr + b.size;
+        }
+        largest.max(self.capacity - cursor)
+    }
+
+    /// External fragmentation in [0,1]: 1 - largest_extent / total_free.
+    pub fn fragmentation(&self) -> f64 {
+        let free = self.free_total();
+        if free == 0 {
+            return 0.0;
+        }
+        1.0 - self.largest_free_extent() as f64 / free as f64
+    }
+
+    fn find_first_fit(&self, size: u64) -> Option<u64> {
+        let mut cursor = 0u64;
+        for b in &self.live {
+            if b.addr - cursor >= size {
+                return Some(cursor);
+            }
+            cursor = b.addr + b.size;
+        }
+        if self.capacity - cursor >= size {
+            Some(cursor)
+        } else {
+            None
+        }
+    }
+
+    /// Allocate `size` bytes. Returns (id, bytes_moved_by_defrag): the
+    /// caller charges compaction cost into its timeline.
+    pub fn alloc(&mut self, size: u64) -> Result<(AllocId, u64)> {
+        if size == 0 {
+            bail!("zero-size allocation");
+        }
+        let mut moved = 0u64;
+        let addr = match self.find_first_fit(size) {
+            Some(a) => a,
+            None => {
+                if self.free_total() >= size {
+                    // Fragmented: compact (slide all blocks down).
+                    moved = self.compact();
+                    self.find_first_fit(size)
+                        .expect("post-compaction fit must succeed")
+                } else {
+                    self.oom_events += 1;
+                    bail!(
+                        "OOM: need {size}, free {} of {}",
+                        self.free_total(),
+                        self.capacity
+                    );
+                }
+            }
+        };
+        let id = self.next_id;
+        self.next_id += 1;
+        let idx = self.live.partition_point(|b| b.addr < addr);
+        self.live.insert(idx, Block { addr, size, id });
+        self.peak_used = self.peak_used.max(self.used());
+        Ok((id, moved))
+    }
+
+    /// Release allocation `id`.
+    pub fn free(&mut self, id: AllocId) -> Result<()> {
+        match self.live.iter().position(|b| b.id == id) {
+            Some(i) => {
+                self.live.remove(i);
+                Ok(())
+            }
+            None => bail!("free of unknown allocation {id}"),
+        }
+    }
+
+    /// Slide every live block to the lowest address (compaction). Returns
+    /// bytes moved.
+    pub fn compact(&mut self) -> u64 {
+        self.defrag_events += 1;
+        let mut cursor = 0u64;
+        let mut moved = 0u64;
+        for b in &mut self.live {
+            if b.addr != cursor {
+                moved += b.size;
+                b.addr = cursor;
+            }
+            cursor += b.size;
+        }
+        self.defrag_bytes_moved += moved;
+        moved
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut a = DeviceAllocator::new(1000);
+        let (id, moved) = a.alloc(400).unwrap();
+        assert_eq!(moved, 0);
+        assert_eq!(a.used(), 400);
+        a.free(id).unwrap();
+        assert_eq!(a.used(), 0);
+    }
+
+    #[test]
+    fn oom_when_truly_full() {
+        let mut a = DeviceAllocator::new(100);
+        a.alloc(80).unwrap();
+        assert!(a.alloc(30).is_err());
+        assert_eq!(a.oom_events, 1);
+    }
+
+    #[test]
+    fn fragmentation_triggers_compaction() {
+        let mut a = DeviceAllocator::new(100);
+        let (i1, _) = a.alloc(30).unwrap();
+        let (_i2, _) = a.alloc(30).unwrap();
+        let (i3, _) = a.alloc(30).unwrap();
+        // Free blocks 1 and 3: 40 total free but split 30+10... actually
+        // free = holes at [0,30) and [60,90) + tail [90,100): largest 30.
+        a.free(i1).unwrap();
+        a.free(i3).unwrap();
+        assert_eq!(a.free_total(), 70);
+        assert!(a.largest_free_extent() < 70);
+        // 50 doesn't fit contiguously -> compaction.
+        let (_, moved) = a.alloc(50).unwrap();
+        assert!(moved > 0);
+        assert_eq!(a.defrag_events, 1);
+        assert_eq!(a.used(), 80);
+    }
+
+    #[test]
+    fn no_compaction_when_contiguous_fit_exists() {
+        let mut a = DeviceAllocator::new(1000);
+        let (i1, _) = a.alloc(100).unwrap();
+        a.free(i1).unwrap();
+        let (_, moved) = a.alloc(100).unwrap();
+        assert_eq!(moved, 0);
+        assert_eq!(a.defrag_events, 0);
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut a = DeviceAllocator::new(1000);
+        let (i1, _) = a.alloc(600).unwrap();
+        a.free(i1).unwrap();
+        a.alloc(100).unwrap();
+        assert_eq!(a.peak_used, 600);
+    }
+
+    #[test]
+    fn fragmentation_metric_bounds() {
+        let mut a = DeviceAllocator::new(1000);
+        assert_eq!(a.fragmentation(), 0.0);
+        let (i1, _) = a.alloc(100).unwrap();
+        a.alloc(100).unwrap();
+        a.free(i1).unwrap();
+        let f = a.fragmentation();
+        assert!((0.0..=1.0).contains(&f));
+        assert!(f > 0.0);
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let mut a = DeviceAllocator::new(100);
+        let (id, _) = a.alloc(10).unwrap();
+        a.free(id).unwrap();
+        assert!(a.free(id).is_err());
+    }
+
+    #[test]
+    fn many_allocs_stress_first_fit() {
+        let mut a = DeviceAllocator::new(1 << 20);
+        let mut ids = Vec::new();
+        for i in 0..1000 {
+            let (id, _) = a.alloc(64 + (i % 7) * 16).unwrap();
+            ids.push(id);
+        }
+        for id in ids.iter().step_by(2) {
+            a.free(*id).unwrap();
+        }
+        // Still allocatable; compaction may or may not fire.
+        a.alloc(4096).unwrap();
+        assert!(a.used() <= a.capacity());
+    }
+}

@@ -1,0 +1,9 @@
+//! SuperNode hierarchical memory substrate (DESIGN.md §2): device HBM
+//! allocator with fragmentation/compaction, remote shared pool, host tier,
+//! and the unified transfer primitives of §6.
+
+mod allocator;
+mod tiers;
+
+pub use allocator::{AllocId, DeviceAllocator};
+pub use tiers::{HierarchicalMemory, Region, RegionId, TransferKind};

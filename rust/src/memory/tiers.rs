@@ -1,0 +1,300 @@
+//! Hierarchical memory: Device HBM + SuperNode remote pool + host DRAM,
+//! with the unified transfer primitives of §6 (H2R/R2H/R2D/D2R/D2D).
+//!
+//! This is the state-tracking side (who holds which bytes, what a transfer
+//! costs); the *timing* of transfers is simulated by [`crate::sim`] or the
+//! serving engine. DMA engines are modelled as in-order queues per
+//! direction.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::graph::Tier;
+use crate::sim::HwConfig;
+
+use super::allocator::{AllocId, DeviceAllocator};
+
+/// A transfer primitive between tiers (§6 "Unified Memory Primitives").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferKind {
+    H2R,
+    R2H,
+    R2D,
+    D2R,
+    D2D,
+    H2D,
+    D2H,
+}
+
+impl TransferKind {
+    pub fn between(src: Tier, dst: Tier) -> Result<Self> {
+        use Tier::*;
+        Ok(match (src, dst) {
+            (Host, Remote) => TransferKind::H2R,
+            (Remote, Host) => TransferKind::R2H,
+            (Remote, Device) => TransferKind::R2D,
+            (Device, Remote) => TransferKind::D2R,
+            (Device, Device) => TransferKind::D2D,
+            (Host, Device) => TransferKind::H2D,
+            (Device, Host) => TransferKind::D2H,
+            (a, b) => bail!("unsupported transfer {a:?} -> {b:?}"),
+        })
+    }
+
+    /// Transfer duration on `hw` (us). Host links share the pool link in
+    /// this model; D2D rides HBM bandwidth.
+    pub fn duration_us(self, bytes: u64, hw: &HwConfig) -> f64 {
+        match self {
+            TransferKind::R2D | TransferKind::H2D => hw.r2d_us(bytes),
+            TransferKind::D2R | TransferKind::D2H => hw.d2r_us(bytes),
+            TransferKind::H2R | TransferKind::R2H => {
+                hw.link_latency_us + bytes as f64 / (hw.d2r_gbps * 1e9) * 1e6
+            }
+            TransferKind::D2D => bytes as f64 / (hw.hbm_gbps * 1e9) * 1e6,
+        }
+    }
+}
+
+/// A logical region registered in the hierarchy.
+#[derive(Debug, Clone)]
+pub struct Region {
+    pub name: String,
+    pub bytes: u64,
+    pub tier: Tier,
+    /// Device allocation backing it when tier == Device.
+    pub alloc: Option<AllocId>,
+}
+
+/// The three-tier memory system of one SuperNode device slice.
+#[derive(Debug)]
+pub struct HierarchicalMemory {
+    pub device: DeviceAllocator,
+    pub remote_capacity: u64,
+    pub remote_used: u64,
+    pub host_used: u64,
+    regions: HashMap<u64, Region>,
+    next_region: u64,
+    /// Cumulative microseconds of defrag stall charged (compaction moves
+    /// bytes at HBM bandwidth).
+    pub defrag_stall_us: f64,
+}
+
+/// Handle to a registered region.
+pub type RegionId = u64;
+
+impl HierarchicalMemory {
+    pub fn new(hw: &HwConfig) -> Self {
+        Self {
+            device: DeviceAllocator::new(hw.device_capacity),
+            remote_capacity: hw.remote_capacity,
+            remote_used: 0,
+            host_used: 0,
+            regions: HashMap::new(),
+            next_region: 1,
+        defrag_stall_us: 0.0,
+        }
+    }
+
+    /// Register a region in `tier`, allocating device space if needed.
+    /// Returns (region id, defrag stall charged in us).
+    pub fn register(&mut self, name: &str, bytes: u64, tier: Tier, hw: &HwConfig) -> Result<(RegionId, f64)> {
+        let mut stall = 0.0;
+        let alloc = match tier {
+            Tier::Device => {
+                let (id, moved) = self.device.alloc(bytes)?;
+                stall = Self::defrag_us(moved, hw);
+                self.defrag_stall_us += stall;
+                Some(id)
+            }
+            Tier::Remote => {
+                if self.remote_used + bytes > self.remote_capacity {
+                    bail!("remote pool exhausted");
+                }
+                self.remote_used += bytes;
+                None
+            }
+            Tier::Host => {
+                self.host_used += bytes;
+                None
+            }
+        };
+        let id = self.next_region;
+        self.next_region += 1;
+        self.regions.insert(id, Region { name: name.into(), bytes, tier, alloc });
+        Ok((id, stall))
+    }
+
+    /// Move a region to another tier. Returns (transfer kind, duration us,
+    /// defrag stall us).
+    pub fn migrate(&mut self, id: RegionId, dst: Tier, hw: &HwConfig) -> Result<(TransferKind, f64, f64)> {
+        let region = self.regions.get(&id).cloned();
+        let Some(region) = region else { bail!("unknown region {id}") };
+        if region.tier == dst {
+            return Ok((TransferKind::between(region.tier, dst).unwrap_or(TransferKind::D2D), 0.0, 0.0));
+        }
+        let kind = TransferKind::between(region.tier, dst)?;
+        let dur = kind.duration_us(region.bytes, hw);
+
+        // Release source.
+        match region.tier {
+            Tier::Device => {
+                if let Some(a) = region.alloc {
+                    self.device.free(a)?;
+                }
+            }
+            Tier::Remote => self.remote_used -= region.bytes,
+            Tier::Host => self.host_used -= region.bytes,
+        }
+        // Acquire destination.
+        let mut stall = 0.0;
+        let alloc = match dst {
+            Tier::Device => {
+                let (a, moved) = self.device.alloc(region.bytes)?;
+                stall = Self::defrag_us(moved, hw);
+                self.defrag_stall_us += stall;
+                Some(a)
+            }
+            Tier::Remote => {
+                if self.remote_used + region.bytes > self.remote_capacity {
+                    bail!("remote pool exhausted");
+                }
+                self.remote_used += region.bytes;
+                None
+            }
+            Tier::Host => {
+                self.host_used += region.bytes;
+                None
+            }
+        };
+        let r = self.regions.get_mut(&id).unwrap();
+        r.tier = dst;
+        r.alloc = alloc;
+        Ok((kind, dur, stall))
+    }
+
+    /// Drop a region entirely.
+    pub fn release(&mut self, id: RegionId) -> Result<()> {
+        let Some(region) = self.regions.remove(&id) else { bail!("unknown region {id}") };
+        match region.tier {
+            Tier::Device => {
+                if let Some(a) = region.alloc {
+                    self.device.free(a)?;
+                }
+            }
+            Tier::Remote => self.remote_used -= region.bytes,
+            Tier::Host => self.host_used -= region.bytes,
+        }
+        Ok(())
+    }
+
+    pub fn region(&self, id: RegionId) -> Option<&Region> {
+        self.regions.get(&id)
+    }
+
+    pub fn device_used(&self) -> u64 {
+        self.device.used()
+    }
+
+    /// Compaction stall: moved bytes at HBM bandwidth (read+write).
+    fn defrag_us(moved: u64, hw: &HwConfig) -> f64 {
+        2.0 * moved as f64 / (hw.hbm_gbps * 1e9) * 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::GB;
+
+    fn hw() -> HwConfig {
+        HwConfig {
+            compute_tflops: 100.0,
+            hbm_gbps: 1000.0,
+            d2r_gbps: 33.6,
+            r2d_gbps: 33.6,
+            link_latency_us: 10.0,
+            net_gbps: 56.0,
+            host_overhead_us: 150.0,
+            device_capacity: 4 * GB,
+            remote_capacity: 64 * GB,
+        }
+    }
+
+    #[test]
+    fn register_per_tier() {
+        let hw = hw();
+        let mut m = HierarchicalMemory::new(&hw);
+        let (d, _) = m.register("w", GB, Tier::Device, &hw).unwrap();
+        let (r, _) = m.register("kv", 2 * GB, Tier::Remote, &hw).unwrap();
+        assert_eq!(m.device_used(), GB);
+        assert_eq!(m.remote_used, 2 * GB);
+        assert_eq!(m.region(d).unwrap().tier, Tier::Device);
+        assert_eq!(m.region(r).unwrap().tier, Tier::Remote);
+    }
+
+    #[test]
+    fn migrate_d2r_frees_device() {
+        let hw = hw();
+        let mut m = HierarchicalMemory::new(&hw);
+        let (id, _) = m.register("act", GB, Tier::Device, &hw).unwrap();
+        let (kind, dur, _) = m.migrate(id, Tier::Remote, &hw).unwrap();
+        assert_eq!(kind, TransferKind::D2R);
+        assert!(dur > 0.0);
+        assert_eq!(m.device_used(), 0);
+        assert_eq!(m.remote_used, GB);
+    }
+
+    #[test]
+    fn migrate_r2d_uses_r2d_bandwidth() {
+        let hw = hw();
+        let mut m = HierarchicalMemory::new(&hw);
+        let (id, _) = m.register("kv", GB, Tier::Remote, &hw).unwrap();
+        let (kind, dur, _) = m.migrate(id, Tier::Device, &hw).unwrap();
+        assert_eq!(kind, TransferKind::R2D);
+        let expect = hw.r2d_us(GB);
+        assert!((dur - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn same_tier_migrate_is_noop() {
+        let hw = hw();
+        let mut m = HierarchicalMemory::new(&hw);
+        let (id, _) = m.register("x", GB, Tier::Remote, &hw).unwrap();
+        let (_, dur, _) = m.migrate(id, Tier::Remote, &hw).unwrap();
+        assert_eq!(dur, 0.0);
+    }
+
+    #[test]
+    fn remote_pool_capacity_enforced() {
+        let hw = hw();
+        let mut m = HierarchicalMemory::new(&hw);
+        assert!(m.register("big", 65 * GB, Tier::Remote, &hw).is_err());
+    }
+
+    #[test]
+    fn device_oom_propagates() {
+        let hw = hw();
+        let mut m = HierarchicalMemory::new(&hw);
+        assert!(m.register("big", 5 * GB, Tier::Device, &hw).is_err());
+    }
+
+    #[test]
+    fn release_returns_space() {
+        let hw = hw();
+        let mut m = HierarchicalMemory::new(&hw);
+        let (id, _) = m.register("x", GB, Tier::Device, &hw).unwrap();
+        m.release(id).unwrap();
+        assert_eq!(m.device_used(), 0);
+        assert!(m.region(id).is_none());
+    }
+
+    #[test]
+    fn transfer_kind_matrix() {
+        use Tier::*;
+        assert_eq!(TransferKind::between(Host, Remote).unwrap(), TransferKind::H2R);
+        assert_eq!(TransferKind::between(Remote, Host).unwrap(), TransferKind::R2H);
+        assert_eq!(TransferKind::between(Device, Remote).unwrap(), TransferKind::D2R);
+        assert_eq!(TransferKind::between(Remote, Device).unwrap(), TransferKind::R2D);
+    }
+}

@@ -1,0 +1,164 @@
+//! Tensor lifetime analysis (§3.2 "Global Visibility of Memory Lifecycles").
+//!
+//! With cache operations as graph nodes, the compiler can see exactly when
+//! each tensor is produced, consumed, offloaded and reloaded. This pass
+//! computes, per tensor and per execution order: producer position, first /
+//! last consumer positions, the *idle window* between consecutive uses, and
+//! residency byte-time — the quantities the offload-candidate selector and
+//! Algorithm 1's cost model consume.
+
+use std::collections::HashMap;
+
+use crate::graph::{Graph, OpId, TensorId};
+
+/// Lifetime facts for one tensor under one execution order.
+#[derive(Debug, Clone)]
+pub struct Lifetime {
+    pub tensor: TensorId,
+    /// Position of the producer in the order (None for graph inputs).
+    pub def_pos: Option<usize>,
+    /// Positions of consumers, ascending.
+    pub use_pos: Vec<usize>,
+    /// Largest gap (in positions) between consecutive uses (or def→first
+    /// use). The paper's offload candidates are tensors with a large idle
+    /// window between forward production and backward consumption.
+    pub max_idle_gap: usize,
+    /// Start index of that largest gap.
+    pub idle_gap_start: usize,
+}
+
+impl Lifetime {
+    /// Span from definition to last use (positions).
+    pub fn span(&self) -> usize {
+        let start = self.def_pos.unwrap_or(0);
+        let end = self.use_pos.last().copied().unwrap_or(start);
+        end.saturating_sub(start)
+    }
+}
+
+/// Analysis over a whole graph + order.
+#[derive(Debug, Clone)]
+pub struct LifetimeAnalysis {
+    pub lifetimes: HashMap<TensorId, Lifetime>,
+    /// position of each op in the order.
+    pub pos: Vec<usize>,
+}
+
+impl LifetimeAnalysis {
+    pub fn run(graph: &Graph, order: &[OpId]) -> Self {
+        let mut pos = vec![usize::MAX; graph.ops.len()];
+        for (i, &o) in order.iter().enumerate() {
+            pos[o] = i;
+        }
+        let mut lifetimes = HashMap::new();
+        for t in &graph.tensors {
+            let def_pos = graph.producer_of(t.id).map(|p| pos[p]);
+            let mut use_pos: Vec<usize> = graph
+                .consumers_of(t.id)
+                .iter()
+                .filter(|&&c| !graph.op(c).kind.is_cache_op())
+                .map(|&c| pos[c])
+                .collect();
+            use_pos.sort_unstable();
+
+            // Largest idle gap between consecutive events (def, use...).
+            let mut events: Vec<usize> = Vec::with_capacity(use_pos.len() + 1);
+            if let Some(d) = def_pos {
+                events.push(d);
+            }
+            events.extend(&use_pos);
+            let (mut max_gap, mut gap_start) = (0usize, events.first().copied().unwrap_or(0));
+            for w in events.windows(2) {
+                let gap = w[1].saturating_sub(w[0]);
+                if gap > max_gap {
+                    max_gap = gap;
+                    gap_start = w[0];
+                }
+            }
+            lifetimes.insert(
+                t.id,
+                Lifetime { tensor: t.id, def_pos, use_pos, max_idle_gap: max_gap, idle_gap_start: gap_start },
+            );
+        }
+        Self { lifetimes, pos }
+    }
+
+    pub fn get(&self, t: TensorId) -> &Lifetime {
+        &self.lifetimes[&t]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, Tier};
+
+    #[test]
+    fn chain_lifetimes() {
+        let g = GraphBuilder::linear_chain(4, 1e6, 64);
+        let order = g.topo_order().unwrap();
+        let la = LifetimeAnalysis::run(&g, &order);
+        // act.0 defined by op0, used by op1.
+        let lt = la.get(0);
+        assert_eq!(lt.def_pos, Some(0));
+        assert_eq!(lt.use_pos, vec![1]);
+        assert_eq!(lt.max_idle_gap, 1);
+    }
+
+    #[test]
+    fn idle_gap_found_for_fwd_bwd_pattern() {
+        // act produced at op0, consumed at op5 (bwd-like): gap = 5.
+        let mut b = GraphBuilder::new();
+        let act = b.tensor("act", 1 << 20, Tier::Device);
+        let sink = b.tensor("sink", 0, Tier::Device);
+        b.compute("fwd", 1e6, 0, vec![], vec![act]);
+        let mut prev = None;
+        for i in 0..4 {
+            let t = b.tensor(&format!("m{i}"), 0, Tier::Device);
+            let inputs = prev.map(|p| vec![p]).unwrap_or_default();
+            let o = b.compute(&format!("mid{i}"), 1e6, 0, inputs, vec![t]);
+            if i == 0 {
+                b.dep(o, 0);
+            }
+            prev = Some(t);
+        }
+        b.compute("bwd", 1e6, 0, vec![act, prev.unwrap()], vec![sink]);
+        let g = b.build();
+        let order = g.topo_order().unwrap();
+        let la = LifetimeAnalysis::run(&g, &order);
+        let lt = la.get(act);
+        assert_eq!(lt.def_pos, Some(0));
+        assert_eq!(lt.max_idle_gap, 5);
+        assert_eq!(lt.idle_gap_start, 0);
+        assert_eq!(lt.span(), 5);
+    }
+
+    #[test]
+    fn graph_input_has_no_def() {
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 64, Tier::Remote);
+        let o = b.tensor("o", 0, Tier::Device);
+        b.compute("c", 1e6, 0, vec![w], vec![o]);
+        let g = b.build();
+        let order = g.topo_order().unwrap();
+        let la = LifetimeAnalysis::run(&g, &order);
+        assert_eq!(la.get(w).def_pos, None);
+        assert_eq!(la.get(w).use_pos, vec![0]);
+    }
+
+    #[test]
+    fn cache_op_uses_excluded() {
+        let mut b = GraphBuilder::new();
+        let a = b.tensor("a", 64, Tier::Device);
+        let o = b.tensor("o", 0, Tier::Device);
+        let c0 = b.compute("p", 1e6, 0, vec![], vec![a]);
+        let st = b.store("st.a", a);
+        b.dep(st, c0);
+        b.compute("q", 1e6, 0, vec![a], vec![o]);
+        let g = b.build();
+        let order = g.topo_order().unwrap();
+        let la = LifetimeAnalysis::run(&g, &order);
+        // The Store op is not a "use" for lifetime purposes.
+        assert_eq!(la.get(a).use_pos.len(), 1);
+    }
+}

@@ -1,0 +1,94 @@
+//! One compiled HLO executable on the PJRT CPU client.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// A compiled artifact plus simple execution statistics.
+pub struct Executor {
+    exe: PjRtLoadedExecutable,
+    pub name: String,
+    /// Cumulative wall-clock spent inside `execute*` (perf accounting).
+    pub total_exec_us: std::cell::Cell<u64>,
+    pub exec_count: std::cell::Cell<u64>,
+}
+
+impl Executor {
+    /// Load HLO text from `path` and compile it on `client`.
+    ///
+    /// HLO *text* is the interchange format — jax >= 0.5 serialized protos
+    /// carry 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+    /// text parser reassigns ids (see /opt/xla-example/README.md).
+    pub fn load(client: &PjRtClient, path: &Path) -> Result<Self> {
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Self {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+            total_exec_us: std::cell::Cell::new(0),
+            exec_count: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Execute with host literals; returns the flattened tuple outputs.
+    ///
+    /// All artifacts are lowered with `return_tuple=True`, so the single
+    /// device output is a tuple literal that we decompose.
+    pub fn run(&self, args: &[Literal]) -> Result<Vec<Literal>> {
+        let t0 = Instant::now();
+        let result = self.exe.execute::<Literal>(args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        self.bump(t0);
+        Ok(parts)
+    }
+
+    /// Like [`run`](Self::run) but borrows the argument literals (avoids
+    /// cloning multi-MB weights/caches into a temporary Vec).
+    pub fn run_ref(&self, args: &[&Literal]) -> Result<Vec<Literal>> {
+        let t0 = Instant::now();
+        let result = self.exe.execute::<&Literal>(args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        self.bump(t0);
+        Ok(parts)
+    }
+
+    /// Execute buffer-to-buffer.
+    ///
+    /// NOTE: artifacts are lowered with `return_tuple=True` and the crate's
+    /// ExecuteOptions do not untuple, so for multi-output computations this
+    /// returns a single tuple buffer that cannot be fed back as separate
+    /// inputs — use [`run`](Self::run)/[`run_ref`](Self::run_ref) for those.
+    pub fn run_b(&self, args: &[PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
+        let t0 = Instant::now();
+        let mut outs = self.exe.execute_b(args)?;
+        self.bump(t0);
+        Ok(outs.swap_remove(0))
+    }
+
+    fn bump(&self, t0: Instant) {
+        self.total_exec_us
+            .set(self.total_exec_us.get() + t0.elapsed().as_micros() as u64);
+        self.exec_count.set(self.exec_count.get() + 1);
+    }
+
+    /// Mean execution time in microseconds (0 if never run).
+    pub fn mean_exec_us(&self) -> f64 {
+        let n = self.exec_count.get();
+        if n == 0 {
+            0.0
+        } else {
+            self.total_exec_us.get() as f64 / n as f64
+        }
+    }
+}

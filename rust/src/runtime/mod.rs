@@ -1,0 +1,13 @@
+//! Runtime layer: load AOT-compiled HLO-text artifacts and execute them on
+//! the PJRT CPU client (the `xla` crate). This is the only place python
+//! output crosses into rust; after `make artifacts` the binary is
+//! self-contained.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+
+mod executor;
+mod model;
+
+pub use executor::Executor;
+pub use model::{ModelRuntime, ModelSpec};

@@ -1,0 +1,183 @@
+//! Model runtime: the AOT-compiled transformer (prefill + decode step) plus
+//! its weight literals, reconstructed from `artifacts/` per the manifest.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtClient};
+
+use crate::util::meta::Meta;
+use super::Executor;
+
+/// Static model/artifact dimensions parsed from `meta.txt`.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub prefill_len: usize,
+    pub batch: usize,
+    pub kv_block: usize,
+    pub head_dim: usize,
+}
+
+impl ModelSpec {
+    pub fn from_meta(meta: &Meta) -> Result<Self> {
+        Ok(Self {
+            vocab: meta.get_usize("vocab")?,
+            d_model: meta.get_usize("d_model")?,
+            n_heads: meta.get_usize("n_heads")?,
+            n_layers: meta.get_usize("n_layers")?,
+            max_seq: meta.get_usize("max_seq")?,
+            prefill_len: meta.get_usize("prefill_len")?,
+            batch: meta.get_usize("batch")?,
+            kv_block: meta.get_usize("kv_block")?,
+            head_dim: meta.get_usize("head_dim")?,
+        })
+    }
+
+    /// Bytes of one KV cache tensor (one of k/v): L*B*H*S*Dh*4.
+    pub fn cache_bytes(&self) -> u64 {
+        (self.n_layers * self.batch * self.n_heads * self.max_seq * self.head_dim * 4) as u64
+    }
+
+    /// Bytes of KV per token per sequence across all layers (k+v).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        (2 * self.n_layers * self.n_heads * self.head_dim * 4) as u64
+    }
+}
+
+/// The served model: compiled prefill + decode executables and weights.
+pub struct ModelRuntime {
+    pub spec: ModelSpec,
+    pub prefill: Executor,
+    pub decode: Executor,
+    weights: Vec<Literal>,
+}
+
+impl ModelRuntime {
+    /// Load `meta.txt`, `weights.bin`, and both HLO artifacts from `dir`.
+    pub fn load(client: &PjRtClient, dir: &Path) -> Result<Self> {
+        let meta = Meta::load(&dir.join("meta.txt"))?;
+        let spec = ModelSpec::from_meta(&meta)?;
+
+        let raw = std::fs::read(dir.join("weights.bin"))
+            .with_context(|| format!("reading {}/weights.bin", dir.display()))?;
+        let total: usize = meta.weights.iter().map(|w| w.numel).sum();
+        if raw.len() != total * 4 {
+            bail!(
+                "weights.bin is {} bytes, manifest expects {} f32 ({} bytes)",
+                raw.len(), total, total * 4
+            );
+        }
+        let mut weights = Vec::with_capacity(meta.weights.len());
+        let mut off = 0usize;
+        for w in &meta.weights {
+            let n = w.numel;
+            let mut vals = vec![0f32; n];
+            // weights.bin is f32 little-endian, the native layout here.
+            for (i, chunk) in raw[off..off + n * 4].chunks_exact(4).enumerate() {
+                vals[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            off += n * 4;
+            let lit = Literal::vec1(&vals);
+            let lit = if w.shape.len() == 1 {
+                lit
+            } else {
+                lit.reshape(&w.shape)
+                    .with_context(|| format!("reshaping weight {}", w.name))?
+            };
+            weights.push(lit);
+        }
+
+        let prefill = Executor::load(client, &dir.join("prefill.hlo.txt"))?;
+        let decode = Executor::load(client, &dir.join("decode.hlo.txt"))?;
+        Ok(Self { spec, prefill, decode, weights })
+    }
+
+    /// Run prefill over a padded `batch x prefill_len` token matrix.
+    ///
+    /// Returns (last-position logits `[B*V]`, k_cache, v_cache).
+    pub fn run_prefill(&self, tokens: &[i32]) -> Result<(Vec<f32>, Literal, Literal)> {
+        let (b, p) = (self.spec.batch, self.spec.prefill_len);
+        if tokens.len() != b * p {
+            bail!("prefill expects {}x{} tokens, got {}", b, p, tokens.len());
+        }
+        let tok = Literal::vec1(tokens).reshape(&[b as i64, p as i64])?;
+        let mut args: Vec<&Literal> = self.weights.iter().collect();
+        args.push(&tok);
+        let mut outs = self.prefill.run_ref(&args)?;
+        if outs.len() != 3 {
+            bail!("prefill returned {} outputs, expected 3", outs.len());
+        }
+        let vc = outs.pop().unwrap();
+        let kc = outs.pop().unwrap();
+        let logits = outs.pop().unwrap().to_vec::<f32>()?;
+        Ok((logits, kc, vc))
+    }
+
+    /// Run one decode step: write position `pos`, batched `tokens` (`[B]`).
+    ///
+    /// Returns (logits `[B*V]`, new k_cache, new v_cache).
+    pub fn run_decode(
+        &self,
+        tokens: &[i32],
+        pos: i32,
+        k_cache: &Literal,
+        v_cache: &Literal,
+    ) -> Result<(Vec<f32>, Literal, Literal)> {
+        if tokens.len() != self.spec.batch {
+            bail!("decode expects batch {}, got {}", self.spec.batch, tokens.len());
+        }
+        if pos < 0 || pos as usize >= self.spec.max_seq {
+            bail!("decode pos {} out of range [0, {})", pos, self.spec.max_seq);
+        }
+        let tok = Literal::vec1(tokens);
+        let posl = Literal::scalar(pos);
+        let mut args: Vec<&Literal> = self.weights.iter().collect();
+        args.push(&tok);
+        args.push(&posl);
+        args.push(k_cache);
+        args.push(v_cache);
+        let mut outs = self.decode.run_ref(&args)?;
+        if outs.len() != 3 {
+            bail!("decode returned {} outputs, expected 3", outs.len());
+        }
+        let vc = outs.pop().unwrap();
+        let kc = outs.pop().unwrap();
+        let logits = outs.pop().unwrap().to_vec::<f32>()?;
+        Ok((logits, kc, vc))
+    }
+
+    /// Zero-initialised KV cache literal (shape `[L,B,H,S,Dh]` f32).
+    pub fn empty_cache(&self) -> Result<Literal> {
+        let s = &self.spec;
+        let n = s.n_layers * s.batch * s.n_heads * s.max_seq * s.head_dim;
+        Literal::vec1(&vec![0f32; n])
+            .reshape(&[
+                s.n_layers as i64,
+                s.batch as i64,
+                s.n_heads as i64,
+                s.max_seq as i64,
+                s.head_dim as i64,
+            ])
+            .map_err(Into::into)
+    }
+
+    /// Greedy argmax over per-sequence logits.
+    pub fn argmax_tokens(&self, logits: &[f32]) -> Vec<i32> {
+        let v = self.spec.vocab;
+        logits
+            .chunks_exact(v)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0)
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,257 @@
+//! The reactive runtime baseline (§3.1) — what HyperOffload replaces.
+//!
+//! Runtime-driven systems see memory pressure, not the graph: transfers are
+//! triggered reactively (on demand, or a fixed lookahead ahead of the
+//! consumer), and every runtime intervention costs a CPU control-path
+//! detour that *interrupts the device pipeline* (inspect state, issue DMA,
+//! synchronise). Periodically the runtime also performs memory compaction /
+//! system-level management (the 6.7 s component of the paper's 15 s
+//! motivation measurement).
+//!
+//! Implemented as a graph transformation: the same workload graph gets
+//! `Prefetch` ops wired the way a runtime would fire them, plus
+//! compute-stream stall ops for the control overhead — then the shared
+//! [`crate::sim`] engine measures the result, so baseline and HyperOffload
+//! numbers come from identical machinery.
+
+use crate::graph::{Graph, OpId, OpKind, TensorId, Tier};
+use crate::sim::{HwConfig, SimResult};
+
+/// How the runtime decides when to move data.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ReactiveMode {
+    /// Transfer starts only when the consumer is reached (fully exposed).
+    OnDemand,
+    /// Runtime looks `lookahead` ops ahead and fires the transfer then —
+    /// partial overlap, but every firing still pays the control path.
+    Prefetch { lookahead: usize },
+}
+
+/// Reactive-runtime configuration.
+#[derive(Debug, Clone)]
+pub struct ReactiveConfig {
+    pub mode: ReactiveMode,
+    /// Insert a compaction/management stall after every N transfers
+    /// (0 = never). Models §3.1's "memory compaction and system-level
+    /// management" component.
+    pub compaction_every: usize,
+    /// Duration of one compaction stall (us).
+    pub compaction_us: f64,
+}
+
+impl Default for ReactiveConfig {
+    fn default() -> Self {
+        Self { mode: ReactiveMode::OnDemand, compaction_every: 0, compaction_us: 0.0 }
+    }
+}
+
+/// A compute-stream stall of fixed duration (the device sits idle while the
+/// CPU walks the control path). Encoded as a zero-byte compute op whose
+/// flops are back-computed from the duration.
+fn stall_flops(us: f64, hw: &HwConfig) -> f64 {
+    us * hw.compute_tflops * 1e6
+}
+
+/// Transform `graph` into its reactive-runtime execution: for every
+/// remote-home tensor, wire a `Prefetch` the way the runtime would fire it,
+/// plus the control-path stalls. Returns the transformed graph **and the
+/// dispatch order that realises the runtime's firing points** — the stalls
+/// and loads are interleaved into the device pipeline at the positions the
+/// runtime would fire them (a plain topo sort would let them drift).
+pub fn transform(graph: &Graph, cfg: &ReactiveConfig, hw: &HwConfig) -> (Graph, Vec<OpId>) {
+    let mut g = graph.clone();
+    let order = g.topo_order().expect("reactive transform: cyclic graph");
+    // Compute ops in execution order (the "device pipeline").
+    let compute_order: Vec<OpId> = order
+        .iter()
+        .copied()
+        .filter(|&o| matches!(g.op(o).kind, OpKind::Compute { .. }))
+        .collect();
+    let non_compute: Vec<OpId> = order
+        .iter()
+        .copied()
+        .filter(|&o| !matches!(g.op(o).kind, OpKind::Compute { .. }))
+        .collect();
+    let pos_in_compute = |op: OpId| compute_order.iter().position(|&x| x == op);
+
+    // Remote tensors consumed by compute ops, ordered by first consumer.
+    let mut targets: Vec<(TensorId, OpId)> = Vec::new();
+    for t in &g.tensors {
+        if t.home != Tier::Remote {
+            continue;
+        }
+        if let Some(&u) = graph
+            .consumers_of(t.id)
+            .iter()
+            .find(|&&c| matches!(graph.op(c).kind, OpKind::Compute { .. }))
+        {
+            targets.push((t.id, u));
+        }
+    }
+    targets.sort_by_key(|&(_, u)| pos_in_compute(u).unwrap_or(usize::MAX));
+
+    // fire_at[j] = ops dispatched just before compute_order[j].
+    let mut fire_at: Vec<Vec<OpId>> = vec![Vec::new(); compute_order.len() + 1];
+    let mut transfers = 0usize;
+    for (t, u) in targets {
+        let tname = g.tensor(t).name.clone();
+        let u_pos = pos_in_compute(u).unwrap_or(0);
+        // Where does the runtime fire? OnDemand: at the consumer itself.
+        // Prefetch{k}: k compute ops earlier.
+        let fire_pos = match cfg.mode {
+            ReactiveMode::OnDemand => u_pos,
+            ReactiveMode::Prefetch { lookahead } => u_pos.saturating_sub(lookahead.max(1)),
+        };
+
+        // Control-path stall ON the compute stream at the firing point.
+        let stall = g.add_op(
+            format!("runtime.ctrl.{tname}"),
+            OpKind::Compute { flops: stall_flops(hw.host_overhead_us, hw), bytes_accessed: 0 },
+            vec![],
+            vec![],
+        );
+        if fire_pos > 0 {
+            g.add_control_dep(stall, compute_order[fire_pos - 1]);
+        }
+        let pf = g.add_op(
+            format!("runtime.load.{tname}"),
+            OpKind::Prefetch { tensor: t },
+            vec![t],
+            vec![],
+        );
+        g.add_control_dep(pf, stall);
+        g.add_control_dep(u, pf);
+        fire_at[fire_pos].push(stall);
+        fire_at[fire_pos].push(pf);
+
+        transfers += 1;
+        if cfg.compaction_every > 0 && transfers % cfg.compaction_every == 0 {
+            // Compaction bites when the allocation happens — at the consumer.
+            let comp = g.add_op(
+                format!("runtime.compact.{transfers}"),
+                OpKind::Compute { flops: stall_flops(cfg.compaction_us, hw), bytes_accessed: 0 },
+                vec![],
+                vec![],
+            );
+            g.add_control_dep(comp, pf);
+            g.add_control_dep(u, comp);
+            fire_at[u_pos].push(comp);
+        }
+    }
+
+    // Assemble the dispatch order: runtime ops at their firing points.
+    let mut exec: Vec<OpId> = Vec::with_capacity(g.ops.len());
+    exec.extend(&non_compute);
+    for (j, &c) in compute_order.iter().enumerate() {
+        exec.extend(fire_at[j].iter().copied());
+        exec.push(c);
+    }
+    exec.extend(fire_at[compute_order.len()].iter().copied());
+    debug_assert!(g.is_valid_order(&exec), "reactive dispatch order invalid");
+    (g, exec)
+}
+
+/// Convenience: transform + simulate with the runtime's dispatch order.
+pub fn simulate_reactive(graph: &Graph, cfg: &ReactiveConfig, hw: &HwConfig) -> SimResult {
+    let (g, order) = transform(graph, cfg, hw);
+    crate::sim::simulate(&g, &order, hw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::passes::{compile, ExecOrderConfig, OffloadPolicy};
+    use crate::sim::simulate;
+
+    fn hw() -> HwConfig {
+        HwConfig {
+            compute_tflops: 1.0,
+            hbm_gbps: 1e9,
+            d2r_gbps: 1.0,
+            r2d_gbps: 1.0,
+            link_latency_us: 0.0,
+            net_gbps: 1.0,
+            host_overhead_us: 50.0,
+            device_capacity: 1 << 30,
+            remote_capacity: 1 << 40,
+        }
+    }
+
+    /// 8 ops à 100us, each consuming a 50us-transfer remote weight.
+    fn workload() -> Graph {
+        GraphBuilder::chain_with_remote_weights(8, 100e6, 0, 50_000).0
+    }
+
+    #[test]
+    fn on_demand_exposes_every_transfer() {
+        let r = simulate_reactive(&workload(), &ReactiveConfig::default(), &hw());
+        // 8 transfers à 50us fully exposed + 8 stalls à 50us on compute.
+        assert!(r.exposed_comm_us > 350.0, "exposed {}", r.exposed_comm_us);
+        assert!(r.makespan_us > 8.0 * 100.0 + 8.0 * 50.0, "makespan {}", r.makespan_us);
+    }
+
+    #[test]
+    fn lookahead_prefetch_partially_overlaps() {
+        let on_demand = simulate_reactive(&workload(), &ReactiveConfig::default(), &hw());
+        let cfg = ReactiveConfig { mode: ReactiveMode::Prefetch { lookahead: 2 }, ..Default::default() };
+        let pf = simulate_reactive(&workload(), &cfg, &hw());
+        assert!(pf.makespan_us < on_demand.makespan_us, "{} !< {}", pf.makespan_us, on_demand.makespan_us);
+        // But control stalls remain on the compute stream.
+        assert!(pf.makespan_us > 8.0 * 100.0 + 7.0 * 50.0, "makespan {}", pf.makespan_us);
+    }
+
+    #[test]
+    fn compaction_adds_bubbles() {
+        let cfg = ReactiveConfig {
+            mode: ReactiveMode::Prefetch { lookahead: 2 },
+            compaction_every: 2,
+            compaction_us: 200.0,
+        };
+        let without = simulate_reactive(
+            &workload(),
+            &ReactiveConfig { mode: ReactiveMode::Prefetch { lookahead: 2 }, ..Default::default() },
+            &hw(),
+        );
+        let with = simulate_reactive(&workload(), &cfg, &hw());
+        assert!(with.makespan_us > without.makespan_us + 700.0,
+            "compaction too cheap: {} vs {}", with.makespan_us, without.makespan_us);
+    }
+
+    #[test]
+    fn hyperoffload_beats_reactive_on_same_workload() {
+        // The paper's core comparison (Fig. 3): compile-time scheduling vs
+        // runtime-driven on the identical graph + hardware.
+        let base = workload();
+        let reactive = simulate_reactive(
+            &base,
+            &ReactiveConfig { mode: ReactiveMode::Prefetch { lookahead: 1 }, compaction_every: 3, compaction_us: 150.0 },
+            &hw(),
+        );
+        let mut g = base.clone();
+        let report = compile(&mut g, &hw(), &OffloadPolicy::default(), &ExecOrderConfig::default());
+        let ours = simulate(&g, &report.order, &hw());
+        assert!(
+            ours.makespan_us < reactive.makespan_us * 0.8,
+            "HyperOffload {} not clearly faster than reactive {}",
+            ours.makespan_us,
+            reactive.makespan_us
+        );
+        // At most the pipeline-fill transfer is exposed (first weight has
+        // no compute to hide under). Note the reactive baseline reports 0
+        // *DMA* exposure — its slowdown is control-path bubbles on the
+        // compute stream, exactly the paper's Fig. 3(b) story.
+        let one_transfer = hw().r2d_us(50_000);
+        assert!(ours.exposed_comm_us <= one_transfer + 1e-6);
+    }
+
+    #[test]
+    fn transform_keeps_graph_acyclic_and_order_valid() {
+        for lookahead in 1..5 {
+            let cfg = ReactiveConfig { mode: ReactiveMode::Prefetch { lookahead }, ..Default::default() };
+            let (g, order) = transform(&workload(), &cfg, &hw());
+            assert!(g.validate().is_ok(), "lookahead {lookahead}");
+            assert!(g.is_valid_order(&order), "lookahead {lookahead}");
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! Latency/throughput metrics for serving runs (the rows of Tables 3–6).
+
+/// Aggregate statistics over a set of samples.
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    pub mean: f64,
+    pub p50: f64,
+    pub p99: f64,
+    pub max: f64,
+    pub n: usize,
+}
+
+pub fn stats(samples: &[f64]) -> Stats {
+    if samples.is_empty() {
+        return Stats::default();
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.total_cmp(b));
+    let pct = |q: f64| s[((s.len() as f64 - 1.0) * q).round() as usize];
+    Stats {
+        mean: s.iter().sum::<f64>() / s.len() as f64,
+        p50: pct(0.5),
+        p99: pct(0.99),
+        max: *s.last().unwrap(),
+        n: s.len(),
+    }
+}
+
+/// Full report from a serving run: everything the paper's inference tables
+/// print.
+#[derive(Debug, Clone, Default)]
+pub struct ServingReport {
+    pub prefill_latency_us: Stats,
+    /// Per-token decode latency.
+    pub decode_per_token_us: Stats,
+    pub e2e_latency_us: Stats,
+    pub total_time_us: f64,
+    pub tokens_generated: u64,
+    pub throughput_tok_per_s: f64,
+    /// Peak device memory across weights + activations + KV (bytes).
+    pub peak_device_bytes: u64,
+    pub defrag_events: u64,
+    pub defrag_stall_us: f64,
+    /// Exposed (non-overlapped) KV transfer time (us).
+    pub exposed_transfer_us: f64,
+    /// Total KV transfer volume (bytes).
+    pub kv_transfer_bytes: u64,
+    pub rejected_requests: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_known_samples() {
+        let s = stats(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn stats_empty_is_zero() {
+        let s = stats(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn p99_tracks_tail() {
+        // 10% of samples are slow: p99 must land in the slow mass.
+        let mut v = vec![1.0; 90];
+        v.extend(vec![100.0; 10]);
+        let s = stats(&v);
+        assert_eq!(s.p99, 100.0);
+        assert!(s.p50 < 2.0);
+        assert_eq!(s.max, 100.0);
+    }
+}

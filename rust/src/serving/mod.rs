@@ -1,0 +1,13 @@
+//! Serving stack (the paper's inference case study, §5.2 / §7.3): request
+//! router, workload generation, continuous-batching engine with KV-cache
+//! residency policies, and the metrics the inference tables report.
+
+mod engine;
+mod metrics;
+mod request;
+mod router;
+
+pub use engine::{EngineConfig, ModelCost, SimServingEngine};
+pub use metrics::{stats, ServingReport, Stats};
+pub use request::{Request, RequestTiming, WorkloadConfig};
+pub use router::{RoutePolicy, Router};

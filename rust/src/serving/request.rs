@@ -1,0 +1,150 @@
+//! Requests and workload generation for the serving evaluation.
+
+use crate::util::rng::Rng;
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time (us since epoch of the run).
+    pub arrival_us: f64,
+    pub prompt_tokens: usize,
+    pub gen_tokens: usize,
+}
+
+/// Lifecycle timestamps filled in by the engine.
+#[derive(Debug, Clone, Default)]
+pub struct RequestTiming {
+    pub prefill_start_us: f64,
+    pub prefill_end_us: f64,
+    /// First generated token time (== prefill_end in this engine).
+    pub first_token_us: f64,
+    pub done_us: f64,
+}
+
+impl RequestTiming {
+    pub fn prefill_latency_us(&self, arrival: f64) -> f64 {
+        self.prefill_end_us - arrival
+    }
+    pub fn e2e_latency_us(&self, arrival: f64) -> f64 {
+        self.done_us - arrival
+    }
+    pub fn decode_time_us(&self) -> f64 {
+        self.done_us - self.prefill_end_us
+    }
+}
+
+/// Workload shapes used by the paper's inference experiments.
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub n_requests: usize,
+    /// Mean inter-arrival time (us). 0 = all at t=0 (closed batch).
+    pub mean_interarrival_us: f64,
+    pub prompt_min: usize,
+    pub prompt_max: usize,
+    pub gen_min: usize,
+    pub gen_max: usize,
+    pub seed: u64,
+}
+
+impl WorkloadConfig {
+    /// Long-sequence near-capacity workload (§7.3.2 / Table 4).
+    pub fn long_sequence(n: usize, prompt: usize, gen: usize, seed: u64) -> Self {
+        Self {
+            n_requests: n,
+            mean_interarrival_us: 0.0,
+            prompt_min: prompt,
+            prompt_max: prompt,
+            gen_min: gen,
+            gen_max: gen,
+            seed,
+        }
+    }
+
+    /// Typical short-sequence workload (§7.3.3 / Table 5).
+    pub fn short_sequence(n: usize, seed: u64) -> Self {
+        Self {
+            n_requests: n,
+            mean_interarrival_us: 0.0,
+            prompt_min: 512,
+            prompt_max: 2048,
+            gen_min: 64,
+            gen_max: 256,
+            seed,
+        }
+    }
+
+    pub fn generate(&self) -> Vec<Request> {
+        let mut rng = Rng::new(self.seed);
+        let mut t = 0.0f64;
+        (0..self.n_requests)
+            .map(|i| {
+                if self.mean_interarrival_us > 0.0 {
+                    t += rng.exponential(self.mean_interarrival_us);
+                }
+                Request {
+                    id: i as u64,
+                    arrival_us: t,
+                    prompt_tokens: if self.prompt_min == self.prompt_max {
+                        self.prompt_min
+                    } else {
+                        rng.usize(self.prompt_min, self.prompt_max + 1)
+                    },
+                    gen_tokens: if self.gen_min == self.gen_max {
+                        self.gen_min
+                    } else {
+                        rng.usize(self.gen_min, self.gen_max + 1)
+                    },
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic() {
+        let cfg = WorkloadConfig::short_sequence(20, 42);
+        let a = cfg.generate();
+        let b = cfg.generate();
+        assert_eq!(a.len(), 20);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+            assert_eq!(x.gen_tokens, y.gen_tokens);
+        }
+    }
+
+    #[test]
+    fn bounds_respected() {
+        let cfg = WorkloadConfig::short_sequence(200, 7);
+        for r in cfg.generate() {
+            assert!((512..=2048).contains(&r.prompt_tokens));
+            assert!((64..=256).contains(&r.gen_tokens));
+        }
+    }
+
+    #[test]
+    fn long_sequence_is_fixed_shape() {
+        let cfg = WorkloadConfig::long_sequence(4, 60_000, 1000, 1);
+        for r in cfg.generate() {
+            assert_eq!(r.prompt_tokens, 60_000);
+            assert_eq!(r.gen_tokens, 1000);
+            assert_eq!(r.arrival_us, 0.0);
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone_with_poisson() {
+        let cfg = WorkloadConfig {
+            mean_interarrival_us: 1000.0,
+            ..WorkloadConfig::short_sequence(50, 3)
+        };
+        let reqs = cfg.generate();
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_us >= w[0].arrival_us);
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Request router over multiple engine replicas (the L3 leader's front
+//! door, vLLM-router-shaped). Routing is static-state-aware: least-loaded
+//! by outstanding tokens, or round-robin.
+
+use super::request::Request;
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    /// Pick the replica with the least outstanding token work.
+    LeastLoaded,
+}
+
+/// Router state over `n` replicas.
+#[derive(Debug)]
+pub struct Router {
+    policy: RoutePolicy,
+    /// Outstanding work (tokens) per replica.
+    load: Vec<u64>,
+    next_rr: usize,
+}
+
+impl Router {
+    pub fn new(n_replicas: usize, policy: RoutePolicy) -> Self {
+        assert!(n_replicas > 0);
+        Self { policy, load: vec![0; n_replicas], next_rr: 0 }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.load.len()
+    }
+
+    /// Route one request; returns the replica index.
+    pub fn route(&mut self, req: &Request) -> usize {
+        let idx = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let i = self.next_rr;
+                self.next_rr = (self.next_rr + 1) % self.load.len();
+                i
+            }
+            RoutePolicy::LeastLoaded => self
+                .load
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &l)| l)
+                .map(|(i, _)| i)
+                .unwrap(),
+        };
+        self.load[idx] += (req.prompt_tokens + req.gen_tokens) as u64;
+        idx
+    }
+
+    /// Mark a request complete on its replica.
+    pub fn complete(&mut self, replica: usize, req: &Request) {
+        let w = (req.prompt_tokens + req.gen_tokens) as u64;
+        self.load[replica] = self.load[replica].saturating_sub(w);
+    }
+
+    pub fn load_of(&self, replica: usize) -> u64 {
+        self.load[replica]
+    }
+
+    /// Partition a workload across replicas (static dispatch for the
+    /// closed-loop benches).
+    pub fn partition(&mut self, requests: &[Request]) -> Vec<Vec<Request>> {
+        let mut out = vec![Vec::new(); self.load.len()];
+        for r in requests {
+            let i = self.route(r);
+            out[i].push(r.clone());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, p: usize, g: usize) -> Request {
+        Request { id, arrival_us: 0.0, prompt_tokens: p, gen_tokens: g }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(3, RoutePolicy::RoundRobin);
+        let targets: Vec<usize> = (0..6).map(|i| r.route(&req(i, 10, 10))).collect();
+        assert_eq!(targets, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_balances_uneven_work() {
+        let mut r = Router::new(2, RoutePolicy::LeastLoaded);
+        // Big request to 0, small ones should then prefer 1.
+        assert_eq!(r.route(&req(0, 10_000, 1000)), 0);
+        assert_eq!(r.route(&req(1, 10, 10)), 1);
+        assert_eq!(r.route(&req(2, 10, 10)), 1);
+    }
+
+    #[test]
+    fn complete_releases_load() {
+        let mut r = Router::new(2, RoutePolicy::LeastLoaded);
+        let big = req(0, 10_000, 0);
+        let i = r.route(&big);
+        assert!(r.load_of(i) > 0);
+        r.complete(i, &big);
+        assert_eq!(r.load_of(i), 0);
+    }
+
+    #[test]
+    fn partition_covers_all_requests() {
+        let mut r = Router::new(4, RoutePolicy::RoundRobin);
+        let reqs: Vec<Request> = (0..10).map(|i| req(i, 100, 10)).collect();
+        let parts = r.partition(&reqs);
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), 10);
+        assert!(parts.iter().all(|p| !p.is_empty()));
+    }
+}

@@ -1,0 +1,411 @@
+//! Discrete-event execution simulator.
+//!
+//! Models the SuperNode device as four in-order streams — compute, DMA-in
+//! (R2D), DMA-out (D2R), network, plus a host stream for CPU control work —
+//! executing a graph in a given total order (list scheduling): an op starts
+//! when its stream is free AND all dependency predecessors have finished.
+//! Produces the timeline quantities the paper's figures report: makespan,
+//! exposed vs overlapped communication, peak device residency.
+
+use std::collections::HashMap;
+
+use crate::graph::{Graph, OpId, OpKind, Tier};
+
+use super::hw::HwConfig;
+
+/// Execution stream an op occupies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stream {
+    Compute,
+    DmaIn,
+    DmaOut,
+    Net,
+    Host,
+}
+
+pub fn stream_of(kind: &OpKind) -> Stream {
+    match kind {
+        OpKind::Compute { .. } => Stream::Compute,
+        OpKind::Prefetch { .. } => Stream::DmaIn,
+        OpKind::Store { .. } => Stream::DmaOut,
+        OpKind::Detach { .. } => Stream::Host, // bookkeeping, ~free
+        OpKind::Collective { .. } => Stream::Net,
+        OpKind::HostWork { .. } => Stream::Host,
+    }
+}
+
+/// Duration of `kind` on `hw` in microseconds.
+pub fn duration_us(kind: &OpKind, g: &Graph, hw: &HwConfig) -> f64 {
+    match kind {
+        OpKind::Compute { flops, bytes_accessed } => hw.compute_us(*flops, *bytes_accessed),
+        OpKind::Prefetch { tensor } => hw.r2d_us(g.tensor(*tensor).bytes),
+        OpKind::Store { tensor } => hw.d2r_us(g.tensor(*tensor).bytes),
+        OpKind::Detach { .. } => 0.0,
+        OpKind::Collective { bytes } => hw.net_us(*bytes),
+        OpKind::HostWork { us } => *us,
+    }
+}
+
+/// Per-op interval in the simulated timeline.
+#[derive(Debug, Clone, Copy)]
+pub struct Interval {
+    pub op: OpId,
+    pub start_us: f64,
+    pub finish_us: f64,
+    pub stream: Stream,
+}
+
+/// Simulation output: everything the paper's tables/figures need.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub makespan_us: f64,
+    /// Busy time of the compute stream.
+    pub compute_busy_us: f64,
+    /// Compute-stream stall time attributable to waiting on DMA transfers
+    /// ("exposed communication" in Fig. 6).
+    pub exposed_comm_us: f64,
+    /// DMA busy time that ran under compute ("overlapped communication").
+    pub overlapped_comm_us: f64,
+    /// Total DMA (prefetch+store) busy time.
+    pub dma_busy_us: f64,
+    /// Peak device-memory residency (bytes).
+    pub peak_device_bytes: u64,
+    /// (time_us, resident_bytes) residency curve, one point per change.
+    pub residency: Vec<(f64, u64)>,
+    pub intervals: Vec<Interval>,
+}
+
+impl SimResult {
+    /// Fraction of DMA time hidden under compute.
+    pub fn overlap_efficiency(&self) -> f64 {
+        if self.dma_busy_us <= 0.0 {
+            1.0
+        } else {
+            (self.overlapped_comm_us / self.dma_busy_us).clamp(0.0, 1.0)
+        }
+    }
+
+    /// Integral of the device residency curve (byte·us): the quantity the
+    /// too-early-prefetch pattern of Fig. 4(b) inflates even when the peak
+    /// is unchanged.
+    pub fn residency_byte_time(&self) -> f64 {
+        let mut acc = 0.0;
+        for w in self.residency.windows(2) {
+            acc += w[0].1 as f64 * (w[1].0 - w[0].0);
+        }
+        acc
+    }
+}
+
+/// Simulate `graph` executed in `order` on `hw`.
+///
+/// `order` must be a valid topological order (checked in debug builds).
+pub fn simulate(graph: &Graph, order: &[OpId], hw: &HwConfig) -> SimResult {
+    debug_assert!(graph.is_valid_order(order), "simulate: invalid execution order");
+
+    let n = graph.ops.len();
+    let mut finish = vec![0.0f64; n];
+    let mut start = vec![0.0f64; n];
+    let mut stream_free: HashMap<Stream, f64> = HashMap::new();
+    let mut intervals = Vec::with_capacity(n);
+
+    // --- residency bookkeeping -------------------------------------------
+    // A tensor occupies device memory from `alloc_time` until its free
+    // event. Graph-input tensors homed on device are resident from t=0.
+    // Compute outputs alloc at op start. Prefetch allocs at transfer start.
+    // Store frees at completion; Detach frees immediately; device-home
+    // tensors with no cache ops free after their last consumer (static
+    // memory planning, §3.2 "predictable memory management").
+    let mut mem_events: Vec<(f64, i64)> = Vec::new(); // (time, +bytes/-bytes)
+    let mut last_use: HashMap<usize, OpId> = HashMap::new();
+    let mut pos = vec![usize::MAX; n];
+    for (i, &o) in order.iter().enumerate() {
+        pos[o] = i;
+    }
+    for t in &graph.tensors {
+        let mut consumers: Vec<OpId> = graph.consumers_of(t.id).to_vec();
+        consumers.retain(|&c| pos[c] != usize::MAX);
+        if let Some(&last) = consumers.iter().max_by_key(|&&c| pos[c]) {
+            last_use.insert(t.id, last);
+        }
+    }
+    // Last Store/Detach position per tensor: a cache op frees the device
+    // copy, but if the tensor is prefetched back and consumed *after* its
+    // last Store, the static planner frees it after that last consumer.
+    let mut last_cache_free_pos: HashMap<usize, usize> = HashMap::new();
+    for op in &graph.ops {
+        if let OpKind::Store { tensor } | OpKind::Detach { tensor } = op.kind {
+            if pos[op.id] != usize::MAX {
+                let e = last_cache_free_pos.entry(tensor).or_insert(0);
+                *e = (*e).max(pos[op.id]);
+            }
+        }
+    }
+    // Device-home graph inputs (no producer): resident from t=0.
+    for t in &graph.tensors {
+        if t.home == Tier::Device && graph.producer_of(t.id).is_none() {
+            mem_events.push((0.0, t.bytes as i64));
+        }
+    }
+
+    // --- list scheduling ---------------------------------------------------
+    for &op_id in order {
+        let op = graph.op(op_id);
+        let stream = stream_of(&op.kind);
+        let dur = duration_us(&op.kind, graph, hw);
+        let dep_ready = graph
+            .preds(op_id)
+            .iter()
+            .map(|&p| finish[p])
+            .fold(0.0f64, f64::max);
+        let s = dep_ready.max(*stream_free.get(&stream).unwrap_or(&0.0));
+        let f = s + dur;
+        start[op_id] = s;
+        finish[op_id] = f;
+        stream_free.insert(stream, f);
+        intervals.push(Interval { op: op_id, start_us: s, finish_us: f, stream });
+
+        match op.kind {
+            OpKind::Compute { .. } => {
+                for &t in &op.outputs {
+                    if graph.tensor(t).home == Tier::Device {
+                        mem_events.push((s, graph.tensor(t).bytes as i64));
+                    }
+                }
+            }
+            OpKind::Prefetch { tensor } => {
+                // Destination reserved at transfer start.
+                mem_events.push((s, graph.tensor(tensor).bytes as i64));
+            }
+            OpKind::Store { tensor } => {
+                // Device copy released once the transfer completes.
+                mem_events.push((f, -(graph.tensor(tensor).bytes as i64)));
+            }
+            OpKind::Detach { tensor } => {
+                mem_events.push((f, -(graph.tensor(tensor).bytes as i64)));
+            }
+            _ => {}
+        }
+    }
+
+    // Refcount frees: after the last consumer, unless a later cache op
+    // owns the free. Remote-home tensors are freed too once prefetched in
+    // (their device copy exists only between Prefetch and last use).
+    for t in &graph.tensors {
+        let Some(&last) = last_use.get(&t.id) else { continue };
+        let has_device_copy = t.home == Tier::Device
+            || graph.ops.iter().any(
+                |o| matches!(o.kind, OpKind::Prefetch { tensor } if tensor == t.id),
+            );
+        if !has_device_copy {
+            continue;
+        }
+        if let Some(&cp) = last_cache_free_pos.get(&t.id) {
+            if cp >= pos[last] {
+                continue; // the trailing Store/Detach performs the free
+            }
+        }
+        mem_events.push((finish[last], -(t.bytes as i64)));
+        // Tensors never consumed (graph outputs) stay resident to the end.
+    }
+
+    // --- aggregate ----------------------------------------------------------
+    let makespan = finish.iter().copied().fold(0.0f64, f64::max);
+    let compute_busy: f64 = intervals
+        .iter()
+        .filter(|iv| iv.stream == Stream::Compute)
+        .map(|iv| iv.finish_us - iv.start_us)
+        .sum();
+    let dma_busy: f64 = intervals
+        .iter()
+        .filter(|iv| matches!(iv.stream, Stream::DmaIn | Stream::DmaOut))
+        .map(|iv| iv.finish_us - iv.start_us)
+        .sum();
+
+    // Exposed communication: for each compute op, the gap behind the
+    // previous compute op that is closed by a DMA dependency finishing.
+    let mut exposed = 0.0f64;
+    let mut prev_compute_finish = 0.0f64;
+    for &op_id in order {
+        let op = graph.op(op_id);
+        if stream_of(&op.kind) != Stream::Compute {
+            continue;
+        }
+        let gap_start = prev_compute_finish;
+        let s = start[op_id];
+        if s > gap_start {
+            // Which dependency pushed us here?
+            let dma_ready = graph
+                .preds(op_id)
+                .iter()
+                .filter(|&&p| matches!(stream_of(&graph.op(p).kind), Stream::DmaIn | Stream::DmaOut))
+                .map(|&p| finish[p])
+                .fold(0.0f64, f64::max);
+            exposed += (dma_ready.min(s) - gap_start).max(0.0);
+        }
+        prev_compute_finish = finish[op_id];
+    }
+    let overlapped = (dma_busy - exposed).max(0.0);
+
+    // Residency curve. At equal timestamps frees apply before allocs
+    // (static memory planning reuses the slot within the same instant).
+    mem_events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let mut cur: i64 = 0;
+    let mut peak: i64 = 0;
+    let mut residency = Vec::with_capacity(mem_events.len());
+    for (t, d) in mem_events {
+        cur += d;
+        peak = peak.max(cur);
+        residency.push((t, cur.max(0) as u64));
+    }
+
+    SimResult {
+        makespan_us: makespan,
+        compute_busy_us: compute_busy,
+        exposed_comm_us: exposed,
+        overlapped_comm_us: overlapped,
+        dma_busy_us: dma_busy,
+        peak_device_bytes: peak.max(0) as u64,
+        residency,
+        intervals,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn hw() -> HwConfig {
+        HwConfig {
+            compute_tflops: 1.0,   // 1 TFLOP/s -> 1e6 flops = 1 us
+            hbm_gbps: 1000.0,
+            d2r_gbps: 1.0,         // 1 GB/s -> 1 KB = 1 us
+            r2d_gbps: 1.0,
+            link_latency_us: 0.0,
+            net_gbps: 1.0,
+            host_overhead_us: 0.0,
+            device_capacity: 1 << 30,
+            remote_capacity: 1 << 40,
+        }
+    }
+
+    #[test]
+    fn serial_chain_sums_durations() {
+        let g = GraphBuilder::linear_chain(4, 1e6, 0);
+        let order = g.topo_order().unwrap();
+        let r = simulate(&g, &order, &hw());
+        assert!((r.makespan_us - 4.0).abs() < 1e-9);
+        assert!((r.compute_busy_us - 4.0).abs() < 1e-9);
+        assert_eq!(r.exposed_comm_us, 0.0);
+    }
+
+    #[test]
+    fn prefetch_overlaps_with_compute() {
+        // c0 (5us) ; prefetch w (3us, independent) ; c1 consumes w.
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 3000, crate::graph::Tier::Remote); // 3 us at 1 GB/s
+        let a0 = b.tensor("a0", 0, crate::graph::Tier::Device);
+        let a1 = b.tensor("a1", 0, crate::graph::Tier::Device);
+        let pf = b.prefetch("pf.w", w);
+        b.compute("c0", 5e6, 0, vec![], vec![a0]);
+        let c1 = b.compute("c1", 1e6, 0, vec![a0, w], vec![a1]);
+        b.dep(c1, pf);
+        let g = b.build();
+        // Order: pf first -> fully overlapped with c0.
+        let order = vec![0, 1, 2];
+        let r = simulate(&g, &order, &hw());
+        assert!((r.makespan_us - 6.0).abs() < 1e-9, "makespan {}", r.makespan_us);
+        assert_eq!(r.exposed_comm_us, 0.0);
+        assert!((r.overlapped_comm_us - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn late_prefetch_exposes_latency() {
+        // Same graph but prefetch issued after c0 -> c1 stalls 3us.
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 3000, crate::graph::Tier::Remote);
+        let a0 = b.tensor("a0", 0, crate::graph::Tier::Device);
+        let a1 = b.tensor("a1", 0, crate::graph::Tier::Device);
+        b.compute("c0", 5e6, 0, vec![], vec![a0]);
+        let pf = b.prefetch("pf.w", w);
+        let c1 = b.compute("c1", 1e6, 0, vec![a0, w], vec![a1]);
+        b.dep(pf, 0); // runtime-style: issue only when c0 done
+        b.dep(c1, pf);
+        let g = b.build();
+        let order = vec![0, 1, 2];
+        let r = simulate(&g, &order, &hw());
+        assert!((r.makespan_us - 9.0).abs() < 1e-9, "makespan {}", r.makespan_us);
+        assert!((r.exposed_comm_us - 3.0).abs() < 1e-9, "exposed {}", r.exposed_comm_us);
+    }
+
+    #[test]
+    fn peak_memory_tracks_alloc_and_free() {
+        // Two 1KB activations, freed after last use; peak = 2KB while both live.
+        let g = GraphBuilder::linear_chain(3, 1e6, 1024);
+        let order = g.topo_order().unwrap();
+        let r = simulate(&g, &order, &hw());
+        // act0 freed when op1 finishes; act1 while op2 runs; act2 never freed.
+        assert_eq!(r.peak_device_bytes, 2048);
+    }
+
+    #[test]
+    fn store_reduces_residency() {
+        let mut b = GraphBuilder::new();
+        let a = b.tensor("a", 4096, crate::graph::Tier::Device);
+        let o = b.tensor("o", 0, crate::graph::Tier::Device);
+        let c0 = b.compute("produce", 1e6, 0, vec![], vec![a]);
+        let st = b.store("st.a", a);
+        b.dep(st, c0);
+        let c1 = b.compute("rest", 10e6, 0, vec![], vec![o]);
+        b.dep(c1, c0);
+        let g = b.build();
+        let order = g.topo_order().unwrap();
+        let r = simulate(&g, &order, &hw());
+        // a allocated then stored out; final residency 0 (o is 0 bytes).
+        let final_res = r.residency.last().unwrap().1;
+        assert_eq!(final_res, 0);
+        assert_eq!(r.peak_device_bytes, 4096);
+    }
+
+    #[test]
+    fn detach_is_instantaneous() {
+        let mut b = GraphBuilder::new();
+        let a = b.tensor("a", 4096, crate::graph::Tier::Device);
+        let c0 = b.compute("produce", 1e6, 0, vec![], vec![a]);
+        let dt = b.detach("dt.a", a);
+        b.dep(dt, c0);
+        let g = b.build();
+        let order = g.topo_order().unwrap();
+        let r = simulate(&g, &order, &hw());
+        assert!((r.makespan_us - 1.0).abs() < 1e-9);
+        assert_eq!(r.residency.last().unwrap().1, 0);
+    }
+
+    #[test]
+    fn order_changes_outcome_but_not_validity() {
+        // Exactly Fig. 4: same graph, different order, different exposure.
+        let (g, ws) = GraphBuilder::chain_with_remote_weights(4, 5e6, 0, 2000);
+        let mut b = GraphBuilder { graph: g };
+        let mut pf_ops = Vec::new();
+        for (i, &w) in ws.iter().enumerate() {
+            let pf = b.prefetch(&format!("pf.{i}"), w);
+            b.dep(i, pf); // consumer op i depends on its prefetch
+            pf_ops.push(pf);
+        }
+        let g = b.build();
+        // "All prefetches first" order vs "each prefetch just before use".
+        let early: Vec<OpId> = pf_ops.iter().copied().chain(0..4).collect();
+        let mut late: Vec<OpId> = Vec::new();
+        for i in 0..4 {
+            late.push(pf_ops[i]);
+            late.push(i);
+        }
+        assert!(g.is_valid_order(&early));
+        assert!(g.is_valid_order(&late));
+        let r_early = simulate(&g, &early, &hw());
+        let r_late = simulate(&g, &late, &hw());
+        // Early: everything prefetched up front -> higher residency.
+        assert!(r_early.peak_device_bytes >= r_late.peak_device_bytes);
+    }
+}

@@ -1,0 +1,13 @@
+//! Discrete-event simulation of SuperNode execution (DESIGN.md §2).
+//!
+//! The simulator is the measurement substrate for every paper table/figure
+//! that the real CPU-PJRT path cannot produce (bandwidth sweeps, 8-device
+//! training steps, terabyte pools). Costs are analytic (roofline compute,
+//! bandwidth+latency transfers); results are *shape-faithful*, not
+//! absolute-number-faithful.
+
+mod engine;
+mod hw;
+
+pub use engine::{duration_us, simulate, stream_of, Interval, SimResult, Stream};
+pub use hw::{HwConfig, GB, MB};

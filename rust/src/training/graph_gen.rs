@@ -1,0 +1,203 @@
+//! Build the per-device training-step computation graph for a (pp = 1)
+//! layout — the hierarchical-memory configurations of §7.2 (8/1/1 and
+//! 8/1/1/4).
+//!
+//! Per layer: fwd (produces the layer activation), bwd (consumes it),
+//! optimizer update (consumes the layer's optimizer state). Optimizer
+//! states are **remote-home** graph inputs — the paper's §5.1 design keeps
+//! them in the pool between iterations and prefetches them back under the
+//! backward pass — and are stored back after the update. Activations are
+//! device-home; the prefetch-insertion pass decides which ones to offload.
+
+use crate::graph::{Graph, GraphBuilder, OpId, Tier};
+
+use super::parallel::ParallelCfg;
+use super::presets::ModelPreset;
+
+/// Handle to the interesting pieces of the generated graph.
+pub struct StepGraph {
+    pub graph: Graph,
+    pub act_tensors: Vec<usize>,
+    pub opt_tensors: Vec<usize>,
+    pub fwd_ops: Vec<OpId>,
+    pub bwd_ops: Vec<OpId>,
+    pub update_ops: Vec<OpId>,
+}
+
+/// Generate the training-step graph for one device. Requires `pp == 1`
+/// (the paper's hierarchical configs; pipelined baselines are costed
+/// analytically in [`super::step`]).
+pub fn build_step_graph(model: &ModelPreset, par: &ParallelCfg) -> StepGraph {
+    assert_eq!(par.pp, 1, "graph generation models pp=1 layouts");
+    let layers = model.n_layers;
+    let tokens = par.tokens_per_device();
+
+    let flops_fwd_layer = model.fwd_flops_per_token_layer() * tokens / par.tp as f64;
+    let flops_bwd_layer = 2.0 * flops_fwd_layer;
+    let act_bytes_layer =
+        (model.act_bytes_per_token_layer() * tokens / par.tp as f64) as u64;
+    let opt_bytes_layer =
+        (par.opt_bytes_per_device(model) / layers as f64) as u64;
+    // Update reads grads + states, writes weights + states: cheap flops,
+    // heavy HBM traffic.
+    let update_bytes = opt_bytes_layer + (par.weight_bytes_per_device(model) / layers as f64) as u64;
+
+    // Pool-resident slice of each layer's weights ("subset of parameters
+    // offloaded to remote memory", §7.2.1). Prefetched before first use and
+    // released after the backward pass by the standard planner machinery.
+    let w_remote_layer = (par.weight_bytes_per_device(model) / layers as f64
+        * par.param_offload_frac) as u64;
+
+    let mut b = GraphBuilder::new();
+    let mut acts = Vec::with_capacity(layers);
+    let mut opts = Vec::with_capacity(layers);
+    let mut weights = Vec::with_capacity(layers);
+    let mut fwd_ops = Vec::with_capacity(layers);
+    let mut bwd_ops = Vec::with_capacity(layers);
+    let mut update_ops = Vec::with_capacity(layers);
+
+    // Forward chain.
+    let mut prev_act = None;
+    for l in 0..layers {
+        let act = b.tensor(&format!("act.{l}"), act_bytes_layer, Tier::Device);
+        let mut inputs = prev_act.map(|t| vec![t]).unwrap_or_default();
+        if w_remote_layer > 0 {
+            let w = b.tensor(&format!("w.{l}"), w_remote_layer, Tier::Remote);
+            inputs.push(w);
+            weights.push(w);
+        }
+        let f = b.compute(&format!("fwd.{l}"), flops_fwd_layer, act_bytes_layer, inputs, vec![act]);
+        fwd_ops.push(f);
+        acts.push(act);
+        prev_act = Some(act);
+    }
+
+    // Optimizer states: remote-home inputs (pool-resident between steps).
+    for l in 0..layers {
+        opts.push(b.tensor(&format!("opt.{l}"), opt_bytes_layer, Tier::Remote));
+    }
+
+    // Backward chain (reverse order), each consuming its activation.
+    let mut prev_bwd: Option<OpId> = None;
+    let mut grads = Vec::with_capacity(layers);
+    for l in (0..layers).rev() {
+        let grad = b.tensor(&format!("grad.{l}"), 0, Tier::Device);
+        let mut inputs = vec![acts[l]];
+        if let Some(&w) = weights.get(l) {
+            inputs.push(w); // weight reuse in backward
+        }
+        let bw = b.compute(
+            &format!("bwd.{l}"),
+            flops_bwd_layer,
+            act_bytes_layer,
+            inputs,
+            vec![grad],
+        );
+        if let Some(p) = prev_bwd {
+            b.dep(bw, p);
+        } else if let Some(&last_fwd) = fwd_ops.last() {
+            b.dep(bw, last_fwd);
+        }
+        prev_bwd = Some(bw);
+        bwd_ops.push(bw);
+        grads.push(grad);
+    }
+    bwd_ops.reverse();
+    grads.reverse();
+
+    // DP gradient all-reduce, bucketed per layer so each bucket launches
+    // as soon as its backward completes and overlaps the remaining
+    // backward compute on the network stream (standard gradient bucketing,
+    // here simply expressed as graph structure).
+    let dp_bytes_layer = (par.dp_comm_bytes(model) / layers as f64) as u64;
+
+    // Per-layer optimizer update, consuming the (prefetched) state and the
+    // all-reduced gradient, then storing the state back to the pool.
+    // Emitted in BACKWARD order (layer L-1 first): gradient buckets become
+    // ready in that order, so the network stream starts collectives as
+    // soon as each backward completes instead of blocking on layer 0.
+    for l in (0..layers).rev() {
+        let mut upd_deps = vec![opts[l], grads[l]];
+        let ar = if dp_bytes_layer > 0 {
+            let ar = b.collective(&format!("allreduce.grad.{l}"), dp_bytes_layer, vec![grads[l]]);
+            b.dep(ar, bwd_ops[l]);
+            Some(ar)
+        } else {
+            None
+        };
+        let upd = b.compute(
+            &format!("update.{l}"),
+            1e6, // negligible flops; HBM-bound
+            update_bytes,
+            std::mem::take(&mut upd_deps),
+            vec![],
+        );
+        if let Some(ar) = ar {
+            b.dep(upd, ar);
+        }
+        let st = b.store(&format!("store.opt.{l}"), opts[l]);
+        b.dep(st, upd);
+        update_ops.push(upd);
+    }
+    update_ops.reverse(); // restore layer-index order for callers
+
+    StepGraph { graph: b.build(), act_tensors: acts, opt_tensors: opts, fwd_ops, bwd_ops, update_ops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama_hier_graph_shape() {
+        let m = ModelPreset::llama8b();
+        let p = ParallelCfg::llama_hier();
+        let sg = build_step_graph(&m, &p);
+        assert_eq!(sg.fwd_ops.len(), 32);
+        assert_eq!(sg.bwd_ops.len(), 32);
+        assert_eq!(sg.update_ops.len(), 32);
+        assert!(sg.graph.validate().is_ok());
+    }
+
+    #[test]
+    fn bwd_depends_on_matching_act() {
+        let m = ModelPreset::llama8b();
+        let p = ParallelCfg::llama_hier();
+        let sg = build_step_graph(&m, &p);
+        for l in 0..32 {
+            let bw = sg.graph.op(sg.bwd_ops[l]);
+            assert!(bw.inputs.contains(&sg.act_tensors[l]), "layer {l}");
+        }
+    }
+
+    #[test]
+    fn opt_states_are_remote_home() {
+        let m = ModelPreset::llama8b();
+        let p = ParallelCfg::llama_hier();
+        let sg = build_step_graph(&m, &p);
+        for &t in &sg.opt_tensors {
+            assert_eq!(sg.graph.tensor(t).home, Tier::Remote);
+        }
+    }
+
+    #[test]
+    fn updates_come_after_backward_in_topo() {
+        let m = ModelPreset::llama8b();
+        let p = ParallelCfg::llama_hier();
+        let sg = build_step_graph(&m, &p);
+        let order = sg.graph.topo_order().unwrap();
+        let pos = |o: OpId| order.iter().position(|&x| x == o).unwrap();
+        let last_bwd = sg.bwd_ops.iter().map(|&o| pos(o)).max().unwrap();
+        for &u in &sg.update_ops {
+            assert!(pos(u) > last_bwd);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "pp=1")]
+    fn rejects_pipelined_layouts() {
+        let m = ModelPreset::llama8b();
+        let p = ParallelCfg::llama_no2();
+        build_step_graph(&m, &p);
+    }
+}

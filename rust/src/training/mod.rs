@@ -1,0 +1,13 @@
+//! Training substrate (§5.1, §7.2): model presets, DP/TP/PP/EP parallelism
+//! cost model, per-device step-graph generation, and baseline vs
+//! hierarchical step-time estimation (Tables 1–2, Fig. 6).
+
+mod graph_gen;
+mod parallel;
+mod presets;
+mod step;
+
+pub use graph_gen::{build_step_graph, StepGraph};
+pub use parallel::ParallelCfg;
+pub use presets::{ModelPreset, MoeShape};
+pub use step::{baseline_demand_bytes, baseline_step, hierarchical_step, StepBreakdown};

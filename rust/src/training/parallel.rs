@@ -1,0 +1,264 @@
+//! Parallelism configuration (DP / TP / PP / EP) and the per-device shares
+//! and communication volumes it implies — the rows of Tables 1 and 2.
+
+use super::presets::ModelPreset;
+
+/// A DP/TP/PP(/EP) layout plus batching.
+#[derive(Debug, Clone)]
+pub struct ParallelCfg {
+    pub dp: usize,
+    pub tp: usize,
+    pub pp: usize,
+    pub ep: usize,
+    /// Per-device micro-batch size (sequences).
+    pub micro_batch: usize,
+    /// Global batch size (sequences).
+    pub gbs: usize,
+    pub seq_len: usize,
+    /// Activation recomputation on the backward pass.
+    pub recompute: bool,
+    /// ZeRO-1: shard optimizer states across DP replicas. The Table 1 No.1
+    /// baseline runs without it (full states per replica — the memory
+    /// pressure that makes it defragment); tuned layouts enable it.
+    pub zero1: bool,
+    /// Fraction of layer weights homed in the remote pool under
+    /// hierarchical memory ("offloading activations and a subset of
+    /// parameters", §7.2.1). 0 for baselines.
+    pub param_offload_frac: f64,
+}
+
+impl ParallelCfg {
+    /// Table 1 No.1: DP8, batch 2, GBS 16, recompute on. No ZeRO — full
+    /// optimizer replicas blow past HBM, hence the paper's observation
+    /// that this config "frequently triggers memory defragmentation".
+    pub fn llama_no1() -> Self {
+        Self {
+            dp: 8, tp: 1, pp: 1, ep: 1, micro_batch: 2, gbs: 16, seq_len: 4096,
+            recompute: true, zero1: false, param_offload_frac: 0.0,
+        }
+    }
+
+    /// Table 1 No.2: 2/2/2, batch 1, GBS 16, recompute off (the stable
+    /// baseline all §7.2.1 comparisons use).
+    pub fn llama_no2() -> Self {
+        Self {
+            dp: 2, tp: 2, pp: 2, ep: 1, micro_batch: 1, gbs: 16, seq_len: 4096,
+            recompute: false, zero1: true, param_offload_frac: 0.0,
+        }
+    }
+
+    /// §7.2.1 hierarchical-memory run: 8/1/1, batch 2, GBS 16; activations
+    /// and half of the layer weights eligible for pool residency (the
+    /// fraction is calibrated so the 33.6 GB/s point sits at baseline
+    /// parity, matching §7.2.1's measured crossover).
+    pub fn llama_hier() -> Self {
+        Self {
+            recompute: false, zero1: true, param_offload_frac: 0.5,
+            ..Self::llama_no1()
+        }
+    }
+
+    /// Table 2 baseline: 2/2/2/4, batch 1, GBS 16.
+    pub fn dsv3_baseline() -> Self {
+        Self {
+            dp: 2, tp: 2, pp: 2, ep: 4, micro_batch: 1, gbs: 16, seq_len: 4096,
+            recompute: false, zero1: true, param_offload_frac: 0.0,
+        }
+    }
+
+    /// §7.2.2 hierarchical run: the paper uses 8/1/1/4; with our scaled
+    /// preset the feasible DP-pure layout shards experts across all 8
+    /// NPUs (EP=8). 70% of layer weights are pool-resident — calibrated
+    /// so the 33.6 GB/s point sits near baseline parity (§7.2.2's "+2%"
+    /// low end).
+    pub fn dsv3_hier() -> Self {
+        Self {
+            dp: 8, tp: 1, pp: 1, ep: 8, micro_batch: 2, gbs: 16, seq_len: 4096,
+            recompute: false, zero1: true, param_offload_frac: 0.7,
+        }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.dp * self.tp * self.pp
+    }
+
+    /// Micro-batches each pipeline pumps per step.
+    pub fn microbatches(&self) -> usize {
+        (self.gbs / self.dp / self.micro_batch).max(1)
+    }
+
+    /// 1F1B pipeline bubble factor: (m + p - 1) / m.
+    pub fn pipeline_bubble(&self) -> f64 {
+        let m = self.microbatches() as f64;
+        (m + self.pp as f64 - 1.0) / m
+    }
+
+    /// Layers resident on one device.
+    pub fn layers_per_device(&self, model: &ModelPreset) -> usize {
+        model.n_layers.div_ceil(self.pp)
+    }
+
+    /// Weight bytes resident per device.
+    pub fn weight_bytes_per_device(&self, model: &ModelPreset) -> f64 {
+        let shard = self.tp as f64
+            * match &model.moe {
+                // EP shards expert params; dense part shards by TP only.
+                Some(m) => 1.0 / (1.0 - m.expert_param_frac + m.expert_param_frac / self.ep as f64),
+                None => 1.0,
+            };
+        model.params * model.weight_bytes_per_param / self.pp as f64 / shard
+    }
+
+    /// Optimizer-state bytes per device; ZeRO-1 shards across DP replicas
+    /// when enabled.
+    pub fn opt_bytes_per_device(&self, model: &ModelPreset) -> f64 {
+        let full = self.weight_bytes_per_device(model) / model.weight_bytes_per_param
+            * model.opt_bytes_per_param;
+        if self.zero1 {
+            full / self.dp as f64
+        } else {
+            full
+        }
+    }
+
+    /// Gradient bytes per device (bf16 grads, fp32 accumulation lives in
+    /// the optimizer states — Megatron-style mixed precision).
+    pub fn grad_bytes_per_device(&self, model: &ModelPreset) -> f64 {
+        self.weight_bytes_per_device(model)
+    }
+
+    /// Peak activation bytes per device for one micro-batch in flight
+    /// (recompute keeps only layer-boundary tensors, ~1/8 of the full set).
+    pub fn act_bytes_per_device(&self, model: &ModelPreset) -> f64 {
+        let per_layer = model.act_bytes_per_token_layer() * self.seq_len as f64
+            * self.micro_batch as f64
+            / self.tp as f64;
+        let layers = self.layers_per_device(model) as f64;
+        // PP stages hold activations for up to `pp` in-flight microbatches.
+        let inflight = self.pp.min(self.microbatches()) as f64;
+        let full = per_layer * layers * inflight;
+        if self.recompute {
+            full / 8.0
+        } else {
+            full
+        }
+    }
+
+    /// Tokens processed per device per step.
+    pub fn tokens_per_device(&self) -> f64 {
+        (self.gbs as f64 / self.dp as f64) * self.seq_len as f64
+    }
+
+    /// TP collective bytes per device per step: 2 all-reduces per layer in
+    /// forward + 2 in backward, ring volume 2(n-1)/n per all-reduce.
+    pub fn tp_comm_bytes(&self, model: &ModelPreset) -> f64 {
+        if self.tp == 1 {
+            return 0.0;
+        }
+        let ring = 2.0 * (self.tp as f64 - 1.0) / self.tp as f64;
+        4.0 * self.hidden_act_bytes(model) * ring / 2.0
+            * self.layers_per_device(model) as f64
+            * self.microbatches() as f64
+    }
+
+    /// EP all-to-all bytes per device per step (dispatch + combine, fwd +
+    /// bwd), (n-1)/n of the boundary activation leaves the device.
+    pub fn ep_comm_bytes(&self, model: &ModelPreset) -> f64 {
+        if self.ep == 1 || model.moe.is_none() {
+            return 0.0;
+        }
+        let frac = (self.ep as f64 - 1.0) / self.ep as f64;
+        4.0 * self.hidden_act_bytes(model) * frac
+            * self.layers_per_device(model) as f64
+            * self.microbatches() as f64
+    }
+
+    /// PP p2p bytes per device per step.
+    pub fn pp_comm_bytes(&self, model: &ModelPreset) -> f64 {
+        if self.pp == 1 {
+            return 0.0;
+        }
+        2.0 * self.hidden_act_bytes(model) * self.microbatches() as f64
+    }
+
+    /// DP gradient all-reduce bytes per device per step (ring: 2(n-1)/n).
+    pub fn dp_comm_bytes(&self, model: &ModelPreset) -> f64 {
+        if self.dp == 1 {
+            return 0.0;
+        }
+        let grads = self.grad_bytes_per_device(model);
+        2.0 * grads * (self.dp as f64 - 1.0) / self.dp as f64
+    }
+
+    /// One microbatch's boundary activation (bf16 s·b·h).
+    fn hidden_act_bytes(&self, model: &ModelPreset) -> f64 {
+        2.0 * self.seq_len as f64 * self.micro_batch as f64 * model.hidden as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn device_counts() {
+        assert_eq!(ParallelCfg::llama_no1().n_devices(), 8);
+        assert_eq!(ParallelCfg::llama_no2().n_devices(), 8);
+        assert_eq!(ParallelCfg::dsv3_baseline().n_devices(), 8);
+    }
+
+    #[test]
+    fn dp8_holds_full_replica() {
+        let m = ModelPreset::llama8b();
+        let c = ParallelCfg::llama_no1();
+        // Full 16 GB of weights per device; No.1 runs without ZeRO, so the
+        // full 64 GB Adam state sits on every replica (the pressure story).
+        assert!((c.weight_bytes_per_device(&m) - 16.06e9).abs() < 0.2e9);
+        assert!((c.opt_bytes_per_device(&m) - 64.24e9).abs() < 0.7e9);
+        // ZeRO-1 (the hierarchical layout) shards it 8x.
+        let z = ParallelCfg::llama_hier();
+        assert!((z.opt_bytes_per_device(&m) - 8.03e9).abs() < 0.1e9);
+    }
+
+    #[test]
+    fn tp_pp_shard_weights() {
+        let m = ModelPreset::llama8b();
+        let c = ParallelCfg::llama_no2();
+        let w = c.weight_bytes_per_device(&m);
+        assert!((w - 16.06e9 / 4.0).abs() < 0.2e9, "w={w}");
+    }
+
+    #[test]
+    fn recompute_cuts_activation_memory() {
+        let m = ModelPreset::llama8b();
+        let with = ParallelCfg::llama_no1();
+        let without = ParallelCfg { recompute: false, ..ParallelCfg::llama_no1() };
+        assert!(with.act_bytes_per_device(&m) < without.act_bytes_per_device(&m) / 4.0);
+    }
+
+    #[test]
+    fn comm_volumes_zero_when_unsharded() {
+        let m = ModelPreset::llama8b();
+        let c = ParallelCfg::llama_hier();
+        assert_eq!(c.tp_comm_bytes(&m), 0.0);
+        assert_eq!(c.pp_comm_bytes(&m), 0.0);
+        assert!(c.dp_comm_bytes(&m) > 0.0);
+    }
+
+    #[test]
+    fn pipeline_bubble_shrinks_with_more_microbatches() {
+        let few = ParallelCfg { gbs: 4, ..ParallelCfg::llama_no2() };
+        let many = ParallelCfg { gbs: 64, ..ParallelCfg::llama_no2() };
+        assert!(few.pipeline_bubble() > many.pipeline_bubble());
+        assert_eq!(ParallelCfg::llama_hier().pipeline_bubble(), 1.0);
+    }
+
+    #[test]
+    fn ep_shards_dsv3_weights() {
+        let m = ModelPreset::deepseek_v3_like();
+        let base = ParallelCfg::dsv3_baseline();
+        let w = base.weight_bytes_per_device(&m);
+        // 671B bf16 = 1342 GB total; pp2·tp2·ep4 on experts -> far smaller.
+        assert!(w < 250e9, "w={w}");
+    }
+}

@@ -1,0 +1,137 @@
+//! Model presets for the training evaluation (§7.2): LLaMA-8B and a
+//! DeepSeek-V3-like MoE, described by the quantities the cost model needs.
+
+/// Mixture-of-experts shape (DeepSeek-V3-like).
+#[derive(Debug, Clone)]
+pub struct MoeShape {
+    pub n_experts: usize,
+    /// Experts active per token (top-k).
+    pub active_experts: usize,
+    /// Fraction of a layer's parameters that are expert FFN weights.
+    pub expert_param_frac: f64,
+}
+
+/// A transformer described at cost-model granularity.
+#[derive(Debug, Clone)]
+pub struct ModelPreset {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub hidden: usize,
+    pub ff: usize,
+    pub vocab: usize,
+    /// Total parameter count.
+    pub params: f64,
+    /// Bytes per parameter for weights (bf16 = 2).
+    pub weight_bytes_per_param: f64,
+    /// Optimizer state bytes per parameter (Adam fp32 m + v = 8).
+    pub opt_bytes_per_param: f64,
+    /// Activation bytes per token per layer = `act_coeff` × hidden.
+    /// ~32 for a vanilla transformer; much lower under MLA/NSA compression.
+    pub act_coeff: f64,
+    pub moe: Option<MoeShape>,
+}
+
+impl ModelPreset {
+    /// LLaMA-3-8B (§7.2.1 / Table 1).
+    pub fn llama8b() -> Self {
+        Self {
+            name: "LLaMA-8B",
+            n_layers: 32,
+            hidden: 4096,
+            ff: 14336,
+            vocab: 128_256,
+            params: 8.03e9,
+            weight_bytes_per_param: 2.0,
+            opt_bytes_per_param: 8.0,
+            act_coeff: 32.0,
+            moe: None,
+        }
+    }
+
+    /// DeepSeek-V3-like MoE (§7.2.2 / Table 2): 61 layers, MoE with 1/32 of
+    /// expert parameters active per token, experts sharded by EP.
+    ///
+    /// **Scaled substitution** (DESIGN.md §2): the real 671B model cannot
+    /// exist on one 8-NPU 64 GB slice under any layout; we keep the layer
+    /// count, MoE sparsity ratio and arithmetic-intensity profile but scale
+    /// total parameters to 96B so the baseline layout is feasible — the
+    /// paper's Table 2 config then exercises the same code paths. The
+    /// `act_coeff` of 8 reflects MLA + NSA activation compression.
+    pub fn deepseek_v3_like() -> Self {
+        Self {
+            name: "DeepSeek-V3",
+            n_layers: 61,
+            hidden: 7168,
+            ff: 18432,
+            vocab: 129_280,
+            params: 96e9,
+            weight_bytes_per_param: 2.0,
+            opt_bytes_per_param: 8.0,
+            act_coeff: 8.0,
+            moe: Some(MoeShape { n_experts: 256, active_experts: 8, expert_param_frac: 0.97 }),
+        }
+    }
+
+    /// Parameters per layer (uniform share; embeddings folded in).
+    pub fn params_per_layer(&self) -> f64 {
+        self.params / self.n_layers as f64
+    }
+
+    /// Parameters *active* per token per layer (MoE activates a subset).
+    pub fn active_params_per_layer(&self) -> f64 {
+        match &self.moe {
+            None => self.params_per_layer(),
+            Some(m) => {
+                let layer = self.params_per_layer();
+                let expert = layer * m.expert_param_frac;
+                let dense = layer - expert;
+                dense + expert * (m.active_experts as f64 / m.n_experts as f64)
+            }
+        }
+    }
+
+    /// Forward FLOPs per token per layer ≈ 2 × active params per layer.
+    pub fn fwd_flops_per_token_layer(&self) -> f64 {
+        2.0 * self.active_params_per_layer()
+    }
+
+    /// Activation bytes per token per layer (bf16; ~34·h for a vanilla
+    /// transformer, lower under MLA/NSA — see `act_coeff`).
+    pub fn act_bytes_per_token_layer(&self) -> f64 {
+        self.act_coeff * self.hidden as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama8b_sizes() {
+        let m = ModelPreset::llama8b();
+        assert_eq!(m.n_layers, 32);
+        // Weights ~16 GB bf16.
+        let wb = m.params * m.weight_bytes_per_param;
+        assert!((wb - 16.06e9).abs() < 0.2e9);
+        // Dense: active == total per layer.
+        assert_eq!(m.active_params_per_layer(), m.params_per_layer());
+    }
+
+    #[test]
+    fn dsv3_active_params_much_smaller_than_total() {
+        let m = ModelPreset::deepseek_v3_like();
+        let active_total = m.active_params_per_layer() * m.n_layers as f64;
+        // MoE sparsity: ~6% of parameters active per token (0.03 dense +
+        // 0.97/32 expert share), matching DSv3's 37B/671B ratio.
+        assert!(active_total < 0.07 * m.params, "active {active_total}");
+        assert!(active_total > 0.045 * m.params, "active {active_total}");
+    }
+
+    #[test]
+    fn flops_scale_with_active_params() {
+        let m = ModelPreset::deepseek_v3_like();
+        assert!(m.fwd_flops_per_token_layer() < 2.0 * m.params_per_layer());
+        let d = ModelPreset::llama8b();
+        assert_eq!(d.fwd_flops_per_token_layer(), 2.0 * d.params_per_layer());
+    }
+}

@@ -1,0 +1,127 @@
+//! Line-oriented parser for `artifacts/meta.txt` (replaces serde_json for
+//! the rust side; `meta.json` is kept for humans).
+//!
+//! Format:
+//! ```text
+//! key=value
+//! ...
+//! weight <name> <numel> <d0,d1,...>
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One weight-manifest entry, in jax tree-flatten (== jit parameter) order.
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub numel: usize,
+    pub shape: Vec<i64>,
+}
+
+/// Parsed `meta.txt`.
+#[derive(Debug, Clone)]
+pub struct Meta {
+    pub keys: HashMap<String, i64>,
+    pub weights: Vec<WeightEntry>,
+}
+
+impl Meta {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut keys = HashMap::new();
+        let mut weights = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("weight ") {
+                let parts: Vec<&str> = rest.split_whitespace().collect();
+                if parts.len() != 3 {
+                    bail!("meta.txt line {}: bad weight entry {line:?}", ln + 1);
+                }
+                let numel: usize = parts[1].parse()
+                    .with_context(|| format!("line {}: numel", ln + 1))?;
+                let shape: Vec<i64> = parts[2]
+                    .split(',')
+                    .filter(|s| !s.is_empty())
+                    .map(|s| s.parse::<i64>())
+                    .collect::<std::result::Result<_, _>>()
+                    .with_context(|| format!("line {}: shape", ln + 1))?;
+                let prod: i64 = shape.iter().product::<i64>().max(1);
+                if prod as usize != numel {
+                    bail!("line {}: shape {:?} product != numel {}", ln + 1, shape, numel);
+                }
+                weights.push(WeightEntry { name: parts[0].to_string(), numel, shape });
+            } else if let Some((k, v)) = line.split_once('=') {
+                keys.insert(k.trim().to_string(),
+                            v.trim().parse::<i64>()
+                                .with_context(|| format!("line {}: value for {k}", ln + 1))?);
+            } else {
+                bail!("meta.txt line {}: unparseable {line:?}", ln + 1);
+            }
+        }
+        Ok(Self { keys, weights })
+    }
+
+    pub fn get(&self, key: &str) -> Result<i64> {
+        self.keys.get(key).copied()
+            .with_context(|| format!("meta.txt missing key {key:?}"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        Ok(self.get(key)? as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+vocab=512
+n_layers=4
+weight embed 65536 512,128
+weight final_norm 128 128
+";
+
+    #[test]
+    fn parses_keys_and_weights() {
+        let m = Meta::parse(SAMPLE).unwrap();
+        assert_eq!(m.get("vocab").unwrap(), 512);
+        assert_eq!(m.weights.len(), 2);
+        assert_eq!(m.weights[0].name, "embed");
+        assert_eq!(m.weights[0].shape, vec![512, 128]);
+        assert_eq!(m.weights[1].numel, 128);
+    }
+
+    #[test]
+    fn rejects_shape_numel_mismatch() {
+        assert!(Meta::parse("weight w 10 3,4\n").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage_line() {
+        assert!(Meta::parse("not a meta line\n").is_err());
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let m = Meta::parse(SAMPLE).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let m = Meta::parse("# c\n\nvocab=1\n").unwrap();
+        assert_eq!(m.get("vocab").unwrap(), 1);
+    }
+}

@@ -1,0 +1,6 @@
+//! Small self-contained utilities replacing crates absent from the offline
+//! mirror (see the note at the top of Cargo.toml).
+
+pub mod meta;
+pub mod rng;
+pub mod table;

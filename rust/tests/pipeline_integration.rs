@@ -1,0 +1,160 @@
+//! Integration across the compiler pipeline + simulator + baselines:
+//! whole-system behaviours no single module test covers.
+
+use hyperoffload::graph::{GraphBuilder, OpId, Tier};
+use hyperoffload::passes::{compile, ExecOrderConfig, OffloadPolicy};
+use hyperoffload::runtime_sched::{simulate_reactive, ReactiveConfig, ReactiveMode};
+use hyperoffload::serving::{EngineConfig, ModelCost, SimServingEngine, WorkloadConfig};
+use hyperoffload::sim::{simulate, HwConfig, GB};
+use hyperoffload::training::{baseline_step, hierarchical_step, ModelPreset, ParallelCfg};
+use hyperoffload::util::rng::Rng;
+
+fn hw() -> HwConfig {
+    HwConfig::ascend910c_like()
+}
+
+/// Random layered DAG with remote weights and offloadable activations.
+fn random_workload(seed: u64, n_ops: usize) -> hyperoffload::graph::Graph {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new();
+    let mut prev: Option<usize> = None;
+    for i in 0..n_ops {
+        let act_bytes = 1 << rng.usize(20, 27);
+        let act = b.tensor(&format!("a{i}"), act_bytes as u64, Tier::Device);
+        let mut inputs = Vec::new();
+        if let Some(p) = prev {
+            inputs.push(p);
+        }
+        if rng.next_f64() < 0.4 {
+            let w = b.tensor(&format!("w{i}"), (1 << rng.usize(22, 28)) as u64, Tier::Remote);
+            inputs.push(w);
+        }
+        let flops = rng.f64_range(1e11, 5e12);
+        b.compute(&format!("op{i}"), flops, act_bytes as u64, inputs, vec![act]);
+        prev = Some(act);
+    }
+    b.build()
+}
+
+#[test]
+fn compiled_schedule_never_slower_than_program_order_across_seeds() {
+    for seed in 0..12u64 {
+        let g0 = random_workload(seed, 24);
+        let base_order = g0.topo_order().unwrap();
+        // Legalise remote loads for the baseline comparison the same way
+        // the reactive runtime would (on-demand), then compare ours.
+        let reactive = simulate_reactive(&g0, &ReactiveConfig::default(), &hw());
+
+        let mut g = g0.clone();
+        let report = compile(&mut g, &hw(), &OffloadPolicy::default(), &ExecOrderConfig::default());
+        assert!(g.is_valid_order(&report.order), "seed {seed}");
+        let ours = simulate(&g, &report.order, &hw());
+
+        assert!(
+            ours.makespan_us <= reactive.makespan_us * 1.001,
+            "seed {seed}: compiled {} > reactive {}",
+            ours.makespan_us,
+            reactive.makespan_us
+        );
+        let _ = base_order;
+    }
+}
+
+#[test]
+fn fig3_motivation_ordering_holds() {
+    // serial > runtime-prefetch > graph-driven, on a weight-streaming
+    // workload (the Fig. 3 trichotomy).
+    // 12.5 ms ops vs 6.4 ms weight transfers: the graph-driven schedule
+    // can hide every transfer; the runtime keeps its control bubbles.
+    let g0 = GraphBuilder::chain_with_remote_weights(16, 4e12, 1 << 20, 2 * GB / 10).0;
+    let serial = simulate_reactive(&g0, &ReactiveConfig::default(), &hw());
+    let runtime_pf = simulate_reactive(
+        &g0,
+        &ReactiveConfig { mode: ReactiveMode::Prefetch { lookahead: 2 }, compaction_every: 4, compaction_us: 2000.0 },
+        &hw(),
+    );
+    let mut g = g0.clone();
+    let report = compile(&mut g, &hw(), &OffloadPolicy::default(), &ExecOrderConfig::default());
+    let ours = simulate(&g, &report.order, &hw());
+
+    assert!(serial.makespan_us > runtime_pf.makespan_us);
+    assert!(runtime_pf.makespan_us > ours.makespan_us);
+}
+
+#[test]
+fn training_bandwidth_sweep_is_monotone() {
+    // Fig. 6 mechanism at integration level: hierarchical step time is
+    // non-increasing in pool bandwidth.
+    let m = ModelPreset::llama8b();
+    let p = ParallelCfg::llama_hier();
+    let mut last = f64::INFINITY;
+    for bw in [20.0, 33.6, 40.0, 50.0, 60.0, 70.0] {
+        let s = hierarchical_step(&m, &p, &hw().with_pool_bandwidth(bw));
+        // Small (<3%) wobbles are legitimate: the candidate selector's DMA
+        // budget admits more offloads as bandwidth grows, and the marginal
+        // candidate may not hide perfectly at its admission point.
+        assert!(
+            s.total_ms <= last * 1.03,
+            "step time rose at {bw} GB/s: {} > {last}",
+            s.total_ms
+        );
+        last = s.total_ms.min(last);
+    }
+}
+
+#[test]
+fn training_baseline_insensitive_to_pool_bandwidth() {
+    let m = ModelPreset::llama8b();
+    let p = ParallelCfg::llama_no2();
+    let a = baseline_step(&m, &p, &hw().with_pool_bandwidth(20.0));
+    let b = baseline_step(&m, &p, &hw().with_pool_bandwidth(70.0));
+    assert!((a.total_ms - b.total_ms).abs() < 1e-9);
+}
+
+#[test]
+fn serving_end_to_end_baseline_vs_hierarchical_tables_shape() {
+    // Table 3+4+5 shapes in one integration run.
+    let model = ModelCost::dsv3_nsa_like();
+    let hw64 = hw().with_device_capacity(64 * GB);
+
+    // Long sequences near capacity: 2 x 35k tokens x 228 KiB ~= 16 GB,
+    // just inside the baseline's ~19 GB device KV budget.
+    let long = WorkloadConfig::long_sequence(2, 35_000, 512, 9).generate();
+    let base = SimServingEngine::new(EngineConfig::baseline(hw64.clone(), model.clone()))
+        .run(long.clone())
+        .unwrap();
+    let hier = SimServingEngine::new(EngineConfig::hierarchical(hw64.clone(), model.clone()))
+        .run(long)
+        .unwrap();
+
+    // Peak memory drops by roughly the KV size (Table 3's ~26%).
+    assert!(hier.peak_device_bytes < base.peak_device_bytes);
+    // Defrag: present in baseline under churn... at minimum never present
+    // in hierarchical (Table 4).
+    assert_eq!(hier.defrag_events, 0);
+    // Throughput of hierarchical within a sane band of baseline.
+    assert!(hier.throughput_tok_per_s > base.throughput_tok_per_s * 0.5);
+}
+
+#[test]
+fn cache_op_count_scales_with_offloadable_tensors() {
+    let mut counts = Vec::new();
+    for n in [8usize, 16, 32] {
+        let mut g = GraphBuilder::chain_with_remote_weights(n, 2e12, 1 << 20, GB / 10).0;
+        let report = compile(&mut g, &hw(), &OffloadPolicy::default(), &ExecOrderConfig::default());
+        counts.push(report.inserted.len());
+    }
+    assert!(counts[0] < counts[1] && counts[1] < counts[2], "{counts:?}");
+}
+
+#[test]
+fn exec_order_determinism_across_runs() {
+    let mk = || {
+        let mut g = random_workload(99, 20);
+        let report = compile(&mut g, &hw(), &OffloadPolicy::default(), &ExecOrderConfig::default());
+        report.order
+    };
+    let a: Vec<OpId> = mk();
+    let b: Vec<OpId> = mk();
+    assert_eq!(a, b, "compilation must be deterministic");
+}

@@ -1,0 +1,221 @@
+//! Property tests over coordinator invariants (seeded-sweep style; the
+//! proptest crate is absent from the offline mirror, so properties are
+//! checked over many seeded random instances — same invariants, explicit
+//! generators).
+//!
+//! Invariants:
+//!  P1 Algorithm 1 output is always a valid topological order.
+//!  P2 The simulator's memory accounting never goes negative and peak
+//!     bounds every residency sample.
+//!  P3 Offload insertion preserves graph acyclicity for any plan.
+//!  P4 The device allocator never exceeds capacity, and compaction
+//!     preserves the set of live allocations.
+//!  P5 The KV manager's device footprint stays within its budget under
+//!     FullOffload for arbitrary admit/decode/retire interleavings.
+//!  P6 The router never loses requests and balances within bound.
+
+use hyperoffload::graph::{Graph, GraphBuilder, Tier};
+use hyperoffload::kvcache::{KvCacheManager, KvPolicy, NsaConfig};
+use hyperoffload::memory::DeviceAllocator;
+use hyperoffload::passes::{compile, refine, ExecOrderConfig, OffloadPolicy};
+use hyperoffload::serving::{Request, RoutePolicy, Router};
+use hyperoffload::sim::{simulate, HwConfig};
+use hyperoffload::util::rng::Rng;
+
+const CASES: u64 = 60;
+
+fn hw(rng: &mut Rng) -> HwConfig {
+    HwConfig {
+        compute_tflops: rng.f64_range(10.0, 400.0),
+        hbm_gbps: rng.f64_range(400.0, 3000.0),
+        d2r_gbps: rng.f64_range(5.0, 100.0),
+        r2d_gbps: rng.f64_range(5.0, 100.0),
+        link_latency_us: rng.f64_range(0.0, 50.0),
+        net_gbps: rng.f64_range(10.0, 100.0),
+        host_overhead_us: rng.f64_range(0.0, 500.0),
+        device_capacity: 1 << 36,
+        remote_capacity: 1 << 42,
+    }
+}
+
+/// Random DAG: layered, with random remote weights, skip connections and
+/// fan-out — adversarial for ordering code.
+fn random_graph(rng: &mut Rng) -> Graph {
+    let n = rng.usize(4, 40);
+    let mut b = GraphBuilder::new();
+    let mut tensors: Vec<usize> = Vec::new();
+    for i in 0..n {
+        let bytes = 1u64 << rng.usize(16, 27);
+        let out = b.tensor(&format!("t{i}"), bytes, Tier::Device);
+        let mut inputs = Vec::new();
+        // up to 3 random earlier tensors
+        for _ in 0..rng.usize(0, 4.min(tensors.len() + 1)) {
+            if !tensors.is_empty() {
+                inputs.push(*rng.choose(&tensors));
+            }
+        }
+        if rng.next_f64() < 0.3 {
+            let w = b.tensor(&format!("w{i}"), 1u64 << rng.usize(20, 28), Tier::Remote);
+            inputs.push(w);
+        }
+        inputs.sort_unstable();
+        inputs.dedup();
+        b.compute(&format!("op{i}"), rng.f64_range(1e9, 1e13), 0, inputs, vec![out]);
+        tensors.push(out);
+    }
+    b.build()
+}
+
+#[test]
+fn p1_refinement_always_valid_topological_order() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let hw = hw(&mut rng);
+        let mut g = random_graph(&mut rng);
+        // Insert offload ops too, then refine.
+        let order = g.topo_order().unwrap();
+        let policy = OffloadPolicy { min_bytes: 1 << 18, ..Default::default() };
+        hyperoffload::passes::prefetch_insert::run(&mut g, &order, &hw, &policy);
+        let r = refine(&mut g, &hw, &ExecOrderConfig::default());
+        assert!(g.is_valid_order(&r.order), "seed {seed}");
+        assert!(g.validate().is_ok(), "seed {seed}");
+    }
+}
+
+#[test]
+fn p2_residency_never_negative_and_peak_bounds() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed + 1000);
+        let hw = hw(&mut rng);
+        let mut g = random_graph(&mut rng);
+        let report = compile(&mut g, &hw, &OffloadPolicy::default(), &ExecOrderConfig::default());
+        let sim = simulate(&g, &report.order, &hw);
+        for &(t, bytes) in &sim.residency {
+            assert!(t >= 0.0, "seed {seed}");
+            assert!(bytes <= sim.peak_device_bytes, "seed {seed}: {bytes} > peak");
+        }
+        assert!(sim.exposed_comm_us >= 0.0 && sim.overlapped_comm_us >= 0.0);
+        assert!(sim.makespan_us >= sim.compute_busy_us - 1e-6, "seed {seed}");
+    }
+}
+
+#[test]
+fn p3_insertion_preserves_acyclicity() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed + 2000);
+        let hw = hw(&mut rng);
+        let mut g = random_graph(&mut rng);
+        let order = g.topo_order().unwrap();
+        let policy = OffloadPolicy {
+            min_bytes: 1 << rng.usize(16, 24),
+            min_idle_gap: rng.usize(1, 5),
+            coverage: rng.f64_range(0.1, 2.0),
+            max_candidates: rng.usize(0, 10),
+        };
+        hyperoffload::passes::prefetch_insert::run(&mut g, &order, &hw, &policy);
+        assert!(g.topo_order().is_ok(), "seed {seed}: cycle introduced");
+    }
+}
+
+#[test]
+fn p4_allocator_capacity_and_compaction_preservation() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed + 3000);
+        let cap = 1u64 << rng.usize(16, 22);
+        let mut a = DeviceAllocator::new(cap);
+        let mut live: Vec<(u64, u64)> = Vec::new(); // (id, size)
+        for _ in 0..300 {
+            if rng.next_f64() < 0.6 || live.is_empty() {
+                let size = 1 + rng.gen_range(0, cap / 8);
+                if let Ok((id, _)) = a.alloc(size) {
+                    live.push((id, size));
+                }
+            } else {
+                let i = rng.usize(0, live.len());
+                let (id, _) = live.swap_remove(i);
+                a.free(id).unwrap();
+            }
+            assert!(a.used() <= a.capacity(), "seed {seed}");
+            let expect: u64 = live.iter().map(|&(_, s)| s).sum();
+            assert_eq!(a.used(), expect, "seed {seed}: live-set mismatch");
+        }
+        // Compaction keeps every allocation.
+        let before = a.used();
+        a.compact();
+        assert_eq!(a.used(), before, "seed {seed}");
+        assert_eq!(a.largest_free_extent(), a.free_total(), "seed {seed}");
+    }
+}
+
+#[test]
+fn p5_kv_device_footprint_bounded_under_offload() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed + 4000);
+        let hw = HwConfig::ascend910c_like();
+        let mut m = KvCacheManager::new(
+            KvPolicy::FullOffload,
+            NsaConfig { block_tokens: 1 << rng.usize(4, 8), ..Default::default() },
+            1 << rng.usize(10, 18),
+            1 << 30,
+        );
+        let budget = m.working_set_bytes;
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..200 {
+            match rng.usize(0, 3) {
+                0 => {
+                    let toks = rng.usize(1, 5000);
+                    if m.admit(next_id, toks, &hw).is_ok() {
+                        live.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                1 if !live.is_empty() => {
+                    let id = *rng.choose(&live);
+                    m.decode_step(id, &hw).unwrap();
+                }
+                2 if !live.is_empty() => {
+                    let i = rng.usize(0, live.len());
+                    let id = live.swap_remove(i);
+                    m.retire(id).unwrap();
+                }
+                _ => {}
+            }
+            assert!(
+                m.device_kv_bytes() <= budget,
+                "seed {seed}: working set exceeded ({} > {budget})",
+                m.device_kv_bytes()
+            );
+        }
+    }
+}
+
+#[test]
+fn p6_router_conserves_requests_and_balances() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed + 5000);
+        let n = rng.usize(1, 9);
+        let mut router = Router::new(n, RoutePolicy::LeastLoaded);
+        let reqs: Vec<Request> = (0..rng.usize(10, 200))
+            .map(|i| Request {
+                id: i as u64,
+                arrival_us: 0.0,
+                prompt_tokens: rng.usize(16, 4096),
+                gen_tokens: rng.usize(1, 512),
+            })
+            .collect();
+        let parts = router.partition(&reqs);
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        assert_eq!(total, reqs.len(), "seed {seed}: requests lost");
+        // Least-loaded: max/min outstanding-token imbalance bounded by the
+        // largest single request.
+        let loads: Vec<u64> = (0..n).map(|i| router.load_of(i)).collect();
+        let max_req = reqs
+            .iter()
+            .map(|r| (r.prompt_tokens + r.gen_tokens) as u64)
+            .max()
+            .unwrap();
+        let spread = loads.iter().max().unwrap() - loads.iter().min().unwrap();
+        assert!(spread <= max_req, "seed {seed}: spread {spread} > {max_req}");
+    }
+}

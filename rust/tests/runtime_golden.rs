@@ -1,0 +1,106 @@
+//! Integration: the AOT bridge preserves numerics end-to-end.
+//!
+//! aot.py computed prefill + one decode step in python (jax) for seeded
+//! inputs and dumped the logits; here the rust runtime loads the same
+//! artifacts, replays the same inputs through PJRT, and must match.
+//! This is the contract that makes the three-layer architecture sound.
+
+use std::path::Path;
+
+use hyperoffload::runtime::ModelRuntime;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn read_f32(path: &Path) -> Vec<f32> {
+    let raw = std::fs::read(path).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    raw.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+fn read_i32(path: &Path) -> Vec<i32> {
+    let raw = std::fs::read(path).unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    raw.chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn prefill_and_decode_match_python_golden() {
+    let dir = artifacts_dir();
+    if !dir.join("meta.txt").exists() {
+        panic!("artifacts missing — run `make artifacts` first");
+    }
+    let client = xla::PjRtClient::cpu().expect("pjrt cpu client");
+    let model = ModelRuntime::load(&client, &dir).expect("load artifacts");
+
+    let tokens = read_i32(&dir.join("golden_tokens.bin"));
+    let want_prefill = read_f32(&dir.join("golden_prefill_logits.bin"));
+    let want_next = read_i32(&dir.join("golden_next_token.bin"));
+    let want_decode = read_f32(&dir.join("golden_decode_logits.bin"));
+
+    // Prefill must reproduce python logits bit-close.
+    let (logits, kc, vc) = model.run_prefill(&tokens).expect("prefill");
+    let d = max_abs_diff(&logits, &want_prefill);
+    assert!(d < 1e-4, "prefill logits diverged: max abs diff {d}");
+
+    // Greedy next token must agree exactly.
+    let next = model.argmax_tokens(&logits);
+    assert_eq!(next, want_next, "greedy tokens diverged");
+
+    // One decode step over the produced caches must match too.
+    let (dlogits, _, _) = model
+        .run_decode(&next, model.spec.prefill_len as i32, &kc, &vc)
+        .expect("decode");
+    let d = max_abs_diff(&dlogits, &want_decode);
+    assert!(d < 1e-4, "decode logits diverged: max abs diff {d}");
+}
+
+#[test]
+fn decode_positions_advance_cache_consistently() {
+    // Decoding the same token at successive positions must change logits
+    // (the cache grows) and stay finite.
+    let dir = artifacts_dir();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let model = ModelRuntime::load(&client, &dir).unwrap();
+    let b = model.spec.batch;
+    let p = model.spec.prefill_len as i32;
+
+    let tokens: Vec<i32> = (0..b * model.spec.prefill_len).map(|i| (i % 100 + 1) as i32).collect();
+    let (logits, mut kc, mut vc) = model.run_prefill(&tokens).unwrap();
+    let mut next = model.argmax_tokens(&logits);
+
+    let mut prev: Option<Vec<f32>> = None;
+    for step in 0..4 {
+        let (lo, kc2, vc2) = model.run_decode(&next, p + step, &kc, &vc).unwrap();
+        assert!(lo.iter().all(|x| x.is_finite()), "non-finite logits at step {step}");
+        if let Some(pv) = &prev {
+            assert_ne!(&lo, pv, "logits identical across steps {step}");
+        }
+        prev = Some(lo.clone());
+        next = model.argmax_tokens(&lo);
+        kc = kc2;
+        vc = vc2;
+    }
+}
+
+#[test]
+fn rejects_malformed_inputs() {
+    let dir = artifacts_dir();
+    let client = xla::PjRtClient::cpu().unwrap();
+    let model = ModelRuntime::load(&client, &dir).unwrap();
+    // Wrong token count.
+    assert!(model.run_prefill(&[1, 2, 3]).is_err());
+    // Out-of-range decode position.
+    let cache = model.empty_cache().unwrap();
+    let toks = vec![1; model.spec.batch];
+    assert!(model.run_decode(&toks, model.spec.max_seq as i32, &cache, &cache).is_err());
+    assert!(model.run_decode(&toks, -1, &cache, &cache).is_err());
+}
