@@ -128,7 +128,9 @@ fn main() {
         ]);
     }
 
-    // 6. Real PJRT decode step if artifacts are present.
+    // 6. Real PJRT decode step if artifacts are present (xla feature).
+    #[cfg(feature = "xla")]
+    {
     let dir = std::path::PathBuf::from("artifacts");
     if dir.join("meta.txt").exists() {
         use hyperoffload::runtime::ModelRuntime;
@@ -148,6 +150,7 @@ fn main() {
             format!("{:.2} ms", secs * 1e3),
             format!("{:.0} tok/s", model.spec.batch as f64 / secs),
         ]);
+    }
     }
 
     t.print();

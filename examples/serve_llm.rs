@@ -1,22 +1,105 @@
-//! End-to-end driver (deliverable (b) / DESIGN.md §6): load the real
-//! AOT-compiled transformer and serve batched requests through the
-//! coordinator, baseline vs hierarchical KV policy, reporting latency and
-//! throughput. All three layers compose here: the Pallas decode-attention
-//! kernel (L1) is inside the jax-lowered decode step (L2), executed from
-//! the rust coordinator (L3) via PJRT.
+//! End-to-end serving driver, upgraded to the cluster era: simulate N
+//! devices contending for one SuperNode pool (baseline vs hierarchical
+//! KV policy, online routing), and — when built with `--features xla`
+//! and AOT artifacts exist — also run the real PJRT-executed model so
+//! all three layers compose (Pallas decode-attention kernel inside the
+//! jax-lowered step, executed from the rust coordinator).
 //!
-//! Run: `make artifacts && cargo run --release --example serve_llm`
+//! Run: `cargo run --release --example serve_llm [replicas] [artifacts-dir]`
+//!
+//! (Before the cluster refactor the first argument was the artifacts
+//! directory; that moved to the second position.)
 
-use hyperoffload::coordinator::{Coordinator, ServeConfig};
-use hyperoffload::kvcache::KvPolicy;
+use hyperoffload::serving::{
+    ClusterConfig, EngineConfig, ModelCost, SimCluster, WorkloadConfig,
+};
+use hyperoffload::sim::{HwConfig, GB};
 use hyperoffload::util::table::{f, Table};
 
 fn main() -> anyhow::Result<()> {
+    let n_replicas: usize = match std::env::args().nth(1) {
+        None => 4,
+        Some(s) => match s.parse() {
+            Ok(n) if n > 0 => n,
+            _ => anyhow::bail!(
+                "usage: serve_llm [replicas >= 1] [artifacts-dir]  (got {s:?})"
+            ),
+        },
+    };
+
+    let model = ModelCost {
+        weights_bytes: 8 * GB,
+        act_bytes: GB,
+        prefill_flops_per_token: 16e9,
+        decode_flops_per_token: 16e9,
+        kv_bytes_per_token: 64 * 1024,
+    };
+    let hw = HwConfig::ascend910c_like().with_device_capacity(64 * GB);
+    let wl = WorkloadConfig {
+        n_requests: 48,
+        mean_interarrival_us: 15_000.0,
+        prompt_min: 1_024,
+        prompt_max: 8_192,
+        gen_min: 32,
+        gen_max: 256,
+        seed: 17,
+    }
+    .generate();
+
+    let mut t = Table::new(
+        format!("simulated cluster serving ({n_replicas} replicas, one shared pool)"),
+        &[
+            "policy",
+            "completed",
+            "rejected",
+            "preempted",
+            "tok/s",
+            "p99 e2e ms",
+            "exposed xfer ms",
+            "fabric stall ms",
+            "pool peak GB",
+        ],
+    );
+    for (name, engine) in [
+        ("baseline (KV all-device)", EngineConfig::baseline(hw.clone(), model.clone())),
+        ("hierarchical (KV offload)", EngineConfig::hierarchical(hw.clone(), model.clone())),
+    ] {
+        let r = SimCluster::new(ClusterConfig::new(engine, n_replicas))
+            .run(wl.clone())?;
+        t.row(&[
+            name.into(),
+            r.completed.to_string(),
+            r.rejected.to_string(),
+            r.preempted_events.to_string(),
+            f(r.throughput_tok_per_s, 0),
+            f(r.e2e_latency_us.p99 / 1e3, 1),
+            f(r.exposed_transfer_us / 1e3, 1),
+            f(r.fabric_stall_us / 1e3, 1),
+            f(r.pool_peak_bytes as f64 / 1e9, 2),
+        ]);
+    }
+    t.print();
+
+    real_execution_demo()?;
+    Ok(())
+}
+
+/// Real-execution serving over the AOT artifacts (PJRT CPU), when the
+/// crate is built with the `xla` feature and `make artifacts` has run.
+#[cfg(feature = "xla")]
+fn real_execution_demo() -> anyhow::Result<()> {
+    use hyperoffload::coordinator::{Coordinator, ServeConfig};
+    use hyperoffload::kvcache::KvPolicy;
+
     let dir = std::path::PathBuf::from(
-        std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()),
+        std::env::args().nth(2).unwrap_or_else(|| "artifacts".into()),
     );
     if !dir.join("meta.txt").exists() {
-        anyhow::bail!("artifacts not found in {} — run `make artifacts`", dir.display());
+        println!(
+            "\n(no artifacts in {} — run `make artifacts` for the real-execution demo)",
+            dir.display()
+        );
+        return Ok(());
     }
 
     let mut rows = Vec::new();
@@ -34,7 +117,7 @@ fn main() -> anyhow::Result<()> {
         if rows.is_empty() {
             let s = &coord.model.spec;
             println!(
-                "model: {} layers, d={}, {} heads, vocab={}, batch={}, max_seq={}, kv_block={}",
+                "\nmodel: {} layers, d={}, {} heads, vocab={}, batch={}, max_seq={}, kv_block={}",
                 s.n_layers, s.d_model, s.n_heads, s.vocab, s.batch, s.max_seq, s.kv_block
             );
         }
@@ -78,5 +161,11 @@ fn main() -> anyhow::Result<()> {
         "offload changed model outputs!"
     );
     println!("\ntoken streams identical across policies ✓ (offload is value-transparent)");
+    Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn real_execution_demo() -> anyhow::Result<()> {
+    println!("\n(build with --features xla for the real PJRT execution demo)");
     Ok(())
 }

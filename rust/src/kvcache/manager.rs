@@ -16,7 +16,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
-use crate::memory::DeviceAllocator;
+use crate::memory::{DeviceAllocator, PoolHandle};
 use crate::sim::HwConfig;
 
 use super::nsa::NsaConfig;
@@ -80,8 +80,13 @@ pub struct KvCacheManager {
     pub allocator: DeviceAllocator,
     /// Device working set for offloaded blocks (bytes), bounding residency.
     pub working_set_bytes: u64,
+    /// Remote-pool capacity ledger. A private handle for a lone device;
+    /// a clone of the node-wide handle when several engines share one
+    /// SuperNode pool (the cluster setup) — then every `FullOffload`
+    /// block placed here competes with sibling devices for capacity.
+    pool: PoolHandle,
     seqs: HashMap<u64, Sequence>,
-    /// Remote-pool bytes used by KV.
+    /// Remote-pool bytes used by *this device's* KV.
     pub remote_kv_bytes: u64,
     /// Peak device bytes used by KV (blocks + working set).
     pub peak_device_kv: u64,
@@ -95,16 +100,55 @@ impl KvCacheManager {
         kv_bytes_per_token: u64,
         device_kv_budget: u64,
     ) -> Self {
+        Self::with_pool(policy, nsa, kv_bytes_per_token, device_kv_budget, PoolHandle::unbounded())
+    }
+
+    /// A manager whose offloaded blocks reserve capacity from `pool`
+    /// (shared across devices when the handle is cloned).
+    pub fn with_pool(
+        policy: KvPolicy,
+        nsa: NsaConfig,
+        kv_bytes_per_token: u64,
+        device_kv_budget: u64,
+        pool: PoolHandle,
+    ) -> Self {
         Self {
             policy,
             nsa,
             kv_bytes_per_token,
             allocator: DeviceAllocator::new(device_kv_budget),
             working_set_bytes: device_kv_budget / 8,
+            pool,
             seqs: HashMap::new(),
             remote_kv_bytes: 0,
             peak_device_kv: 0,
             working_set_used: 0,
+        }
+    }
+
+    /// The remote pool this manager reserves offloaded KV from.
+    pub fn pool(&self) -> &PoolHandle {
+        &self.pool
+    }
+
+    /// Device KV bytes still allocatable (baseline headroom signal for
+    /// online routing).
+    pub fn device_headroom_bytes(&self) -> u64 {
+        self.allocator.capacity().saturating_sub(self.allocator.used())
+    }
+
+    /// Conservative admission check used when re-admitting preempted
+    /// sequences: the sequence footprint plus one growth block must fit
+    /// (a vLLM-style watermark that avoids admit-then-preempt thrash on
+    /// an exactly-full device).
+    pub fn can_admit_tokens(&self, tokens: usize) -> bool {
+        let blocks = self.nsa.blocks_for(tokens.max(1)) as u64 + 1;
+        let bytes = blocks * self.block_bytes();
+        match self.policy {
+            KvPolicy::AllDevice => self.allocator.free_total() >= bytes,
+            KvPolicy::FullOffload => {
+                self.pool.capacity().saturating_sub(self.pool.used()) >= bytes
+            }
         }
     }
 
@@ -137,11 +181,16 @@ impl KvCacheManager {
                 prompt_alloc = Some(id);
             }
             KvPolicy::FullOffload => {
-                for _ in 0..nblocks {
-                    blocks.push(self.place_block(&mut cost, hw)?);
+                // Reserve the whole prompt's KV from the (possibly shared)
+                // pool atomically, so a mid-admit failure leaks nothing.
+                let bytes = nblocks as u64 * self.block_bytes();
+                if !self.pool.try_reserve(bytes) {
+                    bail!("remote pool exhausted: {bytes} B for {nblocks} prefill blocks");
                 }
+                self.remote_kv_bytes += bytes;
+                blocks.resize(nblocks, BlockHome::Remote);
                 // Prefill KV streams to the pool as it is produced.
-                cost.d2r_bytes += nblocks as u64 * self.block_bytes();
+                cost.d2r_bytes += bytes;
             }
         }
         self.seqs.insert(
@@ -219,7 +268,10 @@ impl KvCacheManager {
         for b in seq.blocks {
             match b {
                 BlockHome::Device(a) => self.allocator.free(a)?,
-                BlockHome::Remote => self.remote_kv_bytes -= self.block_bytes(),
+                BlockHome::Remote => {
+                    self.pool.release(self.block_bytes());
+                    self.remote_kv_bytes -= self.block_bytes();
+                }
             }
         }
         if self.seqs.is_empty() {
@@ -268,7 +320,11 @@ impl KvCacheManager {
                 Ok(BlockHome::Device(id))
             }
             KvPolicy::FullOffload => {
-                self.remote_kv_bytes += self.block_bytes();
+                let bytes = self.block_bytes();
+                if !self.pool.try_reserve(bytes) {
+                    bail!("remote pool exhausted: {bytes} B for one KV block");
+                }
+                self.remote_kv_bytes += bytes;
                 Ok(BlockHome::Remote)
             }
         }
@@ -373,6 +429,40 @@ mod tests {
         let mut off = mgr(KvPolicy::FullOffload, GB);
         off.admit(1, 64 * 300, &hw()).unwrap();
         assert!(off.max_tokens_supported(0, GB) > 64 * 300);
+    }
+
+    #[test]
+    fn shared_pool_bounds_offload_and_frees_on_retire() {
+        // Pool fits exactly 4 blocks of 4 MiB (64 tok * 64 KiB).
+        let block = 64 * 64 * 1024u64;
+        let pool = PoolHandle::new(4 * block);
+        let mut a = KvCacheManager::with_pool(
+            KvPolicy::FullOffload,
+            NsaConfig::default(),
+            64 * 1024,
+            GB,
+            pool.clone(),
+        );
+        let mut b = KvCacheManager::with_pool(
+            KvPolicy::FullOffload,
+            NsaConfig::default(),
+            64 * 1024,
+            GB,
+            pool.clone(),
+        );
+        a.admit(1, 64 * 3, &hw()).unwrap(); // 3 blocks
+        // Sibling device sees the pressure: 2 blocks won't fit.
+        assert!(b.admit(2, 64 * 2, &hw()).is_err());
+        assert_eq!(pool.used(), 3 * block, "failed admit must not leak");
+        b.admit(2, 32, &hw()).unwrap(); // the last block fits
+        // Growth beyond the pool fails at the next block boundary.
+        for _ in 0..32 {
+            b.decode_step(2, &hw()).unwrap(); // fills block 1, no growth
+        }
+        assert!(b.decode_step(2, &hw()).is_err(), "pool is full");
+        a.retire(1).unwrap();
+        assert_eq!(pool.used(), block);
+        assert_eq!(a.remote_kv_bytes, 0);
     }
 
     #[test]

@@ -11,14 +11,38 @@
 //! runtime baseline, a KV-cache manager, a serving stack, training-step
 //! simulation, high availability) is built as substrates in the sibling
 //! modules. Real model execution (the end-to-end serving example) goes
-//! through [`runtime`], which loads AOT-compiled HLO-text artifacts.
+//! through [`runtime`], which loads AOT-compiled HLO-text artifacts
+//! (requires the `xla` feature and a vendored `xla` crate).
+//!
+//! ## Cluster-scale serving
+//!
+//! The serving stack simulates the paper's §7 multi-NPU setting as a
+//! first-class object: [`serving::SimServingEngine`] is a *steppable*
+//! engine (`enqueue` / `step` / `step_until`) that does not own the
+//! global clock, and [`serving::SimCluster`] advances N replicas through
+//! one event loop while they share
+//!
+//! * one capacity-accounted remote pool ([`memory::PoolHandle`] — every
+//!   offloaded KV block reserves real bytes, so siblings can starve each
+//!   other), and
+//! * one bandwidth-contended device↔pool fabric ([`sim::Fabric`] —
+//!   per-link rates degrade to `aggregate / k` once `k` concurrent
+//!   transferrers saturate the node's provisioning).
+//!
+//! Requests are dispatched online at arrival time from live replica state
+//! (outstanding tokens, KV headroom, pool pressure) with completion
+//! feedback ([`serving::Router::route_live`]); the static
+//! `Router::partition` path remains as the blind baseline. A cluster of
+//! N=1 reproduces the single-engine timings bit-for-bit.
 
+#[cfg(feature = "xla")]
 pub mod coordinator;
 pub mod graph;
 pub mod ha;
 pub mod kvcache;
 pub mod memory;
 pub mod passes;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod serving;
 pub mod runtime_sched;

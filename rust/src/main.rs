@@ -7,14 +7,10 @@
 //!   ha-sim     checkpoint vs pool recovery comparison
 //!   info       artifact + platform info
 
-use std::path::PathBuf;
-
 use anyhow::{bail, Result};
 
-use hyperoffload::coordinator::{Coordinator, ServeConfig};
 use hyperoffload::graph::GraphBuilder;
 use hyperoffload::ha;
-use hyperoffload::kvcache::KvPolicy;
 use hyperoffload::passes::{compile, ExecOrderConfig, OffloadPolicy};
 use hyperoffload::sim::{simulate, HwConfig, GB};
 use hyperoffload::training::{baseline_step, hierarchical_step, ModelPreset, ParallelCfg};
@@ -29,12 +25,23 @@ fn main() -> Result<()> {
             .and_then(|i| args.get(i + 1))
             .cloned()
     };
+    #[cfg(feature = "xla")]
     let has = |name: &str| args.iter().any(|a| a == name);
 
     match cmd {
+        #[cfg(not(feature = "xla"))]
+        "serve" | "info" => {
+            bail!(
+                "`{cmd}` needs real PJRT execution: rebuild with `--features xla` \
+                 (requires the vendored xla crate, see Cargo.toml)"
+            );
+        }
+        #[cfg(feature = "xla")]
         "serve" => {
+            use hyperoffload::coordinator::{Coordinator, ServeConfig};
+            use hyperoffload::kvcache::KvPolicy;
             let dir = flag("--artifacts").unwrap_or_else(|| "artifacts".into());
-            let mut cfg = ServeConfig::new(PathBuf::from(&dir));
+            let mut cfg = ServeConfig::new(std::path::PathBuf::from(&dir));
             if let Some(n) = flag("--requests") {
                 cfg.n_requests = n.parse()?;
             }
@@ -123,6 +130,7 @@ fn main() -> Result<()> {
             t.row(&["pool-resident".into(), f(r.mean_pool_recovery_s, 1), r.total_lost_steps_pool.to_string()]);
             t.print();
         }
+        #[cfg(feature = "xla")]
         "info" => {
             let client = xla::PjRtClient::cpu()?;
             println!("PJRT platform: {} ({} devices)", client.platform_name(), client.device_count());

@@ -7,6 +7,7 @@
 //! direction.
 
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
@@ -14,6 +15,82 @@ use crate::graph::Tier;
 use crate::sim::HwConfig;
 
 use super::allocator::{AllocId, DeviceAllocator};
+
+/// Capacity-accounted handle to one SuperNode remote pool.
+///
+/// The pool is the *shared* resource of the paper's architecture: every
+/// device on the node reserves KV/optimizer bytes out of the same
+/// terabyte-scale budget. A [`PoolHandle`] is cheaply cloneable; all clones
+/// account against one ledger, so N engines holding clones of the same
+/// handle contend for the same capacity (the cluster-serving setup), while
+/// a freshly created handle models a private, uncontended pool (the
+/// single-engine setup).
+#[derive(Debug, Clone)]
+pub struct PoolHandle {
+    state: Arc<Mutex<PoolState>>,
+}
+
+#[derive(Debug)]
+struct PoolState {
+    capacity: u64,
+    used: u64,
+    peak: u64,
+}
+
+impl PoolHandle {
+    pub fn new(capacity: u64) -> Self {
+        Self { state: Arc::new(Mutex::new(PoolState { capacity, used: 0, peak: 0 })) }
+    }
+
+    /// A pool with effectively no capacity limit (legacy single-device
+    /// behaviour where the remote tier was treated as inexhaustible).
+    pub fn unbounded() -> Self {
+        Self::new(u64::MAX)
+    }
+
+    /// Reserve `bytes` from the pool. Returns false (reserving nothing)
+    /// if the remaining capacity cannot hold them.
+    pub fn try_reserve(&self, bytes: u64) -> bool {
+        let mut s = self.state.lock().unwrap();
+        match s.used.checked_add(bytes) {
+            Some(next) if next <= s.capacity => {
+                s.used = next;
+                s.peak = s.peak.max(next);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Return `bytes` to the pool.
+    pub fn release(&self, bytes: u64) {
+        let mut s = self.state.lock().unwrap();
+        s.used = s.used.saturating_sub(bytes);
+    }
+
+    pub fn used(&self) -> u64 {
+        self.state.lock().unwrap().used
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.state.lock().unwrap().capacity
+    }
+
+    /// High-water mark of pool occupancy (bytes).
+    pub fn peak(&self) -> u64 {
+        self.state.lock().unwrap().peak
+    }
+
+    /// Occupancy in [0, 1]; 0 for an unbounded pool.
+    pub fn pressure(&self) -> f64 {
+        let s = self.state.lock().unwrap();
+        if s.capacity == 0 || s.capacity == u64::MAX {
+            0.0
+        } else {
+            s.used as f64 / s.capacity as f64
+        }
+    }
+}
 
 /// A transfer primitive between tiers (§6 "Unified Memory Primitives").
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -67,11 +144,17 @@ pub struct Region {
 }
 
 /// The three-tier memory system of one SuperNode device slice.
+///
+/// The remote tier is accounted through a [`PoolHandle`]: pass a shared
+/// handle via [`HierarchicalMemory::with_pool`] to model several device
+/// slices drawing from one node-level pool.
 #[derive(Debug)]
 pub struct HierarchicalMemory {
     pub device: DeviceAllocator,
-    pub remote_capacity: u64,
-    pub remote_used: u64,
+    pool: PoolHandle,
+    /// Remote bytes reserved by *this* slice (the pool ledger aggregates
+    /// all slices).
+    remote_local: u64,
     pub host_used: u64,
     regions: HashMap<u64, Region>,
     next_region: u64,
@@ -85,15 +168,31 @@ pub type RegionId = u64;
 
 impl HierarchicalMemory {
     pub fn new(hw: &HwConfig) -> Self {
+        Self::with_pool(hw, PoolHandle::new(hw.remote_capacity))
+    }
+
+    /// Build a slice whose remote tier draws from `pool` (shared across
+    /// slices when the handle is cloned).
+    pub fn with_pool(hw: &HwConfig, pool: PoolHandle) -> Self {
         Self {
             device: DeviceAllocator::new(hw.device_capacity),
-            remote_capacity: hw.remote_capacity,
-            remote_used: 0,
+            pool,
+            remote_local: 0,
             host_used: 0,
             regions: HashMap::new(),
             next_region: 1,
-        defrag_stall_us: 0.0,
+            defrag_stall_us: 0.0,
         }
+    }
+
+    /// Remote-pool bytes reserved by this slice.
+    pub fn remote_used(&self) -> u64 {
+        self.remote_local
+    }
+
+    /// The (possibly shared) remote pool behind this slice.
+    pub fn pool(&self) -> &PoolHandle {
+        &self.pool
     }
 
     /// Register a region in `tier`, allocating device space if needed.
@@ -108,10 +207,10 @@ impl HierarchicalMemory {
                 Some(id)
             }
             Tier::Remote => {
-                if self.remote_used + bytes > self.remote_capacity {
+                if !self.pool.try_reserve(bytes) {
                     bail!("remote pool exhausted");
                 }
-                self.remote_used += bytes;
+                self.remote_local += bytes;
                 None
             }
             Tier::Host => {
@@ -136,17 +235,10 @@ impl HierarchicalMemory {
         let kind = TransferKind::between(region.tier, dst)?;
         let dur = kind.duration_us(region.bytes, hw);
 
-        // Release source.
-        match region.tier {
-            Tier::Device => {
-                if let Some(a) = region.alloc {
-                    self.device.free(a)?;
-                }
-            }
-            Tier::Remote => self.remote_used -= region.bytes,
-            Tier::Host => self.host_used -= region.bytes,
-        }
-        // Acquire destination.
+        // Acquire the destination *first*: src != dst here, so the two
+        // never compete for the same capacity, and a failed acquisition
+        // (device OOM, shared pool exhausted by a sibling slice) leaves
+        // the region intact at its source instead of half-migrated.
         let mut stall = 0.0;
         let alloc = match dst {
             Tier::Device => {
@@ -156,10 +248,10 @@ impl HierarchicalMemory {
                 Some(a)
             }
             Tier::Remote => {
-                if self.remote_used + region.bytes > self.remote_capacity {
+                if !self.pool.try_reserve(region.bytes) {
                     bail!("remote pool exhausted");
                 }
-                self.remote_used += region.bytes;
+                self.remote_local += region.bytes;
                 None
             }
             Tier::Host => {
@@ -167,6 +259,19 @@ impl HierarchicalMemory {
                 None
             }
         };
+        // Release the source.
+        match region.tier {
+            Tier::Device => {
+                if let Some(a) = region.alloc {
+                    self.device.free(a)?;
+                }
+            }
+            Tier::Remote => {
+                self.pool.release(region.bytes);
+                self.remote_local -= region.bytes;
+            }
+            Tier::Host => self.host_used -= region.bytes,
+        }
         let r = self.regions.get_mut(&id).unwrap();
         r.tier = dst;
         r.alloc = alloc;
@@ -182,7 +287,10 @@ impl HierarchicalMemory {
                     self.device.free(a)?;
                 }
             }
-            Tier::Remote => self.remote_used -= region.bytes,
+            Tier::Remote => {
+                self.pool.release(region.bytes);
+                self.remote_local -= region.bytes;
+            }
             Tier::Host => self.host_used -= region.bytes,
         }
         Ok(())
@@ -228,7 +336,7 @@ mod tests {
         let (d, _) = m.register("w", GB, Tier::Device, &hw).unwrap();
         let (r, _) = m.register("kv", 2 * GB, Tier::Remote, &hw).unwrap();
         assert_eq!(m.device_used(), GB);
-        assert_eq!(m.remote_used, 2 * GB);
+        assert_eq!(m.remote_used(), 2 * GB);
         assert_eq!(m.region(d).unwrap().tier, Tier::Device);
         assert_eq!(m.region(r).unwrap().tier, Tier::Remote);
     }
@@ -242,7 +350,7 @@ mod tests {
         assert_eq!(kind, TransferKind::D2R);
         assert!(dur > 0.0);
         assert_eq!(m.device_used(), 0);
-        assert_eq!(m.remote_used, GB);
+        assert_eq!(m.remote_used(), GB);
     }
 
     #[test]
@@ -287,6 +395,58 @@ mod tests {
         m.release(id).unwrap();
         assert_eq!(m.device_used(), 0);
         assert!(m.region(id).is_none());
+    }
+
+    #[test]
+    fn shared_pool_contends_across_slices() {
+        let hw = hw();
+        let pool = PoolHandle::new(3 * GB);
+        let mut a = HierarchicalMemory::with_pool(&hw, pool.clone());
+        let mut b = HierarchicalMemory::with_pool(&hw, pool.clone());
+        a.register("a", 2 * GB, Tier::Remote, &hw).unwrap();
+        // b sees a's reservation: only 1 GB left.
+        assert!(b.register("b", 2 * GB, Tier::Remote, &hw).is_err());
+        let (id, _) = b.register("b", GB, Tier::Remote, &hw).unwrap();
+        assert_eq!(pool.used(), 3 * GB);
+        b.release(id).unwrap();
+        assert_eq!(pool.used(), 2 * GB);
+        assert_eq!(pool.peak(), 3 * GB);
+        assert_eq!(a.remote_used(), 2 * GB);
+        assert_eq!(b.remote_used(), 0);
+    }
+
+    #[test]
+    fn failed_migrate_leaves_region_intact() {
+        let hw = hw();
+        let pool = PoolHandle::new(GB);
+        let mut sibling = HierarchicalMemory::with_pool(&hw, pool.clone());
+        let mut m = HierarchicalMemory::with_pool(&hw, pool.clone());
+        sibling.register("hog", GB, Tier::Remote, &hw).unwrap();
+        let (id, _) = m.register("act", GB, Tier::Device, &hw).unwrap();
+        // Destination pool is full: migration must fail atomically.
+        assert!(m.migrate(id, Tier::Remote, &hw).is_err());
+        assert_eq!(m.region(id).unwrap().tier, Tier::Device);
+        assert_eq!(m.device_used(), GB, "source must still be allocated");
+        // And still releasable / migratable once the sibling frees up.
+        m.release(id).unwrap();
+        assert_eq!(m.device_used(), 0);
+    }
+
+    #[test]
+    fn pool_handle_accounting() {
+        let p = PoolHandle::new(100);
+        assert!(p.try_reserve(60));
+        assert!(!p.try_reserve(50));
+        assert!(p.try_reserve(40));
+        assert_eq!(p.used(), 100);
+        assert!((p.pressure() - 1.0).abs() < 1e-12);
+        p.release(30);
+        assert_eq!(p.used(), 70);
+        assert_eq!(p.peak(), 100);
+        // Unbounded pool never rejects and reports zero pressure.
+        let u = PoolHandle::unbounded();
+        assert!(u.try_reserve(u64::MAX / 2));
+        assert_eq!(u.pressure(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,428 @@
+//! Cluster-scale serving: N engine replicas contending for one SuperNode
+//! pool (the paper's §7 multi-NPU setting, where the terabyte-scale pool
+//! is shared by *many* devices rather than private to one).
+//!
+//! # Who owns the clock
+//!
+//! Engines are resumable steppers with private local clocks; **the
+//! cluster owns global time**. Its event loop repeatedly picks the
+//! laggard replica (minimum local clock) that can still make progress and
+//! advances it by exactly one scheduler iteration. Because the laggard
+//! always moves first, replica clocks stay within one iteration of each
+//! other, which is what makes window-based fabric contention meaningful.
+//!
+//! # What `step_until` guarantees
+//!
+//! [`SimServingEngine::step_until`]`(t)` catches an engine up to an event
+//! horizon `t`: it steps while the engine can make progress without
+//! *starting* past `t`. Iterations are atomic, so the last one may finish
+//! beyond `t` — exactly like the pre-refactor monolith, where a request
+//! arriving mid-decode-step waited for the step boundary. An idle engine
+//! never advances its clock past `t` on its own; time only moves when
+//! work (or an admissible arrival) exists. The cluster dispatches each
+//! request at its arrival time, after advancing every replica to that
+//! horizon, so routing always sees live state.
+//!
+//! # Fabric contention model
+//!
+//! All device↔pool links funnel into one [`Fabric`] with finite aggregate
+//! bandwidth. Before each engine step the cluster counts the replicas
+//! with transfer traffic in flight (`k`) and hands the stepped engine a
+//! [`FabricPressure`] of `per_link / min(per_link, aggregate / k)` per
+//! direction. With one replica (or a generously provisioned fabric) the
+//! slowdown is exactly 1.0 and the single-engine timing is reproduced
+//! bit-for-bit; past the provisioning knee, transfers stretch and the
+//! extra exposed time is reported as `fabric_stall_us`.
+//!
+//! # Shared-pool accounting
+//!
+//! One [`PoolHandle`] of `hw.remote_capacity` bytes is cloned into every
+//! replica's KV manager: offloaded blocks reserve real capacity, so a
+//! replica can be preempted because a *sibling* filled the pool.
+
+use anyhow::Result;
+
+use crate::memory::PoolHandle;
+use crate::sim::Fabric;
+
+use super::engine::{EngineConfig, FabricPressure, SimServingEngine};
+use super::metrics::{stats, ServingReport, Stats};
+use super::request::Request;
+use super::router::{ReplicaView, RoutePolicy, Router};
+
+/// Configuration of a simulated serving cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Per-replica engine configuration (each replica gets a clone; the
+    /// remote pool inside it is replaced by the shared cluster pool).
+    pub engine: EngineConfig,
+    pub n_replicas: usize,
+    pub route: RoutePolicy,
+    /// The shared device↔pool interconnect.
+    pub fabric: Fabric,
+    /// If true, requests are assigned to replicas by the static
+    /// [`Router::partition`]-style pre-pass (cumulative token counters,
+    /// no completion feedback) instead of live-state online routing.
+    /// Arrival times are still honoured — only the placement is blind.
+    pub static_partition: bool,
+}
+
+impl ClusterConfig {
+    pub fn new(engine: EngineConfig, n_replicas: usize) -> Self {
+        assert!(n_replicas > 0);
+        let fabric = Fabric::for_hw(&engine.hw);
+        Self {
+            engine,
+            n_replicas,
+            route: RoutePolicy::LeastLoaded,
+            fabric,
+            static_partition: false,
+        }
+    }
+
+    pub fn with_route(mut self, route: RoutePolicy) -> Self {
+        self.route = route;
+        self
+    }
+
+    pub fn with_fabric(mut self, fabric: Fabric) -> Self {
+        self.fabric = fabric;
+        self
+    }
+
+    pub fn with_static_partition(mut self, on: bool) -> Self {
+        self.static_partition = on;
+        self
+    }
+}
+
+/// Aggregate + per-replica outcome of a cluster run.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub per_replica: Vec<ServingReport>,
+    /// Requests handed to engines (== completed + rejected afterwards).
+    pub dispatched: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub preempted_events: u64,
+    /// Wall time of the run: the latest replica clock (us).
+    pub total_time_us: f64,
+    pub tokens_generated: u64,
+    pub throughput_tok_per_s: f64,
+    /// End-to-end latency across *all* replicas' completions.
+    pub e2e_latency_us: Stats,
+    /// Prefill execution latency across all replicas.
+    pub prefill_latency_us: Stats,
+    /// Summed exposed transfer time across replicas (us).
+    pub exposed_transfer_us: f64,
+    /// Summed fabric-contention stall across replicas (us).
+    pub fabric_stall_us: f64,
+    pub kv_transfer_bytes: u64,
+    /// Max device-memory peak across replicas (bytes).
+    pub peak_device_bytes: u64,
+    /// High-water mark of the shared remote pool (bytes).
+    pub pool_peak_bytes: u64,
+    /// Capacity of the shared remote pool (bytes).
+    pub pool_capacity_bytes: u64,
+}
+
+/// N engine replicas advanced through one event loop, sharing a
+/// capacity-accounted remote pool and a bandwidth-contended fabric.
+pub struct SimCluster {
+    cfg: ClusterConfig,
+    engines: Vec<SimServingEngine>,
+    router: Router,
+    pool: PoolHandle,
+    /// Per-replica cursor into `completed()` for feedback already
+    /// reported to the router.
+    seen: Vec<usize>,
+    dispatched: u64,
+}
+
+impl SimCluster {
+    pub fn new(cfg: ClusterConfig) -> Self {
+        let pool = PoolHandle::new(cfg.engine.hw.remote_capacity);
+        let engines: Vec<SimServingEngine> = (0..cfg.n_replicas)
+            .map(|_| SimServingEngine::with_pool(cfg.engine.clone(), pool.clone()))
+            .collect();
+        let router = Router::new(cfg.n_replicas, cfg.route);
+        let seen = vec![0; cfg.n_replicas];
+        Self { cfg, engines, router, pool, seen, dispatched: 0 }
+    }
+
+    /// The shared remote pool (cloneable handle).
+    pub fn pool(&self) -> &PoolHandle {
+        &self.pool
+    }
+
+    /// Serve a workload to completion: dispatch each request at its
+    /// arrival time (advancing all replicas to that horizon first, so
+    /// routing sees live state), then drain.
+    pub fn run(mut self, mut requests: Vec<Request>) -> Result<ClusterReport> {
+        requests.sort_by(|a, b| a.arrival_us.total_cmp(&b.arrival_us));
+        // Static mode: decide placement up front from cumulative token
+        // counters only (the old Router::partition behaviour).
+        let static_plan: Option<Vec<usize>> = if self.cfg.static_partition {
+            Some(requests.iter().map(|r| self.router.route(r)).collect())
+        } else {
+            None
+        };
+        for (i, req) in requests.into_iter().enumerate() {
+            self.advance_until(req.arrival_us)?;
+            let idx = match &static_plan {
+                Some(plan) => plan[i],
+                None => {
+                    let views = self.views();
+                    self.router.route_live(&req, &views)
+                }
+            };
+            self.dispatched += 1;
+            self.engines[idx].enqueue(req);
+        }
+        self.advance_until(f64::INFINITY)?;
+        Ok(self.finish())
+    }
+
+    fn views(&self) -> Vec<ReplicaView> {
+        self.engines
+            .iter()
+            .map(|e| ReplicaView {
+                outstanding_tokens: e.outstanding_tokens(),
+                kv_headroom_tokens: e.kv_headroom_tokens(),
+                pool_pressure: e.pool_pressure(),
+                now_us: e.now_us(),
+            })
+            .collect()
+    }
+
+    /// Advance every replica to the event horizon `t`, laggard first, with
+    /// per-step fabric pressure from the replicas transferring in the
+    /// same window, feeding completions back to the router as they land.
+    fn advance_until(&mut self, t: f64) -> Result<()> {
+        loop {
+            let mut laggard: Option<usize> = None;
+            for (i, e) in self.engines.iter().enumerate() {
+                if !e.can_progress(t) {
+                    continue;
+                }
+                match laggard {
+                    Some(l) if self.engines[l].now_us() <= e.now_us() => {}
+                    _ => laggard = Some(i),
+                }
+            }
+            let Some(i) = laggard else { return Ok(()) };
+            let k = self.engines.iter().filter(|e| e.has_transfer_traffic()).count();
+            let pressure = FabricPressure {
+                d2r_slowdown: self.cfg.fabric.slowdown(self.cfg.engine.hw.d2r_gbps, k),
+                r2d_slowdown: self.cfg.fabric.slowdown(self.cfg.engine.hw.r2d_gbps, k),
+            };
+            self.engines[i].step(&pressure)?;
+            self.feed_completions(i);
+        }
+    }
+
+    fn feed_completions(&mut self, i: usize) {
+        let done = self.engines[i].completed();
+        while self.seen[i] < done.len() {
+            let (req, _) = &done[self.seen[i]];
+            self.router.complete(i, req);
+            self.seen[i] += 1;
+        }
+    }
+
+    fn finish(self) -> ClusterReport {
+        let mut e2e = Vec::new();
+        let mut prefill = Vec::new();
+        for e in &self.engines {
+            for (r, t) in e.completed() {
+                e2e.push(t.e2e_latency_us(r.arrival_us));
+                prefill.push(t.prefill_end_us - t.prefill_start_us);
+            }
+        }
+        let total_time_us = self.engines.iter().map(|e| e.now_us()).fold(0.0, f64::max);
+        let per_replica: Vec<ServingReport> =
+            self.engines.into_iter().map(|e| e.report()).collect();
+        let completed: u64 = per_replica.iter().map(|r| r.e2e_latency_us.n as u64).sum();
+        let rejected: u64 = per_replica.iter().map(|r| r.rejected_requests).sum();
+        let preempted: u64 = per_replica.iter().map(|r| r.preempted_events).sum();
+        let tokens: u64 = per_replica.iter().map(|r| r.tokens_generated).sum();
+        let exposed: f64 = per_replica.iter().map(|r| r.exposed_transfer_us).sum();
+        let fabric_stall: f64 = per_replica.iter().map(|r| r.fabric_stall_us).sum();
+        let kv_bytes: u64 = per_replica.iter().map(|r| r.kv_transfer_bytes).sum();
+        let peak_device = per_replica.iter().map(|r| r.peak_device_bytes).max().unwrap_or(0);
+        ClusterReport {
+            dispatched: self.dispatched,
+            completed,
+            rejected,
+            preempted_events: preempted,
+            total_time_us,
+            tokens_generated: tokens,
+            throughput_tok_per_s: if total_time_us > 0.0 {
+                tokens as f64 / (total_time_us / 1e6)
+            } else {
+                0.0
+            },
+            e2e_latency_us: stats(&e2e),
+            prefill_latency_us: stats(&prefill),
+            exposed_transfer_us: exposed,
+            fabric_stall_us: fabric_stall,
+            kv_transfer_bytes: kv_bytes,
+            peak_device_bytes: peak_device,
+            pool_peak_bytes: self.pool.peak(),
+            pool_capacity_bytes: self.pool.capacity(),
+            per_replica,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::{ModelCost, WorkloadConfig};
+    use crate::sim::{HwConfig, GB};
+
+    fn hw() -> HwConfig {
+        HwConfig::ascend910c_like().with_device_capacity(64 * GB)
+    }
+
+    fn small_model() -> ModelCost {
+        ModelCost {
+            weights_bytes: 8 * GB,
+            act_bytes: GB,
+            prefill_flops_per_token: 16e9,
+            decode_flops_per_token: 16e9,
+            kv_bytes_per_token: 64 * 1024,
+        }
+    }
+
+    /// N=1 must reproduce the single-engine `run()` reports exactly (the
+    /// refactor is behavior-preserving at the fixpoint).
+    #[test]
+    fn n1_cluster_reproduces_single_engine_run() {
+        type CfgFn = fn(HwConfig, ModelCost) -> EngineConfig;
+        for cfg_of in [EngineConfig::baseline as CfgFn, EngineConfig::hierarchical as CfgFn] {
+            let wl = WorkloadConfig {
+                mean_interarrival_us: 30_000.0,
+                ..WorkloadConfig::short_sequence(16, 13)
+            }
+            .generate();
+            let solo = SimServingEngine::new(cfg_of(hw(), small_model()))
+                .run(wl.clone())
+                .unwrap();
+            let cluster = SimCluster::new(ClusterConfig::new(cfg_of(hw(), small_model()), 1))
+                .run(wl)
+                .unwrap();
+            let r = &cluster.per_replica[0];
+            let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-12);
+            assert!(
+                rel(r.throughput_tok_per_s, solo.throughput_tok_per_s) < 1e-6,
+                "throughput {} vs {}",
+                r.throughput_tok_per_s,
+                solo.throughput_tok_per_s
+            );
+            assert_eq!(r.peak_device_bytes, solo.peak_device_bytes);
+            assert!(
+                (r.exposed_transfer_us - solo.exposed_transfer_us).abs()
+                    <= 1e-6 * solo.exposed_transfer_us.abs().max(1.0),
+                "exposed {} vs {}",
+                r.exposed_transfer_us,
+                solo.exposed_transfer_us
+            );
+            assert!(rel(r.total_time_us, solo.total_time_us) < 1e-6);
+            assert_eq!(r.e2e_latency_us.n, solo.e2e_latency_us.n);
+            assert_eq!(cluster.fabric_stall_us, 0.0, "N=1 must be uncontended");
+        }
+    }
+
+    /// Four replicas sharing the fabric expose more transfer time than one
+    /// replica serving the same workload uncontended.
+    #[test]
+    fn n4_fabric_contention_exposes_transfers() {
+        // Chunky prompts: prefill writeback dominates and cannot hide.
+        let wl = WorkloadConfig::long_sequence(8, 8000, 40, 5).generate();
+        let n1 = SimCluster::new(ClusterConfig::new(
+            EngineConfig::hierarchical(hw(), small_model()),
+            1,
+        ))
+        .run(wl.clone())
+        .unwrap();
+        let n4 = SimCluster::new(ClusterConfig::new(
+            EngineConfig::hierarchical(hw(), small_model()),
+            4,
+        ))
+        .run(wl)
+        .unwrap();
+        assert_eq!(n1.fabric_stall_us, 0.0);
+        assert!(n4.fabric_stall_us > 0.0, "4 sharers must contend");
+        assert!(
+            n4.exposed_transfer_us > n1.exposed_transfer_us,
+            "aggregate-bandwidth limit must grow exposure: {} <= {}",
+            n4.exposed_transfer_us,
+            n1.exposed_transfer_us
+        );
+        assert_eq!(n4.dispatched, n4.completed + n4.rejected);
+    }
+
+    /// Online least-loaded routing (live outstanding tokens + completion
+    /// feedback) beats the static token-count partition on tail latency
+    /// for a bursty trace where token totals mislead.
+    #[test]
+    fn online_routing_beats_static_partition_on_p99() {
+        // max_batch 1 serialises replicas, so placement mistakes queue.
+        let engine = EngineConfig {
+            max_batch: 1,
+            ..EngineConfig::baseline(hw(), small_model())
+        };
+        let mk = |id, t, p, g| Request {
+            id,
+            arrival_us: t,
+            prompt_tokens: p,
+            gen_tokens: g,
+        };
+        // M0: decode monster (1000 steps ~ 5.4 s). S0: token-fat but
+        // cheap (prefill-only). At t=150 ms S0 is long done; static
+        // placement still sees replica 1 as "heavier" (6002 > 3000
+        // tokens) and stacks M1 behind M0, while online routing sees
+        // replica 1 idle.
+        let wl = vec![
+            mk(0, 0.0, 2000, 1000),     // M0 -> replica 0 (both modes)
+            mk(1, 0.0, 6000, 2),        // S0 -> replica 1 (both modes)
+            mk(2, 150_000.0, 2000, 1000), // M1: the discriminating request
+        ];
+        let online = SimCluster::new(ClusterConfig::new(engine.clone(), 2))
+            .run(wl.clone())
+            .unwrap();
+        let static_ = SimCluster::new(
+            ClusterConfig::new(engine, 2).with_static_partition(true),
+        )
+        .run(wl)
+        .unwrap();
+        assert_eq!(online.completed, 3);
+        assert_eq!(static_.completed, 3);
+        assert!(
+            online.e2e_latency_us.p99 < static_.e2e_latency_us.p99,
+            "online p99 {} must beat static p99 {}",
+            online.e2e_latency_us.p99,
+            static_.e2e_latency_us.p99
+        );
+    }
+
+    /// The shared pool is a real constraint: one replica's residency can
+    /// reject a sibling's request that a private pool would have taken.
+    #[test]
+    fn shared_pool_is_capacity_accounted() {
+        // Pool sized for ~one replica's worth of KV: 2 x 8000-token
+        // prompts of 64 KiB/tok ~= 1 GiB; give the pool 1.2 GiB.
+        let mut h = hw();
+        h.remote_capacity = (12 * GB) / 10;
+        let engine = EngineConfig::hierarchical(h, small_model());
+        let wl = WorkloadConfig::long_sequence(6, 8000, 20, 9).generate();
+        let report = SimCluster::new(ClusterConfig::new(engine, 2)).run(wl).unwrap();
+        assert!(report.pool_peak_bytes <= report.pool_capacity_bytes);
+        assert_eq!(report.dispatched, report.completed + report.rejected);
+        assert!(
+            report.rejected > 0 || report.preempted_events > 0,
+            "pool pressure must bite: {report:?}"
+        );
+    }
+}

@@ -7,10 +7,34 @@
 //! * hierarchical — KV `FullOffload` with graph-driven scheduling: per-step
 //!   prefetch volume overlaps the step's compute (exposed only when the
 //!   transfer outruns it), CPU sparse-block processing serialises (§7.3.3).
+//!
+//! # Steppable core
+//!
+//! The engine is a *resumable stepper*, not a closed loop: it holds a
+//! request queue ([`SimServingEngine::enqueue`]) and advances in discrete
+//! scheduler iterations ([`SimServingEngine::step`] /
+//! [`SimServingEngine::step_until`]). Its `clock_us` is a private, local
+//! notion of time — the engine never assumes it owns the global clock, so
+//! an external orchestrator ([`super::SimCluster`]) can interleave N
+//! engines through one event loop, injecting per-step fabric contention
+//! ([`FabricPressure`]) and observing live state (outstanding tokens, KV
+//! headroom, pool pressure) for online routing. The legacy
+//! [`SimServingEngine::run`] entry point is a thin wrapper — enqueue
+//! everything, step to idle, report — and reproduces the pre-refactor
+//! monolith bit-for-bit.
+//!
+//! Preempted sequences (device KV exhausted mid-decode) are no longer
+//! dropped: they are requeued at the head of the queue for vLLM-style
+//! recompute re-prefill (prompt + generated-so-far), up to
+//! [`EngineConfig::max_preemptions`] attempts, and reported separately
+//! from hard rejections.
+
+use std::collections::VecDeque;
 
 use anyhow::Result;
 
 use crate::kvcache::{KvCacheManager, KvPolicy, NsaConfig};
+use crate::memory::PoolHandle;
 use crate::sim::HwConfig;
 
 use super::metrics::{stats, ServingReport};
@@ -57,6 +81,9 @@ pub struct EngineConfig {
     /// If false (baseline runtime-style), per-step KV transfers are fully
     /// exposed instead of overlapping decode compute.
     pub overlap_transfers: bool,
+    /// How many times one sequence may be preempted (and requeued for
+    /// recompute re-prefill) before it is rejected outright.
+    pub max_preemptions: u32,
 }
 
 impl EngineConfig {
@@ -68,6 +95,7 @@ impl EngineConfig {
             nsa: NsaConfig::default(),
             max_batch: 8,
             overlap_transfers: false,
+            max_preemptions: 3,
         }
     }
 
@@ -79,14 +107,54 @@ impl EngineConfig {
             nsa: NsaConfig::default(),
             max_batch: 8,
             overlap_transfers: true,
+            max_preemptions: 3,
         }
     }
+}
+
+/// Per-step fabric contention applied to this engine's pool transfers,
+/// computed by the cluster orchestrator from how many sibling devices are
+/// moving bytes in the same window. `1.0` on both directions (the
+/// [`FabricPressure::NONE`] constant) reproduces the uncontended
+/// single-device timing exactly.
+#[derive(Debug, Clone, Copy)]
+pub struct FabricPressure {
+    /// Multiplier (≥ 1.0) on the D2R bandwidth term.
+    pub d2r_slowdown: f64,
+    /// Multiplier (≥ 1.0) on the R2D bandwidth term.
+    pub r2d_slowdown: f64,
+}
+
+impl FabricPressure {
+    /// No contention: private, fully-provisioned link.
+    pub const NONE: Self = Self { d2r_slowdown: 1.0, r2d_slowdown: 1.0 };
 }
 
 struct Active {
     req: Request,
     timing: RequestTiming,
     remaining: usize,
+    preempts: u32,
+}
+
+/// A queued sequence: either a fresh request or a preempted one waiting
+/// for recompute re-prefill.
+struct PendingSeq {
+    req: Request,
+    /// Tokens to prefill on admission: the prompt, or prompt + generated
+    /// so far after a preemption (vLLM recompute semantics).
+    prefill_tokens: usize,
+    /// Generation tokens still to produce.
+    remaining: usize,
+    preempts: u32,
+    /// `Some` iff this entry is a requeued preemption — the original
+    /// timing is kept so reported prefill/first-token stats describe the
+    /// first execution. Everything after that first prefill (including
+    /// the requeue wait and the recompute pass itself) lands in the
+    /// decode interval, so `decode_per_token_us` and e2e both absorb
+    /// preemption stalls — matching how serving systems measure
+    /// inter-token latency, where preemption shows up as ITL spikes.
+    timing: Option<RequestTiming>,
 }
 
 /// Continuous-batching simulated serving engine for one device.
@@ -94,120 +162,277 @@ pub struct SimServingEngine {
     pub cfg: EngineConfig,
     pub kv: KvCacheManager,
     clock_us: f64,
+    pending: VecDeque<PendingSeq>,
     active: Vec<Active>,
     done: Vec<(Request, RequestTiming)>,
     exposed_transfer_us: f64,
+    fabric_stall_us: f64,
     kv_transfer_bytes: u64,
     peak_device_bytes: u64,
+    defrag_stall_us: f64,
     rejected: u64,
+    preempted_events: u64,
+    residency: Vec<(f64, u64)>,
 }
 
 impl SimServingEngine {
+    /// An engine with a private remote pool of `hw.remote_capacity` bytes.
     pub fn new(cfg: EngineConfig) -> Self {
+        let pool = PoolHandle::new(cfg.hw.remote_capacity);
+        Self::with_pool(cfg, pool)
+    }
+
+    /// An engine whose offloaded KV reserves capacity from `pool` — clone
+    /// one handle across N engines to model them sharing one SuperNode
+    /// pool (the cluster setup).
+    pub fn with_pool(cfg: EngineConfig, pool: PoolHandle) -> Self {
         let kv_budget = cfg
             .hw
             .device_capacity
             .saturating_sub(cfg.model.weights_bytes + cfg.model.act_bytes);
-        let kv = KvCacheManager::new(
+        let kv = KvCacheManager::with_pool(
             cfg.kv_policy,
             cfg.nsa.clone(),
             cfg.model.kv_bytes_per_token,
             kv_budget,
+            pool,
         );
         Self {
             cfg,
             kv,
             clock_us: 0.0,
+            pending: VecDeque::new(),
             active: Vec::new(),
             done: Vec::new(),
             exposed_transfer_us: 0.0,
+            fabric_stall_us: 0.0,
             kv_transfer_bytes: 0,
             peak_device_bytes: 0,
+            defrag_stall_us: 0.0,
             rejected: 0,
+            preempted_events: 0,
+            residency: Vec::new(),
         }
     }
 
-    /// Run the whole workload to completion and report.
+    /// Run the whole workload to completion and report (the pre-refactor
+    /// closed-loop entry point, now a wrapper over the stepper).
     pub fn run(mut self, mut requests: Vec<Request>) -> Result<ServingReport> {
         requests.sort_by(|a, b| a.arrival_us.total_cmp(&b.arrival_us));
-        let mut pending: std::collections::VecDeque<Request> = requests.into();
-
-        while !pending.is_empty() || !self.active.is_empty() {
-            // Admit arrivals while there is batch room.
-            while self.active.len() < self.cfg.max_batch {
-                let Some(next) = pending.front() else { break };
-                if next.arrival_us > self.clock_us && !self.active.is_empty() {
-                    break; // keep decoding until it arrives
-                }
-                let req = pending.pop_front().unwrap();
-                self.clock_us = self.clock_us.max(req.arrival_us);
-                match self.prefill(req) {
-                    Ok(()) => {}
-                    Err(_) => {
-                        self.rejected += 1;
-                    }
-                }
-            }
-            if self.active.is_empty() {
-                if let Some(next) = pending.front() {
-                    self.clock_us = self.clock_us.max(next.arrival_us);
-                }
-                continue;
-            }
-            self.decode_iteration()?;
-            // Retire finished sequences.
-            let mut i = 0;
-            while i < self.active.len() {
-                if self.active[i].remaining == 0 {
-                    let mut a = self.active.swap_remove(i);
-                    a.timing.done_us = self.clock_us;
-                    self.kv.retire(a.req.id)?;
-                    self.done.push((a.req, a.timing));
-                } else {
-                    i += 1;
-                }
-            }
+        for req in requests {
+            self.enqueue(req);
         }
+        while self.step(&FabricPressure::NONE)? {}
         Ok(self.report())
     }
 
-    /// Prefill one request (serial, as in chunked-prefill-off serving).
-    fn prefill(&mut self, req: Request) -> Result<()> {
-        let mut timing = RequestTiming { prefill_start_us: self.clock_us, ..Default::default() };
+    /// Queue a request for admission. The caller dispatches in arrival
+    /// order; the engine admits once its local clock reaches the arrival.
+    pub fn enqueue(&mut self, req: Request) {
+        self.pending.push_back(PendingSeq {
+            prefill_tokens: req.prompt_tokens,
+            remaining: req.gen_tokens,
+            preempts: 0,
+            timing: None,
+            req,
+        });
+    }
+
+    /// The engine's local clock (us). Meaningful only relative to the
+    /// orchestrator's event horizon — the engine never advances siblings.
+    pub fn now_us(&self) -> f64 {
+        self.clock_us
+    }
+
+    /// True when there is nothing queued and nothing in flight.
+    pub fn is_idle(&self) -> bool {
+        self.pending.is_empty() && self.active.is_empty()
+    }
+
+    /// Whether a `step()` would make progress without running past
+    /// `horizon_us`: the clock is behind the horizon and there is either
+    /// in-flight work or an admissible arrival at/before the horizon.
+    pub fn can_progress(&self, horizon_us: f64) -> bool {
+        if self.clock_us >= horizon_us {
+            return false;
+        }
+        if !self.active.is_empty() {
+            return true;
+        }
+        match self.pending.front() {
+            Some(p) => p.req.arrival_us <= horizon_us,
+            None => false,
+        }
+    }
+
+    /// Total token work not yet finished (queued prefill + queued and
+    /// in-flight generation) — the live load signal for online routing.
+    pub fn outstanding_tokens(&self) -> u64 {
+        let queued: u64 = self
+            .pending
+            .iter()
+            .map(|p| (p.prefill_tokens + p.remaining) as u64)
+            .sum();
+        let in_flight: u64 = self.active.iter().map(|a| a.remaining as u64).sum();
+        queued + in_flight
+    }
+
+    /// Tokens of KV the engine could still admit (device headroom for the
+    /// baseline policy, pool headroom under offload).
+    pub fn kv_headroom_tokens(&self) -> u64 {
+        let bytes = match self.cfg.kv_policy {
+            KvPolicy::AllDevice => self.kv.device_headroom_bytes(),
+            KvPolicy::FullOffload => {
+                let pool = self.kv.pool();
+                pool.capacity().saturating_sub(pool.used())
+            }
+        };
+        bytes / self.cfg.model.kv_bytes_per_token.max(1)
+    }
+
+    /// Occupancy of the (possibly shared) remote pool in [0, 1].
+    pub fn pool_pressure(&self) -> f64 {
+        self.kv.pool().pressure()
+    }
+
+    /// Whether this engine is currently (or imminently) moving KV bytes
+    /// over the device↔pool fabric — the cluster counts these to compute
+    /// fabric contention for a window.
+    pub fn has_transfer_traffic(&self) -> bool {
+        self.cfg.kv_policy == KvPolicy::FullOffload && !self.is_idle()
+    }
+
+    /// Requests finished so far, in completion order. The cluster reads a
+    /// suffix of this after each step to feed completions back to the
+    /// router; the list also backs the final report.
+    pub fn completed(&self) -> &[(Request, RequestTiming)] {
+        &self.done
+    }
+
+    pub fn rejected_count(&self) -> u64 {
+        self.rejected
+    }
+
+    /// One scheduler iteration: admit what is admissible, then run one
+    /// batched decode step (or jump the clock to the next arrival when
+    /// idle). Returns false when there is no work at all.
+    pub fn step(&mut self, fabric: &FabricPressure) -> Result<bool> {
+        if self.pending.is_empty() && self.active.is_empty() {
+            return Ok(false);
+        }
+        // Admit arrivals while there is batch room.
+        while self.active.len() < self.cfg.max_batch {
+            let Some(next) = self.pending.front() else { break };
+            if next.req.arrival_us > self.clock_us && !self.active.is_empty() {
+                break; // keep decoding until it arrives
+            }
+            // A requeued preemption waits for residency to free up while
+            // other sequences are still draining, instead of being
+            // rejected on a transient capacity miss.
+            if next.timing.is_some()
+                && !self.kv.can_admit_tokens(next.prefill_tokens)
+                && !self.active.is_empty()
+            {
+                break;
+            }
+            let p = self.pending.pop_front().unwrap();
+            self.clock_us = self.clock_us.max(p.req.arrival_us);
+            if self.prefill(p, fabric).is_err() {
+                self.rejected += 1;
+            }
+        }
+        if self.active.is_empty() {
+            if let Some(next) = self.pending.front() {
+                self.clock_us = self.clock_us.max(next.req.arrival_us);
+            }
+            return Ok(true);
+        }
+        self.decode_iteration(fabric)?;
+        // Retire finished sequences.
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].remaining == 0 {
+                let mut a = self.active.swap_remove(i);
+                a.timing.done_us = self.clock_us;
+                self.kv.retire(a.req.id)?;
+                self.done.push((a.req, a.timing));
+            } else {
+                i += 1;
+            }
+        }
+        Ok(true)
+    }
+
+    /// Step until the local clock reaches `t_us` (the last step may
+    /// overshoot — iterations are atomic) or no progress is possible
+    /// without new arrivals. The *caller* owns the global clock; this
+    /// merely catches the engine up to an event horizon.
+    pub fn step_until(&mut self, t_us: f64, fabric: &FabricPressure) -> Result<()> {
+        while self.can_progress(t_us) {
+            if !self.step(fabric)? {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Prefill one queued sequence (serial, as in chunked-prefill-off
+    /// serving). For a requeued preemption this is the recompute pass.
+    fn prefill(&mut self, p: PendingSeq, fabric: &FabricPressure) -> Result<()> {
+        let start_us = self.clock_us;
 
         let compute_us = self
             .cfg
             .hw
-            .compute_us(self.cfg.model.prefill_flops_per_token * req.prompt_tokens as f64, 0);
-        let admit = self.kv.admit(req.id, req.prompt_tokens, &self.cfg.hw)?;
+            .compute_us(self.cfg.model.prefill_flops_per_token * p.prefill_tokens as f64, 0);
+        let admit = self.kv.admit(p.req.id, p.prefill_tokens, &self.cfg.hw)?;
+        self.defrag_stall_us += admit.defrag_us;
 
         // Baseline: defrag stalls serialise into prefill (§7.3.2).
         let mut t = compute_us + admit.defrag_us + admit.cpu_us;
         // Hierarchical: prefill KV writeback streams to the pool; exposed
-        // only if it outruns prefill compute.
-        let d2r_us = self.cfg.hw.d2r_us(admit.d2r_bytes);
+        // only if it outruns prefill compute. Contention stretches the
+        // bandwidth term when siblings share the fabric window.
+        let d2r_us = self.cfg.hw.d2r_us_slowed(admit.d2r_bytes, fabric.d2r_slowdown);
+        let d2r_free_us = self.cfg.hw.d2r_us(admit.d2r_bytes);
         if admit.d2r_bytes > 0 {
             if self.cfg.overlap_transfers {
                 let exposed = (d2r_us - compute_us).max(0.0);
+                let exposed_free = (d2r_free_us - compute_us).max(0.0);
                 t += exposed;
                 self.exposed_transfer_us += exposed;
+                self.fabric_stall_us += exposed - exposed_free;
             } else {
                 t += d2r_us;
                 self.exposed_transfer_us += d2r_us;
+                self.fabric_stall_us += d2r_us - d2r_free_us;
             }
         }
         self.kv_transfer_bytes += admit.d2r_bytes + admit.r2d_bytes;
 
         self.clock_us += t;
-        timing.prefill_end_us = self.clock_us;
-        timing.first_token_us = self.clock_us;
+        let timing = match p.timing {
+            // Recompute pass: keep the first execution's prefill stamps.
+            Some(orig) => orig,
+            None => RequestTiming {
+                prefill_start_us: start_us,
+                prefill_end_us: self.clock_us,
+                first_token_us: self.clock_us,
+                ..Default::default()
+            },
+        };
         self.note_peak();
-        self.active.push(Active { remaining: req.gen_tokens, req, timing });
+        self.active.push(Active {
+            remaining: p.remaining,
+            preempts: p.preempts,
+            req: p.req,
+            timing,
+        });
         Ok(())
     }
 
     /// One batched decode step over all active sequences.
-    fn decode_iteration(&mut self) -> Result<()> {
+    fn decode_iteration(&mut self, fabric: &FabricPressure) -> Result<()> {
         let batch = self.active.len();
         let compute_us = self.cfg.hw.compute_us(
             self.cfg.model.decode_flops_per_token * batch as f64,
@@ -227,11 +452,11 @@ impl SimServingEngine {
                     d2r += c.d2r_bytes;
                     cpu_us += c.cpu_us;
                     defrag_us += c.defrag_us;
-                    a.remaining -= 1;
+                    a.remaining = a.remaining.saturating_sub(1);
                 }
                 Err(_) => {
-                    // Device KV exhausted mid-decode (baseline without a
-                    // pool has nowhere to grow): preempt the sequence.
+                    // Device KV (or shared pool) exhausted mid-decode:
+                    // preempt the sequence.
                     preempted.push(i);
                 }
             }
@@ -239,18 +464,41 @@ impl SimServingEngine {
         for &i in preempted.iter().rev() {
             let a = self.active.swap_remove(i);
             let _ = self.kv.retire(a.req.id);
-            self.rejected += 1;
+            if a.preempts >= self.cfg.max_preemptions {
+                self.rejected += 1;
+            } else {
+                // vLLM-style recompute preemption: discard KV, requeue at
+                // the head for re-prefill of prompt + generated tokens.
+                self.preempted_events += 1;
+                let generated = a.req.gen_tokens - a.remaining;
+                self.pending.push_front(PendingSeq {
+                    prefill_tokens: a.req.prompt_tokens + generated,
+                    remaining: a.remaining,
+                    preempts: a.preempts + 1,
+                    timing: Some(a.timing),
+                    req: a.req,
+                });
+            }
         }
         self.kv_transfer_bytes += r2d + d2r;
+        self.defrag_stall_us += defrag_us;
 
-        let transfer_us = self.cfg.hw.r2d_us(r2d).max(self.cfg.hw.d2r_us(d2r));
+        let transfer_us = self
+            .cfg
+            .hw
+            .r2d_us_slowed(r2d, fabric.r2d_slowdown)
+            .max(self.cfg.hw.d2r_us_slowed(d2r, fabric.d2r_slowdown));
+        let transfer_free_us = self.cfg.hw.r2d_us(r2d).max(self.cfg.hw.d2r_us(d2r));
         let step_us = if self.cfg.overlap_transfers {
             // Graph-driven: transfers hide under the step's compute.
             let exposed = (transfer_us - compute_us).max(0.0);
+            let exposed_free = (transfer_free_us - compute_us).max(0.0);
             self.exposed_transfer_us += exposed;
+            self.fabric_stall_us += exposed - exposed_free;
             compute_us + exposed + cpu_us + defrag_us
         } else if r2d + d2r > 0 {
             self.exposed_transfer_us += transfer_us;
+            self.fabric_stall_us += transfer_us - transfer_free_us;
             compute_us + transfer_us + cpu_us + defrag_us
         } else {
             compute_us + cpu_us + defrag_us
@@ -265,9 +513,11 @@ impl SimServingEngine {
             + self.cfg.model.act_bytes
             + self.kv.device_kv_bytes();
         self.peak_device_bytes = self.peak_device_bytes.max(total);
+        self.residency.push((self.clock_us, total));
     }
 
-    fn report(self) -> ServingReport {
+    /// Consume the engine and summarise everything it served.
+    pub fn report(self) -> ServingReport {
         // Prefill = execution time (start→end), as the paper measures it;
         // queueing shows up in e2e latency instead.
         let prefill: Vec<f64> = self
@@ -300,10 +550,13 @@ impl SimServingEngine {
             },
             peak_device_bytes: self.peak_device_bytes,
             defrag_events: self.kv.allocator.defrag_events,
-            defrag_stall_us: 0.0,
+            defrag_stall_us: self.defrag_stall_us,
             exposed_transfer_us: self.exposed_transfer_us,
+            fabric_stall_us: self.fabric_stall_us,
             kv_transfer_bytes: self.kv_transfer_bytes,
             rejected_requests: self.rejected,
+            preempted_events: self.preempted_events,
+            residency: self.residency,
         }
     }
 }
@@ -312,7 +565,7 @@ impl SimServingEngine {
 mod tests {
     use super::*;
     use crate::serving::request::WorkloadConfig;
-    use crate::sim::GB;
+    use crate::sim::{GB, MB};
 
     fn hw() -> HwConfig {
         HwConfig::ascend910c_like().with_device_capacity(64 * GB)
@@ -405,5 +658,159 @@ mod tests {
             .unwrap();
         assert_eq!(base.kv_transfer_bytes, 0);
         assert!(hier.kv_transfer_bytes > 0);
+    }
+
+    // ---- steppable-core and satellite behaviours ----
+
+    fn req(id: u64, arrival_us: f64, prompt: usize, gen: usize) -> Request {
+        Request { id, arrival_us, prompt_tokens: prompt, gen_tokens: gen }
+    }
+
+    /// A model whose KV blocks are 1 MiB (block_tokens 16 × 64 KiB/tok),
+    /// with `budget_mb` MiB of device KV budget.
+    fn tight_cfg(budget_mb: u64) -> EngineConfig {
+        let model = ModelCost {
+            weights_bytes: GB,
+            act_bytes: GB / 2,
+            prefill_flops_per_token: 16e9,
+            decode_flops_per_token: 16e9,
+            kv_bytes_per_token: 64 * 1024,
+        };
+        let hw = HwConfig::ascend910c_like()
+            .with_device_capacity(GB + GB / 2 + budget_mb * MB);
+        EngineConfig {
+            nsa: NsaConfig { block_tokens: 16, ..Default::default() },
+            ..EngineConfig::baseline(hw, model)
+        }
+    }
+
+    #[test]
+    fn stepper_matches_closed_loop_run() {
+        // Driving the public step() API by hand must reproduce run().
+        let wl = WorkloadConfig {
+            mean_interarrival_us: 50_000.0,
+            ..WorkloadConfig::short_sequence(10, 9)
+        }
+        .generate();
+        let via_run = SimServingEngine::new(EngineConfig::hierarchical(hw(), small_model()))
+            .run(wl.clone())
+            .unwrap();
+        let mut eng = SimServingEngine::new(EngineConfig::hierarchical(hw(), small_model()));
+        let mut sorted = wl;
+        sorted.sort_by(|a, b| a.arrival_us.total_cmp(&b.arrival_us));
+        for r in sorted {
+            // Dispatch at arrival time, as the cluster does.
+            eng.step_until(r.arrival_us, &FabricPressure::NONE).unwrap();
+            eng.enqueue(r);
+        }
+        while eng.step(&FabricPressure::NONE).unwrap() {}
+        let via_step = eng.report();
+        assert_eq!(via_step.prefill_latency_us.n, via_run.prefill_latency_us.n);
+        assert!((via_step.total_time_us - via_run.total_time_us).abs() < 1e-9);
+        assert!(
+            (via_step.throughput_tok_per_s - via_run.throughput_tok_per_s).abs() < 1e-9
+        );
+        assert_eq!(via_step.peak_device_bytes, via_run.peak_device_bytes);
+        assert!((via_step.exposed_transfer_us - via_run.exposed_transfer_us).abs() < 1e-9);
+    }
+
+    #[test]
+    fn baseline_fragmentation_charges_defrag_stall() {
+        // Deterministic compaction: R0 (400 MiB) and R1 (200 MiB) admitted
+        // first; R1 retires early, leaving a 200 MiB hole that is too
+        // small for R2 (300 MiB) while the tail is too short — free bytes
+        // suffice only after compaction, which must stall prefill.
+        let cfg = EngineConfig {
+            max_batch: 2,
+            nsa: NsaConfig { block_tokens: 64, ..Default::default() },
+            ..tight_cfg(800)
+        };
+        let wl = vec![
+            req(0, 0.0, 6400, 100), // 100 blocks of 4 MiB = 400 MiB
+            req(1, 0.0, 3200, 10),  // 200 MiB, retires first
+            req(2, 0.0, 4800, 10),  // 300 MiB, forces compaction
+        ];
+        let r = SimServingEngine::new(cfg).run(wl).unwrap();
+        assert_eq!(r.prefill_latency_us.n, 3, "all three must complete");
+        assert_eq!(r.rejected_requests, 0);
+        assert!(r.defrag_events > 0, "churn must trigger compaction");
+        assert!(
+            r.defrag_stall_us > 0.0,
+            "defrag stall must be accounted, got {}",
+            r.defrag_stall_us
+        );
+    }
+
+    #[test]
+    fn preempted_sequence_requeues_and_completes() {
+        // Budget 634 MiB = 634 one-MiB blocks. R0 (600 blocks + 1 growth)
+        // and R1 (33 blocks) fill the device exactly after one decode
+        // step; R1's next block growth OOMs -> preemption. R1 then waits
+        // (its recompute needs 34 blocks, only 33 free) until R0 retires,
+        // re-prefills and completes. Nothing is rejected.
+        let cfg = EngineConfig { max_batch: 2, ..tight_cfg(634) };
+        let wl = vec![
+            req(0, 0.0, 9600, 16), // 600 blocks, one growth at step 1
+            req(1, 0.0, 527, 1000), // 33 blocks, grows at step 2 -> OOM
+        ];
+        let r = SimServingEngine::new(cfg).run(wl).unwrap();
+        assert_eq!(r.preempted_events, 1, "R1 must be preempted once");
+        assert_eq!(r.rejected_requests, 0, "preemption is not rejection");
+        assert_eq!(r.prefill_latency_us.n, 2, "both requests complete");
+        assert_eq!(r.tokens_generated, 16 + 1000);
+    }
+
+    #[test]
+    fn preemption_gives_up_after_max_attempts() {
+        // A single sequence whose growth can never fit: 511 prompt blocks
+        // + 1 growth block fill the 512 MiB budget; the next growth OOMs,
+        // and every recompute re-prefill (512 blocks exactly) OOMs again
+        // on its first decode step. After max_preemptions requeues it is
+        // rejected, not looped forever.
+        let cfg = EngineConfig { max_batch: 2, ..tight_cfg(512) };
+        let wl = vec![req(0, 0.0, 8176, 100)];
+        let r = SimServingEngine::new(cfg).run(wl).unwrap();
+        assert_eq!(r.preempted_events, 3);
+        assert_eq!(r.rejected_requests, 1);
+        assert_eq!(r.prefill_latency_us.n, 0);
+    }
+
+    #[test]
+    fn residency_curve_is_time_ordered() {
+        let wl = WorkloadConfig::short_sequence(6, 21).generate();
+        let r = SimServingEngine::new(EngineConfig::hierarchical(hw(), small_model()))
+            .run(wl)
+            .unwrap();
+        assert!(!r.residency.is_empty());
+        for w in r.residency.windows(2) {
+            assert!(w[1].0 >= w[0].0, "residency timestamps must not decrease");
+        }
+        assert!(r.residency.iter().all(|&(_, b)| b <= r.peak_device_bytes));
+    }
+
+    #[test]
+    fn fabric_pressure_stretches_exposed_transfers() {
+        // The same offload workload under 2x fabric contention must show
+        // more exposed transfer time and attribute the delta to the
+        // fabric, while NONE reports zero fabric stall.
+        let wl = WorkloadConfig::long_sequence(2, 8000, 50, 7).generate();
+        let free = SimServingEngine::new(EngineConfig::hierarchical(hw(), small_model()))
+            .run(wl.clone())
+            .unwrap();
+        assert_eq!(free.fabric_stall_us, 0.0);
+        let mut eng = SimServingEngine::new(EngineConfig::hierarchical(hw(), small_model()));
+        for r in wl {
+            eng.enqueue(r);
+        }
+        let contended = FabricPressure { d2r_slowdown: 2.0, r2d_slowdown: 2.0 };
+        while eng.step(&contended).unwrap() {}
+        let slow = eng.report();
+        assert!(
+            slow.exposed_transfer_us > free.exposed_transfer_us,
+            "contention must expose more transfer time: {} <= {}",
+            slow.exposed_transfer_us,
+            free.exposed_transfer_us
+        );
+        assert!(slow.fabric_stall_us > 0.0);
     }
 }

@@ -43,9 +43,18 @@ pub struct ServingReport {
     pub defrag_stall_us: f64,
     /// Exposed (non-overlapped) KV transfer time (us).
     pub exposed_transfer_us: f64,
+    /// Extra exposed time attributable to fabric contention alone: the
+    /// gap between contended and free-fabric exposure (us).
+    pub fabric_stall_us: f64,
     /// Total KV transfer volume (bytes).
     pub kv_transfer_bytes: u64,
     pub rejected_requests: u64,
+    /// Preemption events (sequences evicted mid-decode and requeued for
+    /// recompute re-prefill; a request may contribute several).
+    pub preempted_events: u64,
+    /// Device-residency curve: (time us, device bytes) samples taken at
+    /// every admission/decode boundary, non-decreasing in time.
+    pub residency: Vec<(f64, u64)>,
 }
 
 #[cfg(test)]

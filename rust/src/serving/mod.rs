@@ -1,13 +1,21 @@
 //! Serving stack (the paper's inference case study, §5.2 / §7.3): request
 //! router, workload generation, continuous-batching engine with KV-cache
 //! residency policies, and the metrics the inference tables report.
+//!
+//! The unit of simulation is the *cluster*: [`SimServingEngine`] is a
+//! resumable stepper (it never owns global time), and [`SimCluster`]
+//! advances N replicas through one event loop while they share a
+//! capacity-accounted remote pool and a bandwidth-contended device↔pool
+//! fabric — see the [`cluster`] module docs for the contract.
 
+pub mod cluster;
 mod engine;
 mod metrics;
 mod request;
 mod router;
 
-pub use engine::{EngineConfig, ModelCost, SimServingEngine};
+pub use cluster::{ClusterConfig, ClusterReport, SimCluster};
+pub use engine::{EngineConfig, FabricPressure, ModelCost, SimServingEngine};
 pub use metrics::{stats, ServingReport, Stats};
 pub use request::{Request, RequestTiming, WorkloadConfig};
-pub use router::{RoutePolicy, Router};
+pub use router::{ReplicaView, RoutePolicy, Router};

@@ -1,8 +1,31 @@
 //! Request router over multiple engine replicas (the L3 leader's front
-//! door, vLLM-router-shaped). Routing is static-state-aware: least-loaded
-//! by outstanding tokens, or round-robin.
+//! door, vLLM-router-shaped).
+//!
+//! Two dispatch modes:
+//! * static — [`Router::partition`] splits a whole workload up front from
+//!   the router's own cumulative token counters (the closed-loop bench
+//!   path; no completion feedback);
+//! * online — [`Router::route_live`] decides per arrival from *live*
+//!   replica state ([`ReplicaView`]: outstanding tokens, KV headroom,
+//!   pool pressure) with completions fed back via [`Router::complete`],
+//!   so a replica that drained early takes new work immediately.
 
 use super::request::Request;
+
+/// Live state of one engine replica, sampled at dispatch time by the
+/// cluster orchestrator.
+#[derive(Debug, Clone, Default)]
+pub struct ReplicaView {
+    /// Token work queued + in flight on the replica right now.
+    pub outstanding_tokens: u64,
+    /// Tokens of KV the replica could still admit (device headroom for
+    /// the baseline policy, pool headroom under offload).
+    pub kv_headroom_tokens: u64,
+    /// Occupancy of the replica's (possibly shared) remote pool, [0, 1].
+    pub pool_pressure: f64,
+    /// The replica's local clock (us).
+    pub now_us: f64,
+}
 
 /// Routing policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -46,6 +69,37 @@ impl Router {
                 .min_by_key(|(_, &l)| l)
                 .map(|(i, _)| i)
                 .unwrap(),
+        };
+        self.load[idx] += (req.prompt_tokens + req.gen_tokens) as u64;
+        idx
+    }
+
+    /// Route one request using live replica state (online dispatch).
+    /// Returns the replica index. `views[i]` must describe replica `i`
+    /// at the request's arrival time.
+    pub fn route_live(&mut self, req: &Request, views: &[ReplicaView]) -> usize {
+        assert_eq!(views.len(), self.load.len(), "one view per replica");
+        let idx = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let i = self.next_rr;
+                self.next_rr = (self.next_rr + 1) % self.load.len();
+                i
+            }
+            RoutePolicy::LeastLoaded => {
+                // Outstanding work dominates; a replica that lacks the KV
+                // headroom for this request (it would defrag or preempt
+                // to take it) is pushed to the back of the ranking.
+                let need = (req.prompt_tokens + req.gen_tokens) as u64;
+                views
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, v)| {
+                        let starved = v.kv_headroom_tokens < need;
+                        (starved, v.outstanding_tokens)
+                    })
+                    .map(|(i, _)| i)
+                    .unwrap()
+            }
         };
         self.load[idx] += (req.prompt_tokens + req.gen_tokens) as u64;
         idx
@@ -105,6 +159,38 @@ mod tests {
         assert!(r.load_of(i) > 0);
         r.complete(i, &big);
         assert_eq!(r.load_of(i), 0);
+    }
+
+    #[test]
+    fn route_live_prefers_drained_replica() {
+        let mut r = Router::new(2, RoutePolicy::LeastLoaded);
+        // Replica 0 has a fat *cumulative* history but is idle now;
+        // replica 1 is still grinding. Live routing must pick 0.
+        let views = vec![
+            ReplicaView { outstanding_tokens: 0, kv_headroom_tokens: 1 << 30, ..Default::default() },
+            ReplicaView { outstanding_tokens: 900, kv_headroom_tokens: 1 << 30, ..Default::default() },
+        ];
+        assert_eq!(r.route_live(&req(0, 100, 50), &views), 0);
+    }
+
+    #[test]
+    fn route_live_avoids_kv_starved_replica() {
+        let mut r = Router::new(2, RoutePolicy::LeastLoaded);
+        // Replica 0 is less loaded but cannot hold the request's KV.
+        let views = vec![
+            ReplicaView { outstanding_tokens: 10, kv_headroom_tokens: 50, ..Default::default() },
+            ReplicaView { outstanding_tokens: 500, kv_headroom_tokens: 1 << 30, ..Default::default() },
+        ];
+        assert_eq!(r.route_live(&req(0, 100, 50), &views), 1);
+    }
+
+    #[test]
+    fn route_live_round_robin_ignores_views() {
+        let mut r = Router::new(3, RoutePolicy::RoundRobin);
+        let views = vec![ReplicaView::default(); 3];
+        let targets: Vec<usize> =
+            (0..6).map(|i| r.route_live(&req(i, 10, 10), &views)).collect();
+        assert_eq!(targets, vec![0, 1, 2, 0, 1, 2]);
     }
 
     #[test]

@@ -74,17 +74,74 @@ impl HwConfig {
 
     /// Duration of a Device→Remote transfer (us).
     pub fn d2r_us(&self, bytes: u64) -> f64 {
-        self.link_latency_us + bytes as f64 / (self.d2r_gbps * 1e9) * 1e6
+        self.d2r_us_slowed(bytes, 1.0)
     }
 
     /// Duration of a Remote→Device transfer (us).
     pub fn r2d_us(&self, bytes: u64) -> f64 {
-        self.link_latency_us + bytes as f64 / (self.r2d_gbps * 1e9) * 1e6
+        self.r2d_us_slowed(bytes, 1.0)
+    }
+
+    /// D2R transfer with a fabric-contention slowdown factor (≥ 1.0)
+    /// applied to the bandwidth term only: link latency is per-hop and
+    /// does not stretch when siblings share the fabric.
+    pub fn d2r_us_slowed(&self, bytes: u64, slowdown: f64) -> f64 {
+        self.link_latency_us + slowdown * (bytes as f64 / (self.d2r_gbps * 1e9) * 1e6)
+    }
+
+    /// R2D transfer with a fabric-contention slowdown factor (≥ 1.0).
+    pub fn r2d_us_slowed(&self, bytes: u64, slowdown: f64) -> f64 {
+        self.link_latency_us + slowdown * (bytes as f64 / (self.r2d_gbps * 1e9) * 1e6)
     }
 
     /// Duration of a collective of `bytes` (us) — flat ring model.
     pub fn net_us(&self, bytes: u64) -> f64 {
         self.link_latency_us + bytes as f64 / (self.net_gbps * 1e9) * 1e6
+    }
+}
+
+/// The shared device↔pool interconnect of one SuperNode.
+///
+/// Each device owns a private link of `d2r_gbps`/`r2d_gbps`, but all links
+/// funnel into one fabric with finite aggregate bandwidth. While `k`
+/// devices transfer in the same window, each sees
+/// `min(per_link, aggregate / k)` — below the per-link rate once the
+/// fabric saturates. This is the §7 multi-NPU effect the cluster
+/// simulation exercises: a transfer slows down *because* siblings are
+/// transferring, not because its own link got slower.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    /// Aggregate device↔pool bandwidth across all devices (GB/s).
+    pub aggregate_gbps: f64,
+}
+
+impl Fabric {
+    /// Default provisioning for a node built around `hw`: the fabric
+    /// carries two full per-link rates, so one or two active devices run
+    /// uncontended and a wider fan-in progressively saturates.
+    pub fn for_hw(hw: &HwConfig) -> Self {
+        Self { aggregate_gbps: 2.0 * hw.d2r_gbps.max(hw.r2d_gbps) }
+    }
+
+    /// An effectively infinite fabric (no contention, any k).
+    pub fn uncontended() -> Self {
+        Self { aggregate_gbps: f64::INFINITY }
+    }
+
+    /// Slowdown multiplier (≥ 1.0) for a link of `per_link_gbps` while
+    /// `k` devices transfer concurrently. Exactly 1.0 when k ≤ 1 or the
+    /// fabric has headroom — the single-device fixpoint is preserved
+    /// bit-for-bit.
+    pub fn slowdown(&self, per_link_gbps: f64, k: usize) -> f64 {
+        if k <= 1 {
+            return 1.0;
+        }
+        let share = self.aggregate_gbps / k as f64;
+        if share >= per_link_gbps {
+            1.0
+        } else {
+            per_link_gbps / share
+        }
     }
 }
 
@@ -116,5 +173,31 @@ mod tests {
         let b = a.clone().with_pool_bandwidth(70.0);
         assert_eq!(a.hbm_gbps, b.hbm_gbps);
         assert!(b.d2r_us(GB) < a.d2r_us(GB));
+    }
+
+    #[test]
+    fn fabric_slowdown_kicks_in_past_provisioning() {
+        let hw = HwConfig::ascend910c_like();
+        let f = Fabric::for_hw(&hw); // 2x the 33.6 GB/s link
+        assert_eq!(f.slowdown(hw.d2r_gbps, 1), 1.0);
+        assert_eq!(f.slowdown(hw.d2r_gbps, 2), 1.0);
+        // 4 concurrent links share 67.2 GB/s -> 16.8 each: 2x slower.
+        let s4 = f.slowdown(hw.d2r_gbps, 4);
+        assert!((s4 - 2.0).abs() < 1e-9, "s4={s4}");
+        assert!(f.slowdown(hw.d2r_gbps, 8) > s4);
+        assert_eq!(Fabric::uncontended().slowdown(hw.d2r_gbps, 64), 1.0);
+    }
+
+    #[test]
+    fn slowed_transfer_stretches_bandwidth_term_only() {
+        let hw = HwConfig::ascend910c_like();
+        let base = hw.d2r_us(GB);
+        let slowed = hw.d2r_us_slowed(GB, 2.0);
+        // Latency is unchanged; the bandwidth term doubles.
+        let bw_term = base - hw.link_latency_us;
+        assert!((slowed - (hw.link_latency_us + 2.0 * bw_term)).abs() < 1e-6);
+        // Factor 1.0 is bit-identical to the plain path.
+        assert_eq!(hw.d2r_us_slowed(GB, 1.0), base);
+        assert_eq!(hw.r2d_us_slowed(GB, 1.0), hw.r2d_us(GB));
     }
 }

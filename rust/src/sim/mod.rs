@@ -10,4 +10,4 @@ mod engine;
 mod hw;
 
 pub use engine::{duration_us, simulate, stream_of, Interval, SimResult, Stream};
-pub use hw::{HwConfig, GB, MB};
+pub use hw::{Fabric, HwConfig, GB, MB};

@@ -13,13 +13,20 @@
 //!  P5 The KV manager's device footprint stays within its budget under
 //!     FullOffload for arbitrary admit/decode/retire interleavings.
 //!  P6 The router never loses requests and balances within bound.
+//!  P7 Cluster conservation: for any workload and replica count,
+//!     dispatched == completed + rejected (no request lost), the shared
+//!     pool never exceeds its capacity, and every replica's residency
+//!     curve has non-decreasing timestamps.
 
 use hyperoffload::graph::{Graph, GraphBuilder, Tier};
 use hyperoffload::kvcache::{KvCacheManager, KvPolicy, NsaConfig};
 use hyperoffload::memory::DeviceAllocator;
 use hyperoffload::passes::{compile, refine, ExecOrderConfig, OffloadPolicy};
-use hyperoffload::serving::{Request, RoutePolicy, Router};
-use hyperoffload::sim::{simulate, HwConfig};
+use hyperoffload::serving::{
+    ClusterConfig, EngineConfig, ModelCost, Request, RoutePolicy, Router, SimCluster,
+    WorkloadConfig,
+};
+use hyperoffload::sim::{simulate, HwConfig, GB};
 use hyperoffload::util::rng::Rng;
 
 const CASES: u64 = 60;
@@ -186,6 +193,74 @@ fn p5_kv_device_footprint_bounded_under_offload() {
                 "seed {seed}: working set exceeded ({} > {budget})",
                 m.device_kv_bytes()
             );
+        }
+    }
+}
+
+#[test]
+fn p7_cluster_conserves_requests_pool_and_time() {
+    for seed in 0..24u64 {
+        let mut rng = Rng::new(seed + 6000);
+        let n_replicas = rng.usize(1, 5);
+        let hier = rng.next_f64() < 0.5;
+        let model = ModelCost {
+            weights_bytes: 8 * GB,
+            act_bytes: GB,
+            prefill_flops_per_token: 16e9,
+            decode_flops_per_token: 16e9,
+            kv_bytes_per_token: 64 * 1024,
+        };
+        // Squeeze the shared pool sometimes so rejections/preemptions
+        // actually exercise the conservation paths.
+        let mut hw = HwConfig::ascend910c_like().with_device_capacity(
+            10 * GB + rng.gen_range(0, 16) * GB,
+        );
+        hw.remote_capacity = GB + rng.gen_range(0, 8) * GB;
+        let engine = if hier {
+            EngineConfig::hierarchical(hw, model)
+        } else {
+            EngineConfig::baseline(hw, model)
+        };
+        let wl = WorkloadConfig {
+            n_requests: rng.usize(4, 40),
+            mean_interarrival_us: if rng.next_f64() < 0.5 { 0.0 } else { 20_000.0 },
+            prompt_min: 64,
+            prompt_max: rng.usize(512, 30_000),
+            gen_min: 1,
+            gen_max: rng.usize(8, 200),
+            seed: seed * 7 + 1,
+        }
+        .generate();
+        let n_requests = wl.len() as u64;
+        let route = if rng.next_f64() < 0.5 {
+            RoutePolicy::LeastLoaded
+        } else {
+            RoutePolicy::RoundRobin
+        };
+        let report = SimCluster::new(
+            ClusterConfig::new(engine, n_replicas).with_route(route),
+        )
+        .run(wl)
+        .unwrap();
+        assert_eq!(report.dispatched, n_requests, "seed {seed}: dispatch lost");
+        assert_eq!(
+            report.dispatched,
+            report.completed + report.rejected,
+            "seed {seed}: request lost (preempted events: {})",
+            report.preempted_events
+        );
+        assert!(
+            report.pool_peak_bytes <= report.pool_capacity_bytes,
+            "seed {seed}: pool over capacity"
+        );
+        for (i, r) in report.per_replica.iter().enumerate() {
+            for w in r.residency.windows(2) {
+                assert!(
+                    w[1].0 >= w[0].0,
+                    "seed {seed} replica {i}: residency time went backwards"
+                );
+            }
+            assert!(r.residency.iter().all(|&(_, b)| b <= r.peak_device_bytes));
         }
     }
 }

@@ -1,3 +1,4 @@
+#![cfg(feature = "xla")]
 //! Integration: the AOT bridge preserves numerics end-to-end.
 //!
 //! aot.py computed prefill + one decode step in python (jax) for seeded
