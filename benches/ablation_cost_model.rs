@@ -5,7 +5,7 @@
 //! cost gets both.
 
 use hyperoffload::graph::GraphBuilder;
-use hyperoffload::passes::{compile, prefetch_insert, refine, ExecOrderConfig, OffloadPolicy};
+use hyperoffload::passes::{prefetch_insert, refine, Compiler, ExecOrderConfig, OffloadPolicy};
 use hyperoffload::sim::{simulate, HwConfig, MB};
 use hyperoffload::util::table::{f, Table};
 
@@ -60,12 +60,10 @@ fn main() {
     );
     for (a, b) in [(1.0, 0.01), (1.0, 0.1), (1.0, 1.0), (1.0, 10.0), (0.1, 1.0)] {
         let (mut g, _) = GraphBuilder::chain_with_remote_weights(16, 4e12, 32 * MB, 300 * MB);
-        let report = compile(
-            &mut g,
-            &hw,
-            &OffloadPolicy::default(),
-            &ExecOrderConfig { alpha: a, beta: b, ..Default::default() },
-        );
+        let report = Compiler::new(hw.clone())
+            .exec(ExecOrderConfig { alpha: a, beta: b, ..Default::default() })
+            .compile(&mut g)
+            .unwrap();
         let sim = simulate(&g, &report.order, &hw);
         t.row(&[
             f(a, 2),

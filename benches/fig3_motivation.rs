@@ -8,7 +8,7 @@
 //! runtime-driven path, and show graph-driven scheduling removing it.
 
 use hyperoffload::graph::GraphBuilder;
-use hyperoffload::passes::{compile, ExecOrderConfig, OffloadPolicy};
+use hyperoffload::passes::Compiler;
 use hyperoffload::runtime_sched::{simulate_reactive, ReactiveConfig, ReactiveMode};
 use hyperoffload::sim::{simulate, HwConfig, MB};
 use hyperoffload::util::table::{f, Table};
@@ -45,7 +45,7 @@ fn main() {
     let serial = simulate_reactive(&graph, &ReactiveConfig::default(), &hw);
 
     let mut g = graph.clone();
-    let report = compile(&mut g, &hw, &OffloadPolicy::default(), &ExecOrderConfig::default());
+    let report = Compiler::new(hw.clone()).compile(&mut g).expect("compile");
     let ours = simulate(&g, &report.order, &hw);
 
     let base_s = baseline.makespan_us / 1e6;

@@ -11,7 +11,7 @@
 use std::time::Instant;
 
 use hyperoffload::graph::GraphBuilder;
-use hyperoffload::passes::{compile, prefetch_insert, refine, ExecOrderConfig, OffloadPolicy};
+use hyperoffload::passes::{prefetch_insert, refine, Compiler, ExecOrderConfig, OffloadPolicy};
 use hyperoffload::memory::DeviceAllocator;
 use hyperoffload::serving::{EngineConfig, ModelCost, SimServingEngine, WorkloadConfig};
 use hyperoffload::sim::{simulate, HwConfig, MB};
@@ -112,12 +112,10 @@ fn main() {
         use hyperoffload::training::{build_step_graph, ModelPreset, ParallelCfg};
         let secs = time_it(3, || {
             let mut sg = build_step_graph(&ModelPreset::llama8b(), &ParallelCfg::llama_hier());
-            let report = compile(
-                &mut sg.graph,
-                &hw,
-                &OffloadPolicy { min_bytes: 16 << 20, ..Default::default() },
-                &ExecOrderConfig::default(),
-            );
+            let report = Compiler::new(hw.clone())
+                .policy(OffloadPolicy { min_bytes: 16 << 20, ..Default::default() })
+                .compile(&mut sg.graph)
+                .unwrap();
             std::hint::black_box(simulate(&sg.graph, &report.order, &hw).makespan_us);
         });
         t.row(&[

@@ -7,7 +7,7 @@
 //! Run: `cargo run --release --example quickstart`
 
 use hyperoffload::graph::GraphBuilder;
-use hyperoffload::passes::{compile, ExecOrderConfig, OffloadPolicy};
+use hyperoffload::passes::Compiler;
 use hyperoffload::runtime_sched::{simulate_reactive, ReactiveConfig, ReactiveMode};
 use hyperoffload::sim::{simulate, HwConfig, MB};
 use hyperoffload::util::table::{f, Table};
@@ -29,16 +29,28 @@ fn main() {
         &hw,
     );
 
-    // 2. HyperOffload: operatorise + Algorithm 1 (Fig. 3c).
+    // 2. HyperOffload: a compile session — lifetime analysis, cache-op
+    //    insertion, Algorithm 1 — with the IR verifier between stages
+    //    (Fig. 3c).
     let mut g = graph.clone();
-    let report = compile(&mut g, &hw, &OffloadPolicy::default(), &ExecOrderConfig::default());
+    let report = Compiler::new(hw.clone())
+        .verify(true)
+        .compile(&mut g)
+        .expect("compile session failed");
     let ours = simulate(&g, &report.order, &hw);
 
     println!(
-        "compile: {} cache ops inserted, {} rejected as not profitable, {} moved by Algorithm 1\n",
+        "compile: {} cache ops inserted, {} rejected as not profitable, {} moved by Algorithm 1",
         report.inserted.len(),
         report.rejected,
         report.moved
+    );
+    println!(
+        "session: {} passes, {} diagnostics, analysis cache {} hits / {} misses\n",
+        report.per_pass.len(),
+        report.diagnostics.len(),
+        report.cache_hits,
+        report.cache_misses
     );
 
     let mut t = Table::new(

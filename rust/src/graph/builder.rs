@@ -1,6 +1,6 @@
 //! Convenience builders for common graph shapes (tests, benches, examples).
 
-use super::graph::Graph;
+use super::graph::{CycleError, Graph};
 use super::op::{OpId, OpKind};
 use super::tensor::{TensorId, Tier};
 
@@ -57,6 +57,14 @@ impl GraphBuilder {
         self.graph
     }
 
+    /// Like [`build`](Self::build), but checks acyclicity up front and
+    /// reports the cycle's culprit ops instead of deferring the failure to
+    /// the first `topo_order` call.
+    pub fn try_build(self) -> Result<Graph, CycleError> {
+        self.graph.topo_order_detailed()?;
+        Ok(self.graph)
+    }
+
     /// A linear chain of `n` compute ops (`op_i` consumes `t_{i-1}`,
     /// produces `t_i`), each with the given cost — the simplest pipeline
     /// for overlap experiments.
@@ -68,6 +76,61 @@ impl GraphBuilder {
             let inputs = prev.map(|t| vec![t]).unwrap_or_default();
             b.compute(&format!("op.{i}"), flops, act_bytes, inputs, vec![out]);
             prev = Some(out);
+        }
+        b.build()
+    }
+
+    /// The §5.1 training case in miniature: `n_acts` forward ops each
+    /// producing a large activation, a heavy mid-section of `n_mid` chained
+    /// ops, then a backward chain consuming the activations in reverse.
+    /// The canonical offload-round-trip workload (tests, Fig. 4, golden
+    /// comparisons); backward ops reuse `fwd_flops`.
+    pub fn fwd_bwd_chain(
+        n_acts: usize,
+        act_bytes: u64,
+        fwd_flops: f64,
+        n_mid: usize,
+        mid_flops: f64,
+    ) -> Graph {
+        let mut b = GraphBuilder::new();
+        let mut acts = Vec::with_capacity(n_acts);
+        let mut prev: Option<TensorId> = None;
+        let mut last_fwd: Option<OpId> = None;
+        for i in 0..n_acts {
+            let a = b.tensor(&format!("act{i}"), act_bytes, Tier::Device);
+            let o = b.compute(
+                &format!("fwd{i}"),
+                fwd_flops,
+                0,
+                prev.map(|p| vec![p]).unwrap_or_default(),
+                vec![a],
+            );
+            acts.push(a);
+            prev = Some(a);
+            last_fwd = Some(o);
+        }
+        let mut mid_prev: Option<OpId> = None;
+        for i in 0..n_mid {
+            let t = b.tensor(&format!("m{i}"), 0, Tier::Device);
+            let o = b.compute(&format!("mid{i}"), mid_flops, 0, vec![], vec![t]);
+            match mid_prev {
+                Some(p) => b.dep(o, p),
+                None => {
+                    if let Some(fw) = last_fwd {
+                        b.dep(o, fw);
+                    }
+                }
+            }
+            mid_prev = Some(o);
+        }
+        let mut bwd_prev = mid_prev.or(last_fwd);
+        for (i, &a) in acts.iter().enumerate().rev() {
+            let t = b.tensor(&format!("g{i}"), 0, Tier::Device);
+            let o = b.compute(&format!("bwd{i}"), fwd_flops, 0, vec![a], vec![t]);
+            if let Some(p) = bwd_prev {
+                b.dep(o, p);
+            }
+            bwd_prev = Some(o);
         }
         b.build()
     }
@@ -128,6 +191,43 @@ mod tests {
             assert_eq!(g.consumers_of(w).len(), 1);
         }
         assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn try_build_reports_cycles() {
+        let mut b = GraphBuilder::new();
+        let t0 = b.tensor("t0", 8, Tier::Device);
+        let t1 = b.tensor("t1", 8, Tier::Device);
+        let a = b.compute("a", 1.0, 0, vec![], vec![t0]);
+        let c = b.compute("c", 1.0, 0, vec![t0], vec![t1]);
+        b.dep(a, c); // back edge: cycle a <-> c
+        let err = b.try_build().unwrap_err();
+        assert!(err.culprit_ops.contains(&a));
+        assert!(err.culprit_ops.contains(&c));
+
+        let mut ok = GraphBuilder::new();
+        let t = ok.tensor("t", 8, Tier::Device);
+        ok.compute("x", 1.0, 0, vec![], vec![t]);
+        assert!(ok.try_build().is_ok());
+    }
+
+    #[test]
+    fn fwd_bwd_chain_shape() {
+        let g = GraphBuilder::fwd_bwd_chain(4, 8 << 20, 10e9, 24, 1e9);
+        assert_eq!(g.ops.len(), 4 + 24 + 4);
+        assert!(g.validate().is_ok());
+        // bwd0 consumes act0, produced by fwd0.
+        let bwd0 = g.ops.iter().find(|o| o.name == "bwd0").unwrap();
+        let act0 = bwd0.inputs[0];
+        assert_eq!(g.producer_of(act0), Some(0));
+        // Backward runs after the mid section.
+        let order = g.topo_order().unwrap();
+        let pos = |name: &str| {
+            let id = g.ops.iter().find(|o| o.name == name).unwrap().id;
+            order.iter().position(|&x| x == id).unwrap()
+        };
+        assert!(pos("mid23") < pos("bwd3"));
+        assert!(pos("bwd3") < pos("bwd0"));
     }
 
     #[test]

@@ -12,6 +12,31 @@ use anyhow::{bail, Result};
 use super::op::{Op, OpId, OpKind};
 use super::tensor::{TensorId, TensorInfo, Tier};
 
+/// A dependency cycle, reported with the ops that could not be ordered.
+///
+/// Produced by [`Graph::topo_order_detailed`] and
+/// [`GraphBuilder::try_build`](super::GraphBuilder::try_build); the
+/// compiler session surfaces it as `CompileError::Cycle`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CycleError {
+    /// Ops left unorderable by Kahn's algorithm — every op on (or
+    /// downstream of) a cycle.
+    pub culprit_ops: Vec<OpId>,
+}
+
+impl std::fmt::Display for CycleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "dependency cycle through {} op(s): {:?}",
+            self.culprit_ops.len(),
+            &self.culprit_ops[..self.culprit_ops.len().min(8)]
+        )
+    }
+}
+
+impl std::error::Error for CycleError {}
+
 /// A computation graph with first-class cache operators.
 #[derive(Debug, Clone, Default)]
 pub struct Graph {
@@ -21,6 +46,9 @@ pub struct Graph {
     producer: HashMap<TensorId, OpId>,
     /// consumers[t] = ops reading tensor t, in insertion order.
     consumers: HashMap<TensorId, Vec<OpId>>,
+    /// Bumped on every structural mutation; the compiler's `AnalysisCache`
+    /// keys cached analyses against it.
+    version: u64,
 }
 
 impl Graph {
@@ -28,10 +56,23 @@ impl Graph {
         Self::default()
     }
 
+    /// Structural revision of this graph: incremented by every mutation
+    /// (tensor/op insertion, control-dep wiring, op removal). Analyses
+    /// cached against a version are valid exactly while it is unchanged.
+    ///
+    /// Caveat: direct writes to the public `ops`/`tensors` fields bypass
+    /// this counter (and the producer/consumer indices) — prefer the
+    /// mutation methods; the compiler session re-validates cached orders
+    /// before trusting them as a backstop.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
     /// Register a tensor; returns its id.
     pub fn add_tensor(&mut self, name: impl Into<String>, bytes: u64, home: Tier) -> TensorId {
         let id = self.tensors.len();
         self.tensors.push(TensorInfo::new(id, name, bytes, home));
+        self.version += 1;
         id
     }
 
@@ -54,6 +95,7 @@ impl Graph {
             debug_assert!(prev.is_none(), "tensor {t} produced twice");
         }
         self.ops.push(Op { id, name: name.into(), kind, inputs, outputs, control_deps: vec![] });
+        self.version += 1;
         id
     }
 
@@ -61,7 +103,92 @@ impl Graph {
     pub fn add_control_dep(&mut self, op: OpId, dep: OpId) {
         if !self.ops[op].control_deps.contains(&dep) {
             self.ops[op].control_deps.push(dep);
+            self.version += 1;
         }
+    }
+
+    /// Remove `remove` from the graph, renumbering the surviving ops.
+    ///
+    /// Ordering constraints that flowed *through* a removed op are
+    /// preserved: any op that control-depended on a removed op inherits the
+    /// removed op's predecessors (data and control), spliced transitively
+    /// through chains of removed ops. Tensors are untouched; a tensor whose
+    /// producer is removed becomes a graph input.
+    ///
+    /// Returns `old_id -> Some(new_id)` for kept ops, `None` for removed.
+    pub fn remove_ops(&mut self, remove: &[OpId]) -> Vec<Option<OpId>> {
+        let n = self.ops.len();
+        let mut removed = vec![false; n];
+        for &r in remove {
+            removed[r] = true;
+        }
+        // Replacement deps for removed ops (computed before any mutation).
+        let mut repl: Vec<Vec<OpId>> = vec![Vec::new(); n];
+        for r in 0..n {
+            if removed[r] {
+                repl[r] = self.preds(r);
+            }
+        }
+        // Splice chains of removed ops (graph is acyclic, so this settles).
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for r in 0..n {
+                if !removed[r] || !repl[r].iter().any(|&p| removed[p]) {
+                    continue;
+                }
+                let mut out = Vec::new();
+                for &p in &repl[r] {
+                    if removed[p] {
+                        out.extend(repl[p].iter().copied());
+                    } else {
+                        out.push(p);
+                    }
+                }
+                out.sort_unstable();
+                out.dedup();
+                repl[r] = out;
+                changed = true;
+            }
+        }
+        let mut new_id: Vec<Option<OpId>> = vec![None; n];
+        let mut next = 0usize;
+        for (i, slot) in new_id.iter_mut().enumerate() {
+            if !removed[i] {
+                *slot = Some(next);
+                next += 1;
+            }
+        }
+        let mut ops = std::mem::take(&mut self.ops);
+        ops.retain(|o| !removed[o.id]);
+        for o in &mut ops {
+            let mut deps = Vec::new();
+            for &d in &o.control_deps {
+                if removed[d] {
+                    deps.extend(repl[d].iter().copied());
+                } else {
+                    deps.push(d);
+                }
+            }
+            deps.sort_unstable();
+            deps.dedup();
+            deps.retain(|&d| d != o.id && !removed[d]);
+            o.control_deps = deps.into_iter().map(|d| new_id[d].unwrap()).collect();
+            o.id = new_id[o.id].unwrap();
+        }
+        self.ops = ops;
+        self.producer.clear();
+        self.consumers.clear();
+        for op in &self.ops {
+            for &t in &op.inputs {
+                self.consumers.entry(t).or_default().push(op.id);
+            }
+            for &t in &op.outputs {
+                self.producer.insert(t, op.id);
+            }
+        }
+        self.version += 1;
+        new_id
     }
 
     pub fn op(&self, id: OpId) -> &Op {
@@ -114,7 +241,8 @@ impl Graph {
 
     /// Deterministic topological order (Kahn; ties broken by smallest id,
     /// i.e. insertion order — the "program order" a framework would emit).
-    pub fn topo_order(&self) -> Result<Vec<OpId>> {
+    /// On a cyclic graph, reports exactly which ops could not be ordered.
+    pub fn topo_order_detailed(&self) -> std::result::Result<Vec<OpId>, CycleError> {
         let n = self.ops.len();
         let mut indeg = vec![0usize; n];
         let mut succs: Vec<Vec<OpId>> = vec![Vec::new(); n];
@@ -141,9 +269,27 @@ impl Graph {
             }
         }
         if order.len() != n {
-            bail!("graph has a dependency cycle ({} of {} ops ordered)", order.len(), n);
+            let culprit_ops: Vec<OpId> = indeg
+                .iter()
+                .enumerate()
+                .filter(|&(_, &d)| d > 0)
+                .map(|(i, _)| i)
+                .collect();
+            return Err(CycleError { culprit_ops });
         }
         Ok(order)
+    }
+
+    /// [`topo_order_detailed`](Self::topo_order_detailed) with the legacy
+    /// `anyhow` error type.
+    pub fn topo_order(&self) -> Result<Vec<OpId>> {
+        self.topo_order_detailed().map_err(|e| {
+            anyhow::anyhow!(
+                "graph has a dependency cycle ({} of {} ops ordered)",
+                self.ops.len() - e.culprit_ops.len(),
+                self.ops.len()
+            )
+        })
     }
 
     /// Check that `order` is a permutation of all ops respecting every
@@ -320,5 +466,57 @@ mod tests {
         let g = diamond();
         assert_eq!(g.bytes_in_tier(Tier::Device), 32);
         assert_eq!(g.bytes_in_tier(Tier::Remote), 0);
+    }
+
+    #[test]
+    fn version_bumps_on_mutation() {
+        let mut g = diamond();
+        let v0 = g.version();
+        g.add_control_dep(3, 0);
+        assert!(g.version() > v0);
+        let v1 = g.version();
+        g.add_control_dep(3, 0); // duplicate: no structural change
+        assert_eq!(g.version(), v1);
+        let t = g.add_tensor("extra", 8, Tier::Device);
+        g.add_op("e", OpKind::Compute { flops: 1.0, bytes_accessed: 8 }, vec![t], vec![]);
+        assert!(g.version() > v1);
+    }
+
+    #[test]
+    fn cycle_culprits_reported() {
+        let mut g = diamond();
+        g.add_control_dep(0, 3); // a after d -> cycle through all four
+        let err = g.topo_order_detailed().unwrap_err();
+        assert_eq!(err.culprit_ops, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn remove_ops_renumbers_and_keeps_ordering_through_removed() {
+        // a -> st -> pf -> d (control chain); removing st+pf must leave
+        // d ordered after a via the spliced control dep.
+        let mut g = Graph::new();
+        let t0 = g.add_tensor("t0", 8, Tier::Device);
+        let a = g.add_op("a", OpKind::Compute { flops: 1.0, bytes_accessed: 0 }, vec![], vec![t0]);
+        let st = g.add_op("st", OpKind::Store { tensor: t0 }, vec![t0], vec![]);
+        g.add_control_dep(st, a);
+        let pf = g.add_op("pf", OpKind::Prefetch { tensor: t0 }, vec![t0], vec![]);
+        g.add_control_dep(pf, st);
+        let t1 = g.add_tensor("t1", 8, Tier::Device);
+        let d = g.add_op("d", OpKind::Compute { flops: 1.0, bytes_accessed: 0 }, vec![], vec![t1]);
+        g.add_control_dep(d, pf);
+
+        let map = g.remove_ops(&[st, pf]);
+        assert_eq!(map[a], Some(0));
+        assert_eq!(map[st], None);
+        assert_eq!(map[pf], None);
+        assert_eq!(map[d], Some(1));
+        assert_eq!(g.ops.len(), 2);
+        assert!(g.validate().is_ok());
+        // d (new id 1) inherits an ordering edge on a (new id 0).
+        assert_eq!(g.preds(1), vec![0]);
+        assert!(g.cache_ops().is_empty());
+        // Consumers of t0 no longer include the removed cache ops.
+        assert!(g.consumers_of(t0).is_empty());
+        assert_eq!(g.producer_of(t0), Some(0));
     }
 }

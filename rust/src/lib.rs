@@ -11,8 +11,38 @@
 //! runtime baseline, a KV-cache manager, a serving stack, training-step
 //! simulation, high availability) is built as substrates in the sibling
 //! modules. Real model execution (the end-to-end serving example) goes
-//! through [`runtime`], which loads AOT-compiled HLO-text artifacts
+//! through `runtime` (xla-gated), which loads AOT-compiled HLO-text artifacts
 //! (requires the `xla` feature and a vendored `xla` crate).
+//!
+//! ## The compiler session API
+//!
+//! Compilation is driven by [`passes::Compiler`], a *session* builder over
+//! a trait-based pass pipeline:
+//!
+//! ```no_run
+//! use hyperoffload::graph::GraphBuilder;
+//! use hyperoffload::passes::Compiler;
+//! use hyperoffload::sim::{simulate, HwConfig};
+//!
+//! let hw = HwConfig::ascend910c_like();
+//! let (mut g, _) = GraphBuilder::chain_with_remote_weights(12, 2e12, 1 << 20, 100 << 20);
+//! let report = Compiler::new(hw.clone())
+//!     .verify(true) // IR verifier between stages
+//!     .compile(&mut g)
+//!     .expect("compile");
+//! let sim = simulate(&g, &report.order, &hw);
+//! assert!(sim.makespan_us > 0.0);
+//! ```
+//!
+//! Each stage is a [`passes::Pass`] sharing one memoised
+//! [`passes::AnalysisCache`]; failures are structured
+//! ([`passes::CompileError`] — cycles carry their culprit ops, verifier
+//! findings their diagnostics). Adding an optimisation means registering a
+//! pass, not forking the pipeline: [`passes::ElideRedundantTransfers`]
+//! (round-trip elision) and
+//! [`runtime_sched::ReactivePass`] (the paper's reactive baseline as a
+//! pipeline configuration) are both expressed this way. See the [`passes`]
+//! module docs for the pipeline diagram and a custom-pass walkthrough.
 //!
 //! ## Cluster-scale serving
 //!

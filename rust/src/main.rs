@@ -11,7 +11,7 @@ use anyhow::{bail, Result};
 
 use hyperoffload::graph::GraphBuilder;
 use hyperoffload::ha;
-use hyperoffload::passes::{compile, ExecOrderConfig, OffloadPolicy};
+use hyperoffload::passes::Compiler;
 use hyperoffload::sim::{simulate, HwConfig, GB};
 use hyperoffload::training::{baseline_step, hierarchical_step, ModelPreset, ParallelCfg};
 use hyperoffload::util::table::{f, Table};
@@ -106,7 +106,7 @@ fn main() -> Result<()> {
         "graph-demo" => {
             let hw = HwConfig::ascend910c_like();
             let (mut g, _) = GraphBuilder::chain_with_remote_weights(8, 50e12, 0, 4 * GB / 10);
-            let report = compile(&mut g, &hw, &OffloadPolicy::default(), &ExecOrderConfig::default());
+            let report = Compiler::new(hw.clone()).verify(true).compile(&mut g)?;
             let sim = simulate(&g, &report.order, &hw);
             println!(
                 "ops={} cache_ops={} moved={} makespan={:.1}ms exposed={:.2}ms overlap={:.0}%",
@@ -117,6 +117,15 @@ fn main() -> Result<()> {
                 sim.exposed_comm_us / 1e3,
                 sim.overlap_efficiency() * 100.0
             );
+            for p in &report.per_pass {
+                println!(
+                    "  pass {:<24} inserted={} rejected={} moved={}",
+                    p.pass,
+                    p.inserted.len(),
+                    p.rejected,
+                    p.moved
+                );
+            }
         }
         "ha-sim" => {
             let hw = HwConfig::ascend910c_like();

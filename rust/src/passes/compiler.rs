@@ -1,0 +1,922 @@
+//! The `Compiler` session API: a trait-based pass pipeline with a
+//! memoising analysis cache, an IR verifier, and fallible, diagnostic-rich
+//! compilation.
+//!
+//! The paper's thesis is that memory management belongs in the compiler's
+//! optimisation framework; this module is that framework. A [`Compiler`]
+//! is a configured *session*: hardware, policy, and an ordered list of
+//! [`Pass`]es that each see the mutable [`Graph`], a shared
+//! [`AnalysisCache`], and the immutable [`PassCtx`]. New optimisations
+//! (recompute-vs-offload, SLO-aware transfer throttling, transfer elision)
+//! register a `Pass` instead of forking the pipeline entry point.
+//!
+//! ```no_run
+//! use hyperoffload::graph::GraphBuilder;
+//! use hyperoffload::passes::Compiler;
+//! use hyperoffload::sim::HwConfig;
+//!
+//! let mut g = GraphBuilder::linear_chain(8, 1e9, 1 << 20);
+//! let report = Compiler::new(HwConfig::ascend910c_like())
+//!     .verify(true)
+//!     .compile(&mut g)
+//!     .expect("compile");
+//! assert!(g.is_valid_order(&report.order));
+//! ```
+
+use std::fmt;
+
+use crate::graph::{CycleError, Graph, OpId, OpKind, Tier};
+use crate::sim::HwConfig;
+
+use super::exec_order::{self, ExecOrderConfig};
+use super::lifetime::LifetimeAnalysis;
+use super::prefetch_insert::{self, OffloadPolicy};
+
+/// How serious a [`Diagnostic`] is. Only `Error` fails a verified compile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Info,
+    Warning,
+    Error,
+}
+
+/// One structured message from a pass or the verifier.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub severity: Severity,
+    /// Name of the pass that produced it.
+    pub pass: String,
+    /// The op the message is anchored to, when there is one.
+    pub op: Option<OpId>,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn new(severity: Severity, pass: &str, message: impl Into<String>) -> Self {
+        Self { severity, pass: pass.to_string(), op: None, message: message.into() }
+    }
+
+    pub fn info(pass: &str, message: impl Into<String>) -> Self {
+        Self::new(Severity::Info, pass, message)
+    }
+
+    pub fn warning(pass: &str, message: impl Into<String>) -> Self {
+        Self::new(Severity::Warning, pass, message)
+    }
+
+    pub fn error(pass: &str, message: impl Into<String>) -> Self {
+        Self::new(Severity::Error, pass, message)
+    }
+
+    pub fn with_op(mut self, op: OpId) -> Self {
+        self.op = Some(op);
+        self
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sev = match self.severity {
+            Severity::Info => "info",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        };
+        match self.op {
+            Some(op) => write!(f, "[{sev}] {}: op {op}: {}", self.pass, self.message),
+            None => write!(f, "[{sev}] {}: {}", self.pass, self.message),
+        }
+    }
+}
+
+/// Why a compile session failed. Replaces the old panic paths
+/// (`expect("compile: cyclic graph")`) with a typed, recoverable error.
+#[derive(Debug, Clone)]
+pub enum CompileError {
+    /// The graph has a dependency cycle; `culprit_ops` are the ops Kahn's
+    /// algorithm could not order.
+    Cycle { culprit_ops: Vec<OpId> },
+    /// The IR verifier found invariant violations after `pass` ran.
+    Verify { pass: String, violations: Vec<Diagnostic> },
+    /// A pass failed for a pass-specific reason.
+    Pass { pass: String, message: String },
+}
+
+impl fmt::Display for CompileError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CompileError::Cycle { culprit_ops } => write!(
+                f,
+                "graph has a dependency cycle through {} op(s): {:?}",
+                culprit_ops.len(),
+                &culprit_ops[..culprit_ops.len().min(8)]
+            ),
+            CompileError::Verify { pass, violations } => {
+                write!(
+                    f,
+                    "IR verification failed after pass '{pass}': {} violation(s)",
+                    violations.len()
+                )?;
+                for d in violations.iter().take(4) {
+                    write!(f, "; {}", d.message)?;
+                }
+                Ok(())
+            }
+            CompileError::Pass { pass, message } => write!(f, "pass '{pass}' failed: {message}"),
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+impl From<CycleError> for CompileError {
+    fn from(e: CycleError) -> Self {
+        CompileError::Cycle { culprit_ops: e.culprit_ops }
+    }
+}
+
+/// Memoised analyses shared by all passes of one session.
+///
+/// Results are keyed on [`Graph::version`], so any structural mutation
+/// (op/tensor insertion, control-dep wiring, op removal) invalidates them
+/// automatically — a pass never sees a stale topological order or lifetime
+/// table.
+#[derive(Debug, Default)]
+pub struct AnalysisCache {
+    topo: Option<(u64, Vec<OpId>)>,
+    lifetime: Option<(u64, LifetimeAnalysis)>,
+    /// Cache hits across the session (perf counter).
+    pub hits: usize,
+    /// Cache misses (recomputations) across the session.
+    pub misses: usize,
+}
+
+impl AnalysisCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The deterministic topological order of `g`, recomputed only when
+    /// the graph has mutated since the last call.
+    pub fn topo_order(&mut self, g: &Graph) -> Result<Vec<OpId>, CompileError> {
+        let v = g.version();
+        let fresh = matches!(&self.topo, Some((cv, _)) if *cv == v);
+        if !fresh {
+            self.misses += 1;
+            let order = g.topo_order_detailed()?;
+            self.topo = Some((v, order));
+        } else {
+            self.hits += 1;
+        }
+        Ok(self.topo.as_ref().unwrap().1.clone())
+    }
+
+    /// Lifetime analysis of `g` under its current topological order,
+    /// recomputed only when the graph has mutated.
+    pub fn lifetimes(&mut self, g: &Graph) -> Result<LifetimeAnalysis, CompileError> {
+        let v = g.version();
+        let fresh = matches!(&self.lifetime, Some((cv, _)) if *cv == v);
+        if !fresh {
+            let order = self.topo_order(g)?;
+            self.misses += 1;
+            self.lifetime = Some((v, LifetimeAnalysis::run(g, &order)));
+        } else {
+            self.hits += 1;
+        }
+        Ok(self.lifetime.as_ref().unwrap().1.clone())
+    }
+
+    /// Drop all cached analyses (they would also lapse naturally on the
+    /// next version mismatch).
+    pub fn invalidate(&mut self) {
+        self.topo = None;
+        self.lifetime = None;
+    }
+}
+
+/// Immutable session context handed to every pass.
+#[derive(Debug, Clone)]
+pub struct PassCtx {
+    pub hw: HwConfig,
+    pub policy: OffloadPolicy,
+    pub exec: ExecOrderConfig,
+}
+
+/// What one pass did: structured counters + diagnostics, plus the
+/// execution order for order-producing passes.
+#[derive(Debug, Clone, Default)]
+pub struct PassReport {
+    /// Name of the pass this report came from.
+    pub pass: String,
+    /// Cache-op pairs inserted (store/prefetch; both ids equal for
+    /// store-less prefetches).
+    pub inserted: Vec<(OpId, OpId)>,
+    /// Offload candidates rejected.
+    pub rejected: usize,
+    /// Cache ops moved by order refinement.
+    pub moved: usize,
+    /// Transfer round trips elided.
+    pub elided: usize,
+    /// Execution order produced by this pass, if it pins one.
+    pub order: Option<Vec<OpId>>,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl PassReport {
+    pub fn new(pass: &str) -> Self {
+        Self { pass: pass.to_string(), ..Default::default() }
+    }
+}
+
+/// A compiler pass over the HyperOffload IR.
+///
+/// Passes mutate the graph, read/derive analyses through the shared
+/// [`AnalysisCache`], and report what they did. Returning an error aborts
+/// the session. See the `passes` module docs for a worked custom-pass
+/// example.
+pub trait Pass {
+    /// Stable, kebab-case pass name (used in diagnostics and for pipeline
+    /// positioning).
+    fn name(&self) -> &'static str;
+
+    /// Run the pass over `g`.
+    fn run(
+        &mut self,
+        g: &mut Graph,
+        cache: &mut AnalysisCache,
+        ctx: &PassCtx,
+    ) -> Result<PassReport, CompileError>;
+}
+
+/// §3.2 tensor lifetime analysis: warms the [`AnalysisCache`] and reports
+/// how many tensors expose an offloadable idle window.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LifetimePass;
+
+impl Pass for LifetimePass {
+    fn name(&self) -> &'static str {
+        "lifetime"
+    }
+
+    fn run(
+        &mut self,
+        g: &mut Graph,
+        cache: &mut AnalysisCache,
+        _ctx: &PassCtx,
+    ) -> Result<PassReport, CompileError> {
+        let la = cache.lifetimes(g)?;
+        let windowed = la.lifetimes.values().filter(|l| l.max_idle_gap >= 2).count();
+        let mut rep = PassReport::new(self.name());
+        rep.diagnostics.push(Diagnostic::info(
+            self.name(),
+            format!(
+                "{} tensors analysed, {windowed} with an idle window of >= 2 ops",
+                g.tensors.len()
+            ),
+        ));
+        Ok(rep)
+    }
+}
+
+/// §4.2.2 offload-candidate selection + cache-operator insertion, using
+/// the cached lifetime analysis.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrefetchInsertPass;
+
+impl Pass for PrefetchInsertPass {
+    fn name(&self) -> &'static str {
+        "prefetch-insert"
+    }
+
+    fn run(
+        &mut self,
+        g: &mut Graph,
+        cache: &mut AnalysisCache,
+        ctx: &PassCtx,
+    ) -> Result<PassReport, CompileError> {
+        let order = cache.topo_order(g)?;
+        let la = cache.lifetimes(g)?;
+        let res = prefetch_insert::run_with(g, &order, &la, &ctx.hw, &ctx.policy);
+        let mut rep = PassReport::new(self.name());
+        rep.diagnostics.push(Diagnostic::info(
+            self.name(),
+            format!(
+                "{} cache-op pairs inserted, {} candidates rejected as unprofitable",
+                res.inserted.len(),
+                res.rejected
+            ),
+        ));
+        rep.inserted = res.inserted;
+        rep.rejected = res.rejected;
+        Ok(rep)
+    }
+}
+
+/// §4.3 Algorithm 1 execution-order refinement; pins the session's final
+/// order.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecOrderPass;
+
+impl Pass for ExecOrderPass {
+    fn name(&self) -> &'static str {
+        "exec-order"
+    }
+
+    fn run(
+        &mut self,
+        g: &mut Graph,
+        cache: &mut AnalysisCache,
+        ctx: &PassCtx,
+    ) -> Result<PassReport, CompileError> {
+        let init = cache.topo_order(g)?;
+        let r = exec_order::refine_from(g, init, &ctx.hw, &ctx.exec);
+        let mut rep = PassReport::new(self.name());
+        rep.diagnostics.push(Diagnostic::info(
+            self.name(),
+            format!("{} cache ops moved ({} positions evaluated)", r.moved, r.evaluated),
+        ));
+        rep.moved = r.moved;
+        rep.order = Some(r.order);
+        Ok(rep)
+    }
+}
+
+/// Check the IR invariants the pipeline relies on, against a concrete
+/// execution order:
+///
+/// 1. every op references only known tensors/ops, and cache ops list their
+///    managed tensor as an input;
+/// 2. `order` is a valid topological order of the whole graph;
+/// 3. every consumer placed after a `Prefetch` is dependency-reachable
+///    from it (streams run concurrently — mere placement after the
+///    prefetch does not order *completion* before the consume, §4.2.1);
+/// 4. walking `order`, no `Store`/`Detach` releases a tensor that has no
+///    device residency (double release), and no op consumes a
+///    cache-managed tensor while it is offloaded.
+///
+/// Returns all findings; callers decide whether `Error`s are fatal.
+pub fn verify_ir(g: &Graph, order: &[OpId]) -> Vec<Diagnostic> {
+    const PASS: &str = "verify";
+    let mut diags = Vec::new();
+    let nt = g.tensors.len();
+    let n = g.ops.len();
+
+    // 1. Structural checks; everything below indexes tensors/ops freely.
+    let mut structural_ok = true;
+    for op in &g.ops {
+        for &t in op.inputs.iter().chain(op.outputs.iter()) {
+            if t >= nt {
+                diags.push(
+                    Diagnostic::error(
+                        PASS,
+                        format!("op '{}' references dangling tensor {t}", op.name),
+                    )
+                    .with_op(op.id),
+                );
+                structural_ok = false;
+            }
+        }
+        if let Some(t) = op.kind.cache_tensor() {
+            if t >= nt {
+                diags.push(
+                    Diagnostic::error(
+                        PASS,
+                        format!("cache op '{}' manages dangling tensor {t}", op.name),
+                    )
+                    .with_op(op.id),
+                );
+                structural_ok = false;
+            } else if !op.inputs.contains(&t) {
+                diags.push(
+                    Diagnostic::error(
+                        PASS,
+                        format!("cache op '{}' must list its tensor {t} as an input", op.name),
+                    )
+                    .with_op(op.id),
+                );
+            }
+        }
+        for &d in &op.control_deps {
+            if d >= n {
+                diags.push(
+                    Diagnostic::error(
+                        PASS,
+                        format!("op '{}' control-depends on unknown op {d}", op.name),
+                    )
+                    .with_op(op.id),
+                );
+                structural_ok = false;
+            }
+        }
+    }
+    if !structural_ok {
+        return diags;
+    }
+
+    // 2. The order itself.
+    if !g.is_valid_order(order) {
+        diags.push(Diagnostic::error(
+            PASS,
+            "execution order is not a valid topological order of the graph",
+        ));
+        return diags;
+    }
+    let mut pos = vec![usize::MAX; n];
+    for (i, &o) in order.iter().enumerate() {
+        pos[o] = i;
+    }
+
+    // Dependency successors (data + control), for reachability.
+    let mut succ: Vec<Vec<OpId>> = vec![Vec::new(); n];
+    for op in &g.ops {
+        for p in g.preds(op.id) {
+            succ[p].push(op.id);
+        }
+    }
+
+    // 3. Prefetch completion precedes EVERY later consumer — not just the
+    // first. A later consumer on a parallel branch with no path from the
+    // prefetch can start before the DMA completes even though it sits
+    // after the prefetch in the order (streams run concurrently).
+    // Consumers placed before the prefetch read the pre-offload copy and
+    // are exempt (the residency walk below polices them).
+    for op in &g.ops {
+        let OpKind::Prefetch { tensor } = op.kind else { continue };
+        for &c in g.consumers_of(tensor) {
+            if c == op.id || g.op(c).kind.is_cache_op() || pos[c] < pos[op.id] {
+                continue;
+            }
+            if !reaches(&succ, op.id, c) {
+                diags.push(
+                    Diagnostic::error(
+                        PASS,
+                        format!(
+                            "consumer '{}' of prefetch '{}' is not dependency-ordered \
+                             after transfer completion",
+                            g.op(c).name,
+                            op.name
+                        ),
+                    )
+                    .with_op(c),
+                );
+            }
+        }
+    }
+
+    // 4. Residency walk over cache-managed tensors.
+    let mut managed = vec![false; nt];
+    for op in &g.ops {
+        if let Some(t) = op.kind.cache_tensor() {
+            managed[t] = true;
+        }
+    }
+    let mut resident: Vec<bool> = g
+        .tensors
+        .iter()
+        .map(|t| t.home == Tier::Device && g.producer_of(t.id).is_none())
+        .collect();
+    for &o in order {
+        let op = g.op(o);
+        match op.kind {
+            OpKind::Prefetch { tensor } => {
+                if resident[tensor] {
+                    diags.push(
+                        Diagnostic::warning(
+                            PASS,
+                            format!(
+                                "prefetch '{}' re-loads already-resident tensor '{}'",
+                                op.name,
+                                g.tensor(tensor).name
+                            ),
+                        )
+                        .with_op(op.id),
+                    );
+                }
+                resident[tensor] = true;
+            }
+            OpKind::Store { tensor } | OpKind::Detach { tensor } => {
+                if !resident[tensor] {
+                    diags.push(
+                        Diagnostic::error(
+                            PASS,
+                            format!(
+                                "'{}' releases tensor '{}' which has no device residency at \
+                                 that point (double release?)",
+                                op.name,
+                                g.tensor(tensor).name
+                            ),
+                        )
+                        .with_op(op.id),
+                    );
+                }
+                resident[tensor] = false;
+            }
+            _ => {
+                for &t in &op.inputs {
+                    if managed[t] && !resident[t] {
+                        diags.push(
+                            Diagnostic::error(
+                                PASS,
+                                format!(
+                                    "op '{}' consumes tensor '{}' while it is offloaded \
+                                     (released before use, or prefetch missing)",
+                                    op.name,
+                                    g.tensor(t).name
+                                ),
+                            )
+                            .with_op(op.id),
+                        );
+                    }
+                }
+            }
+        }
+        for &t in &op.outputs {
+            if g.tensor(t).home == Tier::Device {
+                resident[t] = true;
+            }
+        }
+    }
+    diags
+}
+
+fn reaches(succ: &[Vec<OpId>], from: OpId, to: OpId) -> bool {
+    if from == to {
+        return true;
+    }
+    let mut visited = vec![false; succ.len()];
+    let mut stack = vec![from];
+    visited[from] = true;
+    while let Some(x) = stack.pop() {
+        for &s in &succ[x] {
+            if s == to {
+                return true;
+            }
+            if !visited[s] {
+                visited[s] = true;
+                stack.push(s);
+            }
+        }
+    }
+    false
+}
+
+/// [`verify_ir`] as a pipeline stage: verifies against the cached topo
+/// order and fails the session on any `Error`-severity finding. Prefer
+/// `Compiler::verify(true)`, which runs the same checks between *every*
+/// stage; use this to place one explicit checkpoint in a custom pipeline.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VerifyPass;
+
+impl Pass for VerifyPass {
+    fn name(&self) -> &'static str {
+        "verify"
+    }
+
+    fn run(
+        &mut self,
+        g: &mut Graph,
+        cache: &mut AnalysisCache,
+        _ctx: &PassCtx,
+    ) -> Result<PassReport, CompileError> {
+        let order = cache.topo_order(g)?;
+        let diags = check_verdict(self.name(), verify_ir(g, &order))?;
+        let mut rep = PassReport::new(self.name());
+        rep.diagnostics = diags;
+        Ok(rep)
+    }
+}
+
+/// Split verifier findings: `Err` with the violations if any are
+/// `Error`-severity, `Ok` with everything otherwise.
+fn check_verdict(stage: &str, diags: Vec<Diagnostic>) -> Result<Vec<Diagnostic>, CompileError> {
+    if diags.iter().any(|d| d.severity == Severity::Error) {
+        Err(CompileError::Verify {
+            pass: stage.to_string(),
+            violations: diags.into_iter().filter(|d| d.severity == Severity::Error).collect(),
+        })
+    } else {
+        Ok(diags)
+    }
+}
+
+/// End-to-end compilation report: final order, aggregate counters (the old
+/// two bare counters, kept for compatibility), and the structured per-pass
+/// reports + diagnostics of the session API.
+#[derive(Debug, Clone)]
+pub struct CompileReport {
+    /// Final, refined execution order.
+    pub order: Vec<OpId>,
+    /// Cache-op pairs inserted by insertion passes.
+    pub inserted: Vec<(OpId, OpId)>,
+    /// Offload candidates rejected (window too small — §5.1).
+    pub rejected: usize,
+    /// Cache ops moved by Algorithm 1.
+    pub moved: usize,
+    /// Transfer round trips elided (see `ElideRedundantTransfers`).
+    pub elided: usize,
+    /// One report per pipeline stage, in execution order.
+    pub per_pass: Vec<PassReport>,
+    /// All diagnostics emitted across the session.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Analysis-cache hit/miss counters for the session.
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+}
+
+/// A compile *session* builder: configure hardware, policy and the pass
+/// pipeline, then drive it over a graph.
+///
+/// ```no_run
+/// # use hyperoffload::graph::GraphBuilder;
+/// # use hyperoffload::passes::{Compiler, OffloadPolicy};
+/// # use hyperoffload::sim::HwConfig;
+/// let mut g = GraphBuilder::linear_chain(8, 1e9, 1 << 20);
+/// let report = Compiler::new(HwConfig::ascend910c_like())
+///     .policy(OffloadPolicy { min_bytes: 16 << 20, ..Default::default() })
+///     .verify(true)
+///     .compile(&mut g)
+///     .expect("compile");
+/// ```
+pub struct Compiler {
+    hw: HwConfig,
+    policy: OffloadPolicy,
+    exec: ExecOrderConfig,
+    passes: Vec<Box<dyn Pass>>,
+    verify: bool,
+}
+
+impl Compiler {
+    /// A session with the default HyperOffload pipeline:
+    /// lifetime → prefetch-insert → exec-order.
+    pub fn new(hw: HwConfig) -> Self {
+        Self {
+            hw,
+            policy: OffloadPolicy::default(),
+            exec: ExecOrderConfig::default(),
+            passes: vec![
+                Box::new(LifetimePass),
+                Box::new(PrefetchInsertPass),
+                Box::new(ExecOrderPass),
+            ],
+            verify: false,
+        }
+    }
+
+    /// A session with no passes — add them with [`pass`](Self::pass).
+    pub fn empty(hw: HwConfig) -> Self {
+        Self {
+            hw,
+            policy: OffloadPolicy::default(),
+            exec: ExecOrderConfig::default(),
+            passes: Vec::new(),
+            verify: false,
+        }
+    }
+
+    /// Set the offload-candidate selection policy.
+    pub fn policy(mut self, p: OffloadPolicy) -> Self {
+        self.policy = p;
+        self
+    }
+
+    /// Set the Algorithm 1 cost-model configuration.
+    pub fn exec(mut self, cfg: ExecOrderConfig) -> Self {
+        self.exec = cfg;
+        self
+    }
+
+    /// Run [`verify_ir`] on the input graph and after every pass; any
+    /// `Error`-severity finding aborts with [`CompileError::Verify`].
+    pub fn verify(mut self, on: bool) -> Self {
+        self.verify = on;
+        self
+    }
+
+    /// Append a pass to the pipeline.
+    pub fn pass(mut self, p: impl Pass + 'static) -> Self {
+        self.passes.push(Box::new(p));
+        self
+    }
+
+    /// Insert a pass immediately before the pass named `name` (appends if
+    /// no such pass is scheduled).
+    pub fn pass_before(mut self, name: &str, p: impl Pass + 'static) -> Self {
+        let idx = self.passes.iter().position(|q| q.name() == name).unwrap_or(self.passes.len());
+        self.passes.insert(idx, Box::new(p));
+        self
+    }
+
+    /// Enable [`ElideRedundantTransfers`](super::ElideRedundantTransfers)
+    /// (inserted before exec-order, where the round trips are visible but
+    /// not yet anchored).
+    pub fn elide_redundant_transfers(self) -> Self {
+        self.pass_before("exec-order", super::elide::ElideRedundantTransfers::default())
+    }
+
+    /// Drive the pipeline over `graph`.
+    ///
+    /// The graph is mutated in place (cache operators inserted/removed,
+    /// anchoring control deps wired); the report carries the final
+    /// execution order plus per-pass details. Cyclic inputs surface as
+    /// [`CompileError::Cycle`] instead of the old panic.
+    pub fn compile(mut self, graph: &mut Graph) -> Result<CompileReport, CompileError> {
+        let ctx = PassCtx {
+            hw: self.hw.clone(),
+            policy: self.policy.clone(),
+            exec: self.exec.clone(),
+        };
+        let mut cache = AnalysisCache::new();
+        let mut diagnostics: Vec<Diagnostic> = Vec::new();
+        let mut per_pass: Vec<PassReport> = Vec::new();
+        let mut order: Option<Vec<OpId>> = None;
+
+        // Early cycle check (and input verification when enabled).
+        let input_order = cache.topo_order(graph)?;
+        if self.verify {
+            diagnostics.extend(check_verdict("input", verify_ir(graph, &input_order))?);
+        }
+
+        for p in self.passes.iter_mut() {
+            let rep = p.run(graph, &mut cache, &ctx)?;
+            if rep.order.is_some() {
+                order = rep.order.clone();
+            }
+            diagnostics.extend(rep.diagnostics.iter().cloned());
+            per_pass.push(rep);
+            if self.verify {
+                let vorder = match &order {
+                    Some(o) if graph.is_valid_order(o) => o.clone(),
+                    _ => cache.topo_order(graph)?,
+                };
+                let name = per_pass.last().map(|r| r.pass.clone()).unwrap_or_default();
+                diagnostics.extend(check_verdict(&name, verify_ir(graph, &vorder))?);
+            }
+        }
+
+        let mut final_order = match order {
+            Some(o) if graph.is_valid_order(&o) => o,
+            Some(_) => {
+                diagnostics.push(Diagnostic::warning(
+                    "compiler",
+                    "pinned execution order went stale after a later graph mutation; \
+                     falling back to the topological order",
+                ));
+                cache.topo_order(graph)?
+            }
+            None => cache.topo_order(graph)?,
+        };
+        // The cached topo can go stale WITHOUT a version bump if a pass
+        // mutated the public `Graph::ops`/`tensors` fields directly instead
+        // of using the mutation methods — never trust it blindly.
+        if !graph.is_valid_order(&final_order) {
+            cache.invalidate();
+            final_order = cache.topo_order(graph)?;
+        }
+
+        let inserted: Vec<(OpId, OpId)> =
+            per_pass.iter().flat_map(|r| r.inserted.iter().copied()).collect();
+        let rejected = per_pass.iter().map(|r| r.rejected).sum();
+        let moved = per_pass.iter().map(|r| r.moved).sum();
+        let elided = per_pass.iter().map(|r| r.elided).sum();
+        Ok(CompileReport {
+            order: final_order,
+            inserted,
+            rejected,
+            moved,
+            elided,
+            per_pass,
+            diagnostics,
+            cache_hits: cache.hits,
+            cache_misses: cache.misses,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, Tier};
+    use crate::sim::simulate;
+
+    fn hw() -> HwConfig {
+        HwConfig::test_default()
+    }
+
+    #[test]
+    fn default_pipeline_matches_legacy_compile() {
+        let g0 = GraphBuilder::fwd_bwd_chain(4, 8 << 20, 10e9, 24, 1e9);
+        let mut a = g0.clone();
+        #[allow(deprecated)]
+        let old = crate::passes::compile(
+            &mut a,
+            &hw(),
+            &OffloadPolicy::default(),
+            &ExecOrderConfig::default(),
+        );
+        let mut b = g0;
+        let new = Compiler::new(hw()).compile(&mut b).unwrap();
+        assert_eq!(old.order, new.order);
+        assert_eq!(old.inserted, new.inserted);
+        assert_eq!(old.rejected, new.rejected);
+        assert_eq!(old.moved, new.moved);
+        let sa = simulate(&a, &old.order, &hw());
+        let sb = simulate(&b, &new.order, &hw());
+        assert_eq!(sa.peak_device_bytes, sb.peak_device_bytes);
+        assert_eq!(sa.makespan_us.to_bits(), sb.makespan_us.to_bits());
+        assert_eq!(sa.dma_bytes, sb.dma_bytes);
+    }
+
+    #[test]
+    fn cycle_surfaces_as_compile_error() {
+        let mut b = GraphBuilder::new();
+        let t0 = b.tensor("t0", 8, Tier::Device);
+        let t1 = b.tensor("t1", 8, Tier::Device);
+        let x = b.compute("x", 1e6, 0, vec![], vec![t0]);
+        let y = b.compute("y", 1e6, 0, vec![t0], vec![t1]);
+        b.dep(x, y);
+        let mut g = b.build();
+        match Compiler::new(hw()).compile(&mut g) {
+            Err(CompileError::Cycle { culprit_ops }) => {
+                assert!(culprit_ops.contains(&x) && culprit_ops.contains(&y));
+            }
+            other => panic!("expected CompileError::Cycle, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn analysis_cache_invalidates_on_mutation() {
+        let mut g = GraphBuilder::linear_chain(4, 1e6, 64);
+        let mut cache = AnalysisCache::new();
+        let o1 = cache.topo_order(&g).unwrap();
+        let _ = cache.topo_order(&g).unwrap();
+        assert_eq!(cache.misses, 1);
+        assert_eq!(cache.hits, 1);
+        let t = g.add_tensor("x", 1, Tier::Device);
+        g.add_op("c", crate::graph::OpKind::HostWork { us: 1.0 }, vec![], vec![t]);
+        let o2 = cache.topo_order(&g).unwrap();
+        assert_eq!(cache.misses, 2);
+        assert_eq!(o2.len(), o1.len() + 1);
+        // Lifetimes share the version key.
+        let _ = cache.lifetimes(&g).unwrap();
+        let before = cache.misses;
+        let _ = cache.lifetimes(&g).unwrap();
+        assert_eq!(cache.misses, before);
+    }
+
+    #[test]
+    fn verify_catches_double_release() {
+        let mut b = GraphBuilder::new();
+        let a = b.tensor("a", 1024, Tier::Device);
+        let p = b.compute("p", 1e6, 0, vec![], vec![a]);
+        let s1 = b.store("st1", a);
+        b.dep(s1, p);
+        let s2 = b.store("st2", a);
+        b.dep(s2, s1);
+        let g = b.build();
+        let order = g.topo_order().unwrap();
+        let diags = verify_ir(&g, &order);
+        assert!(
+            diags.iter().any(|d| d.severity == Severity::Error),
+            "double release not caught: {diags:?}"
+        );
+    }
+
+    #[test]
+    fn verify_accepts_inserted_round_trip() {
+        let mut g = GraphBuilder::fwd_bwd_chain(4, 8 << 20, 10e9, 24, 1e9);
+        let report = Compiler::new(hw()).verify(true).compile(&mut g).unwrap();
+        assert!(!report.inserted.is_empty());
+        assert!(g.is_valid_order(&report.order));
+    }
+
+    #[test]
+    fn custom_pass_extends_pipeline() {
+        struct MarkerPass;
+        impl Pass for MarkerPass {
+            fn name(&self) -> &'static str {
+                "marker"
+            }
+            fn run(
+                &mut self,
+                g: &mut Graph,
+                _cache: &mut AnalysisCache,
+                _ctx: &PassCtx,
+            ) -> Result<PassReport, CompileError> {
+                let mut rep = PassReport::new(self.name());
+                rep.diagnostics.push(Diagnostic::info("marker", format!("{} ops", g.ops.len())));
+                Ok(rep)
+            }
+        }
+        let mut g = GraphBuilder::linear_chain(3, 1e6, 0);
+        let report = Compiler::new(hw()).pass(MarkerPass).compile(&mut g).unwrap();
+        assert!(report.per_pass.iter().any(|p| p.pass == "marker"));
+        assert_eq!(report.per_pass.len(), 4);
+    }
+
+    #[test]
+    fn explicit_verify_pass_usable_in_custom_pipeline() {
+        let mut g = GraphBuilder::linear_chain(3, 1e6, 0);
+        let report = Compiler::empty(hw()).pass(VerifyPass).compile(&mut g).unwrap();
+        assert_eq!(report.per_pass.len(), 1);
+        assert_eq!(report.order, vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,205 @@
+//! `ElideRedundantTransfers`: drop offload round trips that buy nothing.
+//!
+//! The insertion pass (§4.2.2) offloads any tensor whose idle window can
+//! hide the transfer — it reasons about *time*, not about whether the
+//! device actually needs the bytes back. On a machine with headroom, a
+//! `Store` whose tensor is later re-`Prefetch`ed with no intervening
+//! device-memory pressure is pure fabric traffic: the tensor could simply
+//! have stayed resident. This pass detects such round trips and removes
+//! both cache operators, collapsing the pair to plain (detach-free)
+//! residency — measurably cutting device↔pool bytes without touching the
+//! makespan.
+//!
+//! Enabled by opt-in (`Compiler::elide_redundant_transfers()` or
+//! `.pass_before("exec-order", ElideRedundantTransfers::default())`); it
+//! must run after insertion and before Algorithm 1 anchors the transfers.
+//! This pass is the extensibility proof of the session API: it is built
+//! entirely from `Pass` + `AnalysisCache` + `Graph::remove_ops`, with no
+//! changes to the pipeline driver.
+
+use std::collections::HashSet;
+
+use crate::graph::{Graph, OpId, OpKind, TensorId, Tier};
+
+use super::compiler::{AnalysisCache, CompileError, Diagnostic, Pass, PassCtx, PassReport};
+
+/// Remove `Store`/`Prefetch` round trips whose tensor could have stayed
+/// device-resident within the configured capacity headroom.
+#[derive(Debug, Clone)]
+pub struct ElideRedundantTransfers {
+    /// Keep a round trip unless peak residency *without* it stays within
+    /// `headroom` × device capacity. Default 0.9: never trade the last 10%
+    /// of HBM for saved fabric traffic.
+    pub headroom: f64,
+}
+
+impl Default for ElideRedundantTransfers {
+    fn default() -> Self {
+        Self { headroom: 0.9 }
+    }
+}
+
+impl Pass for ElideRedundantTransfers {
+    fn name(&self) -> &'static str {
+        "elide-redundant-transfers"
+    }
+
+    fn run(
+        &mut self,
+        g: &mut Graph,
+        cache: &mut AnalysisCache,
+        ctx: &PassCtx,
+    ) -> Result<PassReport, CompileError> {
+        let mut rep = PassReport::new(self.name());
+        let budget = (ctx.hw.device_capacity as f64 * self.headroom) as u64;
+        let mut decided: HashSet<TensorId> = HashSet::new();
+        let mut elided = 0usize;
+        let mut saved_bytes = 0u64;
+
+        // Greedy, one round trip at a time: op ids shift after each
+        // removal, so candidates are re-discovered from the live graph.
+        loop {
+            let order = cache.topo_order(g)?;
+            let mut pos = vec![usize::MAX; g.ops.len()];
+            for (i, &o) in order.iter().enumerate() {
+                pos[o] = i;
+            }
+            let mut candidate: Option<(TensorId, OpId, OpId)> = None;
+            for t in &g.tensors {
+                if t.home != Tier::Device || decided.contains(&t.id) {
+                    continue;
+                }
+                let mut stores = Vec::new();
+                let mut prefetches = Vec::new();
+                let mut detaches = 0usize;
+                for op in &g.ops {
+                    match op.kind {
+                        OpKind::Store { tensor } if tensor == t.id => stores.push(op.id),
+                        OpKind::Prefetch { tensor } if tensor == t.id => prefetches.push(op.id),
+                        OpKind::Detach { tensor } if tensor == t.id => detaches += 1,
+                        _ => {}
+                    }
+                }
+                // Exactly the inserted round-trip shape: one store, one
+                // later prefetch, no detach.
+                if detaches == 0
+                    && stores.len() == 1
+                    && prefetches.len() == 1
+                    && pos[stores[0]] < pos[prefetches[0]]
+                {
+                    candidate = Some((t.id, stores[0], prefetches[0]));
+                    break;
+                }
+            }
+            let Some((t, st, pf)) = candidate else { break };
+            decided.insert(t);
+
+            // Pressure check on a trial copy: with the round trip removed,
+            // the tensor stays resident across the window — the peak must
+            // still fit the headroom budget.
+            let mut trial = g.clone();
+            trial.remove_ops(&[st, pf]);
+            let trial_order = match trial.topo_order_detailed() {
+                Ok(o) => o,
+                Err(_) => continue,
+            };
+            let sim = crate::sim::simulate(&trial, &trial_order, &ctx.hw);
+            if sim.peak_device_bytes <= budget {
+                let bytes = g.tensor(t).bytes;
+                let name = g.tensor(t).name.clone();
+                g.remove_ops(&[st, pf]);
+                elided += 1;
+                saved_bytes += 2 * bytes;
+                rep.diagnostics.push(Diagnostic::info(
+                    self.name(),
+                    format!(
+                        "elided store/prefetch round trip for tensor '{name}' \
+                         ({} bytes of fabric traffic)",
+                        2 * bytes
+                    ),
+                ));
+            }
+        }
+
+        rep.elided = elided;
+        rep.diagnostics.push(Diagnostic::info(
+            self.name(),
+            format!("{elided} round trip(s) elided, {saved_bytes} device<->pool bytes saved"),
+        ));
+        Ok(rep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::passes::Compiler;
+    use crate::sim::{simulate, HwConfig};
+
+    fn workload() -> Graph {
+        // §5.1 miniature: 4 × 8 MB activations round-tripped through the
+        // pool while the mid section computes.
+        GraphBuilder::fwd_bwd_chain(4, 8 << 20, 10e9, 24, 1e9)
+    }
+
+    #[test]
+    fn elides_round_trips_when_memory_is_ample() {
+        let hw = HwConfig::test_default(); // 1 GiB device vs 32 MB of acts
+        let mut base = workload();
+        let rb = Compiler::new(hw.clone()).compile(&mut base).unwrap();
+        let sb = simulate(&base, &rb.order, &hw);
+        assert!(!rb.inserted.is_empty(), "fixture must offload something");
+
+        let mut opt = workload();
+        let ro = Compiler::new(hw.clone())
+            .elide_redundant_transfers()
+            .verify(true)
+            .compile(&mut opt)
+            .unwrap();
+        let so = simulate(&opt, &ro.order, &hw);
+
+        assert_eq!(ro.elided, rb.inserted.len(), "all round trips should elide");
+        assert!(so.dma_bytes < sb.dma_bytes, "{} !< {}", so.dma_bytes, sb.dma_bytes);
+        assert_eq!(so.dma_bytes, 0);
+        assert!(
+            so.makespan_us <= sb.makespan_us * 1.01,
+            "elision slowed things down: {} vs {}",
+            so.makespan_us,
+            sb.makespan_us
+        );
+        assert!(opt.cache_ops().is_empty());
+    }
+
+    #[test]
+    fn keeps_round_trips_under_memory_pressure() {
+        // 24 MB device capacity vs 32 MB of activations: keeping them
+        // resident would blow the 0.9 headroom, so nothing is elided.
+        let hw = HwConfig::test_default().with_device_capacity(24 << 20);
+        let mut g = workload();
+        let r = Compiler::new(hw.clone())
+            .elide_redundant_transfers()
+            .compile(&mut g)
+            .unwrap();
+        assert!(!r.inserted.is_empty());
+        assert_eq!(r.elided, 0, "elision under pressure");
+        assert!(!g.cache_ops().is_empty());
+    }
+
+    #[test]
+    fn remote_home_prefetches_are_never_elided() {
+        // Weight-streaming graph: prefetches of remote-home tensors are
+        // legalisation, not an optimisation — they must survive.
+        let hw = HwConfig::test_default();
+        let (mut g, _) = GraphBuilder::chain_with_remote_weights(8, 100e6, 0, 50_000);
+        let r = Compiler::new(hw.clone())
+            .elide_redundant_transfers()
+            .verify(true)
+            .compile(&mut g)
+            .unwrap();
+        assert_eq!(r.elided, 0);
+        assert_eq!(g.cache_ops().len(), 8);
+        let s = simulate(&g, &r.order, &hw);
+        assert!(s.dma_bytes > 0);
+    }
+}

@@ -249,17 +249,7 @@ mod tests {
     use crate::sim::simulate;
 
     fn hw() -> HwConfig {
-        HwConfig {
-            compute_tflops: 1.0,
-            hbm_gbps: 1e9,
-            d2r_gbps: 1.0,
-            r2d_gbps: 1.0,
-            link_latency_us: 0.0,
-            net_gbps: 1.0,
-            host_overhead_us: 0.0,
-            device_capacity: 1 << 30,
-            remote_capacity: 1 << 40,
-        }
+        HwConfig::test_default()
     }
 
     /// n compute ops à `op_us`, op k consumes a remote weight (w_bytes).

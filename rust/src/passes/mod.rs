@@ -1,73 +1,119 @@
-//! Compiler passes over the HyperOffload IR (§4 of the paper).
+//! Compiler passes over the HyperOffload IR (§4 of the paper), driven by
+//! the [`Compiler`] session API.
 //!
-//! Pipeline (what [`compile`] runs, in order):
-//! 1. [`lifetime`]      — tensor lifetime / idle-window analysis (§3.2)
-//! 2. [`prefetch_insert`] — offload-candidate selection + cache-operator
-//!    insertion (§4.2.2)
-//! 3. [`exec_order`]    — Algorithm 1 execution-order refinement (§4.3)
+//! ## Pipeline
+//!
+//! A [`Compiler`] is a configured compile *session*: hardware + policy +
+//! an ordered list of [`Pass`]es, sharing one [`AnalysisCache`]:
+//!
+//! ```text
+//!             Compiler::new(hw).policy(p).exec(cfg).verify(true)
+//!             ┌──────────────────────────────────────────────────────┐
+//!  Graph ───▶ │ LifetimePass          §3.2 lifetime / idle windows   │
+//!             │ PrefetchInsertPass    §4.2.2 cache-op insertion      │
+//!             │ (ElideRedundantTransfers     opt-in traffic elision) │
+//!             │ ExecOrderPass         §4.3 Algorithm 1 refinement    │
+//!             └──────────────────────────────────────────────────────┘
+//!                  │                    ▲
+//!                  ▼                    │ memoised topo order +
+//!             verify_ir (between   AnalysisCache  lifetimes, keyed on
+//!             stages when enabled)      Graph::version()
+//!
+//!  ──▶ Result<CompileReport { order, per-pass reports, diagnostics }>
+//! ```
+//!
+//! Cyclic graphs surface as [`CompileError::Cycle`] (with the culprit
+//! ops), verifier findings as [`CompileError::Verify`] — no panics.
+//!
+//! ## Writing a custom pass
+//!
+//! The session API turns "add a scenario" into registering one [`Pass`]:
+//!
+//! ```no_run
+//! use hyperoffload::graph::{Graph, GraphBuilder};
+//! use hyperoffload::passes::{
+//!     AnalysisCache, CompileError, Compiler, Pass, PassCtx, PassReport,
+//! };
+//! use hyperoffload::sim::HwConfig;
+//!
+//! /// Counts cache operators; a real pass would rewrite the graph.
+//! struct CountCacheOps;
+//!
+//! impl Pass for CountCacheOps {
+//!     fn name(&self) -> &'static str {
+//!         "count-cache-ops"
+//!     }
+//!     fn run(
+//!         &mut self,
+//!         g: &mut Graph,
+//!         cache: &mut AnalysisCache,
+//!         _ctx: &PassCtx,
+//!     ) -> Result<PassReport, CompileError> {
+//!         let order = cache.topo_order(g)?; // memoised, auto-invalidated
+//!         let _ = (order, g.cache_ops().len());
+//!         Ok(PassReport::new("count-cache-ops"))
+//!     }
+//! }
+//!
+//! let mut g = GraphBuilder::linear_chain(8, 1e9, 1 << 20);
+//! let report = Compiler::new(HwConfig::ascend910c_like())
+//!     .pass(CountCacheOps) // appended after the default pipeline
+//!     .compile(&mut g)
+//!     .expect("compile");
+//! assert!(g.is_valid_order(&report.order));
+//! ```
+//!
+//! The underlying algorithms remain directly callable ([`lifetime`],
+//! [`prefetch_insert`], [`exec_order`]) for tooling and benchmarks.
 
+pub mod compiler;
+pub mod elide;
 pub mod exec_order;
 pub mod lifetime;
 pub mod prefetch_insert;
 
-use crate::graph::{Graph, OpId};
+use crate::graph::Graph;
 use crate::sim::HwConfig;
 
+pub use compiler::{
+    verify_ir, AnalysisCache, CompileError, CompileReport, Compiler, Diagnostic, ExecOrderPass,
+    LifetimePass, Pass, PassCtx, PassReport, PrefetchInsertPass, Severity, VerifyPass,
+};
+pub use elide::ElideRedundantTransfers;
 pub use exec_order::{refine, refine_from, ExecOrderConfig, Refinement};
 pub use lifetime::{Lifetime, LifetimeAnalysis};
 pub use prefetch_insert::{InsertionResult, OffloadPlan, OffloadPolicy};
 
-/// End-to-end compilation report.
-#[derive(Debug, Clone)]
-pub struct CompileReport {
-    /// Final, refined execution order.
-    pub order: Vec<OpId>,
-    /// Cache-op pairs inserted by the prefetch pass.
-    pub inserted: Vec<(OpId, OpId)>,
-    /// Offload candidates rejected (window too small — §5.1).
-    pub rejected: usize,
-    /// Cache ops moved by Algorithm 1.
-    pub moved: usize,
-}
-
-/// The full HyperOffload compile pipeline: lifetimes → insertion →
-/// Algorithm 1. Mutates `graph` (cache ops are inserted) and returns the
-/// refined order to execute it with.
+/// The legacy positional-config entry point, kept as a thin shim over the
+/// default [`Compiler`] pipeline with identical output.
+///
+/// Panics on cyclic graphs (the historical behaviour); the session API
+/// returns [`CompileError::Cycle`] instead.
+#[deprecated(
+    since = "0.3.0",
+    note = "use the Compiler session API: Compiler::new(hw).policy(p).exec(cfg).compile(&mut g)"
+)]
 pub fn compile(
     graph: &mut Graph,
     hw: &HwConfig,
     policy: &OffloadPolicy,
     exec_cfg: &ExecOrderConfig,
 ) -> CompileReport {
-    let order = graph.topo_order().expect("compile: cyclic graph");
-    let ins = prefetch_insert::run(graph, &order, hw, policy);
-    let refined = exec_order::refine(graph, hw, exec_cfg);
-    CompileReport {
-        order: refined.order,
-        inserted: ins.inserted,
-        rejected: ins.rejected,
-        moved: refined.moved,
-    }
+    Compiler::new(hw.clone())
+        .policy(policy.clone())
+        .exec(exec_cfg.clone())
+        .compile(graph)
+        .expect("compile: cyclic graph")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::{GraphBuilder, Tier};
+    use crate::graph::GraphBuilder;
     use crate::sim::simulate;
 
     fn hw() -> HwConfig {
-        HwConfig {
-            compute_tflops: 1.0,
-            hbm_gbps: 1e9,
-            d2r_gbps: 1.0,
-            r2d_gbps: 1.0,
-            link_latency_us: 0.0,
-            net_gbps: 1.0,
-            host_overhead_us: 0.0,
-            device_capacity: 1 << 30,
-            remote_capacity: 1 << 40,
-        }
+        HwConfig::test_default()
     }
 
     #[test]
@@ -77,42 +123,12 @@ mod tests {
         // fwd ops are long (10 ms) relative to the 8 ms store of their 8 MB
         // activation, so offloaded activations leave the device while later
         // layers still compute — that is where the peak reduction comes from.
-        let mut b = GraphBuilder::new();
-        let mut acts = Vec::new();
-        let mut prev = None;
-        for i in 0..4 {
-            let a = b.tensor(&format!("act{i}"), 8 << 20, Tier::Device);
-            let o = b.compute(&format!("fwd{i}"), 10e9, 0, prev.map(|p| vec![p]).unwrap_or_default(), vec![a]);
-            let _ = o;
-            acts.push(a);
-            prev = Some(a);
-        }
-        let mut mid_prev: Option<usize> = None;
-        for i in 0..24 {
-            let t = b.tensor(&format!("m{i}"), 0, Tier::Device);
-            let o = b.compute(&format!("mid{i}"), 1e9, 0, vec![], vec![t]);
-            if let Some(p) = mid_prev {
-                b.dep(o, p);
-            } else {
-                b.dep(o, 3);
-            }
-            mid_prev = Some(o);
-        }
-        let mut bwd_prev = mid_prev;
-        for (i, &a) in acts.iter().enumerate().rev() {
-            let t = b.tensor(&format!("g{i}"), 0, Tier::Device);
-            let o = b.compute(&format!("bwd{i}"), 10e9, 0, vec![a], vec![t]);
-            if let Some(p) = bwd_prev {
-                b.dep(o, p);
-            }
-            bwd_prev = Some(o);
-        }
-        let mut g = b.build();
+        let mut g = GraphBuilder::fwd_bwd_chain(4, 8 << 20, 10e9, 24, 1e9);
 
         let base_order = g.topo_order().unwrap();
         let base = simulate(&g, &base_order, &hw());
 
-        let report = compile(&mut g, &hw(), &OffloadPolicy::default(), &ExecOrderConfig::default());
+        let report = Compiler::new(hw()).verify(true).compile(&mut g).unwrap();
         assert!(!report.inserted.is_empty(), "no cache ops inserted");
         let opt = simulate(&g, &report.order, &hw());
 
@@ -130,5 +146,8 @@ mod tests {
             opt.makespan_us,
             base.makespan_us
         );
+        // The session report carries one entry per default pass.
+        assert_eq!(report.per_pass.len(), 3);
+        assert!(report.cache_hits > 0, "analysis cache never hit");
     }
 }

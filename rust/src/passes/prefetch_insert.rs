@@ -57,7 +57,7 @@ pub struct InsertionResult {
     pub rejected: usize,
 }
 
-/// Select offload candidates from lifetime analysis.
+/// Select offload candidates, running a fresh lifetime analysis.
 pub fn select_candidates(
     graph: &Graph,
     order: &[OpId],
@@ -65,6 +65,18 @@ pub fn select_candidates(
     policy: &OffloadPolicy,
 ) -> (Vec<OffloadPlan>, usize) {
     let la = LifetimeAnalysis::run(graph, order);
+    select_candidates_with(graph, order, &la, hw, policy)
+}
+
+/// Select offload candidates from a precomputed (e.g. session-cached)
+/// lifetime analysis. `la` must have been computed for `order`.
+pub fn select_candidates_with(
+    graph: &Graph,
+    order: &[OpId],
+    la: &LifetimeAnalysis,
+    hw: &HwConfig,
+    policy: &OffloadPolicy,
+) -> (Vec<OffloadPlan>, usize) {
     let mut plans = Vec::new();
     let mut rejected = 0usize;
 
@@ -156,10 +168,24 @@ pub fn select_candidates(
 }
 
 /// Rewrite `graph` in place, inserting Store/Prefetch pairs (or lone
-/// Prefetches for remote-home tensors) for `plans`. Returns
-/// `(store_or_prefetch, prefetch)` pairs — for store-less plans both ids
-/// are the prefetch.
-pub fn insert_cache_ops(graph: &mut Graph, plans: &[OffloadPlan]) -> Vec<(OpId, OpId)> {
+/// Prefetches for remote-home tensors) for `plans`. `order` is the
+/// (pre-insertion) execution order the plans were selected against.
+/// Returns `(store_or_prefetch, prefetch)` pairs — for store-less plans
+/// both ids are the prefetch.
+///
+/// Every consumer at-or-after the idle window is control-dep'd on the
+/// prefetch — not just `before_op`. With only the first consumer wired, a
+/// later consumer with no path to the prefetch could be scheduled inside
+/// the offload window and read a tensor that has left the device.
+pub fn insert_cache_ops(
+    graph: &mut Graph,
+    plans: &[OffloadPlan],
+    order: &[OpId],
+) -> Vec<(OpId, OpId)> {
+    let mut pos = vec![usize::MAX; graph.ops.len()];
+    for (i, &o) in order.iter().enumerate() {
+        pos[o] = i;
+    }
     let mut inserted = Vec::with_capacity(plans.len());
     for p in plans {
         let tname = graph.tensor(p.tensor).name.clone();
@@ -183,6 +209,24 @@ pub fn insert_cache_ops(graph: &mut Graph, plans: &[OffloadPlan]) -> Vec<(OpId, 
             graph.add_control_dep(pf, st);
         }
         graph.add_control_dep(p.before_op, pf);
+        // Consumers inside/after the window wait for the transfer too.
+        // Remote-home tensors (no Store) have no pre-window resident copy,
+        // so every consumer waits.
+        let anchor_pos = if p.after_op.is_some() {
+            pos.get(p.before_op).copied().unwrap_or(0)
+        } else {
+            0
+        };
+        let consumers: Vec<OpId> = graph.consumers_of(p.tensor).to_vec();
+        for c in consumers {
+            if c == pf || Some(c) == st || graph.op(c).kind.is_cache_op() {
+                continue;
+            }
+            let cpos = pos.get(c).copied().unwrap_or(usize::MAX);
+            if cpos != usize::MAX && cpos >= anchor_pos {
+                graph.add_control_dep(c, pf);
+            }
+        }
         inserted.push((st.unwrap_or(pf), pf));
     }
     inserted
@@ -195,8 +239,21 @@ pub fn run(
     hw: &HwConfig,
     policy: &OffloadPolicy,
 ) -> InsertionResult {
-    let (plans, rejected) = select_candidates(graph, order, hw, policy);
-    let inserted = insert_cache_ops(graph, &plans);
+    let la = LifetimeAnalysis::run(graph, order);
+    run_with(graph, order, &la, hw, policy)
+}
+
+/// Full pass with a caller-supplied (e.g. session-cached) lifetime
+/// analysis — what `PrefetchInsertPass` drives.
+pub fn run_with(
+    graph: &mut Graph,
+    order: &[OpId],
+    la: &LifetimeAnalysis,
+    hw: &HwConfig,
+    policy: &OffloadPolicy,
+) -> InsertionResult {
+    let (plans, rejected) = select_candidates_with(graph, order, la, hw, policy);
+    let inserted = insert_cache_ops(graph, &plans, order);
     InsertionResult { plans, inserted, rejected }
 }
 
@@ -226,17 +283,7 @@ mod tests {
     }
 
     fn hw() -> HwConfig {
-        HwConfig {
-            compute_tflops: 1.0,
-            hbm_gbps: 1e9,
-            d2r_gbps: 1.0,
-            r2d_gbps: 1.0,
-            link_latency_us: 0.0,
-            net_gbps: 1.0,
-            host_overhead_us: 0.0,
-            device_capacity: 1 << 30,
-            remote_capacity: 1 << 40,
-        }
+        HwConfig::test_default()
     }
 
     #[test]
@@ -324,6 +371,38 @@ mod tests {
             opt.residency_byte_time(),
             base.residency_byte_time()
         );
+    }
+
+    #[test]
+    fn all_post_window_consumers_wait_for_the_prefetch() {
+        // act consumed by bwd1 AND bwd2 after the idle window; both must be
+        // ordered after the prefetch, or one could read inside the window.
+        let mut b = GraphBuilder::new();
+        let act = b.tensor("act", 2 << 20, Tier::Device);
+        let s1 = b.tensor("s1", 0, Tier::Device);
+        let s2 = b.tensor("s2", 0, Tier::Device);
+        b.compute("fwd", 1e6, 0, vec![], vec![act]);
+        let mut prev = None;
+        for i in 0..6 {
+            let t = b.tensor(&format!("m{i}"), 0, Tier::Device);
+            let inputs = prev.map(|p| vec![p]).unwrap_or_default();
+            let o = b.compute(&format!("mid{i}"), 1e9, 0, inputs, vec![t]);
+            if i == 0 {
+                b.dep(o, 0);
+            }
+            prev = Some(t);
+        }
+        let bwd1 = b.compute("bwd1", 1e6, 0, vec![act, prev.unwrap()], vec![s1]);
+        let bwd2 = b.compute("bwd2", 1e6, 0, vec![act], vec![s2]);
+        b.dep(bwd2, bwd1);
+        let mut g = b.build();
+        let order = g.topo_order().unwrap();
+        let res = run(&mut g, &order, &hw(), &OffloadPolicy::default());
+        assert_eq!(res.inserted.len(), 1);
+        let (_, pf) = res.inserted[0];
+        assert!(g.op(bwd1).control_deps.contains(&pf), "bwd1 not wired to prefetch");
+        assert!(g.op(bwd2).control_deps.contains(&pf), "bwd2 not wired to prefetch");
+        assert!(g.validate().is_ok());
     }
 
     #[test]

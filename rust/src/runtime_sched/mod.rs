@@ -13,8 +13,15 @@
 //! compute-stream stall ops for the control overhead — then the shared
 //! [`crate::sim`] engine measures the result, so baseline and HyperOffload
 //! numbers come from identical machinery.
+//!
+//! Under the session API the baseline is *just another pipeline
+//! configuration*: [`ReactivePass`] implements
+//! [`Pass`](crate::passes::Pass), so
+//! `Compiler::empty(hw).pass(ReactivePass::new(cfg))` compiles a workload
+//! the way the reactive runtime would execute it.
 
-use crate::graph::{Graph, OpId, OpKind, TensorId, Tier};
+use crate::graph::{CycleError, Graph, OpId, OpKind, TensorId, Tier};
+use crate::passes::{AnalysisCache, CompileError, Compiler, Pass, PassCtx, PassReport};
 use crate::sim::{HwConfig, SimResult};
 
 /// How the runtime decides when to move data.
@@ -60,7 +67,18 @@ fn stall_flops(us: f64, hw: &HwConfig) -> f64 {
 /// runtime would fire them (a plain topo sort would let them drift).
 pub fn transform(graph: &Graph, cfg: &ReactiveConfig, hw: &HwConfig) -> (Graph, Vec<OpId>) {
     let mut g = graph.clone();
-    let order = g.topo_order().expect("reactive transform: cyclic graph");
+    let order = transform_into(&mut g, cfg, hw).expect("reactive transform: cyclic graph");
+    (g, order)
+}
+
+/// In-place [`transform`]: rewrites `g` and returns the dispatch order.
+/// This is the body [`ReactivePass`] drives inside a compile session.
+fn transform_into(
+    g: &mut Graph,
+    cfg: &ReactiveConfig,
+    hw: &HwConfig,
+) -> Result<Vec<OpId>, CycleError> {
+    let order = g.topo_order_detailed()?;
     // Compute ops in execution order (the "device pipeline").
     let compute_order: Vec<OpId> = order
         .iter()
@@ -72,29 +90,29 @@ pub fn transform(graph: &Graph, cfg: &ReactiveConfig, hw: &HwConfig) -> (Graph, 
         .copied()
         .filter(|&o| !matches!(g.op(o).kind, OpKind::Compute { .. }))
         .collect();
-    let pos_in_compute = |op: OpId| compute_order.iter().position(|&x| x == op);
 
-    // Remote tensors consumed by compute ops, ordered by first consumer.
-    let mut targets: Vec<(TensorId, OpId)> = Vec::new();
+    // Remote tensors consumed by compute ops, ordered by first consumer
+    // (collected up front: the loop below mutates the graph).
+    let mut targets: Vec<(TensorId, String, OpId)> = Vec::new();
     for t in &g.tensors {
         if t.home != Tier::Remote {
             continue;
         }
-        if let Some(&u) = graph
+        if let Some(&u) = g
             .consumers_of(t.id)
             .iter()
-            .find(|&&c| matches!(graph.op(c).kind, OpKind::Compute { .. }))
+            .find(|&&c| matches!(g.op(c).kind, OpKind::Compute { .. }))
         {
-            targets.push((t.id, u));
+            targets.push((t.id, t.name.clone(), u));
         }
     }
-    targets.sort_by_key(|&(_, u)| pos_in_compute(u).unwrap_or(usize::MAX));
+    let pos_in_compute = |op: OpId| compute_order.iter().position(|&x| x == op);
+    targets.sort_by_key(|&(_, _, u)| pos_in_compute(u).unwrap_or(usize::MAX));
 
     // fire_at[j] = ops dispatched just before compute_order[j].
     let mut fire_at: Vec<Vec<OpId>> = vec![Vec::new(); compute_order.len() + 1];
     let mut transfers = 0usize;
-    for (t, u) in targets {
-        let tname = g.tensor(t).name.clone();
+    for (t, tname, u) in targets {
         let u_pos = pos_in_compute(u).unwrap_or(0);
         // Where does the runtime fire? OnDemand: at the consumer itself.
         // Prefetch{k}: k compute ops earlier.
@@ -148,34 +166,65 @@ pub fn transform(graph: &Graph, cfg: &ReactiveConfig, hw: &HwConfig) -> (Graph, 
     }
     exec.extend(fire_at[compute_order.len()].iter().copied());
     debug_assert!(g.is_valid_order(&exec), "reactive dispatch order invalid");
-    (g, exec)
+    Ok(exec)
 }
 
-/// Convenience: transform + simulate with the runtime's dispatch order.
+/// The reactive runtime as a compiler pass: under the session API the
+/// paper's baseline is just another pipeline configuration —
+/// `Compiler::empty(hw).pass(ReactivePass::new(cfg))`.
+#[derive(Debug, Clone, Default)]
+pub struct ReactivePass {
+    pub cfg: ReactiveConfig,
+}
+
+impl ReactivePass {
+    pub fn new(cfg: ReactiveConfig) -> Self {
+        Self { cfg }
+    }
+}
+
+impl Pass for ReactivePass {
+    fn name(&self) -> &'static str {
+        "reactive-runtime"
+    }
+
+    fn run(
+        &mut self,
+        g: &mut Graph,
+        _cache: &mut AnalysisCache,
+        ctx: &PassCtx,
+    ) -> Result<PassReport, CompileError> {
+        let before = g.ops.len();
+        let order = transform_into(g, &self.cfg, &ctx.hw)?;
+        let mut rep = PassReport::new(self.name());
+        rep.diagnostics.push(crate::passes::Diagnostic::info(
+            self.name(),
+            format!("{} runtime ops (loads/stalls/compactions) wired", g.ops.len() - before),
+        ));
+        rep.order = Some(order);
+        Ok(rep)
+    }
+}
+
+/// Convenience: compile the reactive configuration and simulate with the
+/// runtime's dispatch order.
 pub fn simulate_reactive(graph: &Graph, cfg: &ReactiveConfig, hw: &HwConfig) -> SimResult {
-    let (g, order) = transform(graph, cfg, hw);
-    crate::sim::simulate(&g, &order, hw)
+    let mut g = graph.clone();
+    let report = Compiler::empty(hw.clone())
+        .pass(ReactivePass::new(cfg.clone()))
+        .compile(&mut g)
+        .expect("reactive transform: cyclic graph");
+    crate::sim::simulate(&g, &report.order, hw)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::GraphBuilder;
-    use crate::passes::{compile, ExecOrderConfig, OffloadPolicy};
     use crate::sim::simulate;
 
     fn hw() -> HwConfig {
-        HwConfig {
-            compute_tflops: 1.0,
-            hbm_gbps: 1e9,
-            d2r_gbps: 1.0,
-            r2d_gbps: 1.0,
-            link_latency_us: 0.0,
-            net_gbps: 1.0,
-            host_overhead_us: 50.0,
-            device_capacity: 1 << 30,
-            remote_capacity: 1 << 40,
-        }
+        HwConfig::test_default().with_host_overhead(50.0)
     }
 
     /// 8 ops à 100us, each consuming a 50us-transfer remote weight.
@@ -229,7 +278,7 @@ mod tests {
             &hw(),
         );
         let mut g = base.clone();
-        let report = compile(&mut g, &hw(), &OffloadPolicy::default(), &ExecOrderConfig::default());
+        let report = Compiler::new(hw()).compile(&mut g).unwrap();
         let ours = simulate(&g, &report.order, &hw());
         assert!(
             ours.makespan_us < reactive.makespan_us * 0.8,

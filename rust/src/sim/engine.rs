@@ -68,6 +68,9 @@ pub struct SimResult {
     pub overlapped_comm_us: f64,
     /// Total DMA (prefetch+store) busy time.
     pub dma_busy_us: f64,
+    /// Total bytes moved across the device boundary (Prefetch + Store) —
+    /// the fabric-traffic quantity `ElideRedundantTransfers` minimises.
+    pub dma_bytes: u64,
     /// Peak device-memory residency (bytes).
     pub peak_device_bytes: u64,
     /// (time_us, resident_bytes) residency curve, one point per change.
@@ -149,6 +152,7 @@ pub fn simulate(graph: &Graph, order: &[OpId], hw: &HwConfig) -> SimResult {
     }
 
     // --- list scheduling ---------------------------------------------------
+    let mut dma_bytes = 0u64;
     for &op_id in order {
         let op = graph.op(op_id);
         let stream = stream_of(&op.kind);
@@ -176,10 +180,12 @@ pub fn simulate(graph: &Graph, order: &[OpId], hw: &HwConfig) -> SimResult {
             OpKind::Prefetch { tensor } => {
                 // Destination reserved at transfer start.
                 mem_events.push((s, graph.tensor(tensor).bytes as i64));
+                dma_bytes += graph.tensor(tensor).bytes;
             }
             OpKind::Store { tensor } => {
                 // Device copy released once the transfer completes.
                 mem_events.push((f, -(graph.tensor(tensor).bytes as i64)));
+                dma_bytes += graph.tensor(tensor).bytes;
             }
             OpKind::Detach { tensor } => {
                 mem_events.push((f, -(graph.tensor(tensor).bytes as i64)));
@@ -265,6 +271,7 @@ pub fn simulate(graph: &Graph, order: &[OpId], hw: &HwConfig) -> SimResult {
         exposed_comm_us: exposed,
         overlapped_comm_us: overlapped,
         dma_busy_us: dma_busy,
+        dma_bytes,
         peak_device_bytes: peak.max(0) as u64,
         residency,
         intervals,
@@ -276,18 +283,9 @@ mod tests {
     use super::*;
     use crate::graph::GraphBuilder;
 
+    // 1 TFLOP/s -> 1e6 flops = 1 us; 1 GB/s -> 1 KB = 1 us.
     fn hw() -> HwConfig {
-        HwConfig {
-            compute_tflops: 1.0,   // 1 TFLOP/s -> 1e6 flops = 1 us
-            hbm_gbps: 1000.0,
-            d2r_gbps: 1.0,         // 1 GB/s -> 1 KB = 1 us
-            r2d_gbps: 1.0,
-            link_latency_us: 0.0,
-            net_gbps: 1.0,
-            host_overhead_us: 0.0,
-            device_capacity: 1 << 30,
-            remote_capacity: 1 << 40,
-        }
+        HwConfig::test_default()
     }
 
     #[test]
@@ -366,6 +364,8 @@ mod tests {
         let final_res = r.residency.last().unwrap().1;
         assert_eq!(final_res, 0);
         assert_eq!(r.peak_device_bytes, 4096);
+        // The store's 4096 bytes are the only fabric traffic.
+        assert_eq!(r.dma_bytes, 4096);
     }
 
     #[test]

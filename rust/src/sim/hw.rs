@@ -53,6 +53,26 @@ impl HwConfig {
         }
     }
 
+    /// Deterministic unit-test fixture with round numbers: 1 TFLOP/s
+    /// compute (1e6 flops = 1 us), 1 GB/s symmetric pool links (1 KB =
+    /// 1 us), zero link latency and host overhead, effectively unlimited
+    /// HBM bandwidth, 1 GiB device / 1 TiB pool capacity. The single
+    /// source of the hand-rolled `hw()` fixtures that used to be copied
+    /// across the pass, sim, and baseline test modules.
+    pub fn test_default() -> Self {
+        Self {
+            compute_tflops: 1.0,
+            hbm_gbps: 1e9,
+            d2r_gbps: 1.0,
+            r2d_gbps: 1.0,
+            link_latency_us: 0.0,
+            net_gbps: 1.0,
+            host_overhead_us: 0.0,
+            device_capacity: 1 << 30,
+            remote_capacity: 1 << 40,
+        }
+    }
+
     /// Same platform with a different symmetric pool bandwidth (Fig. 6 sweep).
     pub fn with_pool_bandwidth(mut self, gbps: f64) -> Self {
         self.d2r_gbps = gbps;
@@ -62,6 +82,13 @@ impl HwConfig {
 
     pub fn with_device_capacity(mut self, bytes: u64) -> Self {
         self.device_capacity = bytes;
+        self
+    }
+
+    /// Same platform with a different CPU control-path overhead (us) per
+    /// runtime-issued memory operation.
+    pub fn with_host_overhead(mut self, us: f64) -> Self {
+        self.host_overhead_us = us;
         self
     }
 

@@ -26,7 +26,7 @@ pub struct StepGraph {
 
 /// Generate the training-step graph for one device. Requires `pp == 1`
 /// (the paper's hierarchical configs; pipelined baselines are costed
-/// analytically in [`super::step`]).
+/// analytically by [`super::baseline_step`]).
 pub fn build_step_graph(model: &ModelPreset, par: &ParallelCfg) -> StepGraph {
     assert_eq!(par.pp, 1, "graph generation models pp=1 layouts");
     let layers = model.n_layers;

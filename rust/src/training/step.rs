@@ -2,7 +2,7 @@
 //! Tables 1–2 configurations) and graph-driven hierarchical execution
 //! (compile pipeline + simulator, the Fig. 6 curves).
 
-use crate::passes::{compile, ExecOrderConfig, OffloadPolicy};
+use crate::passes::{Compiler, OffloadPolicy};
 use crate::sim::{simulate, HwConfig};
 
 use super::graph_gen::build_step_graph;
@@ -87,7 +87,10 @@ pub fn baseline_step(model: &ModelPreset, par: &ParallelCfg, hw: &HwConfig) -> S
 pub fn hierarchical_step(model: &ModelPreset, par: &ParallelCfg, hw: &HwConfig) -> StepBreakdown {
     let mut sg = build_step_graph(model, par);
     let policy = OffloadPolicy { min_bytes: 16 << 20, ..Default::default() };
-    let report = compile(&mut sg.graph, hw, &policy, &ExecOrderConfig::default());
+    let report = Compiler::new(hw.clone())
+        .policy(policy)
+        .compile(&mut sg.graph)
+        .expect("hierarchical_step: generated step graph must compile");
     let sim = simulate(&sg.graph, &report.order, hw);
 
     // EP all-to-all (MoE) is not in the generated graph; add serially like

@@ -2,7 +2,7 @@
 //! whole-system behaviours no single module test covers.
 
 use hyperoffload::graph::{GraphBuilder, OpId, Tier};
-use hyperoffload::passes::{compile, ExecOrderConfig, OffloadPolicy};
+use hyperoffload::passes::Compiler;
 use hyperoffload::runtime_sched::{simulate_reactive, ReactiveConfig, ReactiveMode};
 use hyperoffload::serving::{EngineConfig, ModelCost, SimServingEngine, WorkloadConfig};
 use hyperoffload::sim::{simulate, HwConfig, GB};
@@ -46,7 +46,7 @@ fn compiled_schedule_never_slower_than_program_order_across_seeds() {
         let reactive = simulate_reactive(&g0, &ReactiveConfig::default(), &hw());
 
         let mut g = g0.clone();
-        let report = compile(&mut g, &hw(), &OffloadPolicy::default(), &ExecOrderConfig::default());
+        let report = Compiler::new(hw()).verify(true).compile(&mut g).unwrap();
         assert!(g.is_valid_order(&report.order), "seed {seed}");
         let ours = simulate(&g, &report.order, &hw());
 
@@ -74,7 +74,7 @@ fn fig3_motivation_ordering_holds() {
         &hw(),
     );
     let mut g = g0.clone();
-    let report = compile(&mut g, &hw(), &OffloadPolicy::default(), &ExecOrderConfig::default());
+    let report = Compiler::new(hw()).compile(&mut g).unwrap();
     let ours = simulate(&g, &report.order, &hw());
 
     assert!(serial.makespan_us > runtime_pf.makespan_us);
@@ -141,7 +141,7 @@ fn cache_op_count_scales_with_offloadable_tensors() {
     let mut counts = Vec::new();
     for n in [8usize, 16, 32] {
         let mut g = GraphBuilder::chain_with_remote_weights(n, 2e12, 1 << 20, GB / 10).0;
-        let report = compile(&mut g, &hw(), &OffloadPolicy::default(), &ExecOrderConfig::default());
+        let report = Compiler::new(hw()).compile(&mut g).unwrap();
         counts.push(report.inserted.len());
     }
     assert!(counts[0] < counts[1] && counts[1] < counts[2], "{counts:?}");
@@ -151,10 +151,85 @@ fn cache_op_count_scales_with_offloadable_tensors() {
 fn exec_order_determinism_across_runs() {
     let mk = || {
         let mut g = random_workload(99, 20);
-        let report = compile(&mut g, &hw(), &OffloadPolicy::default(), &ExecOrderConfig::default());
+        let report = Compiler::new(hw()).compile(&mut g).unwrap();
         report.order
     };
     let a: Vec<OpId> = mk();
     let b: Vec<OpId> = mk();
     assert_eq!(a, b, "compilation must be deterministic");
+}
+
+/// Golden: the `Compiler` session with default passes is bit-identical to
+/// the deprecated `compile()` shim on the §5.1 miniature and this suite's
+/// workloads — the contract that lets every caller migrate safely.
+#[test]
+#[allow(deprecated)]
+fn golden_compiler_matches_deprecated_compile() {
+    use hyperoffload::passes::{compile, ExecOrderConfig, OffloadPolicy};
+
+    let mut workloads: Vec<hyperoffload::graph::Graph> =
+        vec![GraphBuilder::fwd_bwd_chain(4, 8 << 20, 10e9, 24, 1e9)];
+    for seed in 0..6u64 {
+        workloads.push(random_workload(seed, 24));
+    }
+    workloads.push(GraphBuilder::chain_with_remote_weights(16, 4e12, 1 << 20, 2 * GB / 10).0);
+
+    for (i, g0) in workloads.into_iter().enumerate() {
+        let mut old_g = g0.clone();
+        let old =
+            compile(&mut old_g, &hw(), &OffloadPolicy::default(), &ExecOrderConfig::default());
+        let mut new_g = g0;
+        let new = Compiler::new(hw()).compile(&mut new_g).unwrap();
+
+        assert_eq!(old.order, new.order, "workload {i}: order diverged");
+        assert_eq!(old.inserted, new.inserted, "workload {i}: insertions diverged");
+        assert_eq!(old.rejected, new.rejected, "workload {i}: rejections diverged");
+        assert_eq!(old.moved, new.moved, "workload {i}: refinement diverged");
+
+        let so = simulate(&old_g, &old.order, &hw());
+        let sn = simulate(&new_g, &new.order, &hw());
+        assert_eq!(so.peak_device_bytes, sn.peak_device_bytes, "workload {i}: peak diverged");
+        assert_eq!(
+            so.makespan_us.to_bits(),
+            sn.makespan_us.to_bits(),
+            "workload {i}: makespan diverged"
+        );
+        assert_eq!(so.dma_bytes, sn.dma_bytes, "workload {i}: traffic diverged");
+    }
+}
+
+/// `ElideRedundantTransfers` cuts fabric traffic on the offload
+/// round-trip workload without costing makespan (acceptance criterion of
+/// the session-API redesign).
+#[test]
+fn elide_redundant_transfers_cuts_fabric_traffic() {
+    let thw = HwConfig::test_default(); // 1 GiB device vs 32 MB of acts
+    let g0 = GraphBuilder::fwd_bwd_chain(4, 8 << 20, 10e9, 24, 1e9);
+
+    let mut g1 = g0.clone();
+    let r1 = Compiler::new(thw.clone()).compile(&mut g1).unwrap();
+    let s1 = simulate(&g1, &r1.order, &thw);
+    assert!(!r1.inserted.is_empty(), "fixture must offload something");
+
+    let mut g2 = g0;
+    let r2 = Compiler::new(thw.clone())
+        .elide_redundant_transfers()
+        .verify(true)
+        .compile(&mut g2)
+        .unwrap();
+    let s2 = simulate(&g2, &r2.order, &thw);
+
+    assert!(r2.elided > 0, "nothing elided");
+    assert!(
+        s2.dma_bytes < s1.dma_bytes,
+        "fabric traffic not reduced: {} vs {}",
+        s2.dma_bytes,
+        s1.dma_bytes
+    );
+    assert!(
+        s2.makespan_us <= s1.makespan_us * 1.01,
+        "elision cost makespan: {} vs {}",
+        s2.makespan_us,
+        s1.makespan_us
+    );
 }

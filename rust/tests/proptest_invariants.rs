@@ -17,11 +17,18 @@
 //!     dispatched == completed + rejected (no request lost), the shared
 //!     pool never exceeds its capacity, and every replica's residency
 //!     curve has non-decreasing timestamps.
+//!  P8 The Compiler session's final order is a valid topological order
+//!     satisfying every cache-op control dep, and the between-stage
+//!     verifier stays clean on arbitrary DAGs.
+//!  P9 The verifier rejects hand-corrupted IR: a Prefetch of a dangling
+//!     tensor, and a consumer not ordered after transfer completion.
+//!  P10 Cyclic graphs surface as structured errors (try_build /
+//!     CompileError::Cycle) naming the culprit ops, instead of a panic.
 
-use hyperoffload::graph::{Graph, GraphBuilder, Tier};
+use hyperoffload::graph::{Graph, GraphBuilder, OpKind, Tier};
 use hyperoffload::kvcache::{KvCacheManager, KvPolicy, NsaConfig};
 use hyperoffload::memory::DeviceAllocator;
-use hyperoffload::passes::{compile, refine, ExecOrderConfig, OffloadPolicy};
+use hyperoffload::passes::{refine, CompileError, Compiler, ExecOrderConfig, OffloadPolicy};
 use hyperoffload::serving::{
     ClusterConfig, EngineConfig, ModelCost, Request, RoutePolicy, Router, SimCluster,
     WorkloadConfig,
@@ -95,7 +102,7 @@ fn p2_residency_never_negative_and_peak_bounds() {
         let mut rng = Rng::new(seed + 1000);
         let hw = hw(&mut rng);
         let mut g = random_graph(&mut rng);
-        let report = compile(&mut g, &hw, &OffloadPolicy::default(), &ExecOrderConfig::default());
+        let report = Compiler::new(hw.clone()).compile(&mut g).unwrap();
         let sim = simulate(&g, &report.order, &hw);
         for &(t, bytes) in &sim.residency {
             assert!(t >= 0.0, "seed {seed}");
@@ -262,6 +269,99 @@ fn p7_cluster_conserves_requests_pool_and_time() {
             }
             assert!(r.residency.iter().all(|&(_, b)| b <= r.peak_device_bytes));
         }
+    }
+}
+
+#[test]
+fn p8_compiler_order_valid_and_verifier_clean_on_random_dags() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed + 7000);
+        let hw = hw(&mut rng);
+        let mut g = random_graph(&mut rng);
+        let report = Compiler::new(hw)
+            .policy(OffloadPolicy { min_bytes: 1 << 18, ..Default::default() })
+            .verify(true)
+            .compile(&mut g)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert!(g.is_valid_order(&report.order), "seed {seed}");
+        let mut pos = vec![usize::MAX; g.ops.len()];
+        for (i, &o) in report.order.iter().enumerate() {
+            pos[o] = i;
+        }
+        for op in &g.ops {
+            // Every control dep around cache operators is satisfied by the
+            // final order (prefetch completion precedes consumers, stores
+            // follow their anchor, etc.).
+            for &d in &op.control_deps {
+                if op.kind.is_cache_op() || g.op(d).kind.is_cache_op() {
+                    assert!(
+                        pos[d] < pos[op.id],
+                        "seed {seed}: cache-op dep {d} !< {}",
+                        op.id
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn p9_verifier_rejects_corrupted_prefetch() {
+    let hw = HwConfig::ascend910c_like();
+
+    // (a) Prefetch pointing at a dangling tensor id.
+    let mut b = GraphBuilder::new();
+    let w = b.tensor("w", 1 << 20, Tier::Remote);
+    let x = b.tensor("x", 64, Tier::Device);
+    let pf = b.prefetch("pf.w", w);
+    let c = b.compute("mm", 1e9, 0, vec![w], vec![x]);
+    b.dep(c, pf);
+    let mut g = b.build();
+    g.ops[pf].kind = OpKind::Prefetch { tensor: 999 };
+    g.ops[pf].inputs = vec![999];
+    match Compiler::empty(hw.clone()).verify(true).compile(&mut g) {
+        Err(CompileError::Verify { violations, .. }) => {
+            assert!(!violations.is_empty());
+        }
+        other => panic!("dangling prefetch accepted: {other:?}"),
+    }
+
+    // (b) Consumer with no dependency path from the prefetch: placement
+    // after the transfer is not completion ordering (streams overlap).
+    let mut b = GraphBuilder::new();
+    let w = b.tensor("w", 1 << 20, Tier::Remote);
+    let y = b.tensor("y", 64, Tier::Device);
+    let _pf = b.prefetch("pf.w", w);
+    let _c = b.compute("mm", 1e9, 0, vec![w], vec![y]); // no dep on pf
+    let mut g = b.build();
+    match Compiler::empty(hw).verify(true).compile(&mut g) {
+        Err(CompileError::Verify { .. }) => {}
+        other => panic!("consumer-before-completion accepted: {other:?}"),
+    }
+}
+
+#[test]
+fn p10_cycles_surface_as_structured_errors() {
+    let build = || {
+        let mut b = GraphBuilder::new();
+        let t0 = b.tensor("t0", 8, Tier::Device);
+        let t1 = b.tensor("t1", 8, Tier::Device);
+        let a = b.compute("a", 1e6, 0, vec![], vec![t0]);
+        let c = b.compute("c", 1e6, 0, vec![t0], vec![t1]);
+        b.dep(a, c); // back edge
+        (b, a, c)
+    };
+    let (b, a, c) = build();
+    let err = b.try_build().unwrap_err();
+    assert!(err.culprit_ops.contains(&a) && err.culprit_ops.contains(&c));
+
+    let (b, a, c) = build();
+    let mut g = b.build(); // deferred path still constructs the graph
+    match Compiler::new(HwConfig::ascend910c_like()).compile(&mut g) {
+        Err(CompileError::Cycle { culprit_ops }) => {
+            assert!(culprit_ops.contains(&a) && culprit_ops.contains(&c));
+        }
+        other => panic!("expected CompileError::Cycle, got {other:?}"),
     }
 }
 
