@@ -94,9 +94,56 @@ impl Graph {
             let prev = self.producer.insert(t, id);
             debug_assert!(prev.is_none(), "tensor {t} produced twice");
         }
-        self.ops.push(Op { id, name: name.into(), kind, inputs, outputs, control_deps: vec![] });
+        self.ops.push(Op {
+            id,
+            name: name.into(),
+            kind,
+            inputs,
+            outputs,
+            control_deps: vec![],
+            recompute: false,
+        });
         self.version += 1;
         id
+    }
+
+    /// Replace every occurrence of `old` in `op`'s inputs with `new`,
+    /// keeping the consumer index consistent. No-op when `op` does not read
+    /// `old`. Used by the recompute pass to point offload-window consumers
+    /// at the regenerated clone of a discarded tensor.
+    pub fn replace_input(&mut self, op: OpId, old: TensorId, new: TensorId) {
+        debug_assert!(new < self.tensors.len(), "replacement tensor {new} unknown");
+        let mut changed = false;
+        for t in self.ops[op].inputs.iter_mut() {
+            if *t == old {
+                *t = new;
+                changed = true;
+            }
+        }
+        if !changed {
+            return;
+        }
+        if let Some(v) = self.consumers.get_mut(&old) {
+            v.retain(|&c| c != op);
+        }
+        let v = self.consumers.entry(new).or_default();
+        if !v.contains(&op) {
+            v.push(op);
+        }
+        self.version += 1;
+    }
+
+    /// Append `t` to `op`'s inputs (creating the data edge producer(t) →
+    /// op). No-op if the op already reads `t`. Used by the SLO throttle to
+    /// make consumers wait on chunked prefetches.
+    pub fn add_input(&mut self, op: OpId, t: TensorId) {
+        debug_assert!(t < self.tensors.len(), "input tensor {t} unknown");
+        if self.ops[op].inputs.contains(&t) {
+            return;
+        }
+        self.ops[op].inputs.push(t);
+        self.consumers.entry(t).or_default().push(op);
+        self.version += 1;
     }
 
     /// Add an explicit ordering edge `dep → op`.
@@ -371,6 +418,130 @@ impl Graph {
     pub fn bytes_in_tier(&self, tier: Tier) -> u64 {
         self.tensors.iter().filter(|t| t.home == tier).map(|t| t.bytes).sum()
     }
+
+    /// Plan (without mutating) the producer subgraph that would regenerate
+    /// `target` from tensors the `available` predicate accepts: walk
+    /// producers transitively, stopping at available inputs. Fails
+    /// (`None`) when the walk hits a tensor with no producer, a non-compute
+    /// producer, or needs more than `max_ops` ops — those tensors cannot be
+    /// recomputed, only transferred.
+    ///
+    /// The plan is the cost side of the recompute-vs-offload decision: the
+    /// pass compares `Σ compute_us(flops, bytes)` over `op_costs` against
+    /// the tensor's exposed transfer cost before committing to a clone.
+    pub fn recompute_plan(
+        &self,
+        target: TensorId,
+        available: &dyn Fn(&Graph, TensorId) -> bool,
+        max_ops: usize,
+    ) -> Option<RecomputePlan> {
+        let mut planned_ops: Vec<OpId> = Vec::new(); // producers before consumers
+        let mut planned_set: Vec<bool> = vec![false; self.ops.len()];
+        // Recursive expand-then-emit DFS so the emitted op order is
+        // producers-first. `depth` prunes the descent: every recursion
+        // level corresponds to at least one op the plan would have to
+        // clone, so a chain deeper than `max_ops` can never fit the cap —
+        // bail before recursing instead of after walking the whole chain.
+        fn visit(
+            g: &Graph,
+            t: TensorId,
+            available: &dyn Fn(&Graph, TensorId) -> bool,
+            max_ops: usize,
+            depth: usize,
+            planned_ops: &mut Vec<OpId>,
+            planned_set: &mut Vec<bool>,
+        ) -> bool {
+            if depth >= max_ops {
+                return false;
+            }
+            let Some(p) = g.producer_of(t) else { return false };
+            if planned_set[p] {
+                return true;
+            }
+            if !matches!(g.op(p).kind, OpKind::Compute { .. }) {
+                return false;
+            }
+            for &i in &g.op(p).inputs {
+                if available(g, i) {
+                    continue;
+                }
+                if !visit(g, i, available, max_ops, depth + 1, planned_ops, planned_set) {
+                    return false;
+                }
+            }
+            if planned_ops.len() >= max_ops {
+                return false;
+            }
+            planned_set[p] = true;
+            planned_ops.push(p);
+            true
+        }
+        if !visit(self, target, available, max_ops, 0, &mut planned_ops, &mut planned_set) {
+            return None;
+        }
+        let op_costs = planned_ops
+            .iter()
+            .map(|&o| match self.op(o).kind {
+                OpKind::Compute { flops, bytes_accessed } => (flops, bytes_accessed),
+                _ => unreachable!("plan admits compute ops only"),
+            })
+            .collect();
+        Some(RecomputePlan { target, ops: planned_ops, op_costs })
+    }
+
+    /// Materialise a [`recompute_plan`](Self::recompute_plan): clone the
+    /// planned producer ops (marked [`Op::recompute`], fresh `.rc` output
+    /// tensors) so the graph regenerates `plan.target` instead of holding /
+    /// reloading it. Returns the clone of `plan.target` plus the new op
+    /// ids; the caller rewires consumers ([`replace_input`](Self::replace_input))
+    /// and anchors the clones where the recompute should issue.
+    pub fn clone_recompute_subgraph(&mut self, plan: &RecomputePlan) -> RecomputeClone {
+        let mut tensor_map: HashMap<TensorId, TensorId> = HashMap::new();
+        let mut new_ops = Vec::with_capacity(plan.ops.len());
+        for &p in &plan.ops {
+            let (name, kind, inputs, outputs) = {
+                let op = self.op(p);
+                (op.name.clone(), op.kind.clone(), op.inputs.clone(), op.outputs.clone())
+            };
+            let mut new_outputs: Vec<TensorId> = Vec::with_capacity(outputs.len());
+            for &o in &outputs {
+                let (tname, tbytes, thome) = {
+                    let t = self.tensor(o);
+                    (t.name.clone(), t.bytes, t.home)
+                };
+                let nt = self.add_tensor(format!("{tname}.rc"), tbytes, thome);
+                tensor_map.insert(o, nt);
+                new_outputs.push(nt);
+            }
+            let new_inputs: Vec<TensorId> =
+                inputs.iter().map(|&i| tensor_map.get(&i).copied().unwrap_or(i)).collect();
+            let id = self.add_op(format!("recompute.{name}"), kind, new_inputs, new_outputs);
+            self.ops[id].recompute = true;
+            new_ops.push(id);
+        }
+        RecomputeClone { tensor: tensor_map[&plan.target], ops: new_ops }
+    }
+}
+
+/// A planned (not yet materialised) recompute subgraph: which ops must be
+/// replayed to regenerate one tensor, and what each replay costs.
+#[derive(Debug, Clone)]
+pub struct RecomputePlan {
+    /// The tensor the plan regenerates.
+    pub target: TensorId,
+    /// Original ops to clone, producers before consumers.
+    pub ops: Vec<OpId>,
+    /// `(flops, bytes_accessed)` of each planned op, aligned with `ops`.
+    pub op_costs: Vec<(f64, u64)>,
+}
+
+/// Result of materialising a [`RecomputePlan`].
+#[derive(Debug, Clone)]
+pub struct RecomputeClone {
+    /// The freshly produced clone of the plan's target tensor.
+    pub tensor: TensorId,
+    /// The cloned ops (all marked [`Op::recompute`]), producers first.
+    pub ops: Vec<OpId>,
 }
 
 #[cfg(test)]
@@ -488,6 +659,64 @@ mod tests {
         g.add_control_dep(0, 3); // a after d -> cycle through all four
         let err = g.topo_order_detailed().unwrap_err();
         assert_eq!(err.culprit_ops, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn replace_and_add_input_keep_consumer_index_consistent() {
+        let mut g = diamond();
+        let t4 = g.add_tensor("t4", 8, Tier::Device);
+        g.add_op("e", OpKind::Compute { flops: 1.0, bytes_accessed: 8 }, vec![], vec![t4]);
+        // d now reads t4 instead of t1.
+        g.replace_input(3, 1, t4);
+        assert!(!g.consumers_of(1).contains(&3));
+        assert!(g.consumers_of(t4).contains(&3));
+        assert!(g.op(3).inputs.contains(&t4) && !g.op(3).inputs.contains(&1));
+        // b additionally waits on t4.
+        let v = g.version();
+        g.add_input(1, t4);
+        assert!(g.consumers_of(t4).contains(&1));
+        assert!(g.version() > v);
+        g.add_input(1, t4); // idempotent
+        assert_eq!(g.consumers_of(t4).iter().filter(|&&c| c == 1).count(), 1);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn recompute_plan_walks_until_available_inputs() {
+        let g = diamond();
+        // Everything available: regenerating t3 replays only d.
+        let all = |_: &Graph, _: TensorId| true;
+        let p = g.recompute_plan(3, &all, 8).unwrap();
+        assert_eq!(p.ops, vec![3]);
+        // t1/t2 unavailable: the plan recursively pulls in b and c (t0
+        // still available), producers before consumers.
+        let only_t0 = |_: &Graph, x: TensorId| x == 0;
+        let p = g.recompute_plan(3, &only_t0, 8).unwrap();
+        assert_eq!(*p.ops.last().unwrap(), 3);
+        assert!(p.ops.contains(&1) && p.ops.contains(&2));
+        assert_eq!(p.op_costs.len(), 3);
+        // Nothing available: t0 has no producer below it -> a is cloned
+        // too; with a cap of 2 ops the plan must fail instead.
+        let none = |_: &Graph, _: TensorId| false;
+        assert!(g.recompute_plan(3, &none, 8).is_some());
+        assert!(g.recompute_plan(3, &none, 2).is_none());
+    }
+
+    #[test]
+    fn clone_recompute_subgraph_marks_and_rewires() {
+        let mut g = diamond();
+        let only_t0 = |_: &Graph, x: TensorId| x == 0;
+        let plan = g.recompute_plan(3, &only_t0, 8).unwrap();
+        let n_ops = g.ops.len();
+        let clone = g.clone_recompute_subgraph(&plan);
+        assert_eq!(g.ops.len(), n_ops + 3);
+        assert!(clone.ops.iter().all(|&o| g.op(o).recompute));
+        assert!(g.tensor(clone.tensor).name.ends_with(".rc"));
+        // The cloned chain reads the available t0, not clones of it.
+        let first = g.op(clone.ops[0]);
+        assert!(first.inputs.contains(&0));
+        assert!(g.validate().is_ok());
+        assert_eq!(g.producer_of(clone.tensor), Some(*clone.ops.last().unwrap()));
     }
 
     #[test]

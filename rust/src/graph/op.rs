@@ -72,6 +72,12 @@ pub struct Op {
     /// Explicit ordering edges beyond data dependencies (what the prefetch
     /// insertion pass wires between cache ops and consumers).
     pub control_deps: Vec<OpId>,
+    /// True for ops cloned by the recompute-vs-offload decision pass: the
+    /// op replays its original's FLOPs to regenerate a discarded tensor
+    /// instead of transferring it back. The simulator accounts their busy
+    /// time separately (`SimResult::recompute_us`, the paper's Fig. 6
+    /// "recompute" bar).
+    pub recompute: bool,
 }
 
 #[cfg(test)]

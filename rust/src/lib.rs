@@ -39,10 +39,13 @@
 //! ([`passes::CompileError`] — cycles carry their culprit ops, verifier
 //! findings their diagnostics). Adding an optimisation means registering a
 //! pass, not forking the pipeline: [`passes::ElideRedundantTransfers`]
-//! (round-trip elision) and
-//! [`runtime_sched::ReactivePass`] (the paper's reactive baseline as a
-//! pipeline configuration) are both expressed this way. See the [`passes`]
-//! module docs for the pipeline diagram and a custom-pass walkthrough.
+//! (capacity-aware round-trip elision),
+//! [`passes::RecomputeVsOffload`] (speculate-then-validate recompute vs
+//! transfer), [`passes::SloThrottle`] (SLO-bounded transfer deferral /
+//! splitting) and [`runtime_sched::ReactivePass`] (the paper's reactive
+//! baseline as a pipeline configuration) are all expressed this way. See
+//! the [`passes`] module docs for the pipeline diagram, the decision-pass
+//! cost model, and a custom-pass walkthrough.
 //!
 //! ## Cluster-scale serving
 //!

@@ -144,6 +144,12 @@ impl From<CycleError> for CompileError {
 pub struct AnalysisCache {
     topo: Option<(u64, Vec<OpId>)>,
     lifetime: Option<(u64, LifetimeAnalysis)>,
+    /// Execution order pinned by an order-producing pass (exec-order),
+    /// version-keyed like the analyses. Later decision passes (the SLO
+    /// throttle) start from this instead of a raw topological order, so
+    /// their speculate/validate baseline is the schedule the session would
+    /// otherwise emit.
+    pinned: Option<(u64, Vec<OpId>)>,
     /// Cache hits across the session (perf counter).
     pub hits: usize,
     /// Cache misses (recomputations) across the session.
@@ -185,11 +191,30 @@ impl AnalysisCache {
         Ok(self.lifetime.as_ref().unwrap().1.clone())
     }
 
+    /// Pin `order` as the session's current execution order for `g` (valid
+    /// until the next structural mutation).
+    pub fn pin_order(&mut self, g: &Graph, order: Vec<OpId>) {
+        debug_assert!(g.is_valid_order(&order), "pin_order: invalid order");
+        self.pinned = Some((g.version(), order));
+    }
+
+    /// The pinned execution order if one is fresh for `g`, else the plain
+    /// topological order.
+    pub fn pinned_or_topo(&mut self, g: &Graph) -> Result<Vec<OpId>, CompileError> {
+        if let Some((v, o)) = &self.pinned {
+            if *v == g.version() {
+                return Ok(o.clone());
+            }
+        }
+        self.topo_order(g)
+    }
+
     /// Drop all cached analyses (they would also lapse naturally on the
     /// next version mismatch).
     pub fn invalidate(&mut self) {
         self.topo = None;
         self.lifetime = None;
+        self.pinned = None;
     }
 }
 
@@ -199,6 +224,29 @@ pub struct PassCtx {
     pub hw: HwConfig,
     pub policy: OffloadPolicy,
     pub exec: ExecOrderConfig,
+    /// Latency SLO for the compiled schedule (us): the training step-time
+    /// target or the serving decode/step budget. Consumed by the SLO
+    /// throttle pass; `None` disables SLO shaping.
+    pub slo_us: Option<f64>,
+    /// Fabric-contention slowdown (≥ 1.0) the decision passes assume on
+    /// the device↔pool link — the compile-time counterpart of
+    /// [`Fabric::slowdown`](crate::sim::Fabric::slowdown) when sibling
+    /// devices share the SuperNode fabric. 1.0 = private link.
+    pub dma_contention: f64,
+}
+
+impl PassCtx {
+    /// The session hardware with the assumed fabric contention folded into
+    /// the device↔pool link rates — what decision passes cost transfers
+    /// (and speculate/validate simulations) against.
+    pub fn contended_hw(&self) -> HwConfig {
+        let mut hw = self.hw.clone();
+        if self.dma_contention > 1.0 {
+            hw.d2r_gbps /= self.dma_contention;
+            hw.r2d_gbps /= self.dma_contention;
+        }
+        hw
+    }
 }
 
 /// What one pass did: structured counters + diagnostics, plus the
@@ -216,6 +264,10 @@ pub struct PassReport {
     pub moved: usize,
     /// Transfer round trips elided.
     pub elided: usize,
+    /// Offload round trips replaced by recompute subgraphs.
+    pub recomputed: usize,
+    /// Prefetches deferred or split by SLO throttling.
+    pub throttled: usize,
     /// Execution order produced by this pass, if it pins one.
     pub order: Option<Vec<OpId>>,
     pub diagnostics: Vec<Diagnostic>,
@@ -335,6 +387,7 @@ impl Pass for ExecOrderPass {
             format!("{} cache ops moved ({} positions evaluated)", r.moved, r.evaluated),
         ));
         rep.moved = r.moved;
+        cache.pin_order(g, r.order.clone());
         rep.order = Some(r.order);
         Ok(rep)
     }
@@ -613,6 +666,10 @@ pub struct CompileReport {
     pub moved: usize,
     /// Transfer round trips elided (see `ElideRedundantTransfers`).
     pub elided: usize,
+    /// Offload round trips replaced by recompute (see `RecomputeVsOffload`).
+    pub recomputed: usize,
+    /// Prefetches deferred or split by SLO throttling (see `SloThrottle`).
+    pub throttled: usize,
     /// One report per pipeline stage, in execution order.
     pub per_pass: Vec<PassReport>,
     /// All diagnostics emitted across the session.
@@ -640,6 +697,8 @@ pub struct Compiler {
     hw: HwConfig,
     policy: OffloadPolicy,
     exec: ExecOrderConfig,
+    slo_us: Option<f64>,
+    dma_contention: f64,
     passes: Vec<Box<dyn Pass>>,
     verify: bool,
 }
@@ -652,6 +711,8 @@ impl Compiler {
             hw,
             policy: OffloadPolicy::default(),
             exec: ExecOrderConfig::default(),
+            slo_us: None,
+            dma_contention: 1.0,
             passes: vec![
                 Box::new(LifetimePass),
                 Box::new(PrefetchInsertPass),
@@ -667,6 +728,8 @@ impl Compiler {
             hw,
             policy: OffloadPolicy::default(),
             exec: ExecOrderConfig::default(),
+            slo_us: None,
+            dma_contention: 1.0,
             passes: Vec::new(),
             verify: false,
         }
@@ -681,6 +744,20 @@ impl Compiler {
     /// Set the Algorithm 1 cost-model configuration.
     pub fn exec(mut self, cfg: ExecOrderConfig) -> Self {
         self.exec = cfg;
+        self
+    }
+
+    /// Set the latency SLO (us) the schedule must respect — the budget the
+    /// [`SloThrottle`](super::SloThrottle) pass shapes transfers against.
+    pub fn slo_us(mut self, us: f64) -> Self {
+        self.slo_us = Some(us);
+        self
+    }
+
+    /// Assume a fabric-contention slowdown (≥ 1.0) on the device↔pool link
+    /// for all decision-pass cost models and validation simulations.
+    pub fn contention(mut self, slowdown: f64) -> Self {
+        self.dma_contention = slowdown.max(1.0);
         self
     }
 
@@ -709,7 +786,30 @@ impl Compiler {
     /// (inserted before exec-order, where the round trips are visible but
     /// not yet anchored).
     pub fn elide_redundant_transfers(self) -> Self {
-        self.pass_before("exec-order", super::elide::ElideRedundantTransfers::default())
+        self.elide_redundant_transfers_with(super::elide::ElideRedundantTransfers::default())
+    }
+
+    /// [`elide_redundant_transfers`](Self::elide_redundant_transfers) with
+    /// an explicit capacity policy (headroom / reserved bytes).
+    pub fn elide_redundant_transfers_with(
+        self,
+        pass: super::elide::ElideRedundantTransfers,
+    ) -> Self {
+        self.pass_before("exec-order", pass)
+    }
+
+    /// Enable the [`RecomputeVsOffload`](super::RecomputeVsOffload)
+    /// decision pass (appended after exec-order so it speculates against
+    /// the refined schedule the session would otherwise emit).
+    pub fn recompute_vs_offload(self) -> Self {
+        self.pass(super::recompute::RecomputeVsOffload::default())
+    }
+
+    /// Enable the [`SloThrottle`](super::SloThrottle) pass (appended after
+    /// exec-order, where it shapes the otherwise-final schedule against the
+    /// session SLO). A no-op unless [`slo_us`](Self::slo_us) is set.
+    pub fn slo_throttle(self) -> Self {
+        self.pass(super::slo_throttle::SloThrottle::default())
     }
 
     /// Drive the pipeline over `graph`.
@@ -723,6 +823,8 @@ impl Compiler {
             hw: self.hw.clone(),
             policy: self.policy.clone(),
             exec: self.exec.clone(),
+            slo_us: self.slo_us,
+            dma_contention: self.dma_contention,
         };
         let mut cache = AnalysisCache::new();
         let mut diagnostics: Vec<Diagnostic> = Vec::new();
@@ -777,12 +879,16 @@ impl Compiler {
         let rejected = per_pass.iter().map(|r| r.rejected).sum();
         let moved = per_pass.iter().map(|r| r.moved).sum();
         let elided = per_pass.iter().map(|r| r.elided).sum();
+        let recomputed = per_pass.iter().map(|r| r.recomputed).sum();
+        let throttled = per_pass.iter().map(|r| r.throttled).sum();
         Ok(CompileReport {
             order: final_order,
             inserted,
             rejected,
             moved,
             elided,
+            recomputed,
+            throttled,
             per_pass,
             diagnostics,
             cache_hits: cache.hits,

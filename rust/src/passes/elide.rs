@@ -28,14 +28,27 @@ use super::compiler::{AnalysisCache, CompileError, Diagnostic, Pass, PassCtx, Pa
 #[derive(Debug, Clone)]
 pub struct ElideRedundantTransfers {
     /// Keep a round trip unless peak residency *without* it stays within
-    /// `headroom` × device capacity. Default 0.9: never trade the last 10%
-    /// of HBM for saved fabric traffic.
+    /// `headroom` × the usable device capacity. Default 0.9: never trade
+    /// the last 10% of HBM for saved fabric traffic.
     pub headroom: f64,
+    /// Device bytes spoken for outside the compiled graph (resident
+    /// weights, gradient buffers) — subtracted from capacity before the
+    /// headroom test. The training preset feeds its fixed working set
+    /// here so elision decisions are capacity-aware end to end.
+    pub reserved_bytes: u64,
 }
 
 impl Default for ElideRedundantTransfers {
     fn default() -> Self {
-        Self { headroom: 0.9 }
+        Self { headroom: 0.9, reserved_bytes: 0 }
+    }
+}
+
+impl ElideRedundantTransfers {
+    /// Elision with `reserved` bytes of device capacity considered already
+    /// occupied outside the graph.
+    pub fn with_reserved(reserved: u64) -> Self {
+        Self { reserved_bytes: reserved, ..Default::default() }
     }
 }
 
@@ -51,7 +64,8 @@ impl Pass for ElideRedundantTransfers {
         ctx: &PassCtx,
     ) -> Result<PassReport, CompileError> {
         let mut rep = PassReport::new(self.name());
-        let budget = (ctx.hw.device_capacity as f64 * self.headroom) as u64;
+        let usable = ctx.hw.device_capacity.saturating_sub(self.reserved_bytes);
+        let budget = (usable as f64 * self.headroom) as u64;
         let mut decided: HashSet<TensorId> = HashSet::new();
         let mut elided = 0usize;
         let mut saved_bytes = 0u64;

@@ -7,23 +7,64 @@
 //! an ordered list of [`Pass`]es, sharing one [`AnalysisCache`]:
 //!
 //! ```text
-//!             Compiler::new(hw).policy(p).exec(cfg).verify(true)
+//!          Compiler::new(hw).policy(p).exec(cfg).slo_us(t).verify(true)
 //!             ┌──────────────────────────────────────────────────────┐
 //!  Graph ───▶ │ LifetimePass          §3.2 lifetime / idle windows   │
 //!             │ PrefetchInsertPass    §4.2.2 cache-op insertion      │
-//!             │ (ElideRedundantTransfers     opt-in traffic elision) │
+//!             │ (ElideRedundantTransfers   opt-in, capacity-aware    │
+//!             │                            round-trip elision)       │
+//!             │ (RecomputeVsOffload        opt-in: replay cheap      │
+//!             │                            producers vs transfer)    │
 //!             │ ExecOrderPass         §4.3 Algorithm 1 refinement    │
+//!             │ (SloThrottle               opt-in: defer/split       │
+//!             │                            prefetches under an SLO)  │
 //!             └──────────────────────────────────────────────────────┘
 //!                  │                    ▲
 //!                  ▼                    │ memoised topo order +
-//!             verify_ir (between   AnalysisCache  lifetimes, keyed on
-//!             stages when enabled)      Graph::version()
+//!             verify_ir (between   AnalysisCache  lifetimes + pinned
+//!             stages when enabled)      order, keyed on Graph::version()
 //!
 //!  ──▶ Result<CompileReport { order, per-pass reports, diagnostics }>
 //! ```
 //!
 //! Cyclic graphs surface as [`CompileError::Cycle`] (with the culprit
 //! ops), verifier findings as [`CompileError::Verify`] — no panics.
+//!
+//! ## Decision passes and their cost model
+//!
+//! The insertion pass only ever decides "offload and prefetch"; two
+//! opt-in *decision passes* change that decision when the cost model says
+//! a transfer is the wrong tool. Both speculate a rewrite, re-simulate the
+//! live graph under the session's assumed fabric contention
+//! ([`PassCtx::contended_hw`]), and roll back anything that regresses —
+//! so neither can make the compiled schedule worse than what it was fed.
+//!
+//! **[`RecomputeVsOffload`]** ([`Compiler::recompute_vs_offload`]) —
+//! recompute wins when replaying a tensor's producer subgraph from
+//! still-resident inputs costs less than the round trip's *exposed*
+//! transfer time:
+//!
+//! ```text
+//! exposed(t)  = max(roundtrip(t) − window_compute(t),   // lifetime window
+//!                   roundtrip(t) × DMA-overcommit share) // ΣDMA > Σcompute
+//! recompute(t) = Σ compute_us(flops, bytes) over the replay subgraph
+//! speculate when recompute(t) ≤ margin × exposed(t)
+//! ```
+//!
+//! On an idle fabric every inserted round trip hides inside its window, so
+//! `exposed ≈ 0` and nothing flips; as the link saturates (low bandwidth,
+//! or `Compiler::contention` > 1 for shared-fabric compiles), transfers
+//! become the critical path and cheap producers are replayed instead.
+//!
+//! **[`SloThrottle`]** ([`Compiler::slo_throttle`] + [`Compiler::slo_us`])
+//! — transfer *timing* shaped against a latency SLO. The budget is global:
+//! `max(slo, entry makespan)`. Greedily (latest consumers first) the pass
+//! defers prefetches to later anchors and splits oversized pool-resident
+//! prefetches into chunked transfers, committing only rewrites that keep
+//! the re-simulated makespan within budget, never raise peak residency
+//! above the entry schedule, and strictly reduce peak or residency
+//! byte·time — spending SLO slack to spill bytes into pool headroom
+//! rather than letting early transfers camp in HBM.
 //!
 //! ## Writing a custom pass
 //!
@@ -71,6 +112,8 @@ pub mod elide;
 pub mod exec_order;
 pub mod lifetime;
 pub mod prefetch_insert;
+pub mod recompute;
+pub mod slo_throttle;
 
 use crate::graph::Graph;
 use crate::sim::HwConfig;
@@ -83,6 +126,8 @@ pub use elide::ElideRedundantTransfers;
 pub use exec_order::{refine, refine_from, ExecOrderConfig, Refinement};
 pub use lifetime::{Lifetime, LifetimeAnalysis};
 pub use prefetch_insert::{InsertionResult, OffloadPlan, OffloadPolicy};
+pub use recompute::RecomputeVsOffload;
+pub use slo_throttle::SloThrottle;
 
 /// The legacy positional-config entry point, kept as a thin shim over the
 /// default [`Compiler`] pipeline with identical output.

@@ -1,0 +1,556 @@
+//! `RecomputeVsOffload`: weigh regenerating a tensor against round-tripping
+//! it through the pool — the first pass that *changes* an offload decision
+//! instead of only placing transfers.
+//!
+//! The insertion pass (§4.2.2) decides "offload and prefetch" for every
+//! profitable candidate. On a saturated device↔pool link that is not the
+//! only option: a tensor whose producer's FLOPs are cheap relative to its
+//! bytes can be *discarded* and replayed from still-resident inputs just
+//! before its next use (SuperOffload's speculate-then-validate tradeoff,
+//! dominant on superchips where compute outruns the offload fabric).
+//!
+//! ## Cost model
+//!
+//! For each inserted `Store`/`Prefetch` round trip over tensor `t`:
+//!
+//! * **exposed-transfer cost** — the round trip's wire time under the
+//!   session's assumed fabric contention ([`PassCtx::contended_hw`]),
+//!   minus the compute available inside `t`'s idle window (from the cached
+//!   lifetimes) that could hide it, floored by the *global* DMA
+//!   overcommit share: when ΣDMA > Σcompute the streams are the critical
+//!   path and every round trip is at least proportionally exposed.
+//! * **recompute cost** — Σ `compute_us(flops, bytes)` over the producer
+//!   subgraph that regenerates `t` from still-resident tensors
+//!   ([`Graph::recompute_plan`]); tensors whose inputs have left the
+//!   device recursively extend the plan until `max_clone_ops` caps it.
+//!
+//! Recompute is *speculated* when its cost is within `margin` × the
+//! exposed-transfer estimate, then **validated**: the rewrite (drop the
+//! round trip, release the original copy with a `Detach`, clone the
+//! producer subgraph anchored just before the first post-window consumer,
+//! rewire those consumers to the clone) is applied to a trial graph,
+//! re-refined with Algorithm 1, and re-simulated; decisions that fail to
+//! strictly improve makespan or peak residency — or that regress either —
+//! are rolled back.
+//!
+//! The pass runs *after* exec-order, so its baseline is the session's
+//! pinned (refined) schedule — exactly what an offload-only pipeline would
+//! emit. Because every commit is validated against that baseline and each
+//! commit re-pins the refined trial order, the pipeline with this pass
+//! never simulates worse than the same pipeline without it, and is
+//! strictly better whenever at least one decision lands.
+
+use std::collections::HashSet;
+
+use crate::graph::{Graph, OpId, OpKind, RecomputePlan, TensorId, Tier};
+use crate::sim::simulate;
+
+use super::compiler::{AnalysisCache, CompileError, Diagnostic, Pass, PassCtx, PassReport};
+
+/// The recompute-vs-offload decision pass. See the module docs for the
+/// cost model.
+#[derive(Debug, Clone)]
+pub struct RecomputeVsOffload {
+    /// Speculate a recompute when its cost is ≤ `margin` × the exposed
+    /// transfer estimate. 1.0 = only when the model says it outright wins.
+    pub margin: f64,
+    /// Upper bound on ops cloned per recompute subgraph (deep replay
+    /// chains stop paying for themselves quickly).
+    pub max_clone_ops: usize,
+    /// Safety bound on committed decisions per compile.
+    pub max_decisions: usize,
+}
+
+impl Default for RecomputeVsOffload {
+    fn default() -> Self {
+        Self { margin: 1.0, max_clone_ops: 4, max_decisions: 64 }
+    }
+}
+
+/// One enumerated round-trip candidate.
+struct Candidate {
+    tensor: TensorId,
+    store: OpId,
+    prefetch: OpId,
+    /// Position of the first post-window consumer.
+    u_pos: usize,
+    /// Model-estimated benefit (exposed transfer − recompute cost), us.
+    benefit: f64,
+    /// The replay subgraph the score was computed from — applied verbatim
+    /// so scoring and rewrite can never diverge.
+    plan: RecomputePlan,
+}
+
+impl Pass for RecomputeVsOffload {
+    fn name(&self) -> &'static str {
+        "recompute-vs-offload"
+    }
+
+    fn run(
+        &mut self,
+        g: &mut Graph,
+        cache: &mut AnalysisCache,
+        ctx: &PassCtx,
+    ) -> Result<PassReport, CompileError> {
+        let mut rep = PassReport::new(self.name());
+        let chw = ctx.contended_hw();
+        let mut decided: HashSet<TensorId> = HashSet::new();
+        let mut accepted = 0usize;
+        let mut rejected = 0usize;
+        let mut saved_dma_bytes = 0u64;
+        let mut final_order: Option<Vec<OpId>> = None;
+
+        // Baseline: the schedule the session would otherwise emit —
+        // exec-order's pinned order (topo on custom pipelines). Both the
+        // order and its simulation stay valid across rejected
+        // speculations; only commits change the graph.
+        let mut order = cache.pinned_or_topo(g)?;
+        let mut cur = simulate(g, &order, &chw);
+        // One decision at a time: each commit renumbers ops, so candidates
+        // are re-enumerated from the live graph (same protocol as elide).
+        while accepted < self.max_decisions {
+            let Some(c) = self.best_candidate(g, &order, &chw, &decided) else { break };
+            decided.insert(c.tensor);
+
+            // Speculate on a trial copy: rewrite, re-run Algorithm 1 on
+            // the rewritten graph, then validate by re-simulation.
+            match apply_recompute(g, &order, &c) {
+                Some(mut trial) => {
+                    let Ok(topo) = trial.topo_order_detailed() else { continue };
+                    let refined =
+                        crate::passes::exec_order::refine_from(&mut trial, topo, &ctx.hw, &ctx.exec);
+                    let sim = simulate(&trial, &refined.order, &chw);
+                    let improves = sim.makespan_us < cur.makespan_us * (1.0 - 1e-9)
+                        || (sim.makespan_us <= cur.makespan_us * (1.0 + 1e-9)
+                            && sim.peak_device_bytes < cur.peak_device_bytes);
+                    let regresses = sim.makespan_us > cur.makespan_us * (1.0 + 1e-9)
+                        || sim.peak_device_bytes > cur.peak_device_bytes;
+                    if improves && !regresses {
+                        let name = g.tensor(c.tensor).name.clone();
+                        let bytes = g.tensor(c.tensor).bytes;
+                        *g = trial;
+                        cache.pin_order(g, refined.order.clone());
+                        rep.diagnostics.push(Diagnostic::info(
+                            self.name(),
+                            format!(
+                                "recompute '{name}' instead of round-tripping it \
+                                 ({bytes} bytes each way): makespan {:.1} -> {:.1} us, \
+                                 peak {} -> {} bytes",
+                                cur.makespan_us,
+                                sim.makespan_us,
+                                cur.peak_device_bytes,
+                                sim.peak_device_bytes
+                            ),
+                        ));
+                        order = refined.order.clone();
+                        final_order = Some(refined.order);
+                        cur = sim;
+                        accepted += 1;
+                        saved_dma_bytes += 2 * bytes;
+                    } else {
+                        rejected += 1;
+                        rep.diagnostics.push(Diagnostic::info(
+                            self.name(),
+                            format!(
+                                "rolled back speculative recompute of '{}': simulated \
+                                 makespan {:.1} vs {:.1} us (validation failed)",
+                                g.tensor(c.tensor).name,
+                                sim.makespan_us,
+                                cur.makespan_us
+                            ),
+                        ));
+                    }
+                }
+                None => {
+                    rejected += 1;
+                }
+            }
+        }
+
+        rep.recomputed = accepted;
+        rep.order = final_order;
+        rep.diagnostics.push(Diagnostic::info(
+            self.name(),
+            format!(
+                "{accepted} round trip(s) replaced by recompute ({saved_dma_bytes} \
+                 device<->pool bytes saved), {rejected} speculation(s) rolled back"
+            ),
+        ));
+        Ok(rep)
+    }
+}
+
+impl RecomputeVsOffload {
+    /// Enumerate undecided round trips and return the one with the highest
+    /// model-estimated benefit (exposed transfer − recompute cost), if any
+    /// clears the speculation margin.
+    fn best_candidate(
+        &self,
+        g: &Graph,
+        order: &[OpId],
+        chw: &crate::sim::HwConfig,
+        decided: &HashSet<TensorId>,
+    ) -> Option<Candidate> {
+        let mut pos = vec![usize::MAX; g.ops.len()];
+        for (i, &o) in order.iter().enumerate() {
+            pos[o] = i;
+        }
+        let compute_us = |o: OpId| match g.op(o).kind {
+            OpKind::Compute { flops, bytes_accessed } => chw.compute_us(flops, bytes_accessed),
+            _ => 0.0,
+        };
+        // Global DMA overcommit: when the serial DMA streams carry more
+        // time than the compute stream, the excess is exposed somewhere
+        // regardless of placement.
+        let total_compute: f64 = (0..g.ops.len()).map(|o| compute_us(o)).sum();
+        let total_dma: f64 = g
+            .ops
+            .iter()
+            .map(|o| match o.kind {
+                OpKind::Prefetch { tensor } => chw.r2d_us(g.tensor(tensor).bytes),
+                OpKind::Store { tensor } => chw.d2r_us(g.tensor(tensor).bytes),
+                _ => 0.0,
+            })
+            .sum();
+        let overcommit = if total_dma > total_compute {
+            (total_dma - total_compute) / total_dma
+        } else {
+            0.0
+        };
+
+        let mut best: Option<Candidate> = None;
+        for t in &g.tensors {
+            if t.home != Tier::Device || decided.contains(&t.id) {
+                continue;
+            }
+            let (mut stores, mut prefetches, mut detaches) = (Vec::new(), Vec::new(), 0usize);
+            for op in &g.ops {
+                match op.kind {
+                    OpKind::Store { tensor } if tensor == t.id => stores.push(op.id),
+                    OpKind::Prefetch { tensor } if tensor == t.id => prefetches.push(op.id),
+                    OpKind::Detach { tensor } if tensor == t.id => detaches += 1,
+                    _ => {}
+                }
+            }
+            if detaches != 0 || stores.len() != 1 || prefetches.len() != 1 {
+                continue;
+            }
+            let (st, pf) = (stores[0], prefetches[0]);
+            if pos[st] >= pos[pf] {
+                continue;
+            }
+            // First consumer after the offload window opens.
+            let Some(u_pos) = g
+                .consumers_of(t.id)
+                .iter()
+                .filter(|&&c| !g.op(c).kind.is_cache_op() && pos[c] > pos[st])
+                .map(|&c| pos[c])
+                .min()
+            else {
+                continue;
+            };
+
+            let roundtrip = chw.d2r_us(t.bytes) + chw.r2d_us(t.bytes);
+            let window_compute: f64 =
+                order[pos[st] + 1..u_pos].iter().map(|&o| compute_us(o)).sum();
+            let exposed_est =
+                (roundtrip - window_compute).max(roundtrip * overcommit).max(0.0);
+            if exposed_est <= 0.0 {
+                continue;
+            }
+            let usable = available_at(g, order, u_pos);
+            let tid = t.id;
+            let avail = |_: &Graph, x: TensorId| x != tid && usable[x];
+            let Some(plan) = g.recompute_plan(t.id, &avail, self.max_clone_ops) else {
+                continue;
+            };
+            let rc_cost: f64 =
+                plan.op_costs.iter().map(|&(f, b)| chw.compute_us(f, b)).sum();
+            if rc_cost > self.margin * exposed_est {
+                continue;
+            }
+            let benefit = exposed_est - rc_cost;
+            if best.as_ref().map_or(true, |b| benefit > b.benefit) {
+                best = Some(Candidate {
+                    tensor: t.id,
+                    store: st,
+                    prefetch: pf,
+                    u_pos,
+                    benefit,
+                    plan,
+                });
+            }
+        }
+        best
+    }
+}
+
+/// Usability of every tensor as a recompute input at position `u_pos`:
+/// device residency per the cache-operator walk the verifier uses
+/// (device-home tensors are resident from their producer — or t=0 for
+/// graph inputs — unless released by a `Store`/`Detach`; remote-home
+/// tensors become resident at a `Prefetch`), minus any tensor with a
+/// cache op at/after `u_pos`: a clone reading a tensor whose reload
+/// `Prefetch` lands later could not be dependency-ordered after the
+/// transfer's completion, and one whose `Store`/`Detach` lands later has
+/// no ordering against that release — both are rightly rejected by the IR
+/// verifier. Refcount frees do not appear here — a new consumer at
+/// `u_pos` extends the refcount lifetime, so only cache-managed absence
+/// makes an input unusable.
+fn available_at(g: &Graph, order: &[OpId], u_pos: usize) -> Vec<bool> {
+    let mut avail: Vec<bool> = g
+        .tensors
+        .iter()
+        .map(|t| t.home == Tier::Device && g.producer_of(t.id).is_none())
+        .collect();
+    for &o in &order[..u_pos] {
+        match g.op(o).kind {
+            OpKind::Prefetch { tensor } => avail[tensor] = true,
+            OpKind::Store { tensor } | OpKind::Detach { tensor } => avail[tensor] = false,
+            _ => {
+                for &t in &g.op(o).outputs {
+                    if g.tensor(t).home == Tier::Device {
+                        avail[t] = true;
+                    }
+                }
+            }
+        }
+    }
+    for &o in &order[u_pos..] {
+        if let Some(t) = g.op(o).kind.cache_tensor() {
+            avail[t] = false;
+        }
+    }
+    avail
+}
+
+/// Apply one recompute decision to a trial clone of `g`: remove the round
+/// trip, clone the candidate's planned producer subgraph (anchored just
+/// before the first post-window consumer), rewire post-window consumers
+/// to the regenerated tensor, and wire prefetch-completion deps for any
+/// cache-managed inputs the clones read.
+fn apply_recompute(g: &Graph, order: &[OpId], c: &Candidate) -> Option<Graph> {
+    let mut pos = vec![usize::MAX; g.ops.len()];
+    for (i, &o) in order.iter().enumerate() {
+        pos[o] = i;
+    }
+    let tid = c.tensor;
+    let plan = &c.plan;
+
+    // Consumers inside/after the offload window read the clone instead.
+    let st_pos = pos[c.store];
+    let window_consumers: Vec<OpId> = g
+        .consumers_of(tid)
+        .iter()
+        .copied()
+        .filter(|&x| !g.op(x).kind.is_cache_op() && pos[x] > st_pos)
+        .collect();
+    // Anchor: the compute op immediately preceding the first post-window
+    // consumer — "replay HERE", the just-in-time placement Algorithm 1
+    // would pick for the prefetch this replaces.
+    let anchor = order[..c.u_pos]
+        .iter()
+        .rev()
+        .copied()
+        .find(|&o| matches!(g.op(o).kind, OpKind::Compute { .. }));
+
+    let mut trial = g.clone();
+    let clone = trial.clone_recompute_subgraph(plan);
+    let map = trial.remove_ops(&[c.store, c.prefetch]);
+    let clone_ops: Vec<OpId> = clone.ops.iter().map(|&o| map[o].unwrap()).collect();
+
+    for &w in &window_consumers {
+        trial.replace_input(map[w]?, tid, clone.tensor);
+    }
+    // The original copy is now discarded, not transferred: release its
+    // residency after every consumer still reading it (its producer if
+    // none remain) — the Store used to perform this free.
+    let keepers: Vec<OpId> = g
+        .consumers_of(tid)
+        .iter()
+        .copied()
+        .filter(|&x| !g.op(x).kind.is_cache_op() && pos[x] <= st_pos)
+        .collect();
+    let dt = trial.add_op(
+        format!("detach.{}", g.tensor(tid).name),
+        OpKind::Detach { tensor: tid },
+        vec![tid],
+        vec![],
+    );
+    if keepers.is_empty() {
+        if let Some(p) = g.producer_of(tid) {
+            trial.add_control_dep(dt, map[p]?);
+        }
+    } else {
+        for &k in &keepers {
+            trial.add_control_dep(dt, map[k]?);
+        }
+    }
+    if let Some(a) = anchor {
+        for &ro in &clone_ops {
+            trial.add_control_dep(ro, map[a]?);
+        }
+    }
+    // Clones consuming a prefetched tensor must be dependency-ordered
+    // after that transfer's completion (verifier rule: placement after the
+    // prefetch is not completion ordering).
+    for &ro in &clone_ops {
+        let inputs = trial.op(ro).inputs.clone();
+        for x in inputs {
+            for old in 0..g.ops.len() {
+                if matches!(g.op(old).kind, OpKind::Prefetch { tensor } if tensor == x)
+                    && pos[old] < c.u_pos
+                {
+                    if let Some(new_pf) = map[old] {
+                        trial.add_control_dep(ro, new_pf);
+                    }
+                }
+            }
+        }
+    }
+    Some(trial)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::passes::{Compiler, OffloadPolicy};
+    use crate::sim::HwConfig;
+
+    /// A producer whose activation is cheap to replay: 1 ms of compute vs
+    /// a 2 MB round trip. On a slow link the round trip is exposed and the
+    /// decision pass should flip it to recompute.
+    fn workload() -> Graph {
+        let mut b = GraphBuilder::new();
+        let act = b.tensor("act", 2 << 20, crate::graph::Tier::Device);
+        let sink = b.tensor("sink", 0, crate::graph::Tier::Device);
+        b.compute("fwd", 1e9, 0, vec![], vec![act]);
+        let mut prev = None;
+        for i in 0..6 {
+            let t = b.tensor(&format!("m{i}"), 0, crate::graph::Tier::Device);
+            let inputs = prev.map(|p| vec![p]).unwrap_or_default();
+            let o = b.compute(&format!("mid{i}"), 1e9, 0, inputs, vec![t]);
+            if i == 0 {
+                b.dep(o, 0);
+            }
+            prev = Some(t);
+        }
+        b.compute("bwd", 1e9, 0, vec![act, prev.unwrap()], vec![sink]);
+        b.build()
+    }
+
+    /// Slow link: the 2 MB round trip takes ~42 ms against 6 ms of window
+    /// compute — thoroughly exposed.
+    fn slow_link_hw() -> HwConfig {
+        let mut hw = HwConfig::test_default();
+        hw.d2r_gbps = 0.1;
+        hw.r2d_gbps = 0.1;
+        hw
+    }
+
+    /// Loose policy so insertion still offloads on the slow link.
+    fn aggressive() -> OffloadPolicy {
+        OffloadPolicy { coverage: 0.1, ..Default::default() }
+    }
+
+    #[test]
+    fn recompute_beats_exposed_round_trip() {
+        let mut a = workload();
+        let ra = Compiler::new(slow_link_hw())
+            .policy(aggressive())
+            .compile(&mut a)
+            .unwrap();
+        let sa = simulate(&a, &ra.order, &slow_link_hw());
+        assert!(!ra.inserted.is_empty(), "fixture must offload");
+
+        let mut b = workload();
+        let rb = Compiler::new(slow_link_hw())
+            .policy(aggressive())
+            .recompute_vs_offload()
+            .verify(true)
+            .compile(&mut b)
+            .unwrap();
+        let sb = simulate(&b, &rb.order, &slow_link_hw());
+
+        assert_eq!(rb.recomputed, 1, "round trip must flip to recompute");
+        assert!(
+            sb.makespan_us < sa.makespan_us,
+            "recompute did not beat offload: {} !< {}",
+            sb.makespan_us,
+            sa.makespan_us
+        );
+        assert!(sb.peak_device_bytes <= sa.peak_device_bytes);
+        assert!(sb.recompute_us > 0.0, "recompute time must be accounted");
+        assert!(sb.dma_bytes < sa.dma_bytes);
+        assert!(b.ops.iter().any(|o| o.recompute), "clone must be marked");
+    }
+
+    #[test]
+    fn hidden_round_trips_are_left_alone() {
+        // Fast link: the round trip hides inside the window; recompute has
+        // nothing to win and must not fire.
+        let mut g = workload();
+        let r = Compiler::new(HwConfig::test_default())
+            .recompute_vs_offload()
+            .verify(true)
+            .compile(&mut g)
+            .unwrap();
+        assert!(!r.inserted.is_empty());
+        assert_eq!(r.recomputed, 0, "hidden transfers must stay transfers");
+    }
+
+    #[test]
+    fn expensive_producers_are_not_replayed() {
+        // Producer flops dominate the transfer: the margin test rejects the
+        // speculation before simulation.
+        let mut b = GraphBuilder::new();
+        let act = b.tensor("act", 2 << 20, crate::graph::Tier::Device);
+        let sink = b.tensor("sink", 0, crate::graph::Tier::Device);
+        b.compute("fwd", 200e9, 0, vec![], vec![act]); // 200 ms to replay
+        let mut prev = None;
+        for i in 0..6 {
+            let t = b.tensor(&format!("m{i}"), 0, crate::graph::Tier::Device);
+            let inputs = prev.map(|p| vec![p]).unwrap_or_default();
+            let o = b.compute(&format!("mid{i}"), 1e9, 0, inputs, vec![t]);
+            if i == 0 {
+                b.dep(o, 0);
+            }
+            prev = Some(t);
+        }
+        b.compute("bwd", 1e9, 0, vec![act, prev.unwrap()], vec![sink]);
+        let mut g = b.build();
+        let r = Compiler::new(slow_link_hw())
+            .policy(aggressive())
+            .recompute_vs_offload()
+            .compile(&mut g)
+            .unwrap();
+        assert_eq!(r.recomputed, 0);
+    }
+
+    #[test]
+    fn contention_tips_the_decision() {
+        // At moderate link speed the round trip just about hides; telling
+        // the session the fabric is 8x contended makes recompute win.
+        let mut hw = HwConfig::test_default();
+        hw.d2r_gbps = 1.0;
+        hw.r2d_gbps = 1.0;
+        let mut a = workload();
+        let ra = Compiler::new(hw.clone())
+            .policy(aggressive())
+            .recompute_vs_offload()
+            .compile(&mut a)
+            .unwrap();
+        assert_eq!(ra.recomputed, 0, "uncontended: transfer hides");
+
+        let mut b = workload();
+        let rb = Compiler::new(hw)
+            .policy(aggressive())
+            .contention(8.0)
+            .recompute_vs_offload()
+            .verify(true)
+            .compile(&mut b)
+            .unwrap();
+        assert_eq!(rb.recomputed, 1, "contended fabric must flip the decision");
+    }
+}

@@ -1,0 +1,495 @@
+//! `SloThrottle`: shape transfer timing against a latency SLO — defer or
+//! split prefetches whose bandwidth demand crowds the schedule, preferring
+//! to spill pool headroom (bytes stay remote longer) over early residency.
+//!
+//! Modeled on "Memory Offloading for LLM Inference with Latency SLO
+//! Guarantees": offload traffic must not push the serving/step latency past
+//! its budget, and transfer *timing* — not just placement — is a resource
+//! to allocate. This pass runs after exec-order on the session's pinned
+//! schedule and applies two rewrites, each speculated and validated by
+//! re-simulation under the session's assumed fabric contention:
+//!
+//! * **split** — a monolithic prefetch of a pool-resident tensor becomes
+//!   `k` chunked prefetches (fresh `.chunk` tensors aliasing the same pool
+//!   storage, every consumer waiting on all chunks). Chunks arrive
+//!   staggered instead of as one bandwidth spike, roughly halving the
+//!   transfer-window residency byte·time and giving the scheduler
+//!   preemption points between chunks.
+//! * **defer** — a prefetch is re-anchored later (control dep on a later
+//!   compute op, the same mechanism Algorithm 1 uses to pin issue time),
+//!   trading latency slack for memory: the bytes spill into pool headroom
+//!   until closer to their use.
+//!
+//! ## How the SLO budget is apportioned
+//!
+//! The budget is global, not per-transfer: `budget = max(slo_us, entry
+//! makespan)` (an already-over-SLO schedule is never made worse). Rewrites
+//! are committed greedily — latest-consumer prefetches first — and every
+//! commit must keep the *re-simulated* makespan within the budget and the
+//! peak at-or-below the entry schedule's peak, and must strictly improve
+//! peak residency or residency byte·time. Whatever slack one decision
+//! consumes is gone for the next (each speculation re-simulates the live
+//! graph), so the pass never overdraws the SLO. Consequently the throttled
+//! schedule's peak device bytes never exceed the no-throttle schedule's —
+//! the P11 invariant.
+
+use crate::graph::{Graph, OpId, OpKind, TensorId, Tier};
+use crate::sim::simulate;
+
+use super::compiler::{AnalysisCache, CompileError, Diagnostic, Pass, PassCtx, PassReport};
+
+/// The SLO-aware transfer throttle. A no-op unless the session sets an SLO
+/// ([`Compiler::slo_us`](super::Compiler::slo_us)).
+#[derive(Debug, Clone)]
+pub struct SloThrottle {
+    /// Split pool-resident prefetches of at least `2 × split_min_bytes`
+    /// into chunks of roughly this size.
+    pub split_min_bytes: u64,
+    /// Upper bound on chunks per split.
+    pub max_chunks: usize,
+    /// Safety bound on committed rewrites (splits + deferrals) per
+    /// compile — each commit re-simulates, so this bounds compile time.
+    pub max_decisions: usize,
+}
+
+impl Default for SloThrottle {
+    fn default() -> Self {
+        Self { split_min_bytes: 64 << 20, max_chunks: 4, max_decisions: 64 }
+    }
+}
+
+impl Pass for SloThrottle {
+    fn name(&self) -> &'static str {
+        "slo-throttle"
+    }
+
+    fn run(
+        &mut self,
+        g: &mut Graph,
+        cache: &mut AnalysisCache,
+        ctx: &PassCtx,
+    ) -> Result<PassReport, CompileError> {
+        let mut rep = PassReport::new(self.name());
+        let Some(slo) = ctx.slo_us else {
+            rep.diagnostics
+                .push(Diagnostic::info(self.name(), "no SLO configured; pass skipped"));
+            return Ok(rep);
+        };
+        let chw = ctx.contended_hw();
+        let entry_order = cache.pinned_or_topo(g)?;
+        let base = simulate(g, &entry_order, &chw);
+        // Global budget: never regress an already-over-SLO schedule.
+        let budget = slo.max(base.makespan_us);
+        let peak_cap = base.peak_device_bytes;
+
+        let mut order = entry_order;
+        let mut split_count = 0usize;
+        let mut deferred = 0usize;
+
+        // ---- phase 1: split oversized pool-resident prefetches ----------
+        let mut decided: Vec<TensorId> = Vec::new();
+        let mut cur = base.clone();
+        while split_count + deferred < self.max_decisions {
+            let Some((t, pf, k)) = self.split_candidate(g, &decided) else { break };
+            decided.push(t);
+            let Some(trial) = split_prefetch(g, t, pf, k) else { continue };
+            let Ok(torder) = trial.topo_order_detailed() else { continue };
+            let sim = simulate(&trial, &torder, &chw);
+            // Same contract as deferrals: stay within budget and peak cap,
+            // and strictly improve peak or residency byte·time.
+            let improves = sim.peak_device_bytes < cur.peak_device_bytes
+                || (sim.peak_device_bytes == cur.peak_device_bytes
+                    && sim.residency_byte_time()
+                        < cur.residency_byte_time() * (1.0 - 1e-9));
+            if sim.makespan_us <= budget && sim.peak_device_bytes <= peak_cap && improves {
+                let name = g.tensor(t).name.clone();
+                *g = trial;
+                order = torder;
+                cur = sim;
+                split_count += 1;
+                rep.diagnostics.push(Diagnostic::info(
+                    self.name(),
+                    format!("split prefetch of '{name}' into {k} chunked transfers"),
+                ));
+            }
+        }
+
+        // ---- phase 2: defer prefetches into the SLO slack ----------------
+        // Latest-consumer prefetches first: their windows close last, so
+        // they have the most slack to spend. `cur` stays valid across
+        // rejected speculations — only commits change the graph.
+        while split_count + deferred < self.max_decisions {
+            let mut committed = false;
+            let prefetches: Vec<OpId> = order
+                .iter()
+                .rev()
+                .copied()
+                .filter(|&o| matches!(g.op(o).kind, OpKind::Prefetch { .. }))
+                .collect();
+            for c in prefetches {
+                let Some((trial, cand_order, sim)) =
+                    best_deferral(g, &order, c, &chw, budget, peak_cap, &cur)
+                else {
+                    continue;
+                };
+                let name = g.op(c).name.clone();
+                *g = trial;
+                order = cand_order;
+                deferred += 1;
+                committed = true;
+                rep.diagnostics.push(Diagnostic::info(
+                    self.name(),
+                    format!(
+                        "deferred '{name}': peak {} -> {} bytes, makespan {:.1} -> {:.1} us \
+                         (budget {budget:.1})",
+                        cur.peak_device_bytes,
+                        sim.peak_device_bytes,
+                        cur.makespan_us,
+                        sim.makespan_us
+                    ),
+                ));
+                cur = sim;
+                break; // rescan against the committed graph
+            }
+            if !committed {
+                break;
+            }
+        }
+
+        let final_sim = cur;
+        rep.throttled = split_count + deferred;
+        rep.diagnostics.push(Diagnostic::info(
+            self.name(),
+            format!(
+                "{split_count} split(s), {deferred} deferral(s); makespan {:.1} us against a \
+                 {budget:.1} us budget, peak {} bytes (entry {})",
+                final_sim.makespan_us, final_sim.peak_device_bytes, peak_cap
+            ),
+        ));
+        cache.pin_order(g, order.clone());
+        rep.order = Some(order);
+        Ok(rep)
+    }
+}
+
+impl SloThrottle {
+    /// Next splittable prefetch: pool-resident tensor, exactly one cache
+    /// op (its lone prefetch), big enough for ≥ 2 chunks.
+    fn split_candidate(&self, g: &Graph, decided: &[TensorId]) -> Option<(TensorId, OpId, usize)> {
+        if self.split_min_bytes == 0 {
+            return None;
+        }
+        for t in &g.tensors {
+            if t.home != Tier::Remote
+                || t.bytes < 2 * self.split_min_bytes
+                || decided.contains(&t.id)
+            {
+                continue;
+            }
+            let cache_ops: Vec<OpId> = g
+                .ops
+                .iter()
+                .filter(|o| o.kind.cache_tensor() == Some(t.id))
+                .map(|o| o.id)
+                .collect();
+            if cache_ops.len() != 1 {
+                continue;
+            }
+            let pf = cache_ops[0];
+            if !matches!(g.op(pf).kind, OpKind::Prefetch { .. }) {
+                continue;
+            }
+            if !g.consumers_of(t.id).iter().any(|&c| !g.op(c).kind.is_cache_op()) {
+                continue;
+            }
+            let k = ((t.bytes / self.split_min_bytes) as usize).clamp(2, self.max_chunks.max(2));
+            return Some((t.id, pf, k));
+        }
+        None
+    }
+}
+
+/// Rewrite `t`'s lone prefetch into `k` chunked prefetches on a trial
+/// clone. The chunk tensors alias `t`'s pool storage; `t` itself stays a
+/// (pool-resident, never-transferred) input of its consumers, so the data
+/// dependency on its logical value is preserved while the bytes arrive
+/// through the chunks.
+fn split_prefetch(g: &Graph, t: TensorId, pf: OpId, k: usize) -> Option<Graph> {
+    let consumers: Vec<OpId> = g
+        .consumers_of(t)
+        .iter()
+        .copied()
+        .filter(|&c| !g.op(c).kind.is_cache_op())
+        .collect();
+    let bytes = g.tensor(t).bytes;
+    let name = g.tensor(t).name.clone();
+    let mut trial = g.clone();
+    let map = trial.remove_ops(&[pf]);
+    let chunk = bytes / k as u64;
+    for j in 0..k {
+        let sz = if j + 1 == k { bytes - chunk * (k as u64 - 1) } else { chunk };
+        let tc = trial.add_tensor(format!("{name}.chunk{j}"), sz, Tier::Remote);
+        let pfc = trial.add_op(
+            format!("prefetch.{name}.chunk{j}"),
+            OpKind::Prefetch { tensor: tc },
+            vec![tc],
+            vec![],
+        );
+        for &cns in &consumers {
+            // A Prefetch produces nothing, so listing the chunk as a
+            // consumer input creates no dependency edge by itself; the
+            // control dep is what orders the consumer after transfer
+            // completion (same wiring as the insertion pass). The input
+            // additionally ends the chunk's refcount lifetime at its last
+            // consumer.
+            trial.add_input(map[cns]?, tc);
+            trial.add_control_dep(map[cns]?, pfc);
+        }
+    }
+    Some(trial)
+}
+
+/// Scan anchors for prefetch `c` latest-first and return the first
+/// validated deferral: within budget and peak cap, strictly improving peak
+/// residency (or byte·time at equal peak). Latest-first means maximal pool
+/// spill per commit; later scans can still defer further. Returns the
+/// trial graph (anchor dep added), its order, and the validating
+/// simulation.
+#[allow(clippy::too_many_arguments)]
+fn best_deferral(
+    g: &Graph,
+    order: &[OpId],
+    c: OpId,
+    chw: &crate::sim::HwConfig,
+    budget: f64,
+    peak_cap: u64,
+    cur: &crate::sim::SimResult,
+) -> Option<(Graph, Vec<OpId>, crate::sim::SimResult)> {
+    let n = order.len();
+    let mut pos = vec![usize::MAX; g.ops.len()];
+    for (i, &o) in order.iter().enumerate() {
+        pos[o] = i;
+    }
+    let cur_pos = pos[c];
+    let hi = g.succs(c).iter().map(|&s| pos[s]).min().unwrap_or(n);
+    let cur_byte_time = cur.residency_byte_time();
+
+    let best_key = (cur.peak_device_bytes, cur_byte_time);
+    // Candidate anchors: any compute op ordered before c's first
+    // successor. Order position alone does not defer a dep-free prefetch
+    // (streams issue as early as they can) — the control dep on the
+    // anchor is what pins the issue time, exactly as Algorithm 1 anchors
+    // placements. Every op at a position < hi is a non-dependent of c
+    // (all dependents sit at/after the first successor), so the dep
+    // cannot create a cycle. Scanned latest-first so ties keep the
+    // latest anchor — maximal deferral; the scan is capped because each
+    // probe costs a clone + simulation and deep anchors only get less
+    // attractive.
+    const MAX_ANCHOR_PROBES: usize = 48;
+    let mut probes = 0usize;
+    for a_idx in (0..hi).rev() {
+        if probes >= MAX_ANCHOR_PROBES {
+            break;
+        }
+        let a = order[a_idx];
+        if a == c || !matches!(g.op(a).kind, OpKind::Compute { .. }) {
+            continue;
+        }
+        probes += 1;
+        let mut cand: Vec<OpId> = order.to_vec();
+        if a_idx > cur_pos {
+            // Move c just after its new anchor; after removing c (which
+            // was before a), a sits at a_idx - 1.
+            cand.remove(cur_pos);
+            cand.insert(a_idx, c);
+        }
+        let mut trial = g.clone();
+        trial.add_control_dep(c, a);
+        if !trial.is_valid_order(&cand) {
+            continue;
+        }
+        let sim = simulate(&trial, &cand, chw);
+        if sim.makespan_us > budget || sim.peak_device_bytes > peak_cap {
+            continue;
+        }
+        let improves = sim.peak_device_bytes < best_key.0
+            || (sim.peak_device_bytes == best_key.0
+                && sim.residency_byte_time() < best_key.1 * (1.0 - 1e-9));
+        if improves {
+            return Some((trial, cand, sim));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::passes::Compiler;
+    use crate::sim::HwConfig;
+
+    fn hw() -> HwConfig {
+        HwConfig::test_default()
+    }
+
+    /// 10 ops à 10 ms; op 8 consumes a 10 MB remote weight (10 ms
+    /// transfer). Exec-order hides the transfer by prefetching early — at
+    /// the cost of the weight idling in HBM.
+    fn workload() -> Graph {
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 10 << 20, crate::graph::Tier::Remote);
+        let mut prev = None;
+        for i in 0..10 {
+            let t = b.tensor(&format!("a{i}"), 0, crate::graph::Tier::Device);
+            let mut inputs = prev.map(|p| vec![p]).unwrap_or_default();
+            if i == 8 {
+                inputs.push(w);
+            }
+            let o = b.compute(&format!("c{i}"), 10e9, 0, inputs, vec![t]);
+            let _ = o;
+            prev = Some(t);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn no_slo_means_no_op() {
+        let mut a = workload();
+        let ra = Compiler::new(hw()).compile(&mut a).unwrap();
+        let mut b = workload();
+        let rb = Compiler::new(hw()).slo_throttle().compile(&mut b).unwrap();
+        assert_eq!(rb.throttled, 0);
+        assert_eq!(ra.order, rb.order, "throttle without SLO must be inert");
+    }
+
+    /// Two streamed weights: a 40 MB one used late and a 5 MB one used
+    /// early. The program-order schedule front-loads the big transfer, so
+    /// it idles in HBM for half the run and head-of-line blocks the small
+    /// one. (No exec-order stage: this exercises the throttle as the
+    /// placement authority over a runtime-ish entry schedule.)
+    fn two_weight_workload() -> Graph {
+        let mut b = GraphBuilder::new();
+        let wa = b.tensor("wa", 40 << 20, crate::graph::Tier::Remote);
+        let wb = b.tensor("wb", 5 << 20, crate::graph::Tier::Remote);
+        let mut prev = None;
+        for i in 0..10 {
+            let t = b.tensor(&format!("a{i}"), 0, crate::graph::Tier::Device);
+            let mut inputs = prev.map(|p| vec![p]).unwrap_or_default();
+            if i == 9 {
+                inputs.push(wa);
+            }
+            if i == 2 {
+                inputs.push(wb);
+            }
+            b.compute(&format!("c{i}"), 10e9, 0, inputs, vec![t]);
+            prev = Some(t);
+        }
+        b.build()
+    }
+
+    fn no_exec_pipeline(hw: HwConfig) -> Compiler {
+        Compiler::empty(hw)
+            .pass(crate::passes::LifetimePass)
+            .pass(crate::passes::PrefetchInsertPass)
+    }
+
+    #[test]
+    fn slack_is_spent_on_residency_not_past_the_budget() {
+        let mut a = two_weight_workload();
+        let ra = no_exec_pipeline(hw()).compile(&mut a).unwrap();
+        let sa = simulate(&a, &ra.order, &hw());
+
+        let slo = sa.makespan_us; // zero slack beyond the entry schedule
+        let mut b = two_weight_workload();
+        let rb = no_exec_pipeline(hw())
+            .slo_us(slo)
+            .slo_throttle()
+            .verify(true)
+            .compile(&mut b)
+            .unwrap();
+        let sb = simulate(&b, &rb.order, &hw());
+
+        assert!(rb.throttled > 0, "deferral opportunity missed");
+        assert!(sb.makespan_us <= slo * (1.0 + 1e-9), "budget violated");
+        assert!(
+            sb.peak_device_bytes <= sa.peak_device_bytes,
+            "throttle raised the peak: {} > {}",
+            sb.peak_device_bytes,
+            sa.peak_device_bytes
+        );
+        assert!(
+            sb.residency_byte_time() < sa.residency_byte_time() * 0.8,
+            "deferral must cut idle residency: {} !< {}",
+            sb.residency_byte_time(),
+            sa.residency_byte_time()
+        );
+    }
+
+    #[test]
+    fn zero_slack_never_regresses() {
+        let mut a = workload();
+        let ra = Compiler::new(hw()).compile(&mut a).unwrap();
+        let sa = simulate(&a, &ra.order, &hw());
+
+        // SLO below what the schedule can do: budget clamps to the entry
+        // makespan; only free improvements may land.
+        let mut b = workload();
+        let rb = Compiler::new(hw())
+            .slo_us(sa.makespan_us * 0.5)
+            .slo_throttle()
+            .verify(true)
+            .compile(&mut b)
+            .unwrap();
+        let sb = simulate(&b, &rb.order, &hw());
+        assert!(sb.makespan_us <= sa.makespan_us * (1.0 + 1e-9));
+        assert!(sb.peak_device_bytes <= sa.peak_device_bytes);
+    }
+
+    #[test]
+    fn oversized_prefetch_is_split_into_chunks() {
+        // One 256 MB weight: the throttle splits it into 4 chunks whose
+        // staggered arrival cuts transfer-window residency byte-time.
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 256 << 20, crate::graph::Tier::Remote);
+        let mut prev = None;
+        for i in 0..10 {
+            let t = b.tensor(&format!("a{i}"), 0, crate::graph::Tier::Device);
+            let mut inputs = prev.map(|p| vec![p]).unwrap_or_default();
+            if i == 9 {
+                inputs.push(w);
+            }
+            b.compute(&format!("c{i}"), 40e9, 0, inputs, vec![t]);
+            prev = Some(t);
+        }
+        let g0 = b.build();
+
+        let mut a = g0.clone();
+        let ra = Compiler::new(hw()).compile(&mut a).unwrap();
+        let sa = simulate(&a, &ra.order, &hw());
+
+        let mut g = g0;
+        let r = Compiler::new(hw())
+            .slo_us(sa.makespan_us * 1.1)
+            .slo_throttle()
+            .verify(true)
+            .compile(&mut g)
+            .unwrap();
+        let s = simulate(&g, &r.order, &hw());
+
+        let chunks = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::Prefetch { .. }) && o.name.contains(".chunk"))
+            .count();
+        assert_eq!(chunks, 4, "256 MB must split into 4 chunks");
+        assert!(s.makespan_us <= sa.makespan_us * 1.1 * (1.0 + 1e-9));
+        assert!(s.peak_device_bytes <= sa.peak_device_bytes);
+        assert!(
+            s.residency_byte_time() < sa.residency_byte_time(),
+            "chunked arrival must cut byte-time: {} !< {}",
+            s.residency_byte_time(),
+            sa.residency_byte_time()
+        );
+    }
+}

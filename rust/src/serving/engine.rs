@@ -84,6 +84,13 @@ pub struct EngineConfig {
     /// How many times one sequence may be preempted (and requeued for
     /// recompute re-prefill) before it is rejected outright.
     pub max_preemptions: u32,
+    /// Per-decode-step latency SLO (us). When set (hierarchical engines
+    /// only), KV *writebacks* — the deferrable direction — are throttled:
+    /// d2r bytes that would push the step past the budget are carried in a
+    /// backlog and drained by later steps with slack (flushed exposed at
+    /// drain-out). Prefetches are never deferred: decode needs them now.
+    /// The compile-side counterpart is `Compiler::slo_us` + `SloThrottle`.
+    pub decode_slo_us: Option<f64>,
 }
 
 impl EngineConfig {
@@ -96,6 +103,7 @@ impl EngineConfig {
             max_batch: 8,
             overlap_transfers: false,
             max_preemptions: 3,
+            decode_slo_us: None,
         }
     }
 
@@ -108,7 +116,15 @@ impl EngineConfig {
             max_batch: 8,
             overlap_transfers: true,
             max_preemptions: 3,
+            decode_slo_us: None,
         }
+    }
+
+    /// The hierarchical preset with a per-decode-step latency SLO: KV
+    /// writebacks are shaped so offload traffic does not push step latency
+    /// past `slo_us` (SelectiveOffload-style SLO guarantees).
+    pub fn hierarchical_slo(hw: HwConfig, model: ModelCost, slo_us: f64) -> Self {
+        Self { decode_slo_us: Some(slo_us), ..Self::hierarchical(hw, model) }
     }
 }
 
@@ -173,6 +189,14 @@ pub struct SimServingEngine {
     rejected: u64,
     preempted_events: u64,
     residency: Vec<(f64, u64)>,
+    /// Writeback bytes waiting for a decode step with SLO slack.
+    slo_backlog_d2r: u64,
+    /// Cumulative writeback byte·steps held back by the decode SLO
+    /// throttle (a byte deferred across k steps counts k times).
+    slo_deferred_bytes: u64,
+    /// Longest single decode iteration (us) — the quantity a decode SLO
+    /// bounds.
+    decode_step_us_max: f64,
 }
 
 impl SimServingEngine {
@@ -212,6 +236,9 @@ impl SimServingEngine {
             rejected: 0,
             preempted_events: 0,
             residency: Vec::new(),
+            slo_backlog_d2r: 0,
+            slo_deferred_bytes: 0,
+            decode_step_us_max: 0.0,
         }
     }
 
@@ -318,6 +345,10 @@ impl SimServingEngine {
     /// idle). Returns false when there is no work at all.
     pub fn step(&mut self, fabric: &FabricPressure) -> Result<bool> {
         if self.pending.is_empty() && self.active.is_empty() {
+            // A run can also end through the admission path (every pending
+            // request rejected at prefill) — flush any SLO writeback
+            // backlog here too, so deferred bytes are never dropped.
+            self.flush_slo_backlog(fabric);
             return Ok(false);
         }
         // Admit arrivals while there is batch room.
@@ -359,6 +390,9 @@ impl SimServingEngine {
             } else {
                 i += 1;
             }
+        }
+        if self.active.is_empty() && self.pending.is_empty() {
+            self.flush_slo_backlog(fabric);
         }
         Ok(true)
     }
@@ -480,6 +514,30 @@ impl SimServingEngine {
                 });
             }
         }
+        // SLO throttle (hierarchical only): writebacks are the deferrable
+        // direction. Keep only the d2r bytes whose transfer fits this
+        // step's budget — max(slo − cpu − defrag, compute); transfers up
+        // to the compute time are free under overlap — and carry the rest
+        // in a backlog that drains through later steps' slack.
+        if self.cfg.overlap_transfers {
+            if let Some(slo) = self.cfg.decode_slo_us {
+                d2r += std::mem::take(&mut self.slo_backlog_d2r);
+                let budget_us = (slo - cpu_us - defrag_us).max(compute_us);
+                if d2r > 0
+                    && self.cfg.hw.d2r_us_slowed(d2r, fabric.d2r_slowdown) > budget_us
+                {
+                    let us_per_byte =
+                        fabric.d2r_slowdown / (self.cfg.hw.d2r_gbps * 1e9) * 1e6;
+                    let bw_budget = (budget_us - self.cfg.hw.link_latency_us).max(0.0);
+                    let keep = ((bw_budget / us_per_byte) as u64).min(d2r);
+                    let defer = d2r - keep;
+                    self.slo_backlog_d2r = defer;
+                    self.slo_deferred_bytes += defer;
+                    d2r = keep;
+                }
+            }
+        }
+
         self.kv_transfer_bytes += r2d + d2r;
         self.defrag_stall_us += defrag_us;
 
@@ -504,8 +562,26 @@ impl SimServingEngine {
             compute_us + cpu_us + defrag_us
         };
         self.clock_us += step_us;
+        self.decode_step_us_max = self.decode_step_us_max.max(step_us);
         self.note_peak();
         Ok(())
+    }
+
+    /// Flush the SLO writeback backlog once nothing is decoding: the
+    /// remaining bytes transfer exposed (no compute to hide under), so
+    /// conservation holds — every deferred byte still reaches the pool.
+    fn flush_slo_backlog(&mut self, fabric: &FabricPressure) {
+        if self.slo_backlog_d2r == 0 {
+            return;
+        }
+        let bytes = std::mem::take(&mut self.slo_backlog_d2r);
+        let t = self.cfg.hw.d2r_us_slowed(bytes, fabric.d2r_slowdown);
+        let t_free = self.cfg.hw.d2r_us(bytes);
+        self.exposed_transfer_us += t;
+        self.fabric_stall_us += t - t_free;
+        self.kv_transfer_bytes += bytes;
+        self.clock_us += t;
+        self.note_peak();
     }
 
     fn note_peak(&mut self) {
@@ -556,6 +632,8 @@ impl SimServingEngine {
             kv_transfer_bytes: self.kv_transfer_bytes,
             rejected_requests: self.rejected,
             preempted_events: self.preempted_events,
+            slo_deferred_bytes: self.slo_deferred_bytes,
+            decode_step_us_max: self.decode_step_us_max,
             residency: self.residency,
         }
     }
@@ -786,6 +864,56 @@ mod tests {
             assert!(w[1].0 >= w[0].0, "residency timestamps must not decrease");
         }
         assert!(r.residency.iter().all(|&(_, b)| b <= r.peak_device_bytes));
+    }
+
+    /// Writeback-heavy decode: 16 MiB KV blocks against 40 us of decode
+    /// compute — the per-step tail-block persist dwarfs the compute it
+    /// could hide under.
+    fn writeback_heavy_cfg(slo_us: Option<f64>) -> EngineConfig {
+        let model = ModelCost {
+            weights_bytes: 64 * MB,
+            act_bytes: GB,
+            prefill_flops_per_token: 16e9,
+            decode_flops_per_token: 1e9,
+            kv_bytes_per_token: 64 * 1024,
+        };
+        EngineConfig {
+            nsa: NsaConfig { block_tokens: 256, ..Default::default() },
+            decode_slo_us: slo_us,
+            ..EngineConfig::hierarchical(hw(), model)
+        }
+    }
+
+    #[test]
+    fn generous_decode_slo_is_inert() {
+        let wl = WorkloadConfig::long_sequence(2, 8000, 50, 7).generate();
+        let free = SimServingEngine::new(writeback_heavy_cfg(None)).run(wl.clone()).unwrap();
+        let slo = SimServingEngine::new(writeback_heavy_cfg(Some(1e12))).run(wl).unwrap();
+        assert_eq!(slo.slo_deferred_bytes, 0);
+        assert_eq!(slo.kv_transfer_bytes, free.kv_transfer_bytes);
+        assert!((slo.total_time_us - free.total_time_us).abs() < 1e-9);
+        assert!((slo.decode_step_us_max - free.decode_step_us_max).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tight_decode_slo_defers_writebacks_and_conserves_bytes() {
+        let wl = WorkloadConfig::long_sequence(2, 8000, 50, 7).generate();
+        let free = SimServingEngine::new(writeback_heavy_cfg(None)).run(wl.clone()).unwrap();
+        // A 1 us budget clamps to the compute floor: every step sheds the
+        // writeback bytes it cannot hide under decode compute.
+        let slo = SimServingEngine::new(writeback_heavy_cfg(Some(1.0))).run(wl).unwrap();
+
+        assert!(slo.slo_deferred_bytes > 0, "throttle never engaged");
+        assert!(
+            slo.decode_step_us_max <= free.decode_step_us_max * (1.0 + 1e-9),
+            "shaped steps must not be longer: {} > {}",
+            slo.decode_step_us_max,
+            free.decode_step_us_max
+        );
+        // Every deferred byte still reaches the pool (backlog + flush).
+        assert_eq!(slo.kv_transfer_bytes, free.kv_transfer_bytes);
+        assert_eq!(slo.tokens_generated, free.tokens_generated);
+        assert_eq!(slo.rejected_requests, free.rejected_requests);
     }
 
     #[test]

@@ -52,6 +52,11 @@ pub struct ServingReport {
     /// Preemption events (sequences evicted mid-decode and requeued for
     /// recompute re-prefill; a request may contribute several).
     pub preempted_events: u64,
+    /// Cumulative writeback byte·steps held back by the decode SLO
+    /// throttle (0 when no `decode_slo_us` is configured).
+    pub slo_deferred_bytes: u64,
+    /// Longest single decode iteration (us) — what a decode SLO bounds.
+    pub decode_step_us_max: f64,
     /// Device-residency curve: (time us, device bytes) samples taken at
     /// every admission/decode boundary, non-decreasing in time.
     pub residency: Vec<(f64, u64)>,

@@ -61,6 +61,10 @@ pub struct SimResult {
     pub makespan_us: f64,
     /// Busy time of the compute stream.
     pub compute_busy_us: f64,
+    /// Portion of `compute_busy_us` spent replaying recompute clones
+    /// (ops carrying [`Op::recompute`](crate::graph::Op::recompute)) — the
+    /// compute the recompute-vs-offload pass trades against transfers.
+    pub recompute_us: f64,
     /// Compute-stream stall time attributable to waiting on DMA transfers
     /// ("exposed communication" in Fig. 6).
     pub exposed_comm_us: f64,
@@ -222,6 +226,11 @@ pub fn simulate(graph: &Graph, order: &[OpId], hw: &HwConfig) -> SimResult {
         .filter(|iv| iv.stream == Stream::Compute)
         .map(|iv| iv.finish_us - iv.start_us)
         .sum();
+    let recompute_busy: f64 = intervals
+        .iter()
+        .filter(|iv| iv.stream == Stream::Compute && graph.op(iv.op).recompute)
+        .map(|iv| iv.finish_us - iv.start_us)
+        .sum();
     let dma_busy: f64 = intervals
         .iter()
         .filter(|iv| matches!(iv.stream, Stream::DmaIn | Stream::DmaOut))
@@ -268,6 +277,7 @@ pub fn simulate(graph: &Graph, order: &[OpId], hw: &HwConfig) -> SimResult {
     SimResult {
         makespan_us: makespan,
         compute_busy_us: compute_busy,
+        recompute_us: recompute_busy,
         exposed_comm_us: exposed,
         overlapped_comm_us: overlapped,
         dma_busy_us: dma_busy,

@@ -5,9 +5,15 @@
 //! Per layer: fwd (produces the layer activation), bwd (consumes it),
 //! optimizer update (consumes the layer's optimizer state). Optimizer
 //! states are **remote-home** graph inputs — the paper's §5.1 design keeps
-//! them in the pool between iterations and prefetches them back under the
-//! backward pass — and are stored back after the update. Activations are
-//! device-home; the prefetch-insertion pass decides which ones to offload.
+//! them in the pool between iterations, prefetches them back under the
+//! backward pass, and stores them out again after the update. Both edges
+//! of that cycle are modeled here: each state gets an explicit `Prefetch`
+//! (the reload for *this* step's update) and a `Store` (the writeback the
+//! *next* step's prefetch will read). Earlier revisions emitted only the
+//! `Store` — a sim shortcut that made the graph unverifiable (a release
+//! with no device residency), so `Compiler::verify(true)` could not be
+//! enabled on training compiles. Activations are device-home; the
+//! prefetch-insertion pass decides which ones to offload.
 
 use crate::graph::{Graph, GraphBuilder, OpId, Tier};
 
@@ -125,6 +131,10 @@ pub fn build_step_graph(model: &ModelPreset, par: &ParallelCfg) -> StepGraph {
         } else {
             None
         };
+        // Reload edge: the state lives in the pool between steps; this
+        // step's update reads it only after the prefetch completes. The
+        // exec-order pass places the transfer under the backward compute.
+        let pf = b.prefetch(&format!("prefetch.opt.{l}"), opts[l]);
         let upd = b.compute(
             &format!("update.{l}"),
             1e6, // negligible flops; HBM-bound
@@ -132,9 +142,11 @@ pub fn build_step_graph(model: &ModelPreset, par: &ParallelCfg) -> StepGraph {
             std::mem::take(&mut upd_deps),
             vec![],
         );
+        b.dep(upd, pf);
         if let Some(ar) = ar {
             b.dep(upd, ar);
         }
+        // Writeback edge: the next step's prefetch reads this Store.
         let st = b.store(&format!("store.opt.{l}"), opts[l]);
         b.dep(st, upd);
         update_ops.push(upd);
@@ -199,5 +211,48 @@ mod tests {
         let m = ModelPreset::llama8b();
         let p = ParallelCfg::llama_no2();
         build_step_graph(&m, &p);
+    }
+
+    #[test]
+    fn opt_state_stores_have_matching_reload() {
+        // The headline bugfix: every optimizer-state Store is paired with
+        // the reload Prefetch that puts the state on the device first —
+        // without it the IR verifier (rightly) rejects the graph as
+        // releasing residency it never had.
+        let m = ModelPreset::llama8b();
+        let p = ParallelCfg::llama_hier();
+        let sg = build_step_graph(&m, &p);
+        for &t in &sg.opt_tensors {
+            let prefetches = sg
+                .graph
+                .ops
+                .iter()
+                .filter(|o| matches!(o.kind, crate::graph::OpKind::Prefetch { tensor } if tensor == t))
+                .count();
+            let stores = sg
+                .graph
+                .ops
+                .iter()
+                .filter(|o| matches!(o.kind, crate::graph::OpKind::Store { tensor } if tensor == t))
+                .count();
+            assert_eq!(prefetches, 1, "opt state {t} missing its reload");
+            assert_eq!(stores, 1, "opt state {t} missing its writeback");
+        }
+    }
+
+    #[test]
+    fn generated_graph_passes_ir_verification() {
+        // `verify(true)` on a raw training compile — impossible before the
+        // reload edge was modeled.
+        use crate::passes::Compiler;
+        use crate::sim::HwConfig;
+        let m = ModelPreset::llama8b();
+        let p = ParallelCfg::llama_hier();
+        let mut sg = build_step_graph(&m, &p);
+        let report = Compiler::new(HwConfig::ascend910c_like())
+            .verify(true)
+            .compile(&mut sg.graph)
+            .expect("training graph must verify end to end");
+        assert!(sg.graph.is_valid_order(&report.order));
     }
 }

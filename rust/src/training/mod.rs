@@ -10,4 +10,7 @@ mod step;
 pub use graph_gen::{build_step_graph, StepGraph};
 pub use parallel::ParallelCfg;
 pub use presets::{ModelPreset, MoeShape};
-pub use step::{baseline_demand_bytes, baseline_step, hierarchical_step, StepBreakdown};
+pub use step::{
+    baseline_demand_bytes, baseline_step, hierarchical_step, hierarchical_step_with,
+    StepBreakdown, StepOptions,
+};

@@ -1,8 +1,15 @@
 //! Training step-time estimation: analytic baseline (any DP/TP/PP/EP, the
 //! Tables 1–2 configurations) and graph-driven hierarchical execution
 //! (compile pipeline + simulator, the Fig. 6 curves).
+//!
+//! Hierarchical steps compile with `verify(true)` — the IR verifier runs
+//! between every stage — and the full decision pipeline: capacity-aware
+//! transfer elision (reserving the fixed weight/grad working set),
+//! recompute-vs-offload when the layout trains with recomputation
+//! ([`ParallelCfg::recompute`]), and SLO throttling when a step-time
+//! target is set ([`StepOptions::step_slo_ms`]).
 
-use crate::passes::{Compiler, OffloadPolicy};
+use crate::passes::{Compiler, ElideRedundantTransfers, OffloadPolicy};
 use crate::sim::{simulate, HwConfig};
 
 use super::graph_gen::build_step_graph;
@@ -82,27 +89,78 @@ pub fn baseline_step(model: &ModelPreset, par: &ParallelCfg, hw: &HwConfig) -> S
     }
 }
 
+/// Options for the hierarchical-step compile pipeline (decision passes
+/// layered over the default lifetime → insert → exec-order stages).
+#[derive(Debug, Clone)]
+pub struct StepOptions {
+    /// Enable the recompute-vs-offload decision pass.
+    pub recompute: bool,
+    /// Capacity-aware transfer elision (reserves the fixed weight/grad
+    /// working set before testing headroom). On by default.
+    pub elide: bool,
+    /// Step-time SLO (ms) fed to the SLO throttle; `None` = no throttling.
+    pub step_slo_ms: Option<f64>,
+    /// Fabric-contention slowdown assumed by the decision passes (≥ 1.0) —
+    /// e.g. the `Fabric::slowdown` of sibling DP replicas sharing the
+    /// SuperNode pool link.
+    pub dma_contention: f64,
+}
+
+impl StepOptions {
+    /// The preset a layout implies: recompute follows the parallel
+    /// config's recompute flag, elision is on, no SLO, private link.
+    pub fn for_par(par: &ParallelCfg) -> Self {
+        Self { recompute: par.recompute, elide: true, step_slo_ms: None, dma_contention: 1.0 }
+    }
+}
+
 /// Hierarchical-memory step: build the pp=1 step graph, run the
-/// HyperOffload compile pipeline, simulate on `hw`.
+/// HyperOffload compile pipeline implied by `par` (see
+/// [`StepOptions::for_par`]), simulate on `hw`.
 pub fn hierarchical_step(model: &ModelPreset, par: &ParallelCfg, hw: &HwConfig) -> StepBreakdown {
+    hierarchical_step_with(model, par, hw, &StepOptions::for_par(par))
+}
+
+/// [`hierarchical_step`] with an explicit pipeline configuration.
+pub fn hierarchical_step_with(
+    model: &ModelPreset,
+    par: &ParallelCfg,
+    hw: &HwConfig,
+    opts: &StepOptions,
+) -> StepBreakdown {
     let mut sg = build_step_graph(model, par);
     let policy = OffloadPolicy { min_bytes: 16 << 20, ..Default::default() };
-    let report = Compiler::new(hw.clone())
+
+    // Weights not homed in the pool stay resident; grads stay resident.
+    let fixed = par.weight_bytes_per_device(model) * (1.0 - par.param_offload_frac)
+        + par.grad_bytes_per_device(model);
+
+    let mut compiler = Compiler::new(hw.clone())
         .policy(policy)
+        .verify(true)
+        .contention(opts.dma_contention);
+    if opts.elide {
+        compiler = compiler
+            .elide_redundant_transfers_with(ElideRedundantTransfers::with_reserved(fixed as u64));
+    }
+    if opts.recompute {
+        compiler = compiler.recompute_vs_offload();
+    }
+    if let Some(slo_ms) = opts.step_slo_ms {
+        compiler = compiler.slo_us(slo_ms * 1e3).slo_throttle();
+    }
+    let report = compiler
         .compile(&mut sg.graph)
-        .expect("hierarchical_step: generated step graph must compile");
+        .expect("hierarchical_step: generated step graph must compile and verify");
     let sim = simulate(&sg.graph, &report.order, hw);
 
     // EP all-to-all (MoE) is not in the generated graph; add serially like
     // the baseline (it is orthogonal to the offload machinery).
     let ep_ms = par.ep_comm_bytes(model) / (hw.net_gbps * 1e9) * 1e3;
 
-    // Weights not homed in the pool stay resident; grads stay resident.
-    let fixed = par.weight_bytes_per_device(model) * (1.0 - par.param_offload_frac)
-        + par.grad_bytes_per_device(model);
     StepBreakdown {
-        compute_ms: sim.compute_busy_us / 1e3,
-        recompute_ms: 0.0,
+        compute_ms: (sim.compute_busy_us - sim.recompute_us) / 1e3,
+        recompute_ms: sim.recompute_us / 1e3,
         comm_ms: ep_ms,
         exposed_d2h_ms: sim.exposed_comm_us / 1e3,
         overlapped_d2h_ms: sim.overlapped_comm_us / 1e3,

@@ -24,6 +24,11 @@
 //!     tensor, and a consumer not ordered after transfer completion.
 //!  P10 Cyclic graphs surface as structured errors (try_build /
 //!     CompileError::Cycle) naming the culprit ops, instead of a panic.
+//!  P11 Decision passes never regress the schedule they are given: on
+//!     random DAGs, adding `RecomputeVsOffload` never increases the
+//!     simulated makespan (and never raises peak bytes), and adding
+//!     `SloThrottle` never raises peak device bytes above the no-throttle
+//!     schedule while keeping makespan within the SLO budget.
 
 use hyperoffload::graph::{Graph, GraphBuilder, OpKind, Tier};
 use hyperoffload::kvcache::{KvCacheManager, KvPolicy, NsaConfig};
@@ -362,6 +367,70 @@ fn p10_cycles_surface_as_structured_errors() {
             assert!(culprit_ops.contains(&a) && culprit_ops.contains(&c));
         }
         other => panic!("expected CompileError::Cycle, got {other:?}"),
+    }
+}
+
+#[test]
+fn p11_decision_passes_never_regress_schedules() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed + 8000);
+        let hw = hw(&mut rng);
+        let g0 = random_graph(&mut rng);
+        let policy = OffloadPolicy { min_bytes: 1 << 18, ..Default::default() };
+
+        // Baseline: the default pipeline (lifetime → insert → exec-order).
+        let mut a = g0.clone();
+        let ra = Compiler::new(hw.clone())
+            .policy(policy.clone())
+            .compile(&mut a)
+            .unwrap_or_else(|e| panic!("seed {seed}: baseline {e}"));
+        let sa = simulate(&a, &ra.order, &hw);
+
+        // + RecomputeVsOffload: speculate/validate must never regress.
+        let mut b = g0.clone();
+        let rb = Compiler::new(hw.clone())
+            .policy(policy.clone())
+            .recompute_vs_offload()
+            .verify(true)
+            .compile(&mut b)
+            .unwrap_or_else(|e| panic!("seed {seed}: recompute {e}"));
+        let sb = simulate(&b, &rb.order, &hw);
+        assert!(
+            sb.makespan_us <= sa.makespan_us * (1.0 + 1e-9),
+            "seed {seed}: recompute increased makespan {} > {}",
+            sb.makespan_us,
+            sa.makespan_us
+        );
+        assert!(
+            sb.peak_device_bytes <= sa.peak_device_bytes,
+            "seed {seed}: recompute raised peak {} > {}",
+            sb.peak_device_bytes,
+            sa.peak_device_bytes
+        );
+
+        // + SloThrottle at 5% slack: peak must never rise above the
+        // no-throttle schedule and the budget must hold.
+        let slo = sa.makespan_us * 1.05;
+        let mut c = g0.clone();
+        let rc = Compiler::new(hw.clone())
+            .policy(policy)
+            .slo_us(slo)
+            .slo_throttle()
+            .verify(true)
+            .compile(&mut c)
+            .unwrap_or_else(|e| panic!("seed {seed}: throttle {e}"));
+        let sc = simulate(&c, &rc.order, &hw);
+        assert!(
+            sc.peak_device_bytes <= sa.peak_device_bytes,
+            "seed {seed}: throttle raised peak {} > {}",
+            sc.peak_device_bytes,
+            sa.peak_device_bytes
+        );
+        assert!(
+            sc.makespan_us <= slo.max(sa.makespan_us) * (1.0 + 1e-9),
+            "seed {seed}: throttle broke the budget: {} vs slo {slo}",
+            sc.makespan_us
+        );
     }
 }
 
