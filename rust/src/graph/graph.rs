@@ -76,6 +76,39 @@ impl Graph {
         id
     }
 
+    /// Register a *chunk view* of `parent`: a tensor naming `bytes` of the
+    /// parent's storage (same home tier, [`TensorInfo::alias_of`] set).
+    /// Cache operators on the chunk transfer only its bytes — the
+    /// partial-tensor-residency primitive the SLO throttle's round-trip
+    /// chunking builds on.
+    pub fn add_chunk_tensor(
+        &mut self,
+        parent: TensorId,
+        name: impl Into<String>,
+        bytes: u64,
+    ) -> TensorId {
+        debug_assert!(parent < self.tensors.len(), "chunk parent {parent} unknown");
+        debug_assert!(
+            self.tensors[parent].alias_of.is_none(),
+            "chunks of chunks are not supported"
+        );
+        let home = self.tensors[parent].home;
+        let id = self.add_tensor(name, bytes, home);
+        self.tensors[id].alias_of = Some(parent);
+        id
+    }
+
+    /// Mark `t` as deferrable: its persisting Store may be shed from the
+    /// schedule by the SLO throttle's spill phase (the bytes stay resident
+    /// and move later). See [`TensorInfo::deferrable`].
+    pub fn set_deferrable(&mut self, t: TensorId, on: bool) {
+        debug_assert!(t < self.tensors.len(), "tensor {t} unknown");
+        if self.tensors[t].deferrable != on {
+            self.tensors[t].deferrable = on;
+            self.version += 1;
+        }
+    }
+
     /// Append an op; data edges are derived from `inputs`/`outputs`.
     pub fn add_op(
         &mut self,

@@ -28,11 +28,26 @@ pub struct TensorInfo {
     pub bytes: u64,
     /// Tier the tensor materialises in when produced.
     pub home: Tier,
+    /// `Some(parent)` for a *chunk view*: this tensor names a byte range of
+    /// the parent's storage rather than fresh memory. Cache operators on a
+    /// chunk move only the chunk's bytes — this is what lets the SLO
+    /// throttle split one tensor's Store/Prefetch round trip into staggered
+    /// partial transfers (partial-tensor residency). For a `Device`-home
+    /// chunk the *parent's* lifetime owns the allocation: the simulator
+    /// charges no initial residency and no refcount free for the chunk
+    /// itself, only its Store/Prefetch events (partial release/restore of
+    /// the parent's bytes).
+    pub alias_of: Option<TensorId>,
+    /// True when the transfer persisting this tensor may be deferred past
+    /// the current schedule (serving KV writebacks: the bytes can stay on
+    /// device and move later). The SLO throttle's spill phase only sheds
+    /// Store traffic of tensors carrying this flag.
+    pub deferrable: bool,
 }
 
 impl TensorInfo {
     pub fn new(id: TensorId, name: impl Into<String>, bytes: u64, home: Tier) -> Self {
-        Self { id, name: name.into(), bytes, home }
+        Self { id, name: name.into(), bytes, home, alias_of: None, deferrable: false }
     }
 }
 

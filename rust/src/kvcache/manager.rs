@@ -105,6 +105,12 @@ impl KvCacheManager {
 
     /// A manager whose offloaded blocks reserve capacity from `pool`
     /// (shared across devices when the handle is cloned).
+    ///
+    /// All of this manager's pool traffic is block-granular — admissions
+    /// reserve whole blocks, growth reserves one block, retirement
+    /// releases blocks — so a pool whose chunk size is the KV block
+    /// ([`PoolHandle::new_chunked`], the cluster's setup) accounts it
+    /// without any rounding.
     pub fn with_pool(
         policy: KvPolicy,
         nsa: NsaConfig,
@@ -112,6 +118,11 @@ impl KvCacheManager {
         device_kv_budget: u64,
         pool: PoolHandle,
     ) -> Self {
+        debug_assert!(
+            pool.chunk_bytes() <= 1
+                || nsa.block_bytes(kv_bytes_per_token) % pool.chunk_bytes() == 0,
+            "KV block size must be a multiple of the pool's chunk granularity"
+        );
         Self {
             policy,
             nsa,

@@ -35,11 +35,31 @@ struct PoolState {
     capacity: u64,
     used: u64,
     peak: u64,
+    /// Reservation granularity (bytes). Every reserve/release is rounded
+    /// up to a multiple of this — the pool hands out fixed-size chunks,
+    /// matching the paged layout of the KV tier (a KV block is one chunk).
+    /// `1` = byte-granular (the legacy behaviour).
+    chunk_bytes: u64,
 }
 
 impl PoolHandle {
     pub fn new(capacity: u64) -> Self {
-        Self { state: Arc::new(Mutex::new(PoolState { capacity, used: 0, peak: 0 })) }
+        Self::new_chunked(capacity, 1)
+    }
+
+    /// A pool that reserves in `chunk_bytes`-sized units: requests are
+    /// rounded up to whole chunks, so partial-chunk reservations cannot
+    /// fragment the ledger. The serving cluster sizes chunks to the KV
+    /// block, making every pool reservation block-granular end to end.
+    pub fn new_chunked(capacity: u64, chunk_bytes: u64) -> Self {
+        Self {
+            state: Arc::new(Mutex::new(PoolState {
+                capacity,
+                used: 0,
+                peak: 0,
+                chunk_bytes: chunk_bytes.max(1),
+            })),
+        }
     }
 
     /// A pool with effectively no capacity limit (legacy single-device
@@ -48,10 +68,21 @@ impl PoolHandle {
         Self::new(u64::MAX)
     }
 
-    /// Reserve `bytes` from the pool. Returns false (reserving nothing)
-    /// if the remaining capacity cannot hold them.
+    /// Round `bytes` up to the pool's chunk granularity.
+    fn quantize(chunk: u64, bytes: u64) -> u64 {
+        if chunk <= 1 || bytes == 0 {
+            bytes
+        } else {
+            bytes.div_ceil(chunk).saturating_mul(chunk)
+        }
+    }
+
+    /// Reserve `bytes` from the pool (rounded up to whole chunks).
+    /// Returns false (reserving nothing) if the remaining capacity cannot
+    /// hold them.
     pub fn try_reserve(&self, bytes: u64) -> bool {
         let mut s = self.state.lock().unwrap();
+        let bytes = Self::quantize(s.chunk_bytes, bytes);
         match s.used.checked_add(bytes) {
             Some(next) if next <= s.capacity => {
                 s.used = next;
@@ -62,10 +93,23 @@ impl PoolHandle {
         }
     }
 
-    /// Return `bytes` to the pool.
+    /// Return `bytes` to the pool (rounded up to whole chunks, symmetric
+    /// with [`try_reserve`](Self::try_reserve)).
     pub fn release(&self, bytes: u64) {
         let mut s = self.state.lock().unwrap();
+        let bytes = Self::quantize(s.chunk_bytes, bytes);
         s.used = s.used.saturating_sub(bytes);
+    }
+
+    /// Reservation granularity (bytes); 1 for byte-granular pools.
+    pub fn chunk_bytes(&self) -> u64 {
+        self.state.lock().unwrap().chunk_bytes
+    }
+
+    /// Chunks currently reserved (`used / chunk_bytes`, rounded up).
+    pub fn chunks_used(&self) -> u64 {
+        let s = self.state.lock().unwrap();
+        s.used.div_ceil(s.chunk_bytes.max(1))
     }
 
     pub fn used(&self) -> u64 {
@@ -447,6 +491,29 @@ mod tests {
         let u = PoolHandle::unbounded();
         assert!(u.try_reserve(u64::MAX / 2));
         assert_eq!(u.pressure(), 0.0);
+    }
+
+    #[test]
+    fn chunked_pool_quantizes_reservations() {
+        // 4 chunks of 64 bytes; partial-chunk requests round up.
+        let p = PoolHandle::new_chunked(256, 64);
+        assert_eq!(p.chunk_bytes(), 64);
+        assert!(p.try_reserve(1)); // -> one whole chunk
+        assert_eq!(p.used(), 64);
+        assert_eq!(p.chunks_used(), 1);
+        assert!(p.try_reserve(65)); // -> two chunks
+        assert_eq!(p.used(), 192);
+        assert!(!p.try_reserve(128), "only one chunk left");
+        assert!(p.try_reserve(64));
+        assert_eq!(p.chunks_used(), 4);
+        // Release is symmetric: the same request size frees the same chunks.
+        p.release(65);
+        assert_eq!(p.used(), 128);
+        assert_eq!(p.chunks_used(), 2);
+        // Chunk-multiple traffic is untouched by quantisation.
+        let q = PoolHandle::new_chunked(256, 64);
+        assert!(q.try_reserve(128));
+        assert_eq!(q.used(), 128);
     }
 
     #[test]

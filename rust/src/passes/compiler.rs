@@ -268,6 +268,12 @@ pub struct PassReport {
     pub recomputed: usize,
     /// Prefetches deferred or split by SLO throttling.
     pub throttled: usize,
+    /// Transfers split into chunked (partial-tensor) transfers by SLO
+    /// throttling — a subset of `throttled`.
+    pub chunked: usize,
+    /// Deferrable Store bytes spilled out of the schedule by SLO
+    /// throttling (they stay resident; the caller moves them later).
+    pub deferred_bytes: u64,
     /// Execution order produced by this pass, if it pins one.
     pub order: Option<Vec<OpId>>,
     pub diagnostics: Vec<Diagnostic>,
@@ -670,6 +676,10 @@ pub struct CompileReport {
     pub recomputed: usize,
     /// Prefetches deferred or split by SLO throttling (see `SloThrottle`).
     pub throttled: usize,
+    /// Transfers split into chunked (partial-tensor) transfers.
+    pub chunked: usize,
+    /// Deferrable Store bytes spilled past the schedule by SLO throttling.
+    pub deferred_bytes: u64,
     /// One report per pipeline stage, in execution order.
     pub per_pass: Vec<PassReport>,
     /// All diagnostics emitted across the session.
@@ -881,6 +891,8 @@ impl Compiler {
         let elided = per_pass.iter().map(|r| r.elided).sum();
         let recomputed = per_pass.iter().map(|r| r.recomputed).sum();
         let throttled = per_pass.iter().map(|r| r.throttled).sum();
+        let chunked = per_pass.iter().map(|r| r.chunked).sum();
+        let deferred_bytes = per_pass.iter().map(|r| r.deferred_bytes).sum();
         Ok(CompileReport {
             order: final_order,
             inserted,
@@ -889,6 +901,8 @@ impl Compiler {
             elided,
             recomputed,
             throttled,
+            chunked,
+            deferred_bytes,
             per_pass,
             diagnostics,
             cache_hits: cache.hits,

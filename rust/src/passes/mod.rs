@@ -57,14 +57,20 @@
 //! become the critical path and cheap producers are replayed instead.
 //!
 //! **[`SloThrottle`]** ([`Compiler::slo_throttle`] + [`Compiler::slo_us`])
-//! — transfer *timing* shaped against a latency SLO. The budget is global:
-//! `max(slo, entry makespan)`. Greedily (latest consumers first) the pass
-//! defers prefetches to later anchors and splits oversized pool-resident
-//! prefetches into chunked transfers, committing only rewrites that keep
-//! the re-simulated makespan within budget, never raise peak residency
-//! above the entry schedule, and strictly reduce peak or residency
-//! byte·time — spending SLO slack to spill bytes into pool headroom
-//! rather than letting early transfers camp in HBM.
+//! — transfer *timing* shaped against a latency SLO. First it *spills*:
+//! Stores of `deferrable` tensors (serving KV writebacks) are shrunk to
+//! the largest chunk view that fits the budget, the shed bytes reported
+//! for the caller to move in a later schedule. Then, against a global
+//! budget of `max(slo, makespan)`, it greedily (latest consumers first)
+//! defers prefetches to later anchors and splits oversized transfers —
+//! pool-resident prefetches *and* full Store/Prefetch round trips — into
+//! chunked partial-tensor transfers ([`Graph::add_chunk_tensor`]),
+//! committing only rewrites that keep the re-simulated makespan within
+//! budget, never raise peak residency above the entry schedule, and
+//! strictly reduce peak or residency byte·time — spending SLO slack to
+//! spill bytes into pool headroom rather than letting early transfers
+//! camp in HBM. The serving engine compiles every step through this pass
+//! (see `serving::step_graph`).
 //!
 //! ## Writing a custom pass
 //!

@@ -1,20 +1,31 @@
-//! `SloThrottle`: shape transfer timing against a latency SLO — defer or
-//! split prefetches whose bandwidth demand crowds the schedule, preferring
-//! to spill pool headroom (bytes stay remote longer) over early residency.
+//! `SloThrottle`: shape transfer timing against a latency SLO — spill,
+//! defer or split transfers whose bandwidth demand crowds the schedule,
+//! preferring to spill pool headroom (bytes stay remote longer) or SLO
+//! slack over early residency.
 //!
 //! Modeled on "Memory Offloading for LLM Inference with Latency SLO
 //! Guarantees": offload traffic must not push the serving/step latency past
 //! its budget, and transfer *timing* — not just placement — is a resource
 //! to allocate. This pass runs after exec-order on the session's pinned
-//! schedule and applies two rewrites, each speculated and validated by
+//! schedule and applies three rewrites, each speculated and validated by
 //! re-simulation under the session's assumed fabric contention:
 //!
-//! * **split** — a monolithic prefetch of a pool-resident tensor becomes
-//!   `k` chunked prefetches (fresh `.chunk` tensors aliasing the same pool
-//!   storage, every consumer waiting on all chunks). Chunks arrive
-//!   staggered instead of as one bandwidth spike, roughly halving the
-//!   transfer-window residency byte·time and giving the scheduler
-//!   preemption points between chunks.
+//! * **spill** — a Store of a [`deferrable`](crate::graph::TensorInfo::deferrable)
+//!   tensor whose transfer pushes the schedule past the SLO is shrunk to
+//!   the largest chunk that fits the budget (a `.keep` chunk view aliasing
+//!   the tensor's storage); the shed bytes stay device-resident and are
+//!   reported as [`PassReport::deferred_bytes`] for the caller to move in a
+//!   later schedule. This is how the serving engine's per-step KV
+//!   writeback throttling is expressed in the IR.
+//! * **split** — a monolithic transfer becomes `k` chunked transfers over
+//!   `.chunk` tensors aliasing the same storage
+//!   ([`Graph::add_chunk_tensor`]): either a pool-resident prefetch
+//!   (chunks arrive staggered instead of as one bandwidth spike) or a full
+//!   Store/Prefetch *round trip* (each chunk leaves and returns
+//!   independently — partial-tensor residency, so the release curve steps
+//!   down per chunk store instead of waiting for the whole transfer).
+//!   Either way the transfer-window residency byte·time drops and the
+//!   scheduler gains preemption points between chunks.
 //! * **defer** — a prefetch is re-anchored later (control dep on a later
 //!   compute op, the same mechanism Algorithm 1 uses to pin issue time),
 //!   trading latency slack for memory: the bytes spill into pool headroom
@@ -23,15 +34,17 @@
 //! ## How the SLO budget is apportioned
 //!
 //! The budget is global, not per-transfer: `budget = max(slo_us, entry
-//! makespan)` (an already-over-SLO schedule is never made worse). Rewrites
-//! are committed greedily — latest-consumer prefetches first — and every
-//! commit must keep the *re-simulated* makespan within the budget and the
-//! peak at-or-below the entry schedule's peak, and must strictly improve
-//! peak residency or residency byte·time. Whatever slack one decision
-//! consumes is gone for the next (each speculation re-simulates the live
-//! graph), so the pass never overdraws the SLO. Consequently the throttled
-//! schedule's peak device bytes never exceed the no-throttle schedule's —
-//! the P11 invariant.
+//! makespan)` (an already-over-SLO schedule is never made worse; spills
+//! run first and can only *shrink* the entry makespan toward the SLO).
+//! Rewrites are committed greedily — latest-consumer prefetches first —
+//! and every commit must keep the *re-simulated* makespan within the
+//! budget and the peak at-or-below the entry schedule's peak; splits and
+//! deferrals must additionally strictly improve peak residency or
+//! residency byte·time, spills must strictly improve makespan. Whatever
+//! slack one decision consumes is gone for the next (each speculation
+//! re-simulates the live graph), so the pass never overdraws the SLO.
+//! Consequently the throttled schedule's peak device bytes never exceed
+//! the no-throttle schedule's — the P11/P12 invariant.
 
 use crate::graph::{Graph, OpId, OpKind, TensorId, Tier};
 use crate::sim::simulate;
@@ -42,19 +55,34 @@ use super::compiler::{AnalysisCache, CompileError, Diagnostic, Pass, PassCtx, Pa
 /// ([`Compiler::slo_us`](super::Compiler::slo_us)).
 #[derive(Debug, Clone)]
 pub struct SloThrottle {
-    /// Split pool-resident prefetches of at least `2 × split_min_bytes`
-    /// into chunks of roughly this size.
+    /// Split transfers of at least `2 × split_min_bytes` into chunks of
+    /// roughly this size (pool-resident prefetches and Store/Prefetch
+    /// round trips).
     pub split_min_bytes: u64,
     /// Upper bound on chunks per split.
     pub max_chunks: usize,
-    /// Safety bound on committed rewrites (splits + deferrals) per
-    /// compile — each commit re-simulates, so this bounds compile time.
+    /// Safety bound on committed rewrites (spills + splits + deferrals)
+    /// per compile — each commit re-simulates, so this bounds compile time.
     pub max_decisions: usize,
+    /// Shed Store traffic of `deferrable` tensors past the schedule when
+    /// the SLO demands it (the spill rewrite). Inert on graphs without
+    /// deferrable tensors.
+    pub spill_deferrable_stores: bool,
+    /// Allow re-anchoring prefetches later (the defer rewrite). The
+    /// serving step compiler disables this: decode needs its fetched KV
+    /// blocks now, so only spills and splits apply.
+    pub defer_prefetches: bool,
 }
 
 impl Default for SloThrottle {
     fn default() -> Self {
-        Self { split_min_bytes: 64 << 20, max_chunks: 4, max_decisions: 64 }
+        Self {
+            split_min_bytes: 64 << 20,
+            max_chunks: 4,
+            max_decisions: 64,
+            spill_deferrable_stores: true,
+            defer_prefetches: true,
+        }
     }
 }
 
@@ -78,21 +106,64 @@ impl Pass for SloThrottle {
         let chw = ctx.contended_hw();
         let entry_order = cache.pinned_or_topo(g)?;
         let base = simulate(g, &entry_order, &chw);
-        // Global budget: never regress an already-over-SLO schedule.
-        let budget = slo.max(base.makespan_us);
         let peak_cap = base.peak_device_bytes;
 
         let mut order = entry_order;
         let mut split_count = 0usize;
         let mut deferred = 0usize;
-
-        // ---- phase 1: split oversized pool-resident prefetches ----------
-        let mut decided: Vec<TensorId> = Vec::new();
         let mut cur = base.clone();
-        while split_count + deferred < self.max_decisions {
-            let Some((t, pf, k)) = self.split_candidate(g, &decided) else { break };
+
+        // ---- phase 0: spill deferrable Store traffic past the SLO -------
+        // Unlike the later phases this one *reduces* an over-SLO entry
+        // makespan instead of accepting it: a writeback the caller marked
+        // deferrable need not complete inside this schedule at all, so its
+        // Store is shrunk to the largest chunk that fits the budget and
+        // the rest is reported as `deferred_bytes`.
+        let mut spills = 0usize;
+        if self.spill_deferrable_stores {
+            let mut decided_spill: Vec<TensorId> = Vec::new();
+            while spills + split_count + deferred < self.max_decisions
+                && cur.makespan_us > slo * (1.0 + 1e-12)
+            {
+                let Some((s, t)) = next_deferrable_store(g, &decided_spill) else { break };
+                decided_spill.push(t);
+                let Some(sp) = spill_store(g, s, t, slo, peak_cap, &chw, &cur) else { continue };
+                let name = g.tensor(t).name.clone();
+                rep.diagnostics.push(Diagnostic::info(
+                    self.name(),
+                    format!(
+                        "spilled {} of {} deferrable bytes of '{name}': makespan \
+                         {:.1} -> {:.1} us (slo {slo:.1})",
+                        sp.deferred_bytes,
+                        g.tensor(t).bytes,
+                        cur.makespan_us,
+                        sp.sim.makespan_us
+                    ),
+                ));
+                *g = sp.graph;
+                order = sp.order;
+                cur = sp.sim;
+                rep.deferred_bytes += sp.deferred_bytes;
+                spills += 1;
+            }
+        }
+
+        // Global budget: never regress an already-over-SLO schedule (after
+        // spills have pulled the makespan as close to the SLO as they can).
+        let budget = slo.max(cur.makespan_us);
+
+        // ---- phase 1: split oversized transfers into chunks -------------
+        // Pool-resident prefetches arrive staggered; Store/Prefetch round
+        // trips leave and return per chunk (partial-tensor residency).
+        let mut decided: Vec<TensorId> = Vec::new();
+        while spills + split_count + deferred < self.max_decisions {
+            let Some((t, kind, k)) = self.split_candidate(g, &decided) else { break };
             decided.push(t);
-            let Some(trial) = split_prefetch(g, t, pf, k) else { continue };
+            let trial = match kind {
+                SplitKind::PoolResident { pf } => split_prefetch(g, t, pf, k),
+                SplitKind::RoundTrip { st, pf } => split_round_trip(g, t, st, pf, k),
+            };
+            let Some(trial) = trial else { continue };
             let Ok(torder) = trial.topo_order_detailed() else { continue };
             let sim = simulate(&trial, &torder, &chw);
             // Same contract as deferrals: stay within budget and peak cap,
@@ -103,13 +174,18 @@ impl Pass for SloThrottle {
                         < cur.residency_byte_time() * (1.0 - 1e-9));
             if sim.makespan_us <= budget && sim.peak_device_bytes <= peak_cap && improves {
                 let name = g.tensor(t).name.clone();
+                let what = match kind {
+                    SplitKind::PoolResident { .. } => "prefetch",
+                    SplitKind::RoundTrip { .. } => "store/prefetch round trip",
+                };
                 *g = trial;
                 order = torder;
                 cur = sim;
                 split_count += 1;
+                rep.chunked += 1;
                 rep.diagnostics.push(Diagnostic::info(
                     self.name(),
-                    format!("split prefetch of '{name}' into {k} chunked transfers"),
+                    format!("split {what} of '{name}' into {k} chunked transfers"),
                 ));
             }
         }
@@ -118,7 +194,7 @@ impl Pass for SloThrottle {
         // Latest-consumer prefetches first: their windows close last, so
         // they have the most slack to spend. `cur` stays valid across
         // rejected speculations — only commits change the graph.
-        while split_count + deferred < self.max_decisions {
+        while self.defer_prefetches && spills + split_count + deferred < self.max_decisions {
             let mut committed = false;
             let prefetches: Vec<OpId> = order
                 .iter()
@@ -157,13 +233,14 @@ impl Pass for SloThrottle {
         }
 
         let final_sim = cur;
-        rep.throttled = split_count + deferred;
+        rep.throttled = spills + split_count + deferred;
         rep.diagnostics.push(Diagnostic::info(
             self.name(),
             format!(
-                "{split_count} split(s), {deferred} deferral(s); makespan {:.1} us against a \
-                 {budget:.1} us budget, peak {} bytes (entry {})",
-                final_sim.makespan_us, final_sim.peak_device_bytes, peak_cap
+                "{spills} spill(s) ({} bytes), {split_count} split(s), {deferred} \
+                 deferral(s); makespan {:.1} us against a {budget:.1} us budget, peak {} \
+                 bytes (entry {})",
+                rep.deferred_bytes, final_sim.makespan_us, final_sim.peak_device_bytes, peak_cap
             ),
         ));
         cache.pin_order(g, order.clone());
@@ -172,16 +249,31 @@ impl Pass for SloThrottle {
     }
 }
 
+/// Which transfer shape a split rewrite targets.
+#[derive(Debug, Clone, Copy)]
+enum SplitKind {
+    /// A lone prefetch of a pool-resident tensor (no Store).
+    PoolResident { pf: OpId },
+    /// A full Store → Prefetch round trip of one tensor.
+    RoundTrip { st: OpId, pf: OpId },
+}
+
 impl SloThrottle {
-    /// Next splittable prefetch: pool-resident tensor, exactly one cache
-    /// op (its lone prefetch), big enough for ≥ 2 chunks.
-    fn split_candidate(&self, g: &Graph, decided: &[TensorId]) -> Option<(TensorId, OpId, usize)> {
+    /// Next splittable transfer: either a pool-resident tensor with
+    /// exactly one cache op (its lone prefetch) or a tensor with exactly
+    /// one Store + one Prefetch (a full round trip); big enough for ≥ 2
+    /// chunks either way. Chunk views themselves are never re-split.
+    fn split_candidate(
+        &self,
+        g: &Graph,
+        decided: &[TensorId],
+    ) -> Option<(TensorId, SplitKind, usize)> {
         if self.split_min_bytes == 0 {
             return None;
         }
         for t in &g.tensors {
-            if t.home != Tier::Remote
-                || t.bytes < 2 * self.split_min_bytes
+            if t.bytes < 2 * self.split_min_bytes
+                || t.alias_of.is_some()
                 || decided.contains(&t.id)
             {
                 continue;
@@ -192,21 +284,160 @@ impl SloThrottle {
                 .filter(|o| o.kind.cache_tensor() == Some(t.id))
                 .map(|o| o.id)
                 .collect();
-            if cache_ops.len() != 1 {
-                continue;
-            }
-            let pf = cache_ops[0];
-            if !matches!(g.op(pf).kind, OpKind::Prefetch { .. }) {
-                continue;
-            }
-            if !g.consumers_of(t.id).iter().any(|&c| !g.op(c).kind.is_cache_op()) {
-                continue;
-            }
+            let kind = match cache_ops.as_slice() {
+                [pf]
+                    if t.home == Tier::Remote
+                        && matches!(g.op(*pf).kind, OpKind::Prefetch { .. })
+                        && g.consumers_of(t.id).iter().any(|&c| !g.op(c).kind.is_cache_op()) =>
+                {
+                    SplitKind::PoolResident { pf: *pf }
+                }
+                [a, b] => {
+                    // A round trip in either op-id order; require the
+                    // insertion-pass wiring (prefetch control-deps its
+                    // store) and at least one window consumer waiting on
+                    // the prefetch so chunk arrivals have somewhere to
+                    // anchor.
+                    let (st, pf) = match (&g.op(*a).kind, &g.op(*b).kind) {
+                        (OpKind::Store { .. }, OpKind::Prefetch { .. }) => (*a, *b),
+                        (OpKind::Prefetch { .. }, OpKind::Store { .. }) => (*b, *a),
+                        _ => continue,
+                    };
+                    if !g.op(pf).control_deps.contains(&st)
+                        || window_consumers(g, pf).is_empty()
+                    {
+                        continue;
+                    }
+                    SplitKind::RoundTrip { st, pf }
+                }
+                _ => continue,
+            };
             let k = ((t.bytes / self.split_min_bytes) as usize).clamp(2, self.max_chunks.max(2));
-            return Some((t.id, pf, k));
+            return Some((t.id, kind, k));
         }
         None
     }
+}
+
+/// Non-cache ops control-depending on `pf` — the consumers the insertion
+/// pass ordered after transfer completion (§4.2.1's "at/after-window"
+/// set).
+fn window_consumers(g: &Graph, pf: OpId) -> Vec<OpId> {
+    g.ops
+        .iter()
+        .filter(|o| o.control_deps.contains(&pf) && !o.kind.is_cache_op())
+        .map(|o| o.id)
+        .collect()
+}
+
+/// First Store of a deferrable, not-yet-decided tensor.
+fn next_deferrable_store(g: &Graph, decided: &[TensorId]) -> Option<(OpId, TensorId)> {
+    g.ops.iter().find_map(|o| match o.kind {
+        OpKind::Store { tensor }
+            if g.tensor(tensor).deferrable
+                && g.tensor(tensor).alias_of.is_none()
+                && !decided.contains(&tensor) =>
+        {
+            Some((o.id, tensor))
+        }
+        _ => None,
+    })
+}
+
+/// A committed spill rewrite.
+struct Spill {
+    graph: Graph,
+    order: Vec<OpId>,
+    sim: crate::sim::SimResult,
+    deferred_bytes: u64,
+}
+
+/// Shrink the Store `s` of deferrable tensor `t` to the largest `.keep`
+/// chunk whose schedule fits `max(slo, floor)` — `floor` being the
+/// makespan with the store fully shed (an SLO below the floor cannot be
+/// bought with this store). The shed bytes stay device-resident (no chunk
+/// releases them); the caller is responsible for moving them in a later
+/// schedule. Returns `None` when spilling cannot strictly improve the
+/// makespan or would raise the peak above `peak_cap`.
+fn spill_store(
+    g: &Graph,
+    s: OpId,
+    t: TensorId,
+    slo: f64,
+    peak_cap: u64,
+    chw: &crate::sim::HwConfig,
+    cur: &crate::sim::SimResult,
+) -> Option<Spill> {
+    let bytes = g.tensor(t).bytes;
+    if bytes == 0 {
+        return None;
+    }
+    let name = g.tensor(t).name.clone();
+    let s_deps = g.op(s).control_deps.clone();
+    let dependents: Vec<OpId> = g
+        .ops
+        .iter()
+        .filter(|o| o.control_deps.contains(&s))
+        .map(|o| o.id)
+        .collect();
+
+    // Build the keep-k trial: replace Store(t) by Store(t.keep) of `keep`
+    // bytes with the same wiring (or drop it entirely at keep == 0).
+    let build = |keep: u64| -> Option<(Graph, Vec<OpId>)> {
+        let mut trial = g.clone();
+        if keep > 0 {
+            let kc = trial.add_chunk_tensor(t, format!("{name}.keep"), keep);
+            let st2 = trial.add_op(
+                format!("store.{name}.keep"),
+                OpKind::Store { tensor: kc },
+                vec![kc],
+                vec![],
+            );
+            for &d in &s_deps {
+                trial.add_control_dep(st2, d);
+            }
+            for &o in &dependents {
+                trial.add_control_dep(o, st2);
+            }
+        }
+        trial.remove_ops(&[s]);
+        let order = trial.topo_order_detailed().ok()?;
+        Some((trial, order))
+    };
+
+    // Floor: the store fully shed. If that does not beat the current
+    // schedule, the store is not what crowds the budget.
+    let (fg, forder) = build(0)?;
+    let fsim = simulate(&fg, &forder, chw);
+    if fsim.makespan_us >= cur.makespan_us * (1.0 - 1e-12) || fsim.peak_device_bytes > peak_cap {
+        return None;
+    }
+    let target = slo.max(fsim.makespan_us);
+
+    // Largest keep whose makespan fits the target: makespan is monotone
+    // non-decreasing in keep, so binary-search the byte count (the graphs
+    // are a handful of ops; ~30 re-simulations are cheap and exact).
+    let fits = |keep: u64| -> Option<(Graph, Vec<OpId>, crate::sim::SimResult)> {
+        let (tg, torder) = build(keep)?;
+        let sim = simulate(&tg, &torder, chw);
+        (sim.makespan_us <= target * (1.0 + 1e-12) && sim.peak_device_bytes <= peak_cap)
+            .then_some((tg, torder, sim))
+    };
+    let (mut lo, mut hi) = (0u64, bytes);
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if fits(mid).is_some() {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let keep = lo;
+    let (graph, order, sim) = fits(keep)?;
+    if sim.makespan_us >= cur.makespan_us * (1.0 - 1e-12) {
+        return None;
+    }
+    Some(Spill { graph, order, sim, deferred_bytes: bytes - keep })
 }
 
 /// Rewrite `t`'s lone prefetch into `k` chunked prefetches on a trial
@@ -244,6 +475,61 @@ fn split_prefetch(g: &Graph, t: TensorId, pf: OpId, k: usize) -> Option<Graph> {
             // consumer.
             trial.add_input(map[cns]?, tc);
             trial.add_control_dep(map[cns]?, pfc);
+        }
+    }
+    Some(trial)
+}
+
+/// Rewrite the Store/Prefetch round trip of `t` into `k` chunked round
+/// trips on a trial clone: each `.chunk` tensor is a chunk view of `t`'s
+/// device storage ([`Graph::add_chunk_tensor`]), stored out and prefetched
+/// back independently — the release curve steps down per chunk store and
+/// back up per chunk arrival (partial-tensor residency), instead of the
+/// whole tensor waiting for one monolithic transfer. `t` itself stays an
+/// input of its consumers (the logical value), while the bytes move
+/// through the chunks. Wiring mirrors the insertion pass: chunk stores
+/// inherit the store's anchors, each chunk prefetch waits on its own store
+/// (plus the prefetch's non-store anchors), and every window consumer
+/// waits on every chunk prefetch.
+fn split_round_trip(g: &Graph, t: TensorId, st: OpId, pf: OpId, k: usize) -> Option<Graph> {
+    let bytes = g.tensor(t).bytes;
+    let name = g.tensor(t).name.clone();
+    let st_deps = g.op(st).control_deps.clone();
+    let pf_deps: Vec<OpId> =
+        g.op(pf).control_deps.iter().copied().filter(|&d| d != st).collect();
+    let consumers = window_consumers(g, pf);
+    if consumers.is_empty() {
+        return None;
+    }
+    let mut trial = g.clone();
+    let map = trial.remove_ops(&[st, pf]);
+    let chunk = bytes / k as u64;
+    for j in 0..k {
+        let sz = if j + 1 == k { bytes - chunk * (k as u64 - 1) } else { chunk };
+        let tc = trial.add_chunk_tensor(t, format!("{name}.chunk{j}"), sz);
+        let stc = trial.add_op(
+            format!("store.{name}.chunk{j}"),
+            OpKind::Store { tensor: tc },
+            vec![tc],
+            vec![],
+        );
+        for &d in &st_deps {
+            trial.add_control_dep(stc, map[d]?);
+        }
+        let pfc = trial.add_op(
+            format!("prefetch.{name}.chunk{j}"),
+            OpKind::Prefetch { tensor: tc },
+            vec![tc],
+            vec![],
+        );
+        trial.add_control_dep(pfc, stc);
+        for &d in &pf_deps {
+            trial.add_control_dep(pfc, map[d]?);
+        }
+        for &c in &consumers {
+            let cm = map[c]?;
+            trial.add_input(cm, tc);
+            trial.add_control_dep(cm, pfc);
         }
     }
     Some(trial)
@@ -444,6 +730,147 @@ mod tests {
         let sb = simulate(&b, &rb.order, &hw());
         assert!(sb.makespan_us <= sa.makespan_us * (1.0 + 1e-9));
         assert!(sb.peak_device_bytes <= sa.peak_device_bytes);
+    }
+
+    /// A decode-step-shaped graph: a deferrable 32 MiB KV writeback whose
+    /// Store dwarfs the 40 us of compute it could hide under, with 5 us of
+    /// host work waiting on both.
+    fn writeback_step() -> Graph {
+        let mut g = Graph::new();
+        let w = g.add_tensor("kv.wb", 32 << 20, crate::graph::Tier::Device);
+        g.set_deferrable(w, true);
+        let st = g.add_op("store.kv.wb", OpKind::Store { tensor: w }, vec![w], vec![]);
+        let t0 = g.add_tensor("out", 0, crate::graph::Tier::Device);
+        let c = g.add_op(
+            "decode",
+            OpKind::Compute { flops: 40e6, bytes_accessed: 0 },
+            vec![],
+            vec![t0],
+        );
+        let h = g.add_op("host", OpKind::HostWork { us: 5.0 }, vec![], vec![]);
+        g.add_control_dep(h, c);
+        g.add_control_dep(h, st);
+        g
+    }
+
+    #[test]
+    fn spill_sheds_deferrable_writeback_down_to_the_slo() {
+        // Entry makespan ~33.6 ms (the 32 MiB store at 1 GB/s); a 50 us
+        // SLO forces the spill to keep only what fits: store_end + 5 us of
+        // host work <= 50 us -> ~45 KB kept, the rest deferred.
+        let mut g = writeback_step();
+        let r = Compiler::empty(hw())
+            .slo_us(50.0)
+            .slo_throttle()
+            .verify(true)
+            .compile(&mut g)
+            .unwrap();
+        assert!(r.throttled >= 1, "spill never engaged");
+        assert!(
+            r.deferred_bytes > 30 << 20,
+            "almost everything should spill: {}",
+            r.deferred_bytes
+        );
+        let s = simulate(&g, &r.order, &hw());
+        assert!(s.makespan_us <= 50.0 * (1.0 + 1e-9), "SLO missed: {}", s.makespan_us);
+        // The kept chunk is a Store of a `.keep` view of the writeback.
+        let kept: Vec<_> = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::Store { .. }))
+            .collect();
+        assert_eq!(kept.len(), 1);
+        let OpKind::Store { tensor } = kept[0].kind else { unreachable!() };
+        assert_eq!(g.tensor(tensor).alias_of, Some(0));
+        assert_eq!(g.tensor(tensor).bytes + r.deferred_bytes, 32 << 20, "byte conservation");
+    }
+
+    #[test]
+    fn generous_slo_spills_nothing() {
+        let mut g = writeback_step();
+        let r = Compiler::empty(hw())
+            .slo_us(1e9)
+            .slo_throttle()
+            .verify(true)
+            .compile(&mut g)
+            .unwrap();
+        assert_eq!(r.deferred_bytes, 0);
+        assert_eq!(r.throttled, 0);
+    }
+
+    /// fwd produces a 256 MB activation, a long mid section opens the idle
+    /// window, bwd consumes it — the default pipeline inserts the
+    /// Store/Prefetch round trip the throttle then chunks.
+    fn big_round_trip_workload() -> Graph {
+        let mut b = GraphBuilder::new();
+        let act = b.tensor("act", 256 << 20, crate::graph::Tier::Device);
+        let sink = b.tensor("sink", 0, crate::graph::Tier::Device);
+        b.compute("fwd", 1e6, 0, vec![], vec![act]);
+        let mut prev = None;
+        for i in 0..8 {
+            let t = b.tensor(&format!("m{i}"), 0, crate::graph::Tier::Device);
+            let inputs = prev.map(|p| vec![p]).unwrap_or_default();
+            let o = b.compute(&format!("mid{i}"), 1e11, 0, inputs, vec![t]);
+            if i == 0 {
+                b.dep(o, 0);
+            }
+            prev = Some(t);
+        }
+        b.compute("bwd", 1e6, 0, vec![act, prev.unwrap()], vec![sink]);
+        b.build()
+    }
+
+    #[test]
+    fn oversized_round_trip_is_split_into_chunked_transfers() {
+        let mut a = big_round_trip_workload();
+        let ra = Compiler::new(hw()).verify(true).compile(&mut a).unwrap();
+        assert_eq!(ra.inserted.len(), 1, "round trip must be inserted");
+        let sa = simulate(&a, &ra.order, &hw());
+
+        let mut g = big_round_trip_workload();
+        let r = Compiler::new(hw())
+            .slo_us(sa.makespan_us * 1.1)
+            .slo_throttle()
+            .verify(true)
+            .compile(&mut g)
+            .unwrap();
+        let s = simulate(&g, &r.order, &hw());
+
+        assert!(r.chunked >= 1, "round trip never chunked");
+        let chunk_stores = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::Store { .. }) && o.name.contains(".chunk"))
+            .count();
+        let chunk_pfs = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::Prefetch { .. }) && o.name.contains(".chunk"))
+            .count();
+        assert_eq!(chunk_stores, 4, "256 MB must split into 4 chunk stores");
+        assert_eq!(chunk_pfs, 4);
+        // Chunk tensors are views of the activation's storage.
+        assert!(g
+            .tensors
+            .iter()
+            .filter(|t| t.name.starts_with("act.chunk"))
+            .all(|t| t.alias_of == Some(0)));
+        assert!(s.makespan_us <= sa.makespan_us * 1.1 * (1.0 + 1e-9));
+        assert!(
+            s.peak_device_bytes <= sa.peak_device_bytes,
+            "chunking raised the peak: {} > {}",
+            s.peak_device_bytes,
+            sa.peak_device_bytes
+        );
+        assert!(
+            s.residency_byte_time() < sa.residency_byte_time(),
+            "partial residency must cut byte-time: {} !< {}",
+            s.residency_byte_time(),
+            sa.residency_byte_time()
+        );
+        // Conservation: the four chunk round trips move exactly the
+        // activation's bytes twice, like the unsplit round trip did.
+        assert_eq!(s.dma_bytes, sa.dma_bytes);
     }
 
     #[test]

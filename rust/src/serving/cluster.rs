@@ -124,6 +124,19 @@ pub struct ClusterReport {
     pub pool_peak_bytes: u64,
     /// Capacity of the shared remote pool (bytes).
     pub pool_capacity_bytes: u64,
+    /// Summed step-graph compile-cache hits across replicas.
+    pub compile_cache_hits: u64,
+    /// Summed step-graph compile-cache misses across replicas.
+    pub compile_cache_misses: u64,
+    /// Summed first-time SLO-deferred writeback bytes across replicas.
+    pub slo_deferred_bytes: u64,
+}
+
+impl ClusterReport {
+    /// Cluster-wide step-graph compile-cache hit rate in [0, 1].
+    pub fn compile_cache_hit_rate(&self) -> f64 {
+        super::metrics::hit_rate(self.compile_cache_hits, self.compile_cache_misses)
+    }
 }
 
 /// N engine replicas advanced through one event loop, sharing a
@@ -141,7 +154,12 @@ pub struct SimCluster {
 
 impl SimCluster {
     pub fn new(cfg: ClusterConfig) -> Self {
-        let pool = PoolHandle::new(cfg.engine.hw.remote_capacity);
+        // The shared pool hands out KV-block-sized chunks: every replica's
+        // reservation — prompt admission, per-step block growth — is
+        // chunk-granular, so sibling devices cannot fragment the ledger
+        // with partial blocks.
+        let chunk = cfg.engine.nsa.block_bytes(cfg.engine.model.kv_bytes_per_token);
+        let pool = PoolHandle::new_chunked(cfg.engine.hw.remote_capacity, chunk);
         let engines: Vec<SimServingEngine> = (0..cfg.n_replicas)
             .map(|_| SimServingEngine::with_pool(cfg.engine.clone(), pool.clone()))
             .collect();
@@ -250,6 +268,9 @@ impl SimCluster {
         let fabric_stall: f64 = per_replica.iter().map(|r| r.fabric_stall_us).sum();
         let kv_bytes: u64 = per_replica.iter().map(|r| r.kv_transfer_bytes).sum();
         let peak_device = per_replica.iter().map(|r| r.peak_device_bytes).max().unwrap_or(0);
+        let cache_hits: u64 = per_replica.iter().map(|r| r.compile_cache_hits).sum();
+        let cache_misses: u64 = per_replica.iter().map(|r| r.compile_cache_misses).sum();
+        let deferred: u64 = per_replica.iter().map(|r| r.slo_deferred_bytes).sum();
         ClusterReport {
             dispatched: self.dispatched,
             completed,
@@ -270,6 +291,9 @@ impl SimCluster {
             peak_device_bytes: peak_device,
             pool_peak_bytes: self.pool.peak(),
             pool_capacity_bytes: self.pool.capacity(),
+            compile_cache_hits: cache_hits,
+            compile_cache_misses: cache_misses,
+            slo_deferred_bytes: deferred,
             per_replica,
         }
     }

@@ -3,10 +3,21 @@
 //!
 //! Two scheduling modes mirror the paper's comparison:
 //! * baseline — KV `AllDevice`, no remote pool, fragmenting allocator
-//!   (defrag stalls land on the prefill path, §7.3.2);
-//! * hierarchical — KV `FullOffload` with graph-driven scheduling: per-step
-//!   prefetch volume overlaps the step's compute (exposed only when the
-//!   transfer outruns it), CPU sparse-block processing serialises (§7.3.3).
+//!   (defrag stalls land on the prefill path, §7.3.2); nothing crosses the
+//!   device boundary, so steps are costed directly.
+//! * hierarchical — KV `FullOffload` with *compiled* graph-driven
+//!   scheduling: every step (prefill, batched decode, backlog drain) is
+//!   lowered into a small KV transfer graph and compiled through the
+//!   [`Compiler`](crate::passes::Compiler) session
+//!   ([`StepCompiler`](super::step_graph::StepCompiler), pipeline
+//!   `ExecOrder` → `SloThrottle` → elide) — step time is the compiled
+//!   schedule's makespan, exposed transfer is what it could not hide, and
+//!   under a decode SLO the throttle's spill rewrite decides which
+//!   writeback bytes defer into the backlog. A shape-keyed compile cache
+//!   amortises steady-state decode to a hash lookup. The retired analytic
+//!   cost model survives only as a conservation oracle
+//!   ([`EngineConfig::analytic_oracle`], exercised by tests and the
+//!   `compiled_serving` bench).
 //!
 //! # Steppable core
 //!
@@ -39,6 +50,7 @@ use crate::sim::HwConfig;
 
 use super::metrics::{stats, ServingReport};
 use super::request::{Request, RequestTiming};
+use super::step_graph::{StepCompiler, StepPhase, StepSpec};
 
 /// Analytic model-cost parameters for the served LLM (per device).
 #[derive(Debug, Clone)]
@@ -86,11 +98,18 @@ pub struct EngineConfig {
     pub max_preemptions: u32,
     /// Per-decode-step latency SLO (us). When set (hierarchical engines
     /// only), KV *writebacks* — the deferrable direction — are throttled:
-    /// d2r bytes that would push the step past the budget are carried in a
-    /// backlog and drained by later steps with slack (flushed exposed at
-    /// drain-out). Prefetches are never deferred: decode needs them now.
-    /// The compile-side counterpart is `Compiler::slo_us` + `SloThrottle`.
+    /// the step graph's writeback tensor is flagged deferrable and the
+    /// `SloThrottle` spill rewrite sheds whatever d2r bytes would push the
+    /// compiled schedule past the budget into a backlog, drained by later
+    /// steps with slack (flushed exposed at drain-out). Prefetches are
+    /// never deferred: decode needs them now.
     pub decode_slo_us: Option<f64>,
+    /// Retired analytic cost model, kept as a conservation oracle: when
+    /// true, hierarchical steps are costed with the pre-compiler backlog
+    /// arithmetic instead of compiling per-step KV transfer graphs. Used
+    /// by the P12 conservation proptest and the `compiled_serving` bench;
+    /// production configurations leave it false.
+    pub analytic_oracle: bool,
 }
 
 impl EngineConfig {
@@ -104,6 +123,7 @@ impl EngineConfig {
             overlap_transfers: false,
             max_preemptions: 3,
             decode_slo_us: None,
+            analytic_oracle: false,
         }
     }
 
@@ -117,6 +137,7 @@ impl EngineConfig {
             overlap_transfers: true,
             max_preemptions: 3,
             decode_slo_us: None,
+            analytic_oracle: false,
         }
     }
 
@@ -191,18 +212,31 @@ pub struct SimServingEngine {
     residency: Vec<(f64, u64)>,
     /// Writeback bytes waiting for a decode step with SLO slack.
     slo_backlog_d2r: u64,
-    /// Cumulative writeback byte·steps held back by the decode SLO
-    /// throttle (a byte deferred across k steps counts k times).
+    /// Writeback bytes the decode SLO throttle deferred at least once
+    /// (each byte counts once, on first deferral).
     slo_deferred_bytes: u64,
+    /// Time-weighted counterpart: a byte deferred across k steps counts k
+    /// times (the metric `slo_deferred_bytes` used to conflate).
+    slo_deferred_byte_steps: u64,
     /// Longest single decode iteration (us) — the quantity a decode SLO
     /// bounds.
     decode_step_us_max: f64,
+    /// Compiles per-step KV transfer graphs through the `Compiler`
+    /// session. `Some` for hierarchical engines unless the analytic
+    /// oracle is requested; `None` for the all-device baseline (nothing
+    /// crosses the device boundary).
+    step_compiler: Option<StepCompiler>,
+    /// Transfers the step compiler split into chunked (partial-tensor)
+    /// transfers across all compiled steps.
+    chunk_splits: u64,
 }
 
 impl SimServingEngine {
-    /// An engine with a private remote pool of `hw.remote_capacity` bytes.
+    /// An engine with a private remote pool of `hw.remote_capacity` bytes,
+    /// reserved at KV-block (chunk) granularity.
     pub fn new(cfg: EngineConfig) -> Self {
-        let pool = PoolHandle::new(cfg.hw.remote_capacity);
+        let chunk = cfg.nsa.block_bytes(cfg.model.kv_bytes_per_token);
+        let pool = PoolHandle::new_chunked(cfg.hw.remote_capacity, chunk);
         Self::with_pool(cfg, pool)
     }
 
@@ -221,9 +255,12 @@ impl SimServingEngine {
             kv_budget,
             pool,
         );
+        let step_compiler = (cfg.kv_policy == KvPolicy::FullOffload && !cfg.analytic_oracle)
+            .then(|| StepCompiler::new(cfg.hw.clone(), cfg.overlap_transfers));
         Self {
             cfg,
             kv,
+            step_compiler,
             clock_us: 0.0,
             pending: VecDeque::new(),
             active: Vec::new(),
@@ -238,7 +275,9 @@ impl SimServingEngine {
             residency: Vec::new(),
             slo_backlog_d2r: 0,
             slo_deferred_bytes: 0,
+            slo_deferred_byte_steps: 0,
             decode_step_us_max: 0.0,
+            chunk_splits: 0,
         }
     }
 
@@ -343,12 +382,21 @@ impl SimServingEngine {
     /// One scheduler iteration: admit what is admissible, then run one
     /// batched decode step (or jump the clock to the next arrival when
     /// idle). Returns false when there is no work at all.
+    ///
+    /// The SLO writeback backlog has exactly one drain site: whatever path
+    /// a step takes — decode-to-empty, or every pending request rejected
+    /// at prefill — the backlog is flushed the moment nothing is queued
+    /// and nothing is in flight, so deferred bytes are never dropped.
     pub fn step(&mut self, fabric: &FabricPressure) -> Result<bool> {
+        let progressed = self.step_inner(fabric)?;
         if self.pending.is_empty() && self.active.is_empty() {
-            // A run can also end through the admission path (every pending
-            // request rejected at prefill) — flush any SLO writeback
-            // backlog here too, so deferred bytes are never dropped.
-            self.flush_slo_backlog(fabric);
+            self.flush_slo_backlog(fabric)?;
+        }
+        Ok(progressed)
+    }
+
+    fn step_inner(&mut self, fabric: &FabricPressure) -> Result<bool> {
+        if self.pending.is_empty() && self.active.is_empty() {
             return Ok(false);
         }
         // Admit arrivals while there is batch room.
@@ -368,7 +416,7 @@ impl SimServingEngine {
             }
             let p = self.pending.pop_front().unwrap();
             self.clock_us = self.clock_us.max(p.req.arrival_us);
-            if self.prefill(p, fabric).is_err() {
+            if !self.prefill(p, fabric)? {
                 self.rejected += 1;
             }
         }
@@ -391,9 +439,6 @@ impl SimServingEngine {
                 i += 1;
             }
         }
-        if self.active.is_empty() && self.pending.is_empty() {
-            self.flush_slo_backlog(fabric);
-        }
         Ok(true)
     }
 
@@ -412,37 +457,77 @@ impl SimServingEngine {
 
     /// Prefill one queued sequence (serial, as in chunked-prefill-off
     /// serving). For a requeued preemption this is the recompute pass.
-    fn prefill(&mut self, p: PendingSeq, fabric: &FabricPressure) -> Result<()> {
+    ///
+    /// Hierarchical engines lower the prefill — compute plus the KV
+    /// writeback streaming to the pool — into a step graph and run the
+    /// compiled schedule; the baseline (no transfers) and the analytic
+    /// oracle cost the step directly.
+    ///
+    /// Returns `Ok(false)` when admission fails for capacity (an ordinary
+    /// rejection). A step-compiler error is an engine bug, not a capacity
+    /// signal: the admission is unwound and the error propagates.
+    fn prefill(&mut self, p: PendingSeq, fabric: &FabricPressure) -> Result<bool> {
         let start_us = self.clock_us;
 
         let compute_us = self
             .cfg
             .hw
             .compute_us(self.cfg.model.prefill_flops_per_token * p.prefill_tokens as f64, 0);
-        let admit = self.kv.admit(p.req.id, p.prefill_tokens, &self.cfg.hw)?;
+        let Ok(admit) = self.kv.admit(p.req.id, p.prefill_tokens, &self.cfg.hw) else {
+            return Ok(false); // device/pool capacity rejection
+        };
         self.defrag_stall_us += admit.defrag_us;
 
-        // Baseline: defrag stalls serialise into prefill (§7.3.2).
-        let mut t = compute_us + admit.defrag_us + admit.cpu_us;
-        // Hierarchical: prefill KV writeback streams to the pool; exposed
-        // only if it outruns prefill compute. Contention stretches the
-        // bandwidth term when siblings share the fabric window.
-        let d2r_us = self.cfg.hw.d2r_us_slowed(admit.d2r_bytes, fabric.d2r_slowdown);
-        let d2r_free_us = self.cfg.hw.d2r_us(admit.d2r_bytes);
-        if admit.d2r_bytes > 0 {
-            if self.cfg.overlap_transfers {
-                let exposed = (d2r_us - compute_us).max(0.0);
-                let exposed_free = (d2r_free_us - compute_us).max(0.0);
-                t += exposed;
-                self.exposed_transfer_us += exposed;
-                self.fabric_stall_us += exposed - exposed_free;
-            } else {
-                t += d2r_us;
-                self.exposed_transfer_us += d2r_us;
-                self.fabric_stall_us += d2r_us - d2r_free_us;
+        let t = if let Some(sc) = self.step_compiler.as_mut() {
+            let spec = StepSpec {
+                phase: StepPhase::Prefill,
+                batch: p.prefill_tokens,
+                compute_flops: self.cfg.model.prefill_flops_per_token * p.prefill_tokens as f64,
+                compute_bytes: 0,
+                kv_fetch_bytes: admit.r2d_bytes,
+                kv_writeback_bytes: admit.d2r_bytes,
+                cpu_us: admit.cpu_us,
+                defrag_us: admit.defrag_us,
+                slo_us: None, // the SLO bounds decode steps, not prefill
+            };
+            let cs = match sc.compile(&spec, fabric) {
+                Ok(cs) => cs,
+                Err(e) => {
+                    // Unwind the already-admitted sequence so its pool
+                    // reservation and KV state do not leak, then surface
+                    // the compiler failure (distinct from rejection).
+                    let _ = self.kv.retire(p.req.id);
+                    return Err(e.into());
+                }
+            };
+            self.exposed_transfer_us += cs.exposed_us;
+            self.fabric_stall_us += cs.exposed_us - cs.exposed_free_us;
+            self.kv_transfer_bytes += cs.moved_r2d + cs.moved_d2r;
+            self.chunk_splits += cs.chunk_splits as u64;
+            cs.step_us
+        } else {
+            // Baseline/oracle: defrag stalls serialise into prefill
+            // (§7.3.2); the hierarchical oracle exposes the writeback only
+            // where it outruns prefill compute.
+            let mut t = compute_us + admit.defrag_us + admit.cpu_us;
+            let d2r_us = self.cfg.hw.d2r_us_slowed(admit.d2r_bytes, fabric.d2r_slowdown);
+            let d2r_free_us = self.cfg.hw.d2r_us(admit.d2r_bytes);
+            if admit.d2r_bytes > 0 {
+                if self.cfg.overlap_transfers {
+                    let exposed = (d2r_us - compute_us).max(0.0);
+                    let exposed_free = (d2r_free_us - compute_us).max(0.0);
+                    t += exposed;
+                    self.exposed_transfer_us += exposed;
+                    self.fabric_stall_us += exposed - exposed_free;
+                } else {
+                    t += d2r_us;
+                    self.exposed_transfer_us += d2r_us;
+                    self.fabric_stall_us += d2r_us - d2r_free_us;
+                }
             }
-        }
-        self.kv_transfer_bytes += admit.d2r_bytes + admit.r2d_bytes;
+            self.kv_transfer_bytes += admit.d2r_bytes + admit.r2d_bytes;
+            t
+        };
 
         self.clock_us += t;
         let timing = match p.timing {
@@ -462,7 +547,7 @@ impl SimServingEngine {
             req: p.req,
             timing,
         });
-        Ok(())
+        Ok(true)
     }
 
     /// One batched decode step over all active sequences.
@@ -514,14 +599,69 @@ impl SimServingEngine {
                 });
             }
         }
-        // SLO throttle (hierarchical only): writebacks are the deferrable
-        // direction. Keep only the d2r bytes whose transfer fits this
-        // step's budget — max(slo − cpu − defrag, compute); transfers up
-        // to the compute time are free under overlap — and carry the rest
-        // in a backlog that drains through later steps' slack.
+        // Compiled path (hierarchical): lower the step into a KV transfer
+        // graph — compute, fetch, writeback (plus a bounded backlog drain
+        // attempt) and the host tail — and run the compiled schedule. The
+        // SLO reaches the graph as `Compiler::slo_us`; the throttle's
+        // spill rewrite decides which writeback bytes defer.
+        if let Some(sc) = self.step_compiler.as_mut() {
+            let slo = self.cfg.decode_slo_us.filter(|_| self.cfg.overlap_transfers);
+            let mut drain = 0u64;
+            if slo.is_some() {
+                // Attempt to drain a bounded quantum per step: twice the
+                // step's own writeback inflow, so backlog shrinks whenever
+                // slack exists while the step *shape* — and therefore the
+                // compile-cache key — stays fixed during steady draining.
+                // The drain is rounded DOWN to whole KV blocks: the spill
+                // rewrite defers arbitrary byte counts, and without the
+                // rounding a sub-quantum backlog would put a fresh
+                // remainder in every step's key, turning steady drain-down
+                // into a compile-cache miss per step. Any sub-block
+                // residue rides to the final flush.
+                let block = self.kv.block_bytes().max(1);
+                let quantum = 2 * (batch.max(1) as u64) * block;
+                drain = (self.slo_backlog_d2r.min(quantum) / block) * block;
+            }
+            let spec = StepSpec {
+                phase: StepPhase::Decode,
+                batch,
+                compute_flops: self.cfg.model.decode_flops_per_token * batch as f64,
+                compute_bytes: self.cfg.model.weights_bytes,
+                kv_fetch_bytes: r2d,
+                kv_writeback_bytes: d2r + drain,
+                cpu_us,
+                defrag_us,
+                slo_us: slo,
+            };
+            let cs = sc.compile(&spec, fabric)?;
+            // Deferral applies to the re-attempted backlog bytes first, so
+            // `slo_deferred_bytes` counts each byte once (on its first
+            // deferral) while the byte·steps metric counts every carry.
+            let re_deferred = cs.deferred_d2r.min(drain);
+            self.slo_deferred_bytes += cs.deferred_d2r - re_deferred;
+            self.slo_deferred_byte_steps += cs.deferred_d2r;
+            self.slo_backlog_d2r = self.slo_backlog_d2r - drain + cs.deferred_d2r;
+            self.kv_transfer_bytes += cs.moved_r2d + cs.moved_d2r;
+            self.defrag_stall_us += defrag_us;
+            self.exposed_transfer_us += cs.exposed_us;
+            self.fabric_stall_us += cs.exposed_us - cs.exposed_free_us;
+            self.chunk_splits += cs.chunk_splits as u64;
+            self.clock_us += cs.step_us;
+            self.decode_step_us_max = self.decode_step_us_max.max(cs.step_us);
+            self.note_peak();
+            return Ok(());
+        }
+
+        // Analytic oracle / baseline path. SLO throttle (hierarchical
+        // oracle only): writebacks are the deferrable direction. Keep only
+        // the d2r bytes whose transfer fits this step's budget —
+        // max(slo − cpu − defrag, compute); transfers up to the compute
+        // time are free under overlap — and carry the rest in a backlog
+        // that drains through later steps' slack.
         if self.cfg.overlap_transfers {
             if let Some(slo) = self.cfg.decode_slo_us {
-                d2r += std::mem::take(&mut self.slo_backlog_d2r);
+                let carried = std::mem::take(&mut self.slo_backlog_d2r);
+                d2r += carried;
                 let budget_us = (slo - cpu_us - defrag_us).max(compute_us);
                 if d2r > 0
                     && self.cfg.hw.d2r_us_slowed(d2r, fabric.d2r_slowdown) > budget_us
@@ -532,7 +672,9 @@ impl SimServingEngine {
                     let keep = ((bw_budget / us_per_byte) as u64).min(d2r);
                     let defer = d2r - keep;
                     self.slo_backlog_d2r = defer;
-                    self.slo_deferred_bytes += defer;
+                    let re_deferred = defer.min(carried);
+                    self.slo_deferred_bytes += defer - re_deferred;
+                    self.slo_deferred_byte_steps += defer;
                     d2r = keep;
                 }
             }
@@ -570,18 +712,40 @@ impl SimServingEngine {
     /// Flush the SLO writeback backlog once nothing is decoding: the
     /// remaining bytes transfer exposed (no compute to hide under), so
     /// conservation holds — every deferred byte still reaches the pool.
-    fn flush_slo_backlog(&mut self, fabric: &FabricPressure) {
+    /// On the compiled path the drain is itself a compiled step (a lone
+    /// Store, no SLO — everything must move).
+    fn flush_slo_backlog(&mut self, fabric: &FabricPressure) -> Result<()> {
         if self.slo_backlog_d2r == 0 {
-            return;
+            return Ok(());
         }
         let bytes = std::mem::take(&mut self.slo_backlog_d2r);
-        let t = self.cfg.hw.d2r_us_slowed(bytes, fabric.d2r_slowdown);
-        let t_free = self.cfg.hw.d2r_us(bytes);
-        self.exposed_transfer_us += t;
-        self.fabric_stall_us += t - t_free;
-        self.kv_transfer_bytes += bytes;
-        self.clock_us += t;
+        if let Some(sc) = self.step_compiler.as_mut() {
+            let spec = StepSpec {
+                phase: StepPhase::Drain,
+                batch: 0,
+                compute_flops: 0.0,
+                compute_bytes: 0,
+                kv_fetch_bytes: 0,
+                kv_writeback_bytes: bytes,
+                cpu_us: 0.0,
+                defrag_us: 0.0,
+                slo_us: None,
+            };
+            let cs = sc.compile(&spec, fabric)?;
+            self.exposed_transfer_us += cs.exposed_us;
+            self.fabric_stall_us += cs.exposed_us - cs.exposed_free_us;
+            self.kv_transfer_bytes += cs.moved_d2r;
+            self.clock_us += cs.step_us;
+        } else {
+            let t = self.cfg.hw.d2r_us_slowed(bytes, fabric.d2r_slowdown);
+            let t_free = self.cfg.hw.d2r_us(bytes);
+            self.exposed_transfer_us += t;
+            self.fabric_stall_us += t - t_free;
+            self.kv_transfer_bytes += bytes;
+            self.clock_us += t;
+        }
         self.note_peak();
+        Ok(())
     }
 
     fn note_peak(&mut self) {
@@ -633,7 +797,11 @@ impl SimServingEngine {
             rejected_requests: self.rejected,
             preempted_events: self.preempted_events,
             slo_deferred_bytes: self.slo_deferred_bytes,
+            slo_deferred_byte_steps: self.slo_deferred_byte_steps,
             decode_step_us_max: self.decode_step_us_max,
+            compile_cache_hits: self.step_compiler.as_ref().map_or(0, |sc| sc.hits),
+            compile_cache_misses: self.step_compiler.as_ref().map_or(0, |sc| sc.misses),
+            chunk_splits: self.chunk_splits,
             residency: self.residency,
         }
     }
@@ -914,6 +1082,89 @@ mod tests {
         assert_eq!(slo.kv_transfer_bytes, free.kv_transfer_bytes);
         assert_eq!(slo.tokens_generated, free.tokens_generated);
         assert_eq!(slo.rejected_requests, free.rejected_requests);
+    }
+
+    #[test]
+    fn run_ending_in_rejection_still_flushes_slo_backlog() {
+        // A decodes under a 1 us SLO (every step sheds writeback into the
+        // backlog); B's prompt cannot fit the pool and is rejected at
+        // prefill long after A finished, so the run ends through the
+        // admission path — the single flush exit must still conserve every
+        // deferred byte against the SLO-free run.
+        let mk = |slo| {
+            let mut cfg = writeback_heavy_cfg(slo);
+            cfg.hw.remote_capacity = 700 * MB;
+            cfg
+        };
+        let wl = vec![
+            req(0, 0.0, 8000, 50),        // 32 blocks of 16 MiB = 512 MiB
+            req(1, 1e12, 100_000, 10),    // ~6.1 GiB -> rejected at prefill
+        ];
+        let free = SimServingEngine::new(mk(None)).run(wl.clone()).unwrap();
+        let slo = SimServingEngine::new(mk(Some(1.0))).run(wl).unwrap();
+        assert_eq!(free.rejected_requests, 1);
+        assert_eq!(slo.rejected_requests, 1);
+        assert!(slo.slo_deferred_bytes > 0, "backlog never formed");
+        assert_eq!(
+            slo.kv_transfer_bytes, free.kv_transfer_bytes,
+            "deferred writeback bytes were dropped on the admission-path exit"
+        );
+    }
+
+    #[test]
+    fn deferred_bytes_and_byte_steps_are_distinct_metrics() {
+        // Bytes counts each deferred byte once; byte·steps counts every
+        // carry, so a multi-step backlog makes it strictly larger.
+        let wl = WorkloadConfig::long_sequence(2, 8000, 50, 7).generate();
+        let r = SimServingEngine::new(writeback_heavy_cfg(Some(1.0))).run(wl).unwrap();
+        assert!(r.slo_deferred_bytes > 0);
+        assert!(
+            r.slo_deferred_byte_steps > r.slo_deferred_bytes,
+            "carried bytes must be re-counted per step: {} <= {}",
+            r.slo_deferred_byte_steps,
+            r.slo_deferred_bytes
+        );
+    }
+
+    #[test]
+    fn steady_state_decode_amortises_compilation() {
+        // One long decode: the NSA selection shifts only at block
+        // boundaries, so after warmup almost every step hits the
+        // shape-keyed compile cache.
+        let mut eng = SimServingEngine::new(EngineConfig::hierarchical(hw(), small_model()));
+        eng.enqueue(req(0, 0.0, 8192, 600));
+        while eng.step(&FabricPressure::NONE).unwrap() {}
+        let r = eng.report();
+        assert!(r.compile_cache_misses > 0, "nothing compiled");
+        let rate = r.compile_cache_hit_rate();
+        assert!(rate >= 0.9, "steady-state decode hit rate {rate} < 0.9");
+    }
+
+    #[test]
+    fn compiled_path_matches_analytic_oracle_byte_totals() {
+        // The compiled step-graph path and the retired analytic oracle
+        // must agree on every byte that crosses the device boundary.
+        let wl = WorkloadConfig::long_sequence(3, 6000, 40, 11).generate();
+        for slo in [None, Some(1.0), Some(5_000.0)] {
+            let compiled = SimServingEngine::new(EngineConfig {
+                decode_slo_us: slo,
+                ..EngineConfig::hierarchical(hw(), small_model())
+            })
+            .run(wl.clone())
+            .unwrap();
+            let oracle = SimServingEngine::new(EngineConfig {
+                decode_slo_us: slo,
+                analytic_oracle: true,
+                ..EngineConfig::hierarchical(hw(), small_model())
+            })
+            .run(wl.clone())
+            .unwrap();
+            assert_eq!(compiled.kv_transfer_bytes, oracle.kv_transfer_bytes, "slo {slo:?}");
+            assert_eq!(compiled.tokens_generated, oracle.tokens_generated);
+            assert_eq!(compiled.rejected_requests, oracle.rejected_requests);
+            assert!(compiled.compile_cache_misses > 0);
+            assert_eq!(oracle.compile_cache_misses, 0, "oracle must not compile");
+        }
     }
 
     #[test]

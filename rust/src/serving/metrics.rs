@@ -52,14 +52,46 @@ pub struct ServingReport {
     /// Preemption events (sequences evicted mid-decode and requeued for
     /// recompute re-prefill; a request may contribute several).
     pub preempted_events: u64,
-    /// Cumulative writeback byte·steps held back by the decode SLO
-    /// throttle (0 when no `decode_slo_us` is configured).
+    /// Writeback bytes the decode SLO throttle deferred at least once —
+    /// each byte counts exactly once, on its first deferral (0 when no
+    /// `decode_slo_us` is configured).
     pub slo_deferred_bytes: u64,
+    /// Time-weighted deferral: a byte carried in the backlog across k
+    /// decode steps counts k times (the metric `slo_deferred_bytes`
+    /// conflated before it was split in two).
+    pub slo_deferred_byte_steps: u64,
     /// Longest single decode iteration (us) — what a decode SLO bounds.
     pub decode_step_us_max: f64,
+    /// Step-graph compile-cache hits (compiled engines; 0 for the
+    /// baseline and the analytic oracle).
+    pub compile_cache_hits: u64,
+    /// Step-graph compile-cache misses (actual compiles).
+    pub compile_cache_misses: u64,
+    /// Transfers the step compiler split into chunked (partial-tensor)
+    /// transfers.
+    pub chunk_splits: u64,
     /// Device-residency curve: (time us, device bytes) samples taken at
     /// every admission/decode boundary, non-decreasing in time.
     pub residency: Vec<(f64, u64)>,
+}
+
+/// Hit rate in [0, 1]; 0 when nothing was looked up. Shared by the
+/// engine- and cluster-level compile-cache reports.
+pub(crate) fn hit_rate(hits: u64, misses: u64) -> f64 {
+    let total = hits + misses;
+    if total == 0 {
+        0.0
+    } else {
+        hits as f64 / total as f64
+    }
+}
+
+impl ServingReport {
+    /// Step-graph compile-cache hit rate in [0, 1] (0 when nothing
+    /// compiled — baseline or oracle engines).
+    pub fn compile_cache_hit_rate(&self) -> f64 {
+        hit_rate(self.compile_cache_hits, self.compile_cache_misses)
+    }
 }
 
 #[cfg(test)]

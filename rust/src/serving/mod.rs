@@ -2,20 +2,61 @@
 //! router, workload generation, continuous-batching engine with KV-cache
 //! residency policies, and the metrics the inference tables report.
 //!
+//! # The compiled step-graph flow
+//!
+//! Hierarchical engines do not *estimate* what the compiler would do with
+//! their KV traffic — they run it. Every engine step flows through three
+//! stages:
+//!
+//! ```text
+//!  lowering            session pipeline                  SimResult feedback
+//!  ────────            ────────────────                  ─────────────────
+//!  prefill/decode/     Compiler::empty(hw)               step time   = makespan
+//!  drain  ──────────▶    .pass(ExecOrderPass)      ───▶  exposed     = makespan
+//!  (compute, KV          .pass(SloThrottle)               − compute − host
+//!  fetch Prefetch,       .pass(Elide…)                   deferred d2r = spill
+//!  KV writeback          .slo_us(decode_slo)              bytes → backlog
+//!  Store, host tail)     .verify(true)                   → ServingReport
+//! ```
+//!
+//! The lowering lives in [`step_graph`]: the step's compute, the NSA
+//! working-set fetch (`Prefetch`), the writeback (`Store`, flagged
+//! deferrable under a decode SLO) and the serialising host tail become IR
+//! nodes, and the same pass pipeline the training path uses schedules
+//! them. Under `EngineConfig::decode_slo_us` the throttle's spill rewrite
+//! sheds writeback bytes that would break the budget; the engine carries
+//! them in a backlog that later steps (and a final compiled drain step)
+//! conserve to the pool.
+//!
+//! Compilation is memoised on the step *shape* —
+//! `(phase, batch_bucket, kv_bytes_bucket)` plus cost-model inputs
+//! ([`step_graph::StepKey`]) — so steady-state decode, whose NSA selection
+//! only shifts at block boundaries, amortises to a hash lookup
+//! (`ServingReport::compile_cache_hit_rate`, ≥ 90 % in the
+//! `compiled_serving` bench). The retired analytic cost model survives
+//! only as a conservation oracle (`EngineConfig::analytic_oracle`) that
+//! the P12 proptest cross-checks byte totals against.
+//!
+//! # Cluster simulation
+//!
 //! The unit of simulation is the *cluster*: [`SimServingEngine`] is a
 //! resumable stepper (it never owns global time), and [`SimCluster`]
 //! advances N replicas through one event loop while they share a
-//! capacity-accounted remote pool and a bandwidth-contended device↔pool
-//! fabric — see the [`cluster`] module docs for the contract.
+//! chunk-granular, capacity-accounted remote pool and a
+//! bandwidth-contended device↔pool fabric — see the [`cluster`] module
+//! docs for the contract. Fabric pressure reaches the step compiler as
+//! per-direction bandwidth derating and is part of the compile-cache key.
 
 pub mod cluster;
 mod engine;
 mod metrics;
 mod request;
 mod router;
+pub mod step_graph;
 
 pub use cluster::{ClusterConfig, ClusterReport, SimCluster};
 pub use engine::{EngineConfig, FabricPressure, ModelCost, SimServingEngine};
 pub use metrics::{stats, ServingReport, Stats};
 pub use request::{Request, RequestTiming, WorkloadConfig};
 pub use router::{ReplicaView, RoutePolicy, Router};
+pub use step_graph::{CompiledStep, StepCompiler, StepKey, StepPhase, StepSpec};

@@ -29,14 +29,22 @@
 //!     simulated makespan (and never raises peak bytes), and adding
 //!     `SloThrottle` never raises peak device bytes above the no-throttle
 //!     schedule while keeping makespan within the SLO budget.
+//!  P12 The compiled serving path conserves bytes and partial residency
+//!     is sound: on random serving workloads the compiled step-graph path
+//!     and the retired analytic oracle agree on total KV bytes moved, and
+//!     chunked Store/Prefetch round trips never raise peak residency
+//!     above the unsplit schedule (while moving the same bytes within the
+//!     same budget).
 
 use hyperoffload::graph::{Graph, GraphBuilder, OpKind, Tier};
 use hyperoffload::kvcache::{KvCacheManager, KvPolicy, NsaConfig};
 use hyperoffload::memory::DeviceAllocator;
-use hyperoffload::passes::{refine, CompileError, Compiler, ExecOrderConfig, OffloadPolicy};
+use hyperoffload::passes::{
+    refine, CompileError, Compiler, ExecOrderConfig, OffloadPolicy, SloThrottle,
+};
 use hyperoffload::serving::{
     ClusterConfig, EngineConfig, ModelCost, Request, RoutePolicy, Router, SimCluster,
-    WorkloadConfig,
+    SimServingEngine, WorkloadConfig,
 };
 use hyperoffload::sim::{simulate, HwConfig, GB};
 use hyperoffload::util::rng::Rng;
@@ -431,6 +439,135 @@ fn p11_decision_passes_never_regress_schedules() {
             "seed {seed}: throttle broke the budget: {} vs slo {slo}",
             sc.makespan_us
         );
+    }
+}
+
+#[test]
+fn p12_compiled_serving_conserves_bytes_and_chunking_bounds_peak() {
+    // (a) On random serving workloads the compiled step-graph path and
+    // the retired analytic oracle agree on total KV bytes moved — every
+    // writeback byte the throttle defers still reaches the pool.
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed + 12_000);
+        let model = ModelCost {
+            weights_bytes: GB,
+            act_bytes: GB / 2,
+            prefill_flops_per_token: 16e9,
+            decode_flops_per_token: rng.f64_range(1e9, 32e9),
+            kv_bytes_per_token: 64 * 1024,
+        };
+        let hw = HwConfig::ascend910c_like().with_device_capacity(16 * GB);
+        let n = rng.usize(1, 6);
+        let wl: Vec<Request> = (0..n)
+            .map(|i| Request {
+                id: i as u64,
+                arrival_us: 0.0,
+                prompt_tokens: rng.usize(64, 4096),
+                gen_tokens: rng.usize(1, 80),
+            })
+            .collect();
+        let slo = if rng.next_f64() < 0.5 {
+            Some(rng.f64_range(1.0, 10_000.0))
+        } else {
+            None
+        };
+        let mk = |oracle: bool| EngineConfig {
+            decode_slo_us: slo,
+            analytic_oracle: oracle,
+            ..EngineConfig::hierarchical(hw.clone(), model.clone())
+        };
+        let compiled = SimServingEngine::new(mk(false)).run(wl.clone()).unwrap();
+        let oracle = SimServingEngine::new(mk(true)).run(wl.clone()).unwrap();
+        assert_eq!(
+            compiled.kv_transfer_bytes, oracle.kv_transfer_bytes,
+            "seed {seed}: compiled path lost bytes (slo {slo:?})"
+        );
+        assert_eq!(compiled.tokens_generated, oracle.tokens_generated, "seed {seed}");
+        assert_eq!(compiled.rejected_requests, oracle.rejected_requests, "seed {seed}");
+    }
+
+    // (b) Chunked Store/Prefetch round trips (partial-tensor residency)
+    // never raise peak residency above the unsplit schedule, conserve
+    // fabric bytes, and respect the budget. Deferral is disabled in both
+    // arms so the comparison isolates the chunking rewrite.
+    for seed in 0..15u64 {
+        let mut rng = Rng::new(seed + 13_000);
+        let hw = HwConfig::test_default();
+        let act_bytes = (128u64 << 20) + (rng.gen_range(0, 8) << 25);
+        let n_mid = rng.usize(8, 14);
+        let mid_flops = rng.f64_range(1.0e11, 2.0e11);
+        let build = || {
+            let mut b = GraphBuilder::new();
+            let act = b.tensor("act", act_bytes, Tier::Device);
+            let sink = b.tensor("sink", 0, Tier::Device);
+            b.compute("fwd", 1e6, 0, vec![], vec![act]);
+            let mut prev = None;
+            for i in 0..n_mid {
+                let t = b.tensor(&format!("m{i}"), 0, Tier::Device);
+                let inputs = prev.map(|p| vec![p]).unwrap_or_default();
+                let o = b.compute(&format!("mid{i}"), mid_flops, 0, inputs, vec![t]);
+                if i == 0 {
+                    b.dep(o, 0);
+                }
+                prev = Some(t);
+            }
+            b.compute("bwd", 1e6, 0, vec![act, prev.unwrap()], vec![sink]);
+            b.build()
+        };
+
+        let mut base = build();
+        let rb = Compiler::new(hw.clone()).compile(&mut base).unwrap();
+        if rb.inserted.is_empty() {
+            continue; // no round trip, nothing to chunk
+        }
+        let sbase = simulate(&base, &rb.order, &hw);
+        let slo = sbase.makespan_us * 1.1;
+
+        let throttle = |split_min: u64| SloThrottle {
+            split_min_bytes: split_min,
+            defer_prefetches: false,
+            ..Default::default()
+        };
+        let mut unsplit = build();
+        let ru = Compiler::new(hw.clone())
+            .slo_us(slo)
+            .pass(throttle(0))
+            .verify(true)
+            .compile(&mut unsplit)
+            .unwrap_or_else(|e| panic!("seed {seed}: unsplit {e}"));
+        let su = simulate(&unsplit, &ru.order, &hw);
+
+        let mut split = build();
+        let rs = Compiler::new(hw.clone())
+            .slo_us(slo)
+            .pass(throttle(64 << 20))
+            .verify(true)
+            .compile(&mut split)
+            .unwrap_or_else(|e| panic!("seed {seed}: split {e}"));
+        let ss = simulate(&split, &rs.order, &hw);
+
+        assert!(
+            ss.peak_device_bytes <= su.peak_device_bytes,
+            "seed {seed}: chunking raised peak {} > {}",
+            ss.peak_device_bytes,
+            su.peak_device_bytes
+        );
+        assert_eq!(
+            ss.dma_bytes, su.dma_bytes,
+            "seed {seed}: chunking changed fabric traffic"
+        );
+        assert!(
+            ss.makespan_us <= slo.max(su.makespan_us) * (1.0 + 1e-9),
+            "seed {seed}: chunked schedule broke the budget: {} vs {}",
+            ss.makespan_us,
+            slo
+        );
+        if rs.chunked > 0 {
+            assert!(
+                ss.residency_byte_time() < su.residency_byte_time(),
+                "seed {seed}: committed chunking must cut byte·time"
+            );
+        }
     }
 }
 
