@@ -16,10 +16,12 @@
 //!
 //! Besides the human-readable table the run emits
 //! `BENCH_compiled_serving.json` — throughput, P99 decode step, peak
-//! device bytes, deferred bytes and the compile-cache hit rate per
-//! configuration — so CI can track the perf trajectory and assert the
+//! device bytes, deferred bytes, the compile-cache hit rate and the
+//! step-compile latency (total + worst single compile, miss path only)
+//! per configuration — so CI can track the perf trajectory and assert the
 //! steady-state hit rate stays ≥ 90%. Pass `tiny` as the first argument
-//! for the CI-sized workload.
+//! for the CI-sized workload. A representative snapshot is committed at
+//! `benches/snapshots/BENCH_compiled_serving.json`.
 
 use hyperoffload::graph::GraphBuilder;
 use hyperoffload::kvcache::NsaConfig;
@@ -105,6 +107,7 @@ fn main() {
             "peak GB",
             "deferred MB",
             "cache hit %",
+            "compile ms",
         ],
     );
     for r in &rows {
@@ -116,6 +119,7 @@ fn main() {
             f(r.report.peak_device_bytes as f64 / 1e9, 2),
             f(r.report.slo_deferred_bytes as f64 / 1e6, 1),
             f(r.report.compile_cache_hit_rate() * 100.0, 1),
+            f(r.report.compile_us_total / 1e3, 1),
         ]);
     }
     t.print();
@@ -212,7 +216,8 @@ fn main() {
             "    {{\"config\": \"{}\", \"throughput_tok_s\": {:.3}, \
              \"p99_decode_us_per_tok\": {:.3}, \"decode_step_us_max\": {:.3}, \
              \"peak_device_bytes\": {}, \"kv_transfer_bytes\": {}, \
-             \"slo_deferred_bytes\": {}, \"compile_cache_hit_rate\": {:.4}}}{}\n",
+             \"slo_deferred_bytes\": {}, \"compile_cache_hit_rate\": {:.4}, \
+             \"compile_us_total\": {:.1}, \"compile_us_max\": {:.1}}}{}\n",
             r.name,
             r.report.throughput_tok_per_s,
             r.report.decode_per_token_us.p99,
@@ -221,6 +226,8 @@ fn main() {
             r.report.kv_transfer_bytes,
             r.report.slo_deferred_bytes,
             r.report.compile_cache_hit_rate(),
+            r.report.compile_us_total,
+            r.report.compile_us_max,
             ",",
         ));
     }

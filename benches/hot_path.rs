@@ -1,8 +1,13 @@
-//! Hot-path micro-benchmarks for the §Perf optimization pass: measures the
-//! L3 components that dominate wall-clock so before/after deltas can be
-//! recorded in EXPERIMENTS.md §Perf.
+//! Hot-path micro-benchmarks for the components that dominate compile and
+//! simulation wall-clock. Run with `cargo run --release --bin hot_path`
+//! and compare the printed table across commits when touching any of
+//! these paths.
 //!
-//!   1. Algorithm 1 refinement on large graphs (positions x window scan)
+//!   1. Algorithm 1 refinement on large graphs (positions x window scan),
+//!      up to production scale (20k ops), plus an A/B of the full session
+//!      pipeline (insert + refine + decision passes) with the incremental
+//!      AnalysisCache and windowed re-simulation on (the default) vs off
+//!      (the pre-incremental full-recompute path)
 //!   2. simulate() list-scheduling throughput
 //!   3. DeviceAllocator alloc/free churn
 //!   4. serving engine decode iterations
@@ -11,7 +16,10 @@
 use std::time::Instant;
 
 use hyperoffload::graph::GraphBuilder;
-use hyperoffload::passes::{prefetch_insert, refine, Compiler, ExecOrderConfig, OffloadPolicy};
+use hyperoffload::passes::{
+    prefetch_insert, refine, Compiler, ExecOrderConfig, OffloadPolicy, RecomputeVsOffload,
+    SloThrottle,
+};
 use hyperoffload::memory::DeviceAllocator;
 use hyperoffload::serving::{EngineConfig, ModelCost, SimServingEngine, WorkloadConfig};
 use hyperoffload::sim::{simulate, HwConfig, MB};
@@ -30,9 +38,10 @@ fn main() {
     let hw = HwConfig::ascend910c_like();
     let mut t = Table::new("hot-path timings", &["path", "size", "time/op", "derived"]);
 
-    // 1. Algorithm 1 on a large chain.
-    for n in [200usize, 800, 2000] {
-        let secs = time_it(3, || {
+    // 1. Algorithm 1 on a large chain, up to production graph scale.
+    for n in [200usize, 800, 2000, 20_000] {
+        let reps = if n >= 20_000 { 1 } else { 3 };
+        let secs = time_it(reps, || {
             let (mut g, _) = GraphBuilder::chain_with_remote_weights(n, 4e12, MB, 64 * MB);
             let order0 = g.topo_order().unwrap();
             prefetch_insert::run(&mut g, &order0, &hw, &OffloadPolicy::default());
@@ -44,6 +53,38 @@ fn main() {
             format!("{n} ops"),
             format!("{:.1} ms", secs * 1e3),
             format!("{:.2} us/op", secs * 1e6 / n as f64),
+        ]);
+    }
+
+    // 1b. Full session compile at production scale: incremental analyses
+    // + windowed re-simulation (the shipped defaults) against the
+    // pre-incremental path (version-keyed cache patching off, every
+    // decision-pass speculation validated by a full re-refine +
+    // re-simulate). Both arms run the same pipeline and produce the same
+    // schedule; only the validation machinery differs.
+    {
+        let n = 20_000usize;
+        let mut compile_secs = |fast: bool| {
+            let (mut g, _) = GraphBuilder::chain_with_remote_weights(n, 4e12, MB, 64 * MB);
+            let t0 = Instant::now();
+            let report = Compiler::new(hw.clone())
+                .policy(OffloadPolicy { min_bytes: 16 << 20, ..Default::default() })
+                .incremental(fast)
+                .slo_us(1e15)
+                .pass(RecomputeVsOffload { windowed: fast, ..Default::default() })
+                .pass(SloThrottle { windowed: fast, ..Default::default() })
+                .compile(&mut g)
+                .unwrap();
+            std::hint::black_box(report.order.len());
+            t0.elapsed().as_secs_f64()
+        };
+        let fast = compile_secs(true);
+        let slow = compile_secs(false);
+        t.row(&[
+            "full compile, incremental+windowed".into(),
+            format!("{n} ops"),
+            format!("{:.1} ms", fast * 1e3),
+            format!("{:.2}x vs full-recompute ({:.1} ms)", slow / fast, slow * 1e3),
         ]);
     }
 

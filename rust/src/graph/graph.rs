@@ -5,12 +5,47 @@
 //! cache operators). The *relative order of independent operators is
 //! unspecified* — exactly the freedom Algorithm 1 exploits (§4.3).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use anyhow::{bail, Result};
 
 use super::op::{Op, OpId, OpKind};
 use super::tensor::{TensorId, TensorInfo, Tier};
+
+/// What one structural mutation did, recorded in the graph's bounded
+/// journal so the compiler's `AnalysisCache` can *delta-update* cached
+/// analyses (topological order, lifetimes) instead of recomputing them
+/// from scratch after every version bump.
+///
+/// Every version increment pushes exactly one event; a consumer holding
+/// the version its analysis was computed at replays
+/// [`Graph::mutations_since`] to patch the analysis forward, falling back
+/// to full recomputation when the journal was truncated or a
+/// [`Mutation::NonLocal`] event appears.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mutation {
+    /// A tensor was registered. No op-ordering effect; lifetime tables
+    /// gain one (empty) entry.
+    TensorAdded { tensor: TensorId },
+    /// Tensor metadata changed (deferrable flag). No analysis effect.
+    TensorMeta,
+    /// An op was appended. Its id is the current maximum and nothing can
+    /// depend on it yet, so any cached canonical topological order stays
+    /// canonical with the new op appended at the end.
+    OpAdded { op: OpId },
+    /// `op` gained a data input `tensor` (edge producer(tensor) → op).
+    InputAdded { op: OpId, tensor: TensorId },
+    /// `op` gained an explicit ordering edge `dep → op`.
+    ControlDepAdded { op: OpId, dep: OpId },
+    /// A change cached analyses cannot patch locally (op removal, input
+    /// replacement): consumers must recompute from scratch.
+    NonLocal,
+}
+
+/// Journal capacity. Generous enough for the burst of local mutations a
+/// decision pass makes between analysis queries; a compile that mutates
+/// more than this between queries simply falls back to full recompute.
+const JOURNAL_CAP: usize = 256;
 
 /// A dependency cycle, reported with the ops that could not be ordered.
 ///
@@ -49,6 +84,10 @@ pub struct Graph {
     /// Bumped on every structural mutation; the compiler's `AnalysisCache`
     /// keys cached analyses against it.
     version: u64,
+    /// Sliding window of the most recent mutations, one entry per version
+    /// bump. `journal_start` is the version at the front of the window.
+    journal: VecDeque<Mutation>,
+    journal_start: u64,
 }
 
 impl Graph {
@@ -68,11 +107,33 @@ impl Graph {
         self.version
     }
 
+    /// Bump the version and journal what changed (exactly one event per
+    /// bump — the invariant `mutations_since` relies on).
+    fn bump(&mut self, m: Mutation) {
+        self.version += 1;
+        if self.journal.len() == JOURNAL_CAP {
+            self.journal.pop_front();
+            self.journal_start += 1;
+        }
+        self.journal.push_back(m);
+    }
+
+    /// The mutations applied since version `since`, oldest first, or
+    /// `None` when `since` predates the journal window (or lies in the
+    /// future) — in which case callers must recompute from scratch.
+    pub fn mutations_since(&self, since: u64) -> Option<Vec<Mutation>> {
+        if since > self.version || since < self.journal_start {
+            return None;
+        }
+        let skip = (since - self.journal_start) as usize;
+        Some(self.journal.iter().skip(skip).copied().collect())
+    }
+
     /// Register a tensor; returns its id.
     pub fn add_tensor(&mut self, name: impl Into<String>, bytes: u64, home: Tier) -> TensorId {
         let id = self.tensors.len();
         self.tensors.push(TensorInfo::new(id, name, bytes, home));
-        self.version += 1;
+        self.bump(Mutation::TensorAdded { tensor: id });
         id
     }
 
@@ -105,7 +166,7 @@ impl Graph {
         debug_assert!(t < self.tensors.len(), "tensor {t} unknown");
         if self.tensors[t].deferrable != on {
             self.tensors[t].deferrable = on;
-            self.version += 1;
+            self.bump(Mutation::TensorMeta);
         }
     }
 
@@ -136,7 +197,7 @@ impl Graph {
             control_deps: vec![],
             recompute: false,
         });
-        self.version += 1;
+        self.bump(Mutation::OpAdded { op: id });
         id
     }
 
@@ -163,7 +224,9 @@ impl Graph {
         if !v.contains(&op) {
             v.push(op);
         }
-        self.version += 1;
+        // Rewiring can *remove* the edge producer(old) → op, which cached
+        // orders cannot patch locally.
+        self.bump(Mutation::NonLocal);
     }
 
     /// Append `t` to `op`'s inputs (creating the data edge producer(t) →
@@ -176,14 +239,14 @@ impl Graph {
         }
         self.ops[op].inputs.push(t);
         self.consumers.entry(t).or_default().push(op);
-        self.version += 1;
+        self.bump(Mutation::InputAdded { op, tensor: t });
     }
 
     /// Add an explicit ordering edge `dep → op`.
     pub fn add_control_dep(&mut self, op: OpId, dep: OpId) {
         if !self.ops[op].control_deps.contains(&dep) {
             self.ops[op].control_deps.push(dep);
-            self.version += 1;
+            self.bump(Mutation::ControlDepAdded { op, dep });
         }
     }
 
@@ -267,7 +330,7 @@ impl Graph {
                 self.producer.insert(t, op.id);
             }
         }
-        self.version += 1;
+        self.bump(Mutation::NonLocal);
         new_id
     }
 
@@ -750,6 +813,38 @@ mod tests {
         assert!(first.inputs.contains(&0));
         assert!(g.validate().is_ok());
         assert_eq!(g.producer_of(clone.tensor), Some(*clone.ops.last().unwrap()));
+    }
+
+    #[test]
+    fn mutation_journal_tracks_every_bump() {
+        let mut g = diamond();
+        let v = g.version();
+        assert_eq!(g.mutations_since(v), Some(vec![]));
+        let t = g.add_tensor("x", 8, Tier::Device);
+        let e = g.add_op("e", OpKind::Compute { flops: 1.0, bytes_accessed: 8 }, vec![t], vec![]);
+        g.add_control_dep(e, 0);
+        g.add_control_dep(e, 0); // duplicate: no bump, no event
+        let muts = g.mutations_since(v).unwrap();
+        assert_eq!(
+            muts,
+            vec![
+                Mutation::TensorAdded { tensor: t },
+                Mutation::OpAdded { op: e },
+                Mutation::ControlDepAdded { op: e, dep: 0 },
+            ]
+        );
+        assert_eq!(g.version(), v + muts.len() as u64);
+        g.remove_ops(&[e]);
+        assert_eq!(g.mutations_since(g.version() - 1), Some(vec![Mutation::NonLocal]));
+        // Future versions and truncated windows both report None.
+        assert!(g.mutations_since(g.version() + 1).is_none());
+        let mut big = diamond();
+        let v0 = big.version();
+        for _ in 0..(super::JOURNAL_CAP + 4) {
+            big.set_deferrable(0, !big.tensor(0).deferrable);
+        }
+        assert!(big.mutations_since(v0).is_none());
+        assert!(big.mutations_since(big.version()).is_some());
     }
 
     #[test]

@@ -12,6 +12,6 @@ mod op;
 mod tensor;
 
 pub use builder::GraphBuilder;
-pub use graph::{CycleError, Graph, RecomputeClone, RecomputePlan};
+pub use graph::{CycleError, Graph, Mutation, RecomputeClone, RecomputePlan};
 pub use op::{Op, OpId, OpKind};
 pub use tensor::{TensorId, TensorInfo, Tier};

@@ -24,8 +24,9 @@
 //! ```
 
 use std::fmt;
+use std::rc::Rc;
 
-use crate::graph::{CycleError, Graph, OpId, OpKind, Tier};
+use crate::graph::{CycleError, Graph, Mutation, OpId, OpKind, Tier};
 use crate::sim::HwConfig;
 
 use super::exec_order::{self, ExecOrderConfig};
@@ -134,26 +135,76 @@ impl From<CycleError> for CompileError {
     }
 }
 
+/// How a cache query was served (internal; drives the per-analysis
+/// counters).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Served {
+    /// Version matched: the cached value was returned as-is.
+    Hit,
+    /// The cached value was patched forward from the graph's mutation
+    /// journal (no full recomputation).
+    Delta,
+    /// Full recomputation.
+    Miss,
+}
+
 /// Memoised analyses shared by all passes of one session.
 ///
-/// Results are keyed on [`Graph::version`], so any structural mutation
-/// (op/tensor insertion, control-dep wiring, op removal) invalidates them
-/// automatically — a pass never sees a stale topological order or lifetime
-/// table.
-#[derive(Debug, Default)]
+/// Results are keyed on [`Graph::version`] and handed out as shared
+/// [`Rc`] views — a cache hit is a pointer bump, never a clone of the
+/// order / lifetime tables. When the graph *has* mutated, the cache first
+/// replays the graph's bounded mutation journal
+/// ([`Graph::mutations_since`]): purely local mutations (op appends,
+/// forward control-dep / input wiring) *delta-update* the cached topo
+/// order and lifetime table instead of recomputing them; anything
+/// non-local (op removal, input replacement, journal truncation) falls
+/// back to full recomputation. Delta results are bit-identical to full
+/// recomputation — property-tested (P13) in rust/tests/.
+#[derive(Debug)]
 pub struct AnalysisCache {
-    topo: Option<(u64, Vec<OpId>)>,
-    lifetime: Option<(u64, LifetimeAnalysis)>,
+    topo: Option<(u64, Rc<Vec<OpId>>)>,
+    lifetime: Option<(u64, Rc<LifetimeAnalysis>)>,
     /// Execution order pinned by an order-producing pass (exec-order),
     /// version-keyed like the analyses. Later decision passes (the SLO
     /// throttle) start from this instead of a raw topological order, so
     /// their speculate/validate baseline is the schedule the session would
     /// otherwise emit.
-    pinned: Option<(u64, Vec<OpId>)>,
-    /// Cache hits across the session (perf counter).
-    pub hits: usize,
-    /// Cache misses (recomputations) across the session.
-    pub misses: usize,
+    pinned: Option<(u64, Rc<Vec<OpId>>)>,
+    /// Journal-driven delta updates enabled (default). Off = every
+    /// version bump forces full recomputation, the pre-incremental
+    /// behaviour (kept togglable for A/B measurement — see
+    /// `benches/hot_path.rs`).
+    incremental: bool,
+    /// Topo-order queries served from the cache unchanged.
+    pub topo_hits: usize,
+    /// Topo-order queries served by patching the cached order forward
+    /// from the mutation journal.
+    pub topo_deltas: usize,
+    /// Topo-order queries requiring full recomputation.
+    pub topo_misses: usize,
+    /// Lifetime queries served from the cache unchanged.
+    pub lifetime_hits: usize,
+    /// Lifetime queries served by per-tensor delta update.
+    pub lifetime_deltas: usize,
+    /// Lifetime queries requiring full recomputation.
+    pub lifetime_misses: usize,
+}
+
+impl Default for AnalysisCache {
+    fn default() -> Self {
+        Self {
+            topo: None,
+            lifetime: None,
+            pinned: None,
+            incremental: true,
+            topo_hits: 0,
+            topo_deltas: 0,
+            topo_misses: 0,
+            lifetime_hits: 0,
+            lifetime_deltas: 0,
+            lifetime_misses: 0,
+        }
+    }
 }
 
 impl AnalysisCache {
@@ -161,49 +212,219 @@ impl AnalysisCache {
         Self::default()
     }
 
-    /// The deterministic topological order of `g`, recomputed only when
-    /// the graph has mutated since the last call.
-    pub fn topo_order(&mut self, g: &Graph) -> Result<Vec<OpId>, CompileError> {
-        let v = g.version();
-        let fresh = matches!(&self.topo, Some((cv, _)) if *cv == v);
-        if !fresh {
-            self.misses += 1;
-            let order = g.topo_order_detailed()?;
-            self.topo = Some((v, order));
-        } else {
-            self.hits += 1;
-        }
-        Ok(self.topo.as_ref().unwrap().1.clone())
+    /// Enable/disable journal-driven delta updates (on by default).
+    pub fn set_incremental(&mut self, on: bool) {
+        self.incremental = on;
     }
 
-    /// Lifetime analysis of `g` under its current topological order,
-    /// recomputed only when the graph has mutated.
-    pub fn lifetimes(&mut self, g: &Graph) -> Result<LifetimeAnalysis, CompileError> {
-        let v = g.version();
-        let fresh = matches!(&self.lifetime, Some((cv, _)) if *cv == v);
-        if !fresh {
-            let order = self.topo_order(g)?;
-            self.misses += 1;
-            self.lifetime = Some((v, LifetimeAnalysis::run(g, &order)));
-        } else {
-            self.hits += 1;
+    /// Queries served without full recomputation (version hits + journal
+    /// delta updates), across both analyses.
+    pub fn hits(&self) -> usize {
+        self.topo_hits + self.topo_deltas + self.lifetime_hits + self.lifetime_deltas
+    }
+
+    /// Queries that fell back to full recomputation, across both analyses.
+    pub fn misses(&self) -> usize {
+        self.topo_misses + self.lifetime_misses
+    }
+
+    /// The deterministic topological order of `g`: a shared view of the
+    /// cached order on a version hit, a journal-patched extension of it on
+    /// local mutations, a full recomputation otherwise.
+    pub fn topo_order(&mut self, g: &Graph) -> Result<Rc<Vec<OpId>>, CompileError> {
+        let (order, served) = self.topo_inner(g)?;
+        match served {
+            Served::Hit => self.topo_hits += 1,
+            Served::Delta => self.topo_deltas += 1,
+            Served::Miss => self.topo_misses += 1,
         }
-        Ok(self.lifetime.as_ref().unwrap().1.clone())
+        Ok(order)
+    }
+
+    /// [`topo_order`](Self::topo_order) without touching the topo
+    /// counters — used internally by `lifetimes()` so a cold lifetime
+    /// query counts once (as a lifetime miss), not once per analysis it
+    /// happens to warm.
+    fn topo_inner(&mut self, g: &Graph) -> Result<(Rc<Vec<OpId>>, Served), CompileError> {
+        let v = g.version();
+        if let Some((cv, o)) = &self.topo {
+            if *cv == v {
+                return Ok((Rc::clone(o), Served::Hit));
+            }
+            if self.incremental {
+                if let Some(patched) = Self::patch_topo(g, *cv, o) {
+                    let patched = Rc::new(patched);
+                    self.topo = Some((v, Rc::clone(&patched)));
+                    return Ok((patched, Served::Delta));
+                }
+            }
+        }
+        let order = Rc::new(g.topo_order_detailed()?);
+        self.topo = Some((v, Rc::clone(&order)));
+        Ok((order, Served::Miss))
+    }
+
+    /// Replay the mutation journal since `cached_v` over the cached
+    /// canonical order. Returns the patched canonical order of the current
+    /// graph, or `None` when any mutation is non-local (or the journal
+    /// window was truncated) and the caller must recompute.
+    ///
+    /// Why patching is exact (Kahn, min-id tie-break = insertion order):
+    /// an appended op has the maximum id and — checked per event — nothing
+    /// already placed depends on it, so the canonical order is the old
+    /// order with the op appended; a new edge `d → o` with `d` placed
+    /// before `o` removes candidates from Kahn's ready set without ever
+    /// changing its minimum, so the canonical order is unchanged. Any
+    /// backward edge bails out to full recomputation.
+    fn patch_topo(g: &Graph, cached_v: u64, cached: &Rc<Vec<OpId>>) -> Option<Vec<OpId>> {
+        let muts = g.mutations_since(cached_v)?;
+        // A removal/rewire anywhere in the window may have renumbered ops:
+        // ids in earlier events (and the cached order) are then meaningless
+        // against the current graph, so bail before touching them.
+        if muts.iter().any(|m| matches!(m, Mutation::NonLocal)) {
+            return None;
+        }
+        let n = g.ops.len();
+        let mut order: Vec<OpId> = (**cached).clone();
+        let mut pos = vec![usize::MAX; n];
+        for (i, &o) in order.iter().enumerate() {
+            if o >= n {
+                return None; // cached order predates an (unjournalled) removal
+            }
+            pos[o] = i;
+        }
+        for m in muts {
+            match m {
+                Mutation::TensorAdded { .. } | Mutation::TensorMeta => {}
+                Mutation::OpAdded { op } => {
+                    // Safe to append only if nothing already placed
+                    // consumes one of the new op's outputs (a consumer can
+                    // be registered before its producer exists).
+                    for &t in &g.op(op).outputs {
+                        for &c in g.consumers_of(t) {
+                            if c != op && pos[c] != usize::MAX {
+                                return None;
+                            }
+                        }
+                    }
+                    pos[op] = order.len();
+                    order.push(op);
+                }
+                Mutation::ControlDepAdded { op, dep } => {
+                    if pos[dep] == usize::MAX || pos[op] == usize::MAX || pos[dep] >= pos[op] {
+                        return None;
+                    }
+                }
+                Mutation::InputAdded { op, tensor } => {
+                    // Edge producer(tensor) → op, if the producer existed
+                    // at event time; a producer appended later is caught by
+                    // its own OpAdded consumer check above.
+                    if let Some(p) = g.producer_of(tensor) {
+                        if p != op && pos[p] != usize::MAX && pos[p] >= pos[op] {
+                            return None;
+                        }
+                    }
+                }
+                Mutation::NonLocal => unreachable!("filtered above"),
+            }
+        }
+        if order.len() != n {
+            return None;
+        }
+        debug_assert!(g.is_valid_order(&order), "patched topo order invalid");
+        Some(order)
+    }
+
+    /// Lifetime analysis of `g` under its current topological order: a
+    /// shared view on a version hit; on purely local mutations only the
+    /// tensors the mutations touched are re-analysed.
+    pub fn lifetimes(&mut self, g: &Graph) -> Result<Rc<LifetimeAnalysis>, CompileError> {
+        let v = g.version();
+        if let Some((cv, la)) = &self.lifetime {
+            if *cv == v {
+                self.lifetime_hits += 1;
+                return Ok(Rc::clone(la));
+            }
+        }
+        let (order, _) = self.topo_inner(g)?;
+        if self.incremental {
+            if let Some((cv, la)) = self.lifetime.take() {
+                if let Some(patched) = Self::patch_lifetimes(g, cv, &la, &order) {
+                    let patched = Rc::new(patched);
+                    self.lifetime = Some((v, Rc::clone(&patched)));
+                    self.lifetime_deltas += 1;
+                    return Ok(patched);
+                }
+                self.lifetime = Some((cv, la));
+            }
+        }
+        self.lifetime_misses += 1;
+        let la = Rc::new(LifetimeAnalysis::run(g, &order));
+        self.lifetime = Some((v, Rc::clone(&la)));
+        Ok(la)
+    }
+
+    /// Re-analyse only the tensors touched by the journalled mutations
+    /// since `cached_v`, under the (already current) `order`. `None` when
+    /// a mutation is non-local or the positions of pre-existing ops moved.
+    fn patch_lifetimes(
+        g: &Graph,
+        cached_v: u64,
+        cached: &Rc<LifetimeAnalysis>,
+        order: &[OpId],
+    ) -> Option<LifetimeAnalysis> {
+        let muts = g.mutations_since(cached_v)?;
+        if muts.iter().any(|m| matches!(m, Mutation::NonLocal)) {
+            return None;
+        }
+        let mut pos = vec![usize::MAX; g.ops.len()];
+        for (i, &o) in order.iter().enumerate() {
+            pos[o] = i;
+        }
+        // Per-tensor results are valid only while every pre-existing op
+        // kept its position (appends only extend the order).
+        let old_n = cached.pos.len();
+        if old_n > pos.len() || pos[..old_n] != cached.pos[..] {
+            return None;
+        }
+        let mut la = LifetimeAnalysis {
+            lifetimes: cached.lifetimes.clone(),
+            pos: pos.clone(),
+        };
+        for m in muts {
+            match m {
+                Mutation::TensorAdded { tensor } => {
+                    la.lifetimes.insert(tensor, super::lifetime::lifetime_of(g, tensor, &pos));
+                }
+                Mutation::OpAdded { op } => {
+                    let o = g.op(op);
+                    for &t in o.inputs.iter().chain(o.outputs.iter()) {
+                        la.lifetimes.insert(t, super::lifetime::lifetime_of(g, t, &pos));
+                    }
+                }
+                Mutation::InputAdded { tensor, .. } => {
+                    la.lifetimes.insert(tensor, super::lifetime::lifetime_of(g, tensor, &pos));
+                }
+                Mutation::ControlDepAdded { .. } | Mutation::TensorMeta => {}
+                Mutation::NonLocal => unreachable!("filtered above"),
+            }
+        }
+        Some(la)
     }
 
     /// Pin `order` as the session's current execution order for `g` (valid
     /// until the next structural mutation).
     pub fn pin_order(&mut self, g: &Graph, order: Vec<OpId>) {
         debug_assert!(g.is_valid_order(&order), "pin_order: invalid order");
-        self.pinned = Some((g.version(), order));
+        self.pinned = Some((g.version(), Rc::new(order)));
     }
 
     /// The pinned execution order if one is fresh for `g`, else the plain
     /// topological order.
-    pub fn pinned_or_topo(&mut self, g: &Graph) -> Result<Vec<OpId>, CompileError> {
+    pub fn pinned_or_topo(&mut self, g: &Graph) -> Result<Rc<Vec<OpId>>, CompileError> {
         if let Some((v, o)) = &self.pinned {
             if *v == g.version() {
-                return Ok(o.clone());
+                return Ok(Rc::clone(o));
             }
         }
         self.topo_order(g)
@@ -386,7 +607,7 @@ impl Pass for ExecOrderPass {
         ctx: &PassCtx,
     ) -> Result<PassReport, CompileError> {
         let init = cache.topo_order(g)?;
-        let r = exec_order::refine_from(g, init, &ctx.hw, &ctx.exec);
+        let r = exec_order::refine_from(g, (*init).clone(), &ctx.hw, &ctx.exec);
         let mut rep = PassReport::new(self.name());
         rep.diagnostics.push(Diagnostic::info(
             self.name(),
@@ -484,39 +705,62 @@ pub fn verify_ir(g: &Graph, order: &[OpId]) -> Vec<Diagnostic> {
         pos[o] = i;
     }
 
-    // Dependency successors (data + control), for reachability.
-    let mut succ: Vec<Vec<OpId>> = vec![Vec::new(); n];
-    for op in &g.ops {
-        for p in g.preds(op.id) {
-            succ[p].push(op.id);
-        }
-    }
-
     // 3. Prefetch completion precedes EVERY later consumer — not just the
     // first. A later consumer on a parallel branch with no path from the
     // prefetch can start before the DMA completes even though it sits
     // after the prefetch in the order (streams run concurrently).
     // Consumers placed before the prefetch read the pre-offload copy and
     // are exempt (the residency walk below polices them).
-    for op in &g.ops {
-        let OpKind::Prefetch { tensor } = op.kind else { continue };
-        for &c in g.consumers_of(tensor) {
-            if c == op.id || g.op(c).kind.is_cache_op() || pos[c] < pos[op.id] {
-                continue;
+    //
+    // Reachability for all (prefetch, consumer) pairs at once: assign each
+    // prefetch a bit and propagate bitmasks forward along the (valid)
+    // execution order — `reach[op] |= reach[pred]` — instead of one DFS
+    // per pair. One O((n + e) · p/64) sweep; `verify(true)` re-runs this
+    // after every pass, so it dominates verification cost at scale.
+    let prefetches: Vec<OpId> = g
+        .ops
+        .iter()
+        .filter(|o| matches!(o.kind, OpKind::Prefetch { .. }))
+        .map(|o| o.id)
+        .collect();
+    if !prefetches.is_empty() {
+        let words = prefetches.len().div_ceil(64);
+        let mut bit_of = vec![usize::MAX; n];
+        for (i, &p) in prefetches.iter().enumerate() {
+            bit_of[p] = i;
+        }
+        let mut reach: Vec<u64> = vec![0; n * words];
+        for &o in order {
+            for p in g.preds(o) {
+                for w in 0..words {
+                    let m = reach[p * words + w];
+                    reach[o * words + w] |= m;
+                }
             }
-            if !reaches(&succ, op.id, c) {
-                diags.push(
-                    Diagnostic::error(
-                        PASS,
-                        format!(
-                            "consumer '{}' of prefetch '{}' is not dependency-ordered \
-                             after transfer completion",
-                            g.op(c).name,
-                            op.name
-                        ),
-                    )
-                    .with_op(c),
-                );
+            if bit_of[o] != usize::MAX {
+                reach[o * words + bit_of[o] / 64] |= 1u64 << (bit_of[o] % 64);
+            }
+        }
+        for (i, &pf) in prefetches.iter().enumerate() {
+            let OpKind::Prefetch { tensor } = g.op(pf).kind else { continue };
+            for &c in g.consumers_of(tensor) {
+                if c == pf || g.op(c).kind.is_cache_op() || pos[c] < pos[pf] {
+                    continue;
+                }
+                if reach[c * words + i / 64] & (1u64 << (i % 64)) == 0 {
+                    diags.push(
+                        Diagnostic::error(
+                            PASS,
+                            format!(
+                                "consumer '{}' of prefetch '{}' is not dependency-ordered \
+                                 after transfer completion",
+                                g.op(c).name,
+                                g.op(pf).name
+                            ),
+                        )
+                        .with_op(c),
+                    );
+                }
             }
         }
     }
@@ -595,27 +839,6 @@ pub fn verify_ir(g: &Graph, order: &[OpId]) -> Vec<Diagnostic> {
         }
     }
     diags
-}
-
-fn reaches(succ: &[Vec<OpId>], from: OpId, to: OpId) -> bool {
-    if from == to {
-        return true;
-    }
-    let mut visited = vec![false; succ.len()];
-    let mut stack = vec![from];
-    visited[from] = true;
-    while let Some(x) = stack.pop() {
-        for &s in &succ[x] {
-            if s == to {
-                return true;
-            }
-            if !visited[s] {
-                visited[s] = true;
-                stack.push(s);
-            }
-        }
-    }
-    false
 }
 
 /// [`verify_ir`] as a pipeline stage: verifies against the cached topo
@@ -711,6 +934,11 @@ pub struct Compiler {
     dma_contention: f64,
     passes: Vec<Box<dyn Pass>>,
     verify: bool,
+    incremental: bool,
+    /// Diagnostics raised while *building* the session (e.g. a
+    /// `pass_before` anchor that is not scheduled); surfaced at the head
+    /// of the compile report's diagnostics.
+    pending_diags: Vec<Diagnostic>,
 }
 
 impl Compiler {
@@ -729,6 +957,8 @@ impl Compiler {
                 Box::new(ExecOrderPass),
             ],
             verify: false,
+            incremental: true,
+            pending_diags: Vec::new(),
         }
     }
 
@@ -742,6 +972,8 @@ impl Compiler {
             dma_contention: 1.0,
             passes: Vec::new(),
             verify: false,
+            incremental: true,
+            pending_diags: Vec::new(),
         }
     }
 
@@ -778,17 +1010,45 @@ impl Compiler {
         self
     }
 
+    /// Enable/disable the session cache's journal-driven incremental
+    /// analysis updates (on by default). Off restores the pre-incremental
+    /// recompute-on-every-mutation behaviour — the A/B baseline
+    /// `benches/hot_path.rs` measures against; results are identical
+    /// either way.
+    pub fn incremental(mut self, on: bool) -> Self {
+        self.incremental = on;
+        self
+    }
+
     /// Append a pass to the pipeline.
     pub fn pass(mut self, p: impl Pass + 'static) -> Self {
         self.passes.push(Box::new(p));
         self
     }
 
-    /// Insert a pass immediately before the pass named `name` (appends if
-    /// no such pass is scheduled).
+    /// Insert a pass immediately before the pass named `name`.
+    ///
+    /// When no such pass is scheduled the new pass is appended instead,
+    /// and the session records a `Warning` diagnostic (surfaced in the
+    /// compile report): a pass positioned relative to an absent anchor is
+    /// almost always a pipeline-construction mistake — e.g. transfer
+    /// elision ordered "before exec-order" on an [`empty`](Self::empty)
+    /// pipeline lands where nothing anchors its rewrites.
     pub fn pass_before(mut self, name: &str, p: impl Pass + 'static) -> Self {
-        let idx = self.passes.iter().position(|q| q.name() == name).unwrap_or(self.passes.len());
-        self.passes.insert(idx, Box::new(p));
+        match self.passes.iter().position(|q| q.name() == name) {
+            Some(idx) => self.passes.insert(idx, Box::new(p)),
+            None => {
+                self.pending_diags.push(Diagnostic::warning(
+                    "compiler",
+                    format!(
+                        "pass '{}' was scheduled before '{name}', but no pass named \
+                         '{name}' is in the pipeline; appending it at the end instead",
+                        p.name()
+                    ),
+                ));
+                self.passes.push(Box::new(p));
+            }
+        }
         self
     }
 
@@ -837,7 +1097,8 @@ impl Compiler {
             dma_contention: self.dma_contention,
         };
         let mut cache = AnalysisCache::new();
-        let mut diagnostics: Vec<Diagnostic> = Vec::new();
+        cache.set_incremental(self.incremental);
+        let mut diagnostics: Vec<Diagnostic> = std::mem::take(&mut self.pending_diags);
         let mut per_pass: Vec<PassReport> = Vec::new();
         let mut order: Option<Vec<OpId>> = None;
 
@@ -855,8 +1116,8 @@ impl Compiler {
             diagnostics.extend(rep.diagnostics.iter().cloned());
             per_pass.push(rep);
             if self.verify {
-                let vorder = match &order {
-                    Some(o) if graph.is_valid_order(o) => o.clone(),
+                let vorder: Rc<Vec<OpId>> = match &order {
+                    Some(o) if graph.is_valid_order(o) => Rc::new(o.clone()),
                     _ => cache.topo_order(graph)?,
                 };
                 let name = per_pass.last().map(|r| r.pass.clone()).unwrap_or_default();
@@ -872,16 +1133,16 @@ impl Compiler {
                     "pinned execution order went stale after a later graph mutation; \
                      falling back to the topological order",
                 ));
-                cache.topo_order(graph)?
+                (*cache.topo_order(graph)?).clone()
             }
-            None => cache.topo_order(graph)?,
+            None => (*cache.topo_order(graph)?).clone(),
         };
         // The cached topo can go stale WITHOUT a version bump if a pass
         // mutated the public `Graph::ops`/`tensors` fields directly instead
         // of using the mutation methods — never trust it blindly.
         if !graph.is_valid_order(&final_order) {
             cache.invalidate();
-            final_order = cache.topo_order(graph)?;
+            final_order = (*cache.topo_order(graph)?).clone();
         }
 
         let inserted: Vec<(OpId, OpId)> =
@@ -905,8 +1166,8 @@ impl Compiler {
             deferred_bytes,
             per_pass,
             diagnostics,
-            cache_hits: cache.hits,
-            cache_misses: cache.misses,
+            cache_hits: cache.hits(),
+            cache_misses: cache.misses(),
         })
     }
 }
@@ -968,18 +1229,88 @@ mod tests {
         let mut cache = AnalysisCache::new();
         let o1 = cache.topo_order(&g).unwrap();
         let _ = cache.topo_order(&g).unwrap();
-        assert_eq!(cache.misses, 1);
-        assert_eq!(cache.hits, 1);
+        assert_eq!(cache.topo_misses, 1);
+        assert_eq!(cache.topo_hits, 1);
+        // A local mutation (append) is served by a journal delta update,
+        // bit-identical to full recomputation.
+        let t = g.add_tensor("x", 1, Tier::Device);
+        let c = g.add_op("c", crate::graph::OpKind::HostWork { us: 1.0 }, vec![], vec![t]);
+        let o2 = cache.topo_order(&g).unwrap();
+        assert_eq!(cache.topo_deltas, 1);
+        assert_eq!(cache.topo_misses, 1);
+        assert_eq!(o2.len(), o1.len() + 1);
+        assert_eq!(*o2, g.topo_order_detailed().unwrap());
+        // A non-local mutation (removal) forces full recomputation.
+        g.remove_ops(&[c]);
+        let o3 = cache.topo_order(&g).unwrap();
+        assert_eq!(cache.topo_misses, 2);
+        assert_eq!(*o3, *o1);
+        // With incremental updates off, even an append is a miss.
+        cache.set_incremental(false);
+        let t2 = g.add_tensor("y", 1, Tier::Device);
+        g.add_op("d", crate::graph::OpKind::HostWork { us: 1.0 }, vec![], vec![t2]);
+        let _ = cache.topo_order(&g).unwrap();
+        assert_eq!(cache.topo_misses, 3);
+    }
+
+    /// Regression test for the hit/miss double count: a cold `lifetimes()`
+    /// call used to record a topo miss *and* a lifetime miss, overstating
+    /// recomputation in `CompileReport::cache_misses`. Counters are now
+    /// per analysis: a cold lifetime query is exactly one lifetime miss.
+    #[test]
+    fn analysis_cache_counts_per_analysis() {
+        let mut g = GraphBuilder::linear_chain(4, 1e6, 64);
+        let mut cache = AnalysisCache::new();
+        let _ = cache.lifetimes(&g).unwrap();
+        assert_eq!(cache.lifetime_misses, 1);
+        assert_eq!(cache.topo_misses, 0, "cold lifetimes() must not count a topo miss");
+        assert_eq!(cache.misses(), 1);
+        let _ = cache.lifetimes(&g).unwrap();
+        assert_eq!(cache.lifetime_hits, 1);
+        // The topo order warmed as a side effect: a hit, counted only now.
+        let _ = cache.topo_order(&g).unwrap();
+        assert_eq!((cache.topo_hits, cache.topo_misses), (1, 0));
+        // A local mutation delta-updates the lifetime table too.
         let t = g.add_tensor("x", 1, Tier::Device);
         g.add_op("c", crate::graph::OpKind::HostWork { us: 1.0 }, vec![], vec![t]);
-        let o2 = cache.topo_order(&g).unwrap();
-        assert_eq!(cache.misses, 2);
-        assert_eq!(o2.len(), o1.len() + 1);
-        // Lifetimes share the version key.
-        let _ = cache.lifetimes(&g).unwrap();
-        let before = cache.misses;
-        let _ = cache.lifetimes(&g).unwrap();
-        assert_eq!(cache.misses, before);
+        let la = cache.lifetimes(&g).unwrap();
+        assert_eq!(cache.lifetime_deltas, 1);
+        assert_eq!(cache.lifetime_misses, 1);
+        let full = crate::passes::lifetime::LifetimeAnalysis::run(&g, &g.topo_order().unwrap());
+        assert_eq!(la.pos, full.pos);
+        assert_eq!(la.lifetimes.len(), full.lifetimes.len());
+        for (tid, lt) in &full.lifetimes {
+            let got = la.get(*tid);
+            assert_eq!((got.def_pos, &got.use_pos), (lt.def_pos, &lt.use_pos));
+            assert_eq!(got.max_idle_gap, lt.max_idle_gap);
+            assert_eq!(got.idle_gap_start, lt.idle_gap_start);
+        }
+    }
+
+    #[test]
+    fn pass_before_missing_anchor_warns() {
+        let mut g = GraphBuilder::fwd_bwd_chain(4, 8 << 20, 10e9, 24, 1e9);
+        // elide is ordered "before exec-order", but an empty pipeline has
+        // no exec-order pass: appended, with a Warning on the report.
+        let report = Compiler::empty(hw())
+            .elide_redundant_transfers()
+            .compile(&mut g)
+            .unwrap();
+        assert!(
+            report
+                .diagnostics
+                .iter()
+                .any(|d| d.severity == Severity::Warning && d.message.contains("exec-order")),
+            "missing-anchor warning not surfaced: {:?}",
+            report.diagnostics
+        );
+        // With the anchor present there is nothing to warn about.
+        let mut g2 = GraphBuilder::fwd_bwd_chain(4, 8 << 20, 10e9, 24, 1e9);
+        let report = Compiler::new(hw()).elide_redundant_transfers().compile(&mut g2).unwrap();
+        assert!(!report
+            .diagnostics
+            .iter()
+            .any(|d| d.severity == Severity::Warning && d.message.contains("no pass named")));
     }
 
     #[test]

@@ -84,67 +84,94 @@ pub fn refine_from(
 
     // Hoisted invariants (§Perf): durations and stream assignments never
     // change during refinement; computing them once removes ~2M redundant
-    // cost-model evaluations on 2000-op graphs.
+    // cost-model evaluations on 2000-op graphs. Dependency sets of the
+    // not-yet-placed cache ops are invariant too — the only edges
+    // refinement adds are anchor deps, which always point cache op →
+    // compute op, so they never enter another cache op's pred/succ or
+    // control-dependent sets before that op is placed. Hoisting them
+    // removes the per-cache-op O(ops·deps) succ/dependent rescans.
     let dur: Vec<f64> = graph
         .ops
         .iter()
         .map(|o| duration_us(&o.kind, graph, hw))
         .collect();
     let streams: Vec<Stream> = graph.ops.iter().map(|o| stream_of(&o.kind)).collect();
-
-    for &c in &cache_ops {
-        let cur = order.iter().position(|&x| x == c).unwrap();
-        // Work on the order with c removed: insertion index p in `rest`
-        // equals c's final position. All per-position quantities become
-        // O(1) lookups into prefix sums built once per cache op (§Perf:
-        // this replaced an O(n) re-scan per candidate position).
-        let mut rest = order.clone();
-        rest.remove(cur);
-
-        let mut pos_in_rest = vec![usize::MAX; graph.ops.len()];
-        for (i, &o) in rest.iter().enumerate() {
-            pos_in_rest[o] = i;
+    let is_cache = |o: OpId| matches!(graph.op(o).kind, OpKind::Prefetch { .. } | OpKind::Store { .. });
+    let preds_of: Vec<Vec<OpId>> = cache_ops.iter().map(|&c| graph.preds(c)).collect();
+    let succs_of: Vec<Vec<OpId>> = cache_ops.iter().map(|&c| graph.succs(c)).collect();
+    // Non-cache ops control-depending on each cache op, in op-id order.
+    let mut dependents: Vec<Vec<OpId>> = vec![Vec::new(); graph.ops.len()];
+    for op in &graph.ops {
+        if op.kind.is_cache_op() {
+            continue;
         }
-        let lo = graph
-            .preds(c)
-            .iter()
-            .map(|&q| pos_in_rest[q] + 1)
-            .max()
-            .unwrap_or(0);
-        let hi = graph
-            .succs(c)
-            .iter()
-            .map(|&s| pos_in_rest[s])
-            .min()
-            .unwrap_or(rest.len());
+        for &d in &op.control_deps {
+            if is_cache(d) {
+                dependents[d].push(op.id);
+            }
+        }
+    }
+
+    // Position of every op in the live order, maintained across moves
+    // instead of re-scanned per cache op.
+    let mut pos = vec![usize::MAX; graph.ops.len()];
+    for (i, &o) in order.iter().enumerate() {
+        pos[o] = i;
+    }
+
+    for (ci, &c) in cache_ops.iter().enumerate() {
+        let cur = pos[c];
+        // Work on the order *as if* c were removed: insertion index p in
+        // that c-less order equals c's final position. Rather than
+        // materialising the c-less order (a clone per cache op), positions
+        // are mapped through `rp` — an op past c shifts down by one. All
+        // per-position quantities are O(1) lookups into prefix sums built
+        // once per cache op (§Perf: this replaced an O(n) re-scan per
+        // candidate position).
+        let rp = |o: OpId| {
+            let p = pos[o];
+            if p == usize::MAX || p < cur {
+                p
+            } else {
+                p - 1
+            }
+        };
+        let lo = preds_of[ci].iter().map(|&q| rp(q) + 1).max().unwrap_or(0);
+        let n = order.len() - 1;
+        let hi = succs_of[ci].iter().map(|&s| rp(s)).min().unwrap_or(n);
         if lo > hi {
             continue;
         }
 
-        // Prefix sums over `rest`: compute time and same-DMA-stream time.
-        let my_stream = stream_of(&graph.op(c).kind);
-        let n = rest.len();
+        // Prefix sums over the c-less order: compute time and
+        // same-DMA-stream time.
+        let my_stream = streams[c];
         let mut pre_compute = vec![0.0f64; n + 1];
         let mut pre_stream = vec![0.0f64; n + 1];
-        for (i, &o) in rest.iter().enumerate() {
+        let mut i = 0usize;
+        for &o in order.iter() {
+            if o == c {
+                continue;
+            }
             let d = dur[o];
             let s = streams[o];
             pre_compute[i + 1] = pre_compute[i] + if s == Stream::Compute { d } else { 0.0 };
             pre_stream[i + 1] = pre_stream[i] + if s == my_stream { d } else { 0.0 };
+            i += 1;
         }
 
         // First non-cache consumer of c's tensor (or control-dependent op)
         // within/after the feasible window -- consumers before `lo` (e.g.
         // forward-pass uses preceding the Store) are not this cache op's
         // target.
-        let u_pos = first_consumer_pos(graph, c, &pos_in_rest, lo);
+        let u_pos = first_consumer_pos(graph, c, &dependents[c], &rp, lo);
         let u_ready = u_pos.map(|p| pre_compute[p]).unwrap_or(pre_compute[n]);
 
         let dur_c = dur[c];
         let bytes = graph.op(c).kind.cache_tensor().map(|t| graph.tensor(t).bytes).unwrap_or(0);
         let is_prefetch = matches!(graph.op(c).kind, OpKind::Prefetch { .. });
 
-        let mut best_pos = cur.min(rest.len());
+        let mut best_pos = cur.min(n);
         let mut best_cost = f64::INFINITY;
         for p in lo..=hi.min(n) {
             evaluated += 1;
@@ -170,13 +197,19 @@ pub fn refine_from(
                 best_pos = p;
             }
         }
-        if best_pos != cur {
-            order = rest;
+        let final_pos = if best_pos != cur {
+            order.remove(cur);
             order.insert(best_pos, c);
+            // Only positions between the two endpoints shifted.
+            for i in best_pos.min(cur)..=best_pos.max(cur) {
+                pos[order[i]] = i;
+            }
             moved += 1;
-        }
+            best_pos
+        } else {
+            cur
+        };
         // Anchor: issue the transfer after the op now preceding it.
-        let final_pos = order.iter().position(|&x| x == c).unwrap();
         if let Some(&anchor) = order[..final_pos]
             .iter()
             .rev()
@@ -189,17 +222,19 @@ pub fn refine_from(
     Refinement { order, moved, evaluated }
 }
 
-/// Position (in a c-less order) of the first non-cache consumer of c's
-/// tensor, including ops control-dependent on c.
+/// Position (in a c-less order, via the `rp` position map) of the first
+/// non-cache consumer of c's tensor, including ops control-dependent on c
+/// (precomputed by the caller).
 fn first_consumer_pos(
     graph: &Graph,
     c: OpId,
-    pos_in_rest: &[usize],
+    ctrl_dependents: &[OpId],
+    rp: &dyn Fn(OpId) -> usize,
     lo: usize,
 ) -> Option<usize> {
     let mut best: Option<usize> = None;
     let mut consider = |id: OpId| {
-        let p = pos_in_rest[id];
+        let p = rp(id);
         if p != usize::MAX && p >= lo {
             best = Some(best.map_or(p, |b| b.min(p)));
         }
@@ -211,10 +246,8 @@ fn first_consumer_pos(
             }
         }
     }
-    for op in &graph.ops {
-        if op.control_deps.contains(&c) && !op.kind.is_cache_op() {
-            consider(op.id);
-        }
+    for &id in ctrl_dependents {
+        consider(id);
     }
     best
 }

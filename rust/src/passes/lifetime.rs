@@ -52,33 +52,7 @@ impl LifetimeAnalysis {
         }
         let mut lifetimes = HashMap::new();
         for t in &graph.tensors {
-            let def_pos = graph.producer_of(t.id).map(|p| pos[p]);
-            let mut use_pos: Vec<usize> = graph
-                .consumers_of(t.id)
-                .iter()
-                .filter(|&&c| !graph.op(c).kind.is_cache_op())
-                .map(|&c| pos[c])
-                .collect();
-            use_pos.sort_unstable();
-
-            // Largest idle gap between consecutive events (def, use...).
-            let mut events: Vec<usize> = Vec::with_capacity(use_pos.len() + 1);
-            if let Some(d) = def_pos {
-                events.push(d);
-            }
-            events.extend(&use_pos);
-            let (mut max_gap, mut gap_start) = (0usize, events.first().copied().unwrap_or(0));
-            for w in events.windows(2) {
-                let gap = w[1].saturating_sub(w[0]);
-                if gap > max_gap {
-                    max_gap = gap;
-                    gap_start = w[0];
-                }
-            }
-            lifetimes.insert(
-                t.id,
-                Lifetime { tensor: t.id, def_pos, use_pos, max_idle_gap: max_gap, idle_gap_start: gap_start },
-            );
+            lifetimes.insert(t.id, lifetime_of(graph, t.id, &pos));
         }
         Self { lifetimes, pos }
     }
@@ -86,6 +60,38 @@ impl LifetimeAnalysis {
     pub fn get(&self, t: TensorId) -> &Lifetime {
         &self.lifetimes[&t]
     }
+}
+
+/// Lifetime facts for one tensor, given `pos[op] = position in order`.
+///
+/// This is the per-tensor body of [`LifetimeAnalysis::run`], exposed so the
+/// compiler's incremental `AnalysisCache` can recompute lifetimes for only
+/// the tensors a journalled graph mutation touched.
+pub fn lifetime_of(graph: &Graph, tensor: TensorId, pos: &[usize]) -> Lifetime {
+    let def_pos = graph.producer_of(tensor).map(|p| pos[p]);
+    let mut use_pos: Vec<usize> = graph
+        .consumers_of(tensor)
+        .iter()
+        .filter(|&&c| !graph.op(c).kind.is_cache_op())
+        .map(|&c| pos[c])
+        .collect();
+    use_pos.sort_unstable();
+
+    // Largest idle gap between consecutive events (def, use...).
+    let mut events: Vec<usize> = Vec::with_capacity(use_pos.len() + 1);
+    if let Some(d) = def_pos {
+        events.push(d);
+    }
+    events.extend(&use_pos);
+    let (mut max_gap, mut gap_start) = (0usize, events.first().copied().unwrap_or(0));
+    for w in events.windows(2) {
+        let gap = w[1].saturating_sub(w[0]);
+        if gap > max_gap {
+            max_gap = gap;
+            gap_start = w[0];
+        }
+    }
+    Lifetime { tensor, def_pos, use_pos, max_idle_gap: max_gap, idle_gap_start: gap_start }
 }
 
 #[cfg(test)]

@@ -30,6 +30,42 @@
 //! Cyclic graphs surface as [`CompileError::Cycle`] (with the culprit
 //! ops), verifier findings as [`CompileError::Verify`] — no panics.
 //!
+//! ## Incremental analyses (production graph scale)
+//!
+//! The pipeline's analyses are shared through the session's
+//! [`AnalysisCache`], built to stay cheap on 20k+-op graphs:
+//!
+//! * **Version-keyed sharing.** Topological order and lifetime tables are
+//!   handed out as `Rc` views keyed on [`Graph::version`] — a pass that
+//!   does not mutate the graph gets the previous pass's analysis for
+//!   free (no clone, no recompute).
+//! * **Journal-driven delta updates.** The graph keeps a bounded journal
+//!   of [`Mutation`](crate::graph::Mutation) events. When a pass appends
+//!   ops, tensors, or forward edges, the cache *patches* its cached topo
+//!   order and re-analyses only the touched tensors' lifetimes instead of
+//!   recomputing from scratch; any non-local mutation (removal, input
+//!   rewiring) falls back to a full recompute. Patched results are
+//!   bit-identical to fresh ones (property P13 in
+//!   `rust/tests/proptest_invariants.rs`); `Compiler::incremental(false)`
+//!   disables patching for A/B measurement.
+//! * **Windowed re-simulation.** The decision passes validate each
+//!   speculative rewrite against the simulator. Instead of re-simulating
+//!   the whole schedule per speculation, they record one
+//!   [`SimTrace`](crate::sim::SimTrace) of the baseline and *resume* it
+//!   at the first position the rewrite can affect — exact, not an
+//!   approximation (also P13). `RecomputeVsOffload::windowed` /
+//!   `SloThrottle::windowed` fall back to the full path when off.
+//! * **One-shot verification structures.** `verify_ir` checks every
+//!   (prefetch, consumer) completion ordering against a single
+//!   precomputed bitset reachability structure rather than one DFS per
+//!   pair.
+//!
+//! Compile latency is observable end to end: `benches/hot_path.rs`
+//! times the full pipeline at 20k ops with the machinery on vs off, and
+//! the serving engine accounts every step-compile miss in
+//! `ServingReport::compile_us_total` / `compile_us_max` (the compile
+//! stall a first-of-its-shape decode step absorbs).
+//!
 //! ## Decision passes and their cost model
 //!
 //! The insertion pass only ever decides "offload and prefetch"; two

@@ -25,25 +25,37 @@
 //!   device recursively extend the plan until `max_clone_ops` caps it.
 //!
 //! Recompute is *speculated* when its cost is within `margin` × the
-//! exposed-transfer estimate, then **validated**: the rewrite (drop the
-//! round trip, release the original copy with a `Detach`, clone the
-//! producer subgraph anchored just before the first post-window consumer,
-//! rewire those consumers to the clone) is applied to a trial graph,
-//! re-refined with Algorithm 1, and re-simulated; decisions that fail to
-//! strictly improve makespan or peak residency — or that regress either —
-//! are rolled back.
+//! exposed-transfer estimate, then **validated** by re-simulation:
+//! decisions that fail to strictly improve makespan or peak residency —
+//! or that regress either — are rolled back.
+//!
+//! ## Windowed validation
+//!
+//! A candidate rewrite only perturbs the schedule from its `Store`'s
+//! position onward, so with `windowed` (the default) validation resumes a
+//! recorded baseline [`SimTrace`] at that position instead of
+//! re-simulating from t=0: the trial order is the baseline order with the
+//! round trip spliced out (`Detach` in the `Store`'s slot, replay clones
+//! just before the first post-window consumer) and the suffix re-walked
+//! from the recorded stream state. Resumed simulation is bit-identical to
+//! full simulation of the same trial (P13 pins this), so the
+//! accept/reject criteria — and the never-regress guarantee — are exactly
+//! as strong as under full re-simulation. With `windowed` off the pass
+//! validates the pre-incremental way: full re-refinement (Algorithm 1)
+//! plus full re-simulation per candidate — the A/B baseline
+//! `benches/hot_path.rs` measures against.
 //!
 //! The pass runs *after* exec-order, so its baseline is the session's
 //! pinned (refined) schedule — exactly what an offload-only pipeline would
 //! emit. Because every commit is validated against that baseline and each
-//! commit re-pins the refined trial order, the pipeline with this pass
+//! commit re-pins the validated trial order, the pipeline with this pass
 //! never simulates worse than the same pipeline without it, and is
 //! strictly better whenever at least one decision lands.
 
 use std::collections::HashSet;
 
 use crate::graph::{Graph, OpId, OpKind, RecomputePlan, TensorId, Tier};
-use crate::sim::simulate;
+use crate::sim::{simulate, SimTrace};
 
 use super::compiler::{AnalysisCache, CompileError, Diagnostic, Pass, PassCtx, PassReport};
 
@@ -59,11 +71,16 @@ pub struct RecomputeVsOffload {
     pub max_clone_ops: usize,
     /// Safety bound on committed decisions per compile.
     pub max_decisions: usize,
+    /// Validate candidates by resuming a recorded baseline simulation at
+    /// the rewrite's window start instead of re-refining and re-simulating
+    /// the whole schedule (see module docs). Off = the pre-incremental
+    /// full-validation path.
+    pub windowed: bool,
 }
 
 impl Default for RecomputeVsOffload {
     fn default() -> Self {
-        Self { margin: 1.0, max_clone_ops: 4, max_decisions: 64 }
+        Self { margin: 1.0, max_clone_ops: 4, max_decisions: 64, windowed: true }
     }
 }
 
@@ -72,6 +89,9 @@ struct Candidate {
     tensor: TensorId,
     store: OpId,
     prefetch: OpId,
+    /// Position of the `Store` in the baseline order — the earliest
+    /// schedule position the rewrite can affect.
+    st_pos: usize,
     /// Position of the first post-window consumer.
     u_pos: usize,
     /// Model-estimated benefit (exposed transfer − recompute cost), us.
@@ -79,6 +99,19 @@ struct Candidate {
     /// The replay subgraph the score was computed from — applied verbatim
     /// so scoring and rewrite can never diverge.
     plan: RecomputePlan,
+}
+
+/// A materialised trial rewrite, with everything the windowed path needs
+/// to splice the baseline order.
+struct TrialRewrite {
+    trial: Graph,
+    /// `old_id -> new_id` over the pre-removal id space (original ops +
+    /// appended clones).
+    map: Vec<Option<OpId>>,
+    /// The replay clones, producers first (post-removal ids).
+    clone_ops: Vec<OpId>,
+    /// The `Detach` replacing the `Store`'s free (post-removal id).
+    detach: OpId,
 }
 
 impl Pass for RecomputeVsOffload {
@@ -104,66 +137,86 @@ impl Pass for RecomputeVsOffload {
         // exec-order's pinned order (topo on custom pipelines). Both the
         // order and its simulation stay valid across rejected
         // speculations; only commits change the graph.
-        let mut order = cache.pinned_or_topo(g)?;
-        let mut cur = simulate(g, &order, &chw);
+        let mut order: Vec<OpId> = (*cache.pinned_or_topo(g)?).clone();
+        let mut trace =
+            if self.windowed { Some(SimTrace::record(g, &order, &chw)) } else { None };
+        let mut cur = match &trace {
+            Some(t) => t.base.clone(),
+            None => simulate(g, &order, &chw),
+        };
         // One decision at a time: each commit renumbers ops, so candidates
         // are re-enumerated from the live graph (same protocol as elide).
         while accepted < self.max_decisions {
             let Some(c) = self.best_candidate(g, &order, &chw, &decided) else { break };
             decided.insert(c.tensor);
 
-            // Speculate on a trial copy: rewrite, re-run Algorithm 1 on
-            // the rewritten graph, then validate by re-simulation.
-            match apply_recompute(g, &order, &c) {
-                Some(mut trial) => {
-                    let Ok(topo) = trial.topo_order_detailed() else { continue };
-                    let refined =
-                        crate::passes::exec_order::refine_from(&mut trial, topo, &ctx.hw, &ctx.exec);
-                    let sim = simulate(&trial, &refined.order, &chw);
-                    let improves = sim.makespan_us < cur.makespan_us * (1.0 - 1e-9)
-                        || (sim.makespan_us <= cur.makespan_us * (1.0 + 1e-9)
-                            && sim.peak_device_bytes < cur.peak_device_bytes);
-                    let regresses = sim.makespan_us > cur.makespan_us * (1.0 + 1e-9)
-                        || sim.peak_device_bytes > cur.peak_device_bytes;
-                    if improves && !regresses {
-                        let name = g.tensor(c.tensor).name.clone();
-                        let bytes = g.tensor(c.tensor).bytes;
-                        *g = trial;
-                        cache.pin_order(g, refined.order.clone());
-                        rep.diagnostics.push(Diagnostic::info(
-                            self.name(),
-                            format!(
-                                "recompute '{name}' instead of round-tripping it \
-                                 ({bytes} bytes each way): makespan {:.1} -> {:.1} us, \
-                                 peak {} -> {} bytes",
-                                cur.makespan_us,
-                                sim.makespan_us,
-                                cur.peak_device_bytes,
-                                sim.peak_device_bytes
-                            ),
-                        ));
-                        order = refined.order.clone();
-                        final_order = Some(refined.order);
-                        cur = sim;
-                        accepted += 1;
-                        saved_dma_bytes += 2 * bytes;
-                    } else {
-                        rejected += 1;
-                        rep.diagnostics.push(Diagnostic::info(
-                            self.name(),
-                            format!(
-                                "rolled back speculative recompute of '{}': simulated \
-                                 makespan {:.1} vs {:.1} us (validation failed)",
-                                g.tensor(c.tensor).name,
-                                sim.makespan_us,
-                                cur.makespan_us
-                            ),
-                        ));
-                    }
-                }
-                None => {
+            // Speculate on a trial copy, then validate by re-simulation.
+            let Some(tr) = apply_recompute(g, &order, &c) else {
+                rejected += 1;
+                continue;
+            };
+            let (sim, trial_order, trial_graph) = if let Some(trace) = &trace {
+                // Windowed: splice the rewrite into the baseline order and
+                // resume the recorded simulation at the window start.
+                let trial_order = splice_order(&order, &c, &tr);
+                let sim = trace.resume(c.st_pos, &tr.trial, &trial_order, &chw, &[]);
+                (sim, trial_order, tr.trial)
+            } else {
+                // Full validation: re-run Algorithm 1 on the rewritten
+                // graph (this also re-anchors cache ops), then simulate
+                // from scratch.
+                let mut trial = tr.trial;
+                let Ok(topo) = trial.topo_order_detailed() else {
                     rejected += 1;
+                    continue;
+                };
+                let refined =
+                    crate::passes::exec_order::refine_from(&mut trial, topo, &ctx.hw, &ctx.exec);
+                let sim = simulate(&trial, &refined.order, &chw);
+                (sim, refined.order, trial)
+            };
+            let improves = sim.makespan_us < cur.makespan_us * (1.0 - 1e-9)
+                || (sim.makespan_us <= cur.makespan_us * (1.0 + 1e-9)
+                    && sim.peak_device_bytes < cur.peak_device_bytes);
+            let regresses = sim.makespan_us > cur.makespan_us * (1.0 + 1e-9)
+                || sim.peak_device_bytes > cur.peak_device_bytes;
+            if improves && !regresses {
+                let name = g.tensor(c.tensor).name.clone();
+                let bytes = g.tensor(c.tensor).bytes;
+                *g = trial_graph;
+                cache.pin_order(g, trial_order.clone());
+                rep.diagnostics.push(Diagnostic::info(
+                    self.name(),
+                    format!(
+                        "recompute '{name}' instead of round-tripping it \
+                         ({bytes} bytes each way): makespan {:.1} -> {:.1} us, \
+                         peak {} -> {} bytes",
+                        cur.makespan_us,
+                        sim.makespan_us,
+                        cur.peak_device_bytes,
+                        sim.peak_device_bytes
+                    ),
+                ));
+                order = trial_order.clone();
+                final_order = Some(trial_order);
+                cur = sim;
+                accepted += 1;
+                saved_dma_bytes += 2 * bytes;
+                if trace.is_some() {
+                    trace = Some(SimTrace::record(g, &order, &chw));
                 }
+            } else {
+                rejected += 1;
+                rep.diagnostics.push(Diagnostic::info(
+                    self.name(),
+                    format!(
+                        "rolled back speculative recompute of '{}': simulated \
+                         makespan {:.1} vs {:.1} us (validation failed)",
+                        g.tensor(c.tensor).name,
+                        sim.makespan_us,
+                        cur.makespan_us
+                    ),
+                ));
             }
         }
 
@@ -184,6 +237,11 @@ impl RecomputeVsOffload {
     /// Enumerate undecided round trips and return the one with the highest
     /// model-estimated benefit (exposed transfer − recompute cost), if any
     /// clears the speculation margin.
+    ///
+    /// One indexed O(ops + edges) sweep per round: per-tensor cache-op
+    /// lists, a compute prefix-sum for window costs, and one shared
+    /// [`Availability`] index — instead of rescanning every op per
+    /// candidate tensor.
     fn best_candidate(
         &self,
         g: &Graph,
@@ -218,24 +276,35 @@ impl RecomputeVsOffload {
             0.0
         };
 
+        // Per-tensor cache-op index (one op sweep for all tensors).
+        let nt = g.tensors.len();
+        let (mut stores, mut prefetches, mut detaches) =
+            (vec![Vec::new(); nt], vec![Vec::new(); nt], vec![0usize; nt]);
+        for op in &g.ops {
+            match op.kind {
+                OpKind::Store { tensor } => stores[tensor].push(op.id),
+                OpKind::Prefetch { tensor } => prefetches[tensor].push(op.id),
+                OpKind::Detach { tensor } => detaches[tensor] += 1,
+                _ => {}
+            }
+        }
+        // Prefix sums of compute time along the order: the compute
+        // available inside any window is one subtraction.
+        let mut pc = vec![0.0f64; order.len() + 1];
+        for (i, &o) in order.iter().enumerate() {
+            pc[i + 1] = pc[i] + compute_us(o);
+        }
+        let availability = Availability::build(g, order);
+
         let mut best: Option<Candidate> = None;
         for t in &g.tensors {
             if t.home != Tier::Device || decided.contains(&t.id) {
                 continue;
             }
-            let (mut stores, mut prefetches, mut detaches) = (Vec::new(), Vec::new(), 0usize);
-            for op in &g.ops {
-                match op.kind {
-                    OpKind::Store { tensor } if tensor == t.id => stores.push(op.id),
-                    OpKind::Prefetch { tensor } if tensor == t.id => prefetches.push(op.id),
-                    OpKind::Detach { tensor } if tensor == t.id => detaches += 1,
-                    _ => {}
-                }
-            }
-            if detaches != 0 || stores.len() != 1 || prefetches.len() != 1 {
+            if detaches[t.id] != 0 || stores[t.id].len() != 1 || prefetches[t.id].len() != 1 {
                 continue;
             }
-            let (st, pf) = (stores[0], prefetches[0]);
+            let (st, pf) = (stores[t.id][0], prefetches[t.id][0]);
             if pos[st] >= pos[pf] {
                 continue;
             }
@@ -251,16 +320,14 @@ impl RecomputeVsOffload {
             };
 
             let roundtrip = chw.d2r_us(t.bytes) + chw.r2d_us(t.bytes);
-            let window_compute: f64 =
-                order[pos[st] + 1..u_pos].iter().map(|&o| compute_us(o)).sum();
+            let window_compute = pc[u_pos] - pc[pos[st] + 1];
             let exposed_est =
                 (roundtrip - window_compute).max(roundtrip * overcommit).max(0.0);
             if exposed_est <= 0.0 {
                 continue;
             }
-            let usable = available_at(g, order, u_pos);
             let tid = t.id;
-            let avail = |_: &Graph, x: TensorId| x != tid && usable[x];
+            let avail = |_: &Graph, x: TensorId| x != tid && availability.usable(x, u_pos);
             let Some(plan) = g.recompute_plan(t.id, &avail, self.max_clone_ops) else {
                 continue;
             };
@@ -275,6 +342,7 @@ impl RecomputeVsOffload {
                     tensor: t.id,
                     store: st,
                     prefetch: pf,
+                    st_pos: pos[st],
                     u_pos,
                     benefit,
                     plan,
@@ -285,43 +353,73 @@ impl RecomputeVsOffload {
     }
 }
 
-/// Usability of every tensor as a recompute input at position `u_pos`:
+/// Usability of every tensor as a recompute input at any position:
 /// device residency per the cache-operator walk the verifier uses
 /// (device-home tensors are resident from their producer — or t=0 for
 /// graph inputs — unless released by a `Store`/`Detach`; remote-home
 /// tensors become resident at a `Prefetch`), minus any tensor with a
-/// cache op at/after `u_pos`: a clone reading a tensor whose reload
-/// `Prefetch` lands later could not be dependency-ordered after the
+/// cache op at/after the query position: a clone reading a tensor whose
+/// reload `Prefetch` lands later could not be dependency-ordered after the
 /// transfer's completion, and one whose `Store`/`Detach` lands later has
 /// no ordering against that release — both are rightly rejected by the IR
-/// verifier. Refcount frees do not appear here — a new consumer at
-/// `u_pos` extends the refcount lifetime, so only cache-managed absence
-/// makes an input unusable.
-fn available_at(g: &Graph, order: &[OpId], u_pos: usize) -> Vec<bool> {
-    let mut avail: Vec<bool> = g
-        .tensors
-        .iter()
-        .map(|t| t.home == Tier::Device && g.producer_of(t.id).is_none())
-        .collect();
-    for &o in &order[..u_pos] {
-        match g.op(o).kind {
-            OpKind::Prefetch { tensor } => avail[tensor] = true,
-            OpKind::Store { tensor } | OpKind::Detach { tensor } => avail[tensor] = false,
-            _ => {
-                for &t in &g.op(o).outputs {
-                    if g.tensor(t).home == Tier::Device {
-                        avail[t] = true;
+/// verifier. Refcount frees do not appear here — a new consumer at the
+/// query position extends the refcount lifetime, so only cache-managed
+/// absence makes an input unusable.
+///
+/// Built once per decision round (one order sweep); queries at arbitrary
+/// positions are a binary search over that tensor's residency events.
+struct Availability {
+    /// Per tensor: `(position, becomes_resident)` events, ascending.
+    events: Vec<Vec<(usize, bool)>>,
+    /// Per tensor: last position with any cache op (usize::MAX = none).
+    last_cache_pos: Vec<usize>,
+    /// Residency before the first event (device-home graph inputs).
+    initial: Vec<bool>,
+}
+
+impl Availability {
+    fn build(g: &Graph, order: &[OpId]) -> Self {
+        let nt = g.tensors.len();
+        let initial: Vec<bool> = g
+            .tensors
+            .iter()
+            .map(|t| t.home == Tier::Device && g.producer_of(t.id).is_none())
+            .collect();
+        let mut events: Vec<Vec<(usize, bool)>> = vec![Vec::new(); nt];
+        let mut last_cache_pos = vec![usize::MAX; nt];
+        for (i, &o) in order.iter().enumerate() {
+            match g.op(o).kind {
+                OpKind::Prefetch { tensor } => {
+                    events[tensor].push((i, true));
+                    last_cache_pos[tensor] = i;
+                }
+                OpKind::Store { tensor } | OpKind::Detach { tensor } => {
+                    events[tensor].push((i, false));
+                    last_cache_pos[tensor] = i;
+                }
+                _ => {
+                    for &t in &g.op(o).outputs {
+                        if g.tensor(t).home == Tier::Device {
+                            events[t].push((i, true));
+                        }
                     }
                 }
             }
         }
+        Self { events, last_cache_pos, initial }
     }
-    for &o in &order[u_pos..] {
-        if let Some(t) = g.op(o).kind.cache_tensor() {
-            avail[t] = false;
+
+    /// Is `x` usable as a recompute input at position `u`?
+    fn usable(&self, x: TensorId, u: usize) -> bool {
+        if self.last_cache_pos[x] != usize::MAX && self.last_cache_pos[x] >= u {
+            return false;
+        }
+        let ev = &self.events[x];
+        match ev.partition_point(|&(p, _)| p < u) {
+            0 => self.initial[x],
+            k => ev[k - 1].1,
         }
     }
-    avail
 }
 
 /// Apply one recompute decision to a trial clone of `g`: remove the round
@@ -329,7 +427,7 @@ fn available_at(g: &Graph, order: &[OpId], u_pos: usize) -> Vec<bool> {
 /// before the first post-window consumer), rewire post-window consumers
 /// to the regenerated tensor, and wire prefetch-completion deps for any
 /// cache-managed inputs the clones read.
-fn apply_recompute(g: &Graph, order: &[OpId], c: &Candidate) -> Option<Graph> {
+fn apply_recompute(g: &Graph, order: &[OpId], c: &Candidate) -> Option<TrialRewrite> {
     let mut pos = vec![usize::MAX; g.ops.len()];
     for (i, &o) in order.iter().enumerate() {
         pos[o] = i;
@@ -408,7 +506,31 @@ fn apply_recompute(g: &Graph, order: &[OpId], c: &Candidate) -> Option<Graph> {
             }
         }
     }
-    Some(trial)
+    Some(TrialRewrite { trial, map, clone_ops, detach: dt })
+}
+
+/// Splice one committed rewrite into the baseline order without
+/// re-refining: the `Detach` takes the `Store`'s slot (its deps — the
+/// pre-window keepers — all precede it), the `Prefetch` disappears (ops
+/// that waited on it inherit its predecessors via `remove_ops`), and the
+/// replay clones land producers-first immediately before the first
+/// post-window consumer — the just-in-time placement Algorithm 1 would
+/// pick for the prefetch they replace. Everything else keeps its baseline
+/// position, so the first `st_pos` positions are untouched and a recorded
+/// [`SimTrace`] can resume there.
+fn splice_order(order: &[OpId], c: &Candidate, tr: &TrialRewrite) -> Vec<OpId> {
+    let mut out = Vec::with_capacity(order.len() + tr.clone_ops.len());
+    for (i, &o) in order.iter().enumerate() {
+        if i == c.u_pos {
+            out.extend(tr.clone_ops.iter().copied());
+        }
+        if o == c.store {
+            out.push(tr.detach);
+        } else if o != c.prefetch {
+            out.push(tr.map[o].expect("surviving op must be mapped"));
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -484,6 +606,36 @@ mod tests {
         assert!(sb.recompute_us > 0.0, "recompute time must be accounted");
         assert!(sb.dma_bytes < sa.dma_bytes);
         assert!(b.ops.iter().any(|o| o.recompute), "clone must be marked");
+    }
+
+    #[test]
+    fn windowed_and_full_validation_agree_on_the_fixture() {
+        // Same workload through both validation paths: both must flip the
+        // round trip, and neither may regress the other's baseline.
+        let mut a = workload();
+        let ra = Compiler::new(slow_link_hw())
+            .policy(aggressive())
+            .pass(RecomputeVsOffload { windowed: false, ..Default::default() })
+            .verify(true)
+            .compile(&mut a)
+            .unwrap();
+        let sa = simulate(&a, &ra.order, &slow_link_hw());
+
+        let mut b = workload();
+        let rb = Compiler::new(slow_link_hw())
+            .policy(aggressive())
+            .recompute_vs_offload() // windowed by default
+            .verify(true)
+            .compile(&mut b)
+            .unwrap();
+        let sb = simulate(&b, &rb.order, &slow_link_hw());
+
+        assert_eq!(ra.recomputed, 1);
+        assert_eq!(rb.recomputed, 1);
+        // Both validated against the same pinned baseline, so both ended
+        // strictly under it; windowed must be in the same ballpark.
+        assert!(sb.makespan_us <= sa.makespan_us * 1.05,
+            "windowed validation lost too much: {} vs {}", sb.makespan_us, sa.makespan_us);
     }
 
     #[test]

@@ -47,7 +47,7 @@
 //! the no-throttle schedule's — the P11/P12 invariant.
 
 use crate::graph::{Graph, OpId, OpKind, TensorId, Tier};
-use crate::sim::simulate;
+use crate::sim::{simulate, SimTrace};
 
 use super::compiler::{AnalysisCache, CompileError, Diagnostic, Pass, PassCtx, PassReport};
 
@@ -72,6 +72,17 @@ pub struct SloThrottle {
     /// serving step compiler disables this: decode needs its fetched KV
     /// blocks now, so only spills and splits apply.
     pub defer_prefetches: bool,
+    /// Throughput mode (the default): split rewrites are validated in
+    /// *batches* (one topo + one simulation per batch, bisecting on
+    /// failure instead of one full validation per split), and deferral
+    /// probes resume a recorded baseline [`SimTrace`] at the prefetch's
+    /// position — with the probed anchor dep passed as a virtual edge —
+    /// instead of cloning the graph and re-simulating from t=0 per probe.
+    /// Resumed simulation is bit-identical to full simulation of the same
+    /// candidate (P13), so accept/reject decisions match the off path;
+    /// off = the pre-incremental per-rewrite validation `benches/
+    /// hot_path.rs` uses as its A/B baseline.
+    pub windowed: bool,
 }
 
 impl Default for SloThrottle {
@@ -82,6 +93,7 @@ impl Default for SloThrottle {
             max_decisions: 64,
             spill_deferrable_stores: true,
             defer_prefetches: true,
+            windowed: true,
         }
     }
 }
@@ -104,7 +116,7 @@ impl Pass for SloThrottle {
             return Ok(rep);
         };
         let chw = ctx.contended_hw();
-        let entry_order = cache.pinned_or_topo(g)?;
+        let entry_order: Vec<OpId> = (*cache.pinned_or_topo(g)?).clone();
         let base = simulate(g, &entry_order, &chw);
         let peak_cap = base.peak_device_bytes;
 
@@ -156,44 +168,93 @@ impl Pass for SloThrottle {
         // Pool-resident prefetches arrive staggered; Store/Prefetch round
         // trips leave and return per chunk (partial-tensor residency).
         let mut decided: Vec<TensorId> = Vec::new();
-        while spills + split_count + deferred < self.max_decisions {
-            let Some((t, kind, k)) = self.split_candidate(g, &decided) else { break };
-            decided.push(t);
-            let trial = match kind {
-                SplitKind::PoolResident { pf } => split_prefetch(g, t, pf, k),
-                SplitKind::RoundTrip { st, pf } => split_round_trip(g, t, st, pf, k),
-            };
-            let Some(trial) = trial else { continue };
-            let Ok(torder) = trial.topo_order_detailed() else { continue };
-            let sim = simulate(&trial, &torder, &chw);
-            // Same contract as deferrals: stay within budget and peak cap,
-            // and strictly improve peak or residency byte·time.
-            let improves = sim.peak_device_bytes < cur.peak_device_bytes
-                || (sim.peak_device_bytes == cur.peak_device_bytes
-                    && sim.residency_byte_time()
-                        < cur.residency_byte_time() * (1.0 - 1e-9));
-            if sim.makespan_us <= budget && sim.peak_device_bytes <= peak_cap && improves {
-                let name = g.tensor(t).name.clone();
-                let what = match kind {
-                    SplitKind::PoolResident { .. } => "prefetch",
-                    SplitKind::RoundTrip { .. } => "store/prefetch round trip",
-                };
-                *g = trial;
-                order = torder;
-                cur = sim;
-                split_count += 1;
-                rep.chunked += 1;
-                rep.diagnostics.push(Diagnostic::info(
+        if self.windowed {
+            // Batched validation: apply every enumerated split to one
+            // trial, validate with a single topo + simulation, and bisect
+            // on failure (each split is independent tensor-wise, so a bad
+            // batch member is isolated in O(log) extra simulations instead
+            // of paying one full validation per split). Re-enumerate after
+            // each round — committed splits can expose further candidates
+            // (over-sized chunks of a split prefetch).
+            loop {
+                let remaining =
+                    self.max_decisions.saturating_sub(spills + split_count + deferred);
+                if remaining == 0 {
+                    break;
+                }
+                let mut batch = self.split_candidates(g, &decided);
+                batch.truncate(remaining);
+                if batch.is_empty() {
+                    break;
+                }
+                for &(t, _, _) in &batch {
+                    decided.push(t);
+                }
+                let committed = commit_split_batch(
                     self.name(),
-                    format!("split {what} of '{name}' into {k} chunked transfers"),
-                ));
+                    g,
+                    &mut order,
+                    &mut cur,
+                    &batch,
+                    &chw,
+                    budget,
+                    peak_cap,
+                    &mut rep,
+                );
+                split_count += committed;
+                rep.chunked += committed;
+            }
+        } else {
+            while spills + split_count + deferred < self.max_decisions {
+                let Some(&(t, kind, k)) = self.split_candidates(g, &decided).first() else {
+                    break;
+                };
+                decided.push(t);
+                let trial = match kind {
+                    SplitKind::PoolResident { pf } => split_prefetch(g, t, pf, k),
+                    SplitKind::RoundTrip { st, pf } => split_round_trip(g, t, st, pf, k),
+                };
+                let Some(trial) = trial else { continue };
+                let Ok(torder) = trial.topo_order_detailed() else { continue };
+                let sim = simulate(&trial, &torder, &chw);
+                // Same contract as deferrals: stay within budget and peak
+                // cap, and strictly improve peak or residency byte·time.
+                let improves = sim.peak_device_bytes < cur.peak_device_bytes
+                    || (sim.peak_device_bytes == cur.peak_device_bytes
+                        && sim.residency_byte_time()
+                            < cur.residency_byte_time() * (1.0 - 1e-9));
+                if sim.makespan_us <= budget && sim.peak_device_bytes <= peak_cap && improves {
+                    let name = g.tensor(t).name.clone();
+                    let what = match kind {
+                        SplitKind::PoolResident { .. } => "prefetch",
+                        SplitKind::RoundTrip { .. } => "store/prefetch round trip",
+                    };
+                    *g = trial;
+                    order = torder;
+                    cur = sim;
+                    split_count += 1;
+                    rep.chunked += 1;
+                    rep.diagnostics.push(Diagnostic::info(
+                        self.name(),
+                        format!("split {what} of '{name}' into {k} chunked transfers"),
+                    ));
+                }
             }
         }
 
         // ---- phase 2: defer prefetches into the SLO slack ----------------
         // Latest-consumer prefetches first: their windows close last, so
         // they have the most slack to spend. `cur` stays valid across
-        // rejected speculations — only commits change the graph.
+        // rejected speculations — only commits change the graph. In
+        // windowed mode the anchor probes resume a recorded trace at the
+        // prefetch's position (the earliest point a deferral can move)
+        // instead of fully re-simulating; the trace is re-recorded after
+        // each commit.
+        let mut trace = if self.windowed && self.defer_prefetches {
+            Some(SimTrace::record(g, &order, &chw))
+        } else {
+            None
+        };
         while self.defer_prefetches && spills + split_count + deferred < self.max_decisions {
             let mut committed = false;
             let prefetches: Vec<OpId> = order
@@ -204,13 +265,16 @@ impl Pass for SloThrottle {
                 .collect();
             for c in prefetches {
                 let Some((trial, cand_order, sim)) =
-                    best_deferral(g, &order, c, &chw, budget, peak_cap, &cur)
+                    best_deferral(g, &order, c, &chw, budget, peak_cap, &cur, trace.as_ref())
                 else {
                     continue;
                 };
                 let name = g.op(c).name.clone();
                 *g = trial;
                 order = cand_order;
+                if trace.is_some() {
+                    trace = Some(SimTrace::record(g, &order, &chw));
+                }
                 deferred += 1;
                 committed = true;
                 rep.diagnostics.push(Diagnostic::info(
@@ -259,17 +323,19 @@ enum SplitKind {
 }
 
 impl SloThrottle {
-    /// Next splittable transfer: either a pool-resident tensor with
-    /// exactly one cache op (its lone prefetch) or a tensor with exactly
-    /// one Store + one Prefetch (a full round trip); big enough for ≥ 2
-    /// chunks either way. Chunk views themselves are never re-split.
-    fn split_candidate(
+    /// All splittable transfers, in tensor-id order: each is either a
+    /// pool-resident tensor with exactly one cache op (its lone prefetch)
+    /// or a tensor with exactly one Store + one Prefetch (a full round
+    /// trip); big enough for ≥ 2 chunks either way. Chunk views themselves
+    /// are never re-split.
+    fn split_candidates(
         &self,
         g: &Graph,
         decided: &[TensorId],
-    ) -> Option<(TensorId, SplitKind, usize)> {
+    ) -> Vec<(TensorId, SplitKind, usize)> {
+        let mut out = Vec::new();
         if self.split_min_bytes == 0 {
-            return None;
+            return out;
         }
         for t in &g.tensors {
             if t.bytes < 2 * self.split_min_bytes
@@ -313,10 +379,105 @@ impl SloThrottle {
                 _ => continue,
             };
             let k = ((t.bytes / self.split_min_bytes) as usize).clamp(2, self.max_chunks.max(2));
-            return Some((t.id, kind, k));
+            out.push((t.id, kind, k));
         }
-        None
+        out
     }
+}
+
+/// Re-locate `t`'s cache ops on (a possibly already-rewritten) `g` and
+/// apply its split. Batch application renumbers op ids per member
+/// (`remove_ops`), so splits are keyed by tensor id — stable across
+/// rewrites — and the op wiring is re-derived here per application.
+fn apply_split(g: &Graph, t: TensorId, k: usize) -> Option<Graph> {
+    let cache_ops: Vec<OpId> =
+        g.ops.iter().filter(|o| o.kind.cache_tensor() == Some(t)).map(|o| o.id).collect();
+    match cache_ops.as_slice() {
+        [pf] if matches!(g.op(*pf).kind, OpKind::Prefetch { .. }) => split_prefetch(g, t, *pf, k),
+        [a, b] => {
+            let (st, pf) = match (&g.op(*a).kind, &g.op(*b).kind) {
+                (OpKind::Store { .. }, OpKind::Prefetch { .. }) => (*a, *b),
+                (OpKind::Prefetch { .. }, OpKind::Store { .. }) => (*b, *a),
+                _ => return None,
+            };
+            split_round_trip(g, t, st, pf, k)
+        }
+        _ => None,
+    }
+}
+
+/// Validate a batch of splits with one topo + one simulation; on failure
+/// bisect so one regressive member cannot veto the rest. Commits mutate
+/// `g`/`order`/`cur` in place (the right half of a bisection re-validates
+/// against the left half's committed state, like the sequential path).
+/// Returns the number of splits committed.
+#[allow(clippy::too_many_arguments)]
+fn commit_split_batch(
+    pass: &'static str,
+    g: &mut Graph,
+    order: &mut Vec<OpId>,
+    cur: &mut crate::sim::SimResult,
+    batch: &[(TensorId, SplitKind, usize)],
+    chw: &crate::sim::HwConfig,
+    budget: f64,
+    peak_cap: u64,
+    rep: &mut PassReport,
+) -> usize {
+    if batch.is_empty() {
+        return 0;
+    }
+    let mut trial = g.clone();
+    let mut applied: Vec<(TensorId, SplitKind, usize)> = Vec::new();
+    for &(t, kind, k) in batch {
+        if let Some(next) = apply_split(&trial, t, k) {
+            trial = next;
+            applied.push((t, kind, k));
+        }
+    }
+    let bisect = |g: &mut Graph,
+                  order: &mut Vec<OpId>,
+                  cur: &mut crate::sim::SimResult,
+                  rep: &mut PassReport| {
+        if batch.len() == 1 {
+            return 0;
+        }
+        let mid = batch.len() / 2;
+        let left =
+            commit_split_batch(pass, g, order, cur, &batch[..mid], chw, budget, peak_cap, rep);
+        let right =
+            commit_split_batch(pass, g, order, cur, &batch[mid..], chw, budget, peak_cap, rep);
+        left + right
+    };
+    if applied.is_empty() {
+        return 0;
+    }
+    let Ok(torder) = trial.topo_order_detailed() else {
+        return bisect(g, order, cur, rep);
+    };
+    let sim = simulate(&trial, &torder, chw);
+    // Same contract as the sequential path: stay within budget and peak
+    // cap, and strictly improve peak or residency byte·time.
+    let improves = sim.peak_device_bytes < cur.peak_device_bytes
+        || (sim.peak_device_bytes == cur.peak_device_bytes
+            && sim.residency_byte_time() < cur.residency_byte_time() * (1.0 - 1e-9));
+    if sim.makespan_us <= budget && sim.peak_device_bytes <= peak_cap && improves {
+        for &(t, kind, k) in &applied {
+            let name = g.tensor(t).name.clone();
+            let what = match kind {
+                SplitKind::PoolResident { .. } => "prefetch",
+                SplitKind::RoundTrip { .. } => "store/prefetch round trip",
+            };
+            rep.diagnostics.push(Diagnostic::info(
+                pass,
+                format!("split {what} of '{name}' into {k} chunked transfers"),
+            ));
+        }
+        *g = trial;
+        *order = torder;
+        *cur = sim;
+        return applied.len();
+    }
+    bisect(g, order, cur, rep)
 }
 
 /// Non-cache ops control-depending on `pf` — the consumers the insertion
@@ -541,6 +702,14 @@ fn split_round_trip(g: &Graph, t: TensorId, st: OpId, pf: OpId, k: usize) -> Opt
 /// spill per commit; later scans can still defer further. Returns the
 /// trial graph (anchor dep added), its order, and the validating
 /// simulation.
+///
+/// With a recorded `trace` (windowed mode) each probe resumes the
+/// baseline simulation at `c`'s position — the earliest point the
+/// deferral can perturb — passing the probed anchor dep as a virtual
+/// edge, so no per-probe graph clone or full re-simulation happens; the
+/// graph is only cloned and mutated for the one probe that commits.
+/// Resumed results are bit-identical to the full simulations the
+/// trace-less path runs, so both paths pick the same anchor.
 #[allow(clippy::too_many_arguments)]
 fn best_deferral(
     g: &Graph,
@@ -550,6 +719,7 @@ fn best_deferral(
     budget: f64,
     peak_cap: u64,
     cur: &crate::sim::SimResult,
+    trace: Option<&SimTrace>,
 ) -> Option<(Graph, Vec<OpId>, crate::sim::SimResult)> {
     let n = order.len();
     let mut pos = vec![usize::MAX; g.ops.len()];
@@ -569,8 +739,8 @@ fn best_deferral(
     // (all dependents sit at/after the first successor), so the dep
     // cannot create a cycle. Scanned latest-first so ties keep the
     // latest anchor — maximal deferral; the scan is capped because each
-    // probe costs a clone + simulation and deep anchors only get less
-    // attractive.
+    // probe costs a simulation (a windowed resume, or a clone + full
+    // re-simulation) and deep anchors only get less attractive.
     const MAX_ANCHOR_PROBES: usize = 48;
     let mut probes = 0usize;
     for a_idx in (0..hi).rev() {
@@ -589,12 +759,21 @@ fn best_deferral(
             cand.remove(cur_pos);
             cand.insert(a_idx, c);
         }
-        let mut trial = g.clone();
-        trial.add_control_dep(c, a);
-        if !trial.is_valid_order(&cand) {
-            continue;
-        }
-        let sim = simulate(&trial, &cand, chw);
+        // `cand` differs from the baseline order only at/after `cur_pos`
+        // (c either stays put with a new dep or moves later), and c's
+        // preds all precede `cur_pos`, so the candidate is valid by
+        // construction and a recorded trace can resume at `cur_pos`.
+        let sim = match trace {
+            Some(trace) => trace.resume(cur_pos, g, &cand, chw, &[(c, a)]),
+            None => {
+                let mut trial = g.clone();
+                trial.add_control_dep(c, a);
+                if !trial.is_valid_order(&cand) {
+                    continue;
+                }
+                simulate(&trial, &cand, chw)
+            }
+        };
         if sim.makespan_us > budget || sim.peak_device_bytes > peak_cap {
             continue;
         }
@@ -602,6 +781,9 @@ fn best_deferral(
             || (sim.peak_device_bytes == best_key.0
                 && sim.residency_byte_time() < best_key.1 * (1.0 - 1e-9));
         if improves {
+            let mut trial = g.clone();
+            trial.add_control_dep(c, a);
+            debug_assert!(trial.is_valid_order(&cand));
             return Some((trial, cand, sim));
         }
     }

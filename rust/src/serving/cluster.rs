@@ -128,6 +128,10 @@ pub struct ClusterReport {
     pub compile_cache_hits: u64,
     /// Summed step-graph compile-cache misses across replicas.
     pub compile_cache_misses: u64,
+    /// Summed step-graph compile wall-clock across replicas (us).
+    pub compile_us_total: f64,
+    /// Longest single step-graph compile across replicas (us).
+    pub compile_us_max: f64,
     /// Summed first-time SLO-deferred writeback bytes across replicas.
     pub slo_deferred_bytes: u64,
 }
@@ -270,6 +274,9 @@ impl SimCluster {
         let peak_device = per_replica.iter().map(|r| r.peak_device_bytes).max().unwrap_or(0);
         let cache_hits: u64 = per_replica.iter().map(|r| r.compile_cache_hits).sum();
         let cache_misses: u64 = per_replica.iter().map(|r| r.compile_cache_misses).sum();
+        let compile_us: f64 = per_replica.iter().map(|r| r.compile_us_total).sum();
+        let compile_us_max =
+            per_replica.iter().map(|r| r.compile_us_max).fold(0.0, f64::max);
         let deferred: u64 = per_replica.iter().map(|r| r.slo_deferred_bytes).sum();
         ClusterReport {
             dispatched: self.dispatched,
@@ -293,6 +300,8 @@ impl SimCluster {
             pool_capacity_bytes: self.pool.capacity(),
             compile_cache_hits: cache_hits,
             compile_cache_misses: cache_misses,
+            compile_us_total: compile_us,
+            compile_us_max,
             slo_deferred_bytes: deferred,
             per_replica,
         }

@@ -801,6 +801,8 @@ impl SimServingEngine {
             decode_step_us_max: self.decode_step_us_max,
             compile_cache_hits: self.step_compiler.as_ref().map_or(0, |sc| sc.hits),
             compile_cache_misses: self.step_compiler.as_ref().map_or(0, |sc| sc.misses),
+            compile_us_total: self.step_compiler.as_ref().map_or(0.0, |sc| sc.compile_us_total),
+            compile_us_max: self.step_compiler.as_ref().map_or(0.0, |sc| sc.compile_us_max),
             chunk_splits: self.chunk_splits,
             residency: self.residency,
         }

@@ -67,6 +67,12 @@ pub struct ServingReport {
     pub compile_cache_hits: u64,
     /// Step-graph compile-cache misses (actual compiles).
     pub compile_cache_misses: u64,
+    /// Wall-clock spent compiling step graphs on cache misses (us). Hits
+    /// are free; this is where session-pipeline throughput regressions
+    /// surface in serving runs.
+    pub compile_us_total: f64,
+    /// Longest single step-graph compile (us).
+    pub compile_us_max: f64,
     /// Transfers the step compiler split into chunked (partial-tensor)
     /// transfers.
     pub chunk_splits: u64,

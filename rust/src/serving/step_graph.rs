@@ -156,11 +156,27 @@ pub struct StepCompiler {
     cache: HashMap<StepKey, CompiledStep>,
     pub hits: u64,
     pub misses: u64,
+    /// Wall-clock spent in `compile_uncached` across all misses (us).
+    /// Cache hits cost nothing; this is the compile latency the serving
+    /// report surfaces so regressions in session-pipeline throughput show
+    /// up in `ServingReport` rather than only in the benches.
+    pub compile_us_total: f64,
+    /// Longest single `compile_uncached` call (us) — the compile stall an
+    /// unlucky first-of-its-shape step absorbs.
+    pub compile_us_max: f64,
 }
 
 impl StepCompiler {
     pub fn new(hw: HwConfig, overlap: bool) -> Self {
-        Self { hw, overlap, cache: HashMap::new(), hits: 0, misses: 0 }
+        Self {
+            hw,
+            overlap,
+            cache: HashMap::new(),
+            hits: 0,
+            misses: 0,
+            compile_us_total: 0.0,
+            compile_us_max: 0.0,
+        }
     }
 
     /// Compile `spec` under `fabric` pressure, reusing the cached schedule
@@ -176,7 +192,11 @@ impl StepCompiler {
             return Ok(cs.clone());
         }
         self.misses += 1;
+        let t0 = std::time::Instant::now();
         let cs = self.compile_uncached(spec, fabric)?;
+        let us = t0.elapsed().as_secs_f64() * 1e6;
+        self.compile_us_total += us;
+        self.compile_us_max = self.compile_us_max.max(us);
         self.cache.insert(key, cs.clone());
         Ok(cs)
     }

@@ -8,6 +8,8 @@
 
 mod engine;
 mod hw;
+mod window;
 
 pub use engine::{duration_us, simulate, stream_of, Interval, SimResult, Stream};
 pub use hw::{Fabric, HwConfig, GB, MB};
+pub use window::SimTrace;

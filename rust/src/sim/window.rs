@@ -1,0 +1,384 @@
+//! Windowed re-simulation: record one full simulation, then replay only
+//! the schedule suffix a candidate rewrite can affect.
+//!
+//! The decision passes (`RecomputeVsOffload`, `SloThrottle`) speculate a
+//! rewrite, re-simulate, and keep or roll back. At production graph scale
+//! (20k+ ops) a full [`simulate`](super::simulate) per candidate is the
+//! compile-latency bottleneck — yet a candidate only perturbs the schedule
+//! from its earliest touched position onward. [`SimTrace`] records the
+//! baseline walk (per-op start/finish times plus the per-position stream
+//! occupancy — the complete entry state of every schedule suffix);
+//! [`SimTrace::resume`] seeds a trial simulation with the recorded prefix
+//! and walks only the suffix.
+//!
+//! `resume` is *exact*, not approximate: it reuses the recorded prefix
+//! times verbatim and assembles memory events, refcount frees and
+//! aggregate counters in the same sequence as `simulate`, so the result is
+//! bit-identical to a full simulation of the trial graph/order (the P13
+//! differential proptest in rust/tests/ pins this). The caller contract is
+//! that the first `prefix_len` positions of the trial order correspond
+//! 1:1 (possibly renumbered, e.g. after `Graph::remove_ops`) to the
+//! recorded order, with identical op kinds, durations, and
+//! prefix-internal dependencies.
+
+use crate::graph::{Graph, OpId, OpKind, Tier};
+
+use super::engine::{duration_us, simulate, stream_of, Interval, SimResult, Stream};
+use super::hw::HwConfig;
+
+fn stream_idx(s: Stream) -> usize {
+    match s {
+        Stream::Compute => 0,
+        Stream::DmaIn => 1,
+        Stream::DmaOut => 2,
+        Stream::Net => 3,
+        Stream::Host => 4,
+    }
+}
+
+/// A recorded baseline simulation that trial schedules can resume from.
+#[derive(Debug, Clone)]
+pub struct SimTrace {
+    /// The recorded execution order.
+    order: Vec<OpId>,
+    /// Per-op start time in the recorded walk.
+    start: Vec<f64>,
+    /// Per-op finish time in the recorded walk.
+    finish: Vec<f64>,
+    /// Stream occupancy *before* each position (`order.len() + 1`
+    /// entries): the complete cross-window entry state of every suffix.
+    stream_free: Vec<[f64; 5]>,
+    /// The baseline result (identical to `simulate(graph, order, hw)`).
+    pub base: SimResult,
+}
+
+impl SimTrace {
+    /// Simulate `graph` under `order` once, recording the per-position
+    /// state needed to resume from any schedule position.
+    pub fn record(graph: &Graph, order: &[OpId], hw: &HwConfig) -> Self {
+        debug_assert!(graph.is_valid_order(order), "record: invalid execution order");
+        let n = graph.ops.len();
+        let mut start = vec![0.0f64; n];
+        let mut finish = vec![0.0f64; n];
+        let mut sf = [0.0f64; 5];
+        let mut snaps = Vec::with_capacity(order.len() + 1);
+        for &op_id in order {
+            snaps.push(sf);
+            let op = graph.op(op_id);
+            let stream = stream_of(&op.kind);
+            let dur = duration_us(&op.kind, graph, hw);
+            let dep_ready =
+                graph.preds(op_id).iter().map(|&p| finish[p]).fold(0.0f64, f64::max);
+            let s = dep_ready.max(sf[stream_idx(stream)]);
+            let f = s + dur;
+            start[op_id] = s;
+            finish[op_id] = f;
+            sf[stream_idx(stream)] = f;
+        }
+        snaps.push(sf);
+        let base = simulate(graph, order, hw);
+        debug_assert!(order
+            .iter()
+            .zip(base.intervals.iter())
+            .all(|(&o, iv)| iv.op == o
+                && iv.start_us.to_bits() == start[o].to_bits()
+                && iv.finish_us.to_bits() == finish[o].to_bits()));
+        SimTrace { order: order.to_vec(), start, finish, stream_free: snaps, base }
+    }
+
+    /// Position of the recorded order's `i`-th op (convenience for
+    /// callers computing the resume point).
+    pub fn order(&self) -> &[OpId] {
+        &self.order
+    }
+
+    /// Re-simulate `order` over (a possibly rewritten) `graph`, reusing
+    /// the recorded walk for the first `prefix_len` positions.
+    ///
+    /// `extra_deps` is a list of `(op, dep)` ordering edges assumed *in
+    /// addition to* the graph's own — so callers can probe "what if `op`
+    /// also waited on `dep`" without cloning and mutating the graph per
+    /// probe. The result is bit-identical to
+    /// `simulate(&graph_with_extra_deps, order, hw)`.
+    ///
+    /// Caller contract: for `i < prefix_len`, `order[i]` is the same op
+    /// as the recorded `order[i]` (same kind, duration, and
+    /// prefix-internal preds — op *ids* may differ after renumbering),
+    /// and no graph rewrite or extra dep affects any prefix op.
+    pub fn resume(
+        &self,
+        prefix_len: usize,
+        graph: &Graph,
+        order: &[OpId],
+        hw: &HwConfig,
+        extra_deps: &[(OpId, OpId)],
+    ) -> SimResult {
+        debug_assert!(prefix_len <= self.order.len() && prefix_len <= order.len());
+        debug_assert!(graph.is_valid_order(order), "resume: invalid execution order");
+
+        let n = graph.ops.len();
+        let mut finish = vec![0.0f64; n];
+        let mut start = vec![0.0f64; n];
+        let mut intervals = Vec::with_capacity(n);
+
+        let mut pos = vec![usize::MAX; n];
+        for (i, &o) in order.iter().enumerate() {
+            pos[o] = i;
+        }
+        debug_assert!(extra_deps.iter().all(|&(o, d)| pos[d] < pos[o]));
+
+        // --- residency bookkeeping (mirrors `simulate`) ------------------
+        let mut mem_events: Vec<(f64, i64)> = Vec::new();
+        let mut last_use: Vec<Option<OpId>> = vec![None; graph.tensors.len()];
+        for t in &graph.tensors {
+            let mut consumers: Vec<OpId> = graph.consumers_of(t.id).to_vec();
+            consumers.retain(|&c| pos[c] != usize::MAX);
+            if let Some(&last) = consumers.iter().max_by_key(|&&c| pos[c]) {
+                last_use[t.id] = Some(last);
+            }
+        }
+        let mut last_cache_free_pos: Vec<Option<usize>> = vec![None; graph.tensors.len()];
+        for op in &graph.ops {
+            if let OpKind::Store { tensor } | OpKind::Detach { tensor } = op.kind {
+                if pos[op.id] != usize::MAX {
+                    let e = last_cache_free_pos[tensor].get_or_insert(0);
+                    *e = (*e).max(pos[op.id]);
+                }
+            }
+        }
+        for t in &graph.tensors {
+            if t.home == Tier::Device && graph.producer_of(t.id).is_none() && t.alias_of.is_none()
+            {
+                mem_events.push((0.0, t.bytes as i64));
+            }
+        }
+
+        // --- prefix: recorded times, trial-graph events ------------------
+        let mut dma_bytes = 0u64;
+        let emit = |op_id: OpId, s: f64, f: f64, mem_events: &mut Vec<(f64, i64)>, dma_bytes: &mut u64| {
+            let op = graph.op(op_id);
+            match op.kind {
+                OpKind::Compute { .. } => {
+                    for &t in &op.outputs {
+                        if graph.tensor(t).home == Tier::Device {
+                            mem_events.push((s, graph.tensor(t).bytes as i64));
+                        }
+                    }
+                }
+                OpKind::Prefetch { tensor } => {
+                    mem_events.push((s, graph.tensor(tensor).bytes as i64));
+                    *dma_bytes += graph.tensor(tensor).bytes;
+                }
+                OpKind::Store { tensor } => {
+                    mem_events.push((f, -(graph.tensor(tensor).bytes as i64)));
+                    *dma_bytes += graph.tensor(tensor).bytes;
+                }
+                OpKind::Detach { tensor } => {
+                    mem_events.push((f, -(graph.tensor(tensor).bytes as i64)));
+                }
+                _ => {}
+            }
+        };
+        for i in 0..prefix_len {
+            let o = order[i];
+            let b = self.order[i];
+            let (s, f) = (self.start[b], self.finish[b]);
+            start[o] = s;
+            finish[o] = f;
+            intervals.push(Interval {
+                op: o,
+                start_us: s,
+                finish_us: f,
+                stream: stream_of(&graph.op(o).kind),
+            });
+            emit(o, s, f, &mut mem_events, &mut dma_bytes);
+        }
+
+        // --- suffix: list scheduling from the recorded entry state -------
+        let mut sf = self.stream_free[prefix_len];
+        for &op_id in &order[prefix_len..] {
+            let op = graph.op(op_id);
+            let stream = stream_of(&op.kind);
+            let dur = duration_us(&op.kind, graph, hw);
+            let mut dep_ready =
+                graph.preds(op_id).iter().map(|&p| finish[p]).fold(0.0f64, f64::max);
+            for &(o, d) in extra_deps {
+                if o == op_id {
+                    dep_ready = dep_ready.max(finish[d]);
+                }
+            }
+            let s = dep_ready.max(sf[stream_idx(stream)]);
+            let f = s + dur;
+            start[op_id] = s;
+            finish[op_id] = f;
+            sf[stream_idx(stream)] = f;
+            intervals.push(Interval { op: op_id, start_us: s, finish_us: f, stream });
+            emit(op_id, s, f, &mut mem_events, &mut dma_bytes);
+        }
+
+        // --- refcount frees (mirrors `simulate`) -------------------------
+        for t in &graph.tensors {
+            if t.alias_of.is_some() && t.home == Tier::Device {
+                continue;
+            }
+            let Some(last) = last_use[t.id] else { continue };
+            let has_device_copy = t.home == Tier::Device
+                || graph
+                    .ops
+                    .iter()
+                    .any(|o| matches!(o.kind, OpKind::Prefetch { tensor } if tensor == t.id));
+            if !has_device_copy {
+                continue;
+            }
+            if let Some(cp) = last_cache_free_pos[t.id] {
+                if cp >= pos[last] {
+                    continue;
+                }
+            }
+            mem_events.push((finish[last], -(t.bytes as i64)));
+        }
+
+        // --- aggregates (mirrors `simulate`) -----------------------------
+        let makespan = finish.iter().copied().fold(0.0f64, f64::max);
+        let compute_busy: f64 = intervals
+            .iter()
+            .filter(|iv| iv.stream == Stream::Compute)
+            .map(|iv| iv.finish_us - iv.start_us)
+            .sum();
+        let recompute_busy: f64 = intervals
+            .iter()
+            .filter(|iv| iv.stream == Stream::Compute && graph.op(iv.op).recompute)
+            .map(|iv| iv.finish_us - iv.start_us)
+            .sum();
+        let dma_busy: f64 = intervals
+            .iter()
+            .filter(|iv| matches!(iv.stream, Stream::DmaIn | Stream::DmaOut))
+            .map(|iv| iv.finish_us - iv.start_us)
+            .sum();
+
+        let mut exposed = 0.0f64;
+        let mut prev_compute_finish = 0.0f64;
+        for &op_id in order {
+            let op = graph.op(op_id);
+            if stream_of(&op.kind) != Stream::Compute {
+                continue;
+            }
+            let gap_start = prev_compute_finish;
+            let s = start[op_id];
+            if s > gap_start {
+                let mut dma_ready = graph
+                    .preds(op_id)
+                    .iter()
+                    .filter(|&&p| {
+                        matches!(stream_of(&graph.op(p).kind), Stream::DmaIn | Stream::DmaOut)
+                    })
+                    .map(|&p| finish[p])
+                    .fold(0.0f64, f64::max);
+                for &(o, d) in extra_deps {
+                    if o == op_id
+                        && matches!(stream_of(&graph.op(d).kind), Stream::DmaIn | Stream::DmaOut)
+                    {
+                        dma_ready = dma_ready.max(finish[d]);
+                    }
+                }
+                exposed += (dma_ready.min(s) - gap_start).max(0.0);
+            }
+            prev_compute_finish = finish[op_id];
+        }
+        let overlapped = (dma_busy - exposed).max(0.0);
+
+        mem_events.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut cur: i64 = 0;
+        let mut peak: i64 = 0;
+        let mut residency = Vec::with_capacity(mem_events.len());
+        for (t, d) in mem_events {
+            cur += d;
+            peak = peak.max(cur);
+            residency.push((t, cur.max(0) as u64));
+        }
+
+        SimResult {
+            makespan_us: makespan,
+            compute_busy_us: compute_busy,
+            recompute_us: recompute_busy,
+            exposed_comm_us: exposed,
+            overlapped_comm_us: overlapped,
+            dma_busy_us: dma_busy,
+            dma_bytes,
+            peak_device_bytes: peak.max(0) as u64,
+            residency,
+            intervals,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn hw() -> HwConfig {
+        HwConfig::test_default()
+    }
+
+    fn assert_bit_identical(a: &SimResult, b: &SimResult) {
+        assert_eq!(a.makespan_us.to_bits(), b.makespan_us.to_bits());
+        assert_eq!(a.peak_device_bytes, b.peak_device_bytes);
+        assert_eq!(a.dma_bytes, b.dma_bytes);
+        assert_eq!(a.exposed_comm_us.to_bits(), b.exposed_comm_us.to_bits());
+        assert_eq!(a.dma_busy_us.to_bits(), b.dma_busy_us.to_bits());
+        assert_eq!(a.residency.len(), b.residency.len());
+        for (x, y) in a.residency.iter().zip(b.residency.iter()) {
+            assert_eq!(x.0.to_bits(), y.0.to_bits());
+            assert_eq!(x.1, y.1);
+        }
+    }
+
+    #[test]
+    fn resume_from_zero_matches_full_simulation() {
+        let (mut g, ws) = GraphBuilder::chain_with_remote_weights(6, 5e6, 0, 2000);
+        for (i, &w) in ws.iter().enumerate() {
+            let pf = g.add_op(format!("pf.{i}"), OpKind::Prefetch { tensor: w }, vec![w], vec![]);
+            g.add_control_dep(i, pf);
+        }
+        let order = g.topo_order().unwrap();
+        let trace = SimTrace::record(&g, &order, &hw());
+        let full = simulate(&g, &order, &hw());
+        assert_bit_identical(&trace.base, &full);
+        for cut in [0, 1, order.len() / 2, order.len()] {
+            let resumed = trace.resume(cut, &g, &order, &hw(), &[]);
+            assert_bit_identical(&resumed, &full);
+        }
+    }
+
+    #[test]
+    fn resume_with_extra_dep_matches_mutated_graph() {
+        let (mut g, ws) = GraphBuilder::chain_with_remote_weights(4, 5e6, 0, 2000);
+        let mut pfs = Vec::new();
+        for (i, &w) in ws.iter().enumerate() {
+            let pf = g.add_op(format!("pf.{i}"), OpKind::Prefetch { tensor: w }, vec![w], vec![]);
+            g.add_control_dep(i, pf);
+            pfs.push(pf);
+        }
+        let order = g.topo_order().unwrap();
+        let trace = SimTrace::record(&g, &order, &hw());
+        // Probe "pf.3 also waits on compute op 1" without mutating g.
+        let (pf3, anchor) = (pfs[3], 1usize);
+        let mut pos = vec![0usize; g.ops.len()];
+        for (i, &o) in order.iter().enumerate() {
+            pos[o] = i;
+        }
+        // Move pf3 just after the anchor so the probed order stays valid.
+        let mut cand: Vec<OpId> = order.clone();
+        cand.retain(|&o| o != pf3);
+        let a_idx = cand.iter().position(|&o| o == anchor).unwrap();
+        cand.insert(a_idx + 1, pf3);
+        let cut = pos[pf3].min(a_idx + 1);
+        let probed = trace.resume(cut, &g, &cand, &hw(), &[(pf3, anchor)]);
+        let mut gm = g.clone();
+        gm.add_control_dep(pf3, anchor);
+        assert!(gm.is_valid_order(&cand));
+        let full = simulate(&gm, &cand, &hw());
+        assert_bit_identical(&probed, &full);
+    }
+}

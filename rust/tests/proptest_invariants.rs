@@ -35,18 +35,25 @@
 //!     chunked Store/Prefetch round trips never raise peak residency
 //!     above the unsplit schedule (while moving the same bytes within the
 //!     same budget).
+//!  P13 Incremental analyses are exact: after arbitrary journalled
+//!     mutation sequences the `AnalysisCache`'s delta-patched topological
+//!     order and lifetime table are bit-identical to a fresh
+//!     recomputation, and `SimTrace::resume` at any cut (with or without
+//!     speculative extra deps) reproduces the full simulation bit for
+//!     bit — schedule times, peak bytes, makespan.
 
 use hyperoffload::graph::{Graph, GraphBuilder, OpKind, Tier};
 use hyperoffload::kvcache::{KvCacheManager, KvPolicy, NsaConfig};
 use hyperoffload::memory::DeviceAllocator;
 use hyperoffload::passes::{
-    refine, CompileError, Compiler, ExecOrderConfig, OffloadPolicy, SloThrottle,
+    refine, AnalysisCache, CompileError, Compiler, ExecOrderConfig, LifetimeAnalysis,
+    OffloadPolicy, SloThrottle,
 };
 use hyperoffload::serving::{
     ClusterConfig, EngineConfig, ModelCost, Request, RoutePolicy, Router, SimCluster,
     SimServingEngine, WorkloadConfig,
 };
-use hyperoffload::sim::{simulate, HwConfig, GB};
+use hyperoffload::sim::{simulate, HwConfig, SimTrace, GB};
 use hyperoffload::util::rng::Rng;
 
 const CASES: u64 = 60;
@@ -568,6 +575,163 @@ fn p12_compiled_serving_conserves_bytes_and_chunking_bounds_peak() {
                 "seed {seed}: committed chunking must cut byte·time"
             );
         }
+    }
+}
+
+#[test]
+fn p13_incremental_analyses_bit_identical_to_full_recomputation() {
+    // (a) Random journalled mutation sequences: after every mutation the
+    // AnalysisCache (delta-patching where local, falling back where not)
+    // must agree bit for bit with a fresh topo_order_detailed() and a
+    // fresh LifetimeAnalysis::run.
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed + 14_000);
+        let mut g = random_graph(&mut rng);
+        let mut cache = AnalysisCache::new();
+        // Warm the cache so later queries exercise the delta paths.
+        cache.topo_order(&g).unwrap();
+        cache.lifetimes(&g).unwrap();
+        for step in 0..12 {
+            let order = g.topo_order_detailed().unwrap();
+            match rng.usize(0, 5) {
+                0 => {
+                    // Append a compute op reading random existing tensors.
+                    let out = g.add_tensor(
+                        format!("p13.t{}", g.tensors.len()),
+                        1 << 20,
+                        Tier::Device,
+                    );
+                    let mut inputs = Vec::new();
+                    for _ in 0..rng.usize(0, 3) {
+                        inputs.push(rng.usize(0, out));
+                    }
+                    inputs.sort_unstable();
+                    inputs.dedup();
+                    g.add_op(
+                        format!("p13.op{}", g.ops.len()),
+                        OpKind::Compute { flops: 1e9, bytes_accessed: 0 },
+                        inputs,
+                        vec![out],
+                    );
+                }
+                1 => {
+                    // Forward control dep between two already-ordered ops.
+                    let i = rng.usize(0, order.len() - 1);
+                    let j = rng.usize(i + 1, order.len());
+                    g.add_control_dep(order[j], order[i]);
+                }
+                2 => {
+                    // New data edge whose producer precedes the consumer.
+                    let j = rng.usize(1, order.len());
+                    let i = rng.usize(0, j);
+                    if let Some(&t) = g.op(order[i]).outputs.first() {
+                        g.add_input(order[j], t);
+                    }
+                }
+                3 => {
+                    // Non-local rewire: replace an input with a fresh
+                    // producerless tensor (forces the full-recompute
+                    // fallback — the differential must still hold).
+                    let with_inputs: Vec<usize> = g
+                        .ops
+                        .iter()
+                        .filter(|o| !o.inputs.is_empty())
+                        .map(|o| o.id)
+                        .collect();
+                    if !with_inputs.is_empty() {
+                        let op = *rng.choose(&with_inputs);
+                        let old = *rng.choose(&g.op(op).inputs.clone());
+                        let new = g.add_tensor(
+                            format!("p13.sub{}", g.tensors.len()),
+                            1 << 16,
+                            Tier::Device,
+                        );
+                        g.replace_input(op, old, new);
+                    }
+                }
+                _ => {
+                    // Metadata-only mutations.
+                    g.add_tensor(format!("p13.w{}", g.tensors.len()), 1 << 22, Tier::Remote);
+                }
+            }
+            let inc = cache.topo_order(&g).unwrap();
+            let full = g.topo_order_detailed().unwrap();
+            assert_eq!(*inc, full, "seed {seed} step {step}: topo diverged");
+            let inc_lt = cache.lifetimes(&g).unwrap();
+            let full_lt = LifetimeAnalysis::run(&g, &full);
+            assert_eq!(inc_lt.pos, full_lt.pos, "seed {seed} step {step}: pos diverged");
+            assert_eq!(
+                inc_lt.lifetimes.len(),
+                full_lt.lifetimes.len(),
+                "seed {seed} step {step}: lifetime table size"
+            );
+            for (t, a) in &full_lt.lifetimes {
+                let b = &inc_lt.lifetimes[t];
+                assert_eq!(a.def_pos, b.def_pos, "seed {seed} step {step} tensor {t}");
+                assert_eq!(a.use_pos, b.use_pos, "seed {seed} step {step} tensor {t}");
+                assert_eq!(
+                    a.max_idle_gap, b.max_idle_gap,
+                    "seed {seed} step {step} tensor {t}"
+                );
+                assert_eq!(
+                    a.idle_gap_start, b.idle_gap_start,
+                    "seed {seed} step {step} tensor {t}"
+                );
+            }
+        }
+        assert!(cache.hits() > 0, "seed {seed}: no query was served incrementally");
+    }
+
+    // (b) Windowed re-simulation: SimTrace::resume at any cut must equal
+    // the full simulation bit for bit, with and without a speculative
+    // extra dep landing in the suffix.
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed + 15_000);
+        let hw = hw(&mut rng);
+        let mut g = random_graph(&mut rng);
+        let report = Compiler::new(hw.clone())
+            .policy(OffloadPolicy { min_bytes: 1 << 18, ..Default::default() })
+            .compile(&mut g)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let order = report.order;
+        let trace = SimTrace::record(&g, &order, &hw);
+        let full = simulate(&g, &order, &hw);
+        let assert_same = |r: &hyperoffload::sim::SimResult,
+                           f: &hyperoffload::sim::SimResult,
+                           what: &str| {
+            assert_eq!(
+                r.makespan_us.to_bits(),
+                f.makespan_us.to_bits(),
+                "seed {seed} {what}: makespan"
+            );
+            assert_eq!(r.peak_device_bytes, f.peak_device_bytes, "seed {seed} {what}: peak");
+            assert_eq!(r.dma_bytes, f.dma_bytes, "seed {seed} {what}: dma bytes");
+            assert_eq!(
+                r.exposed_comm_us.to_bits(),
+                f.exposed_comm_us.to_bits(),
+                "seed {seed} {what}: exposed comm"
+            );
+            assert_eq!(r.residency.len(), f.residency.len(), "seed {seed} {what}: residency");
+            for (a, b) in r.residency.iter().zip(&f.residency) {
+                assert_eq!(a.0.to_bits(), b.0.to_bits(), "seed {seed} {what}: residency t");
+                assert_eq!(a.1, b.1, "seed {seed} {what}: residency bytes");
+            }
+        };
+        for cut in [0, order.len() / 3, order.len() / 2, order.len()] {
+            let r = trace.resume(cut, &g, &order, &hw, &[]);
+            assert_same(&r, &full, &format!("cut {cut}"));
+        }
+        // Speculative rewrite: one extra dep (o, d) with o in the suffix
+        // must match simulating the mutated graph in full.
+        let cut = rng.usize(1, order.len() - 1);
+        let j = rng.usize(cut, order.len());
+        let i = rng.usize(0, j);
+        let (o, d) = (order[j], order[i]);
+        let windowed = trace.resume(cut, &g, &order, &hw, &[(o, d)]);
+        let mut gm = g.clone();
+        gm.add_control_dep(o, d);
+        let fm = simulate(&gm, &order, &hw);
+        assert_same(&windowed, &fm, &format!("extra dep {d}->{o} cut {cut}"));
     }
 }
 
