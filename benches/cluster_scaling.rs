@@ -41,6 +41,10 @@ fn main() {
         gen_min: 16,
         gen_max: 96,
         seed: 42,
+        prefix_share_ratio: 0.0,
+        prefix_templates: 0,
+        prefix_tokens: 0,
+        prefix_block_tokens: 64,
     }
     .generate();
 
@@ -101,6 +105,7 @@ fn main() {
                 arrival_us: t0 + rng.f64_range(0.0, 50_000.0),
                 prompt_tokens: rng.usize(512, 8_192),
                 gen_tokens: if heavy { rng.usize(400, 800) } else { rng.usize(8, 64) },
+                block_hashes: vec![],
             });
         }
     }

@@ -71,6 +71,7 @@ fn main() {
             arrival_us: 0.0,
             prompt_tokens: 4096,
             gen_tokens,
+            block_hashes: vec![],
         })
         .collect();
 

@@ -29,6 +29,10 @@ fn main() {
         gen_min: 128,
         gen_max: 384,
         seed: 11,
+        prefix_share_ratio: 0.0,
+        prefix_templates: 0,
+        prefix_tokens: 0,
+        prefix_block_tokens: 64,
     }
     .generate();
 

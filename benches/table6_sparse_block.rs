@@ -25,6 +25,10 @@ fn main() {
         gen_min: 64,
         gen_max: 192,
         seed: 23,
+        prefix_share_ratio: 0.0,
+        prefix_templates: 0,
+        prefix_tokens: 0,
+        prefix_block_tokens: 64,
     }
     .generate();
 

@@ -16,10 +16,11 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
-use crate::memory::{DeviceAllocator, PoolHandle};
+use crate::memory::{DeviceAllocator, PoolHandle, SharedAcquire};
 use crate::sim::HwConfig;
 
 use super::nsa::NsaConfig;
+use super::prefix::{AcquireResult, PrefixIndex};
 
 /// Where KV blocks reside.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -35,6 +36,22 @@ pub enum KvPolicy {
 enum BlockHome {
     Device(crate::memory::AllocId),
     Remote,
+    /// Pool-resident block shared through the prefix index; the payload is
+    /// its chain hash. The sequence holds one reference in the pool's
+    /// shared ledger; the index holds another, so retiring the sequence
+    /// leaves the block cached for future admissions.
+    Shared(u64),
+    /// Pool-resident block shared copy-on-write between forked sequences
+    /// (manager-local refcount; one pool reservation backs all holders).
+    /// Writing it forks a private copy.
+    Cow(u64),
+}
+
+/// Refcount for one copy-on-write block (the reservation itself lives in
+/// the pool ledger and is counted in `remote_kv_bytes` exactly once).
+#[derive(Debug)]
+struct CowBlock {
+    refs: u64,
 }
 
 #[derive(Debug)]
@@ -71,6 +88,24 @@ pub struct StepCost {
 /// paper's §7.3.2: ~30 s of prefill degradation across 57 events.
 pub const DEFRAG_FIXED_US: f64 = 1_000_000.0;
 
+/// Result of a prefix-aware admission ([`KvCacheManager::admit_prefix`]).
+#[derive(Debug, Clone, Default)]
+pub struct PrefixAdmit {
+    /// Transfer/stall cost of materialising the sequence.
+    pub cost: StepCost,
+    /// Prompt blocks served from the shared prefix cache (not recomputed).
+    pub hit_blocks: usize,
+    /// Prompt tokens those blocks cover (prefill skips computing them).
+    pub hit_tokens: usize,
+    /// Pool bytes this admission deduplicated: attached to resident shared
+    /// blocks instead of reserving new capacity.
+    pub deduped_bytes: u64,
+    /// Shared-prefix bytes the device must fetch pool→device before the
+    /// suffix prefill can attend over them. 0 when the whole prompt hit —
+    /// then decode's working-set prefetches pull blocks on demand instead.
+    pub prefix_fetch_bytes: u64,
+}
+
 /// The KV-cache manager for one device.
 pub struct KvCacheManager {
     pub policy: KvPolicy,
@@ -85,8 +120,17 @@ pub struct KvCacheManager {
     /// SuperNode pool (the cluster setup) — then every `FullOffload`
     /// block placed here competes with sibling devices for capacity.
     pool: PoolHandle,
+    /// Prefix index consulted by [`admit_prefix`](Self::admit_prefix);
+    /// cluster-wide when the handle is shared across managers.
+    index: Option<PrefixIndex>,
+    /// Copy-on-write blocks shared between forked sequences.
+    cow: HashMap<u64, CowBlock>,
+    next_cow: u64,
+    /// CoW blocks forked into private copies on divergence (writes).
+    pub cow_forks: u64,
     seqs: HashMap<u64, Sequence>,
-    /// Remote-pool bytes used by *this device's* KV.
+    /// Remote-pool bytes *privately* reserved by this device's KV (shared
+    /// prefix blocks are accounted once, in the pool's shared ledger).
     pub remote_kv_bytes: u64,
     /// Peak device bytes used by KV (blocks + working set).
     pub peak_device_kv: u64,
@@ -118,6 +162,22 @@ impl KvCacheManager {
         device_kv_budget: u64,
         pool: PoolHandle,
     ) -> Self {
+        Self::with_pool_and_index(policy, nsa, kv_bytes_per_token, device_kv_budget, pool, None)
+    }
+
+    /// A manager that additionally consults `index` on admission
+    /// ([`Self::admit_prefix`]): prompt blocks whose chain hashes are
+    /// resident attach to the existing pool reservation instead of being
+    /// recomputed. Share the index handle across managers (the cluster
+    /// setup) and a prefix prefilled by one device is a pool hit for all.
+    pub fn with_pool_and_index(
+        policy: KvPolicy,
+        nsa: NsaConfig,
+        kv_bytes_per_token: u64,
+        device_kv_budget: u64,
+        pool: PoolHandle,
+        index: Option<PrefixIndex>,
+    ) -> Self {
         debug_assert!(
             pool.chunk_bytes() <= 1
                 || nsa.block_bytes(kv_bytes_per_token) % pool.chunk_bytes() == 0,
@@ -130,6 +190,10 @@ impl KvCacheManager {
             allocator: DeviceAllocator::new(device_kv_budget),
             working_set_bytes: device_kv_budget / 8,
             pool,
+            index,
+            cow: HashMap::new(),
+            next_cow: 1,
+            cow_forks: 0,
             seqs: HashMap::new(),
             remote_kv_bytes: 0,
             peak_device_kv: 0,
@@ -140,6 +204,11 @@ impl KvCacheManager {
     /// The remote pool this manager reserves offloaded KV from.
     pub fn pool(&self) -> &PoolHandle {
         &self.pool
+    }
+
+    /// The prefix index consulted on admission, if configured.
+    pub fn prefix_index(&self) -> Option<&PrefixIndex> {
+        self.index.as_ref()
     }
 
     /// Device KV bytes still allocatable (baseline headroom signal for
@@ -169,39 +238,89 @@ impl KvCacheManager {
 
     /// Admit a sequence after prefill: allocate blocks for `prompt_tokens`.
     /// Returns the step cost of materialising them (alloc stalls, transfer
-    /// volume for offloaded prefill writeback).
+    /// volume for offloaded prefill writeback). Equivalent to
+    /// [`admit_prefix`](Self::admit_prefix) with no hashes (the cold path).
     pub fn admit(&mut self, seq_id: u64, prompt_tokens: usize, hw: &HwConfig) -> Result<StepCost> {
+        self.admit_prefix(seq_id, prompt_tokens, &[], hw).map(|a| a.cost)
+    }
+
+    /// Admit a sequence whose leading full blocks carry chain hashes
+    /// (`block_hashes[i]` commits to blocks `0..=i` of the prompt),
+    /// consulting the prefix index: resident blocks attach to the shared
+    /// pool reservation and are *not* recomputed by prefill; cold hashed
+    /// blocks are inserted so the next request sharing the prefix hits;
+    /// the unhashed suffix is privately reserved as before.
+    pub fn admit_prefix(
+        &mut self,
+        seq_id: u64,
+        prompt_tokens: usize,
+        block_hashes: &[u64],
+        hw: &HwConfig,
+    ) -> Result<PrefixAdmit> {
         if self.seqs.contains_key(&seq_id) {
             bail!("sequence {seq_id} already admitted");
         }
         let nblocks = self.nsa.blocks_for(prompt_tokens.max(1));
-        let mut cost = StepCost::default();
+        let block_bytes = self.block_bytes();
+        let mut admit = PrefixAdmit::default();
         let mut blocks = Vec::with_capacity(nblocks);
         let mut prompt_alloc = None;
         match self.policy {
             KvPolicy::AllDevice => {
-                // One contiguous variable-size region for the prompt KV.
-                let bytes = nblocks as u64 * self.block_bytes();
+                // Sharing needs the pool tier; the device baseline ignores
+                // hashes and allocates one contiguous variable-size region
+                // for the prompt KV.
+                let bytes = nblocks as u64 * block_bytes;
                 let before = self.allocator.defrag_events;
                 let (id, moved) = self.allocator.alloc(bytes)?;
                 if moved > 0 {
-                    cost.defrag_us += 2.0 * moved as f64 / (hw.hbm_gbps * 1e9) * 1e6
-                        + DEFRAG_FIXED_US;
+                    admit.cost.defrag_us +=
+                        2.0 * moved as f64 / (hw.hbm_gbps * 1e9) * 1e6 + DEFRAG_FIXED_US;
                 }
-                cost.defrag_events += self.allocator.defrag_events - before;
+                admit.cost.defrag_events += self.allocator.defrag_events - before;
                 prompt_alloc = Some(id);
             }
             KvPolicy::FullOffload => {
-                // Reserve the whole prompt's KV from the (possibly shared)
-                // pool atomically, so a mid-admit failure leaks nothing.
-                let bytes = nblocks as u64 * self.block_bytes();
-                if !self.pool.try_reserve(bytes) {
-                    bail!("remote pool exhausted: {bytes} B for {nblocks} prefill blocks");
+                // Only *full* blocks can be shared: a partial tail block's
+                // hash would cover tokens that are not there.
+                let full_blocks = prompt_tokens / self.nsa.block_tokens;
+                let usable = block_hashes.len().min(full_blocks);
+                let acq = match (&self.index, usable) {
+                    (Some(idx), 1..) => {
+                        idx.acquire(&block_hashes[..usable], block_bytes, &self.pool)
+                    }
+                    _ => AcquireResult::default(),
+                };
+                let shared_n = acq.acquired.len();
+                let private = (nblocks - shared_n) as u64 * block_bytes;
+                // Reserve the suffix atomically, so a mid-admit failure
+                // leaks nothing (the acquired prefix unwinds via abort).
+                if private > 0 && !self.try_reserve_evicting(private) {
+                    if let Some(idx) = &self.index {
+                        idx.abort(&acq.acquired, &acq.inserted, &self.pool);
+                    }
+                    bail!(
+                        "remote pool exhausted: {private} B for {} prefill blocks",
+                        nblocks - shared_n
+                    );
                 }
-                self.remote_kv_bytes += bytes;
+                self.remote_kv_bytes += private;
+                for &h in &acq.acquired {
+                    blocks.push(BlockHome::Shared(h));
+                }
                 blocks.resize(nblocks, BlockHome::Remote);
-                // Prefill KV streams to the pool as it is produced.
-                cost.d2r_bytes += bytes;
+                // Hit blocks are not recomputed; everything else — cold
+                // shared blocks included, this prefill produces them —
+                // streams to the pool as it is written back.
+                admit.hit_blocks = acq.hit_blocks;
+                admit.hit_tokens = acq.hit_blocks * self.nsa.block_tokens;
+                admit.deduped_bytes = acq.deduped_bytes;
+                admit.cost.d2r_bytes += (nblocks - acq.hit_blocks) as u64 * block_bytes;
+                if admit.hit_tokens < prompt_tokens && acq.hit_blocks > 0 {
+                    // The suffix prefill attends over the shared prefix,
+                    // so the hit blocks transfer pool→device first.
+                    admit.prefix_fetch_bytes = acq.hit_blocks as u64 * block_bytes;
+                }
             }
         }
         self.seqs.insert(
@@ -215,7 +334,60 @@ impl KvCacheManager {
             },
         );
         self.note_peak();
-        Ok(cost)
+        Ok(admit)
+    }
+
+    /// Fork `child` from `parent` (multi-turn divergence): the child
+    /// shares every parent block copy-on-write. Shared-prefix blocks gain
+    /// a pool reference; private blocks convert to refcounted CoW entries
+    /// backed by the parent's single reservation (no new pool bytes).
+    /// Writing a CoW tail later forks a private copy
+    /// ([`Self::decode_step`]). `FullOffload` only.
+    pub fn fork(&mut self, parent: u64, child: u64) -> Result<()> {
+        if self.policy != KvPolicy::FullOffload {
+            bail!("fork requires the FullOffload policy");
+        }
+        if self.seqs.contains_key(&child) {
+            bail!("sequence {child} already admitted");
+        }
+        let block_bytes = self.block_bytes();
+        let (tokens, capacity_blocks, parent_blocks) = {
+            let Some(p) = self.seqs.get(&parent) else { bail!("unknown sequence {parent}") };
+            (p.tokens, p.capacity_blocks, p.blocks.clone())
+        };
+        if parent_blocks.iter().any(|b| matches!(b, BlockHome::Device(_))) {
+            bail!("cannot fork device-resident blocks");
+        }
+        // Every conversion below is infallible (attach / refcount only, no
+        // new capacity), so the walk cannot fail half-way.
+        let mut blocks = Vec::with_capacity(parent_blocks.len());
+        for (i, b) in parent_blocks.iter().enumerate() {
+            match *b {
+                BlockHome::Shared(h) => {
+                    let r = self.pool.shared_acquire(h, block_bytes);
+                    debug_assert_eq!(r, SharedAcquire::Attached);
+                    blocks.push(BlockHome::Shared(h));
+                }
+                BlockHome::Remote => {
+                    let id = self.next_cow;
+                    self.next_cow += 1;
+                    self.cow.insert(id, CowBlock { refs: 2 });
+                    self.seqs.get_mut(&parent).unwrap().blocks[i] = BlockHome::Cow(id);
+                    blocks.push(BlockHome::Cow(id));
+                }
+                BlockHome::Cow(id) => {
+                    self.cow.get_mut(&id).expect("live CoW entry").refs += 1;
+                    blocks.push(BlockHome::Cow(id));
+                }
+                BlockHome::Device(_) => unreachable!("checked above"),
+            }
+        }
+        self.seqs.insert(
+            child,
+            Sequence { tokens, blocks, prompt_alloc: None, capacity_blocks, cached: Vec::new() },
+        );
+        self.note_peak();
+        Ok(())
     }
 
     /// One decode step for `seq_id`: appends a token, prefetches the NSA
@@ -253,8 +425,38 @@ impl KvCacheManager {
                 let new_blocks =
                     touched.iter().filter(|b| !seq.cached.contains(b)).count() as u64;
                 seq.cached = touched.clone();
+                let tail = *seq.blocks.last().expect("offloaded sequences always have blocks");
                 cost.r2d_bytes += new_blocks * block_bytes;
-                // Persist the updated tail block.
+                // Persist the updated tail block — copy-on-write: a tail
+                // still shared with a forked sibling forks a private copy
+                // before the write lands.
+                match tail {
+                    BlockHome::Cow(id) => {
+                        let refs = self.cow.get(&id).expect("live CoW entry").refs;
+                        if refs > 1 {
+                            if !self.try_reserve_evicting(block_bytes) {
+                                bail!("remote pool exhausted: {block_bytes} B for a CoW fork");
+                            }
+                            self.cow.get_mut(&id).unwrap().refs -= 1;
+                            self.remote_kv_bytes += block_bytes;
+                            self.cow_forks += 1;
+                        } else {
+                            // Last holder: collapse in place, the entry's
+                            // reservation simply becomes private again.
+                            self.cow.remove(&id);
+                        }
+                        *self.seqs.get_mut(&seq_id).unwrap().blocks.last_mut().unwrap() =
+                            BlockHome::Remote;
+                    }
+                    BlockHome::Remote => {}
+                    // A shared (immutable, full) block is never the tail of
+                    // a decoding sequence: admission leaves the partial
+                    // suffix private, and a fully-shared prompt grows a
+                    // private block on its first decode step.
+                    BlockHome::Shared(_) | BlockHome::Device(_) => {
+                        debug_assert!(false, "decode tail must be private");
+                    }
+                }
                 cost.d2r_bytes += block_bytes;
                 // Host-side sparse processing over every touched block
                 // (partial KV updates, gather/scatter) — the term that
@@ -268,7 +470,15 @@ impl KvCacheManager {
         Ok(cost)
     }
 
-    /// Retire a finished sequence, freeing its blocks.
+    /// Retire a finished (or preempted) sequence, freeing its blocks.
+    ///
+    /// Only *private* bytes return to the pool: a shared-prefix block just
+    /// drops this sequence's reference — the index's own reference keeps
+    /// it cached for future admissions — and a CoW block frees only when
+    /// its last holder goes. This is what makes preemption/requeue safe on
+    /// shared prefixes: the preempted sequence cannot double-free a block
+    /// a sibling still reads, and its re-admission goes back through the
+    /// index instead of re-prefilling.
     pub fn retire(&mut self, seq_id: u64) -> Result<()> {
         let Some(seq) = self.seqs.remove(&seq_id) else {
             bail!("unknown sequence {seq_id}");
@@ -282,6 +492,18 @@ impl KvCacheManager {
                 BlockHome::Remote => {
                     self.pool.release(self.block_bytes());
                     self.remote_kv_bytes -= self.block_bytes();
+                }
+                BlockHome::Shared(h) => {
+                    self.pool.shared_release(h);
+                }
+                BlockHome::Cow(id) => {
+                    let e = self.cow.get_mut(&id).expect("live CoW entry");
+                    e.refs -= 1;
+                    if e.refs == 0 {
+                        self.cow.remove(&id);
+                        self.pool.release(self.block_bytes());
+                        self.remote_kv_bytes -= self.block_bytes();
+                    }
                 }
             }
         }
@@ -332,13 +554,25 @@ impl KvCacheManager {
             }
             KvPolicy::FullOffload => {
                 let bytes = self.block_bytes();
-                if !self.pool.try_reserve(bytes) {
+                if !self.try_reserve_evicting(bytes) {
                     bail!("remote pool exhausted: {bytes} B for one KV block");
                 }
                 self.remote_kv_bytes += bytes;
                 Ok(BlockHome::Remote)
             }
         }
+    }
+
+    /// Reserve private pool bytes, evicting cold prefix-index entries once
+    /// under pressure (live shared blocks are refcount-protected and never
+    /// evicted from under a reader).
+    fn try_reserve_evicting(&self, bytes: u64) -> bool {
+        if self.pool.try_reserve(bytes) {
+            return true;
+        }
+        let Some(idx) = &self.index else { return false };
+        idx.evict(&self.pool, bytes);
+        self.pool.try_reserve(bytes)
     }
 
     fn note_peak(&mut self) {
@@ -474,6 +708,165 @@ mod tests {
         a.retire(1).unwrap();
         assert_eq!(pool.used(), block);
         assert_eq!(a.remote_kv_bytes, 0);
+    }
+
+    #[test]
+    fn prefix_admission_dedups_across_managers() {
+        use crate::kvcache::prefix::{chain_hash, PrefixIndex};
+        let block = 64 * 64 * 1024u64; // 64 tok x 64 KiB
+        let pool = PoolHandle::new_chunked(64 * block, block);
+        let idx = PrefixIndex::new();
+        let mk = || {
+            KvCacheManager::with_pool_and_index(
+                KvPolicy::FullOffload,
+                NsaConfig::default(),
+                64 * 1024,
+                GB,
+                pool.clone(),
+                Some(idx.clone()),
+            )
+        };
+        let mut a = mk();
+        let mut b = mk();
+        // 3 hashed full blocks + a partial private tail: 250 tokens.
+        let mut hashes = Vec::new();
+        let mut h = 42;
+        for i in 0..3u64 {
+            h = chain_hash(h, i);
+            hashes.push(h);
+        }
+        let cold = a.admit_prefix(1, 250, &hashes, &hw()).unwrap();
+        assert_eq!(cold.hit_blocks, 0);
+        assert_eq!(cold.deduped_bytes, 0);
+        assert_eq!(cold.cost.d2r_bytes, 4 * block, "all 4 blocks computed+written");
+        assert_eq!(pool.used(), 4 * block);
+        assert_eq!(a.remote_kv_bytes, block, "only the tail is private");
+
+        // Replica B admits the same template: 3-block hit, 1 private tail.
+        let warm = b.admit_prefix(2, 250, &hashes, &hw()).unwrap();
+        assert_eq!(warm.hit_blocks, 3);
+        assert_eq!(warm.hit_tokens, 192);
+        assert_eq!(warm.deduped_bytes, 3 * block);
+        assert_eq!(warm.cost.d2r_bytes, block, "only the suffix is computed");
+        assert_eq!(warm.prefix_fetch_bytes, 3 * block);
+        assert_eq!(pool.used(), 5 * block, "shared bytes counted once");
+
+        // Retiring both leaves the cached prefix resident, index-owned.
+        a.retire(1).unwrap();
+        b.retire(2).unwrap();
+        assert_eq!(a.remote_kv_bytes + b.remote_kv_bytes, 0);
+        assert_eq!(pool.used(), 3 * block);
+        assert_eq!(idx.resident_bytes(), 3 * block);
+        assert_eq!(idx.evict(&pool, u64::MAX), 3 * block);
+        assert_eq!(pool.used(), 0);
+    }
+
+    #[test]
+    fn preempted_sequence_releases_only_private_blocks_and_readmits() {
+        use crate::kvcache::prefix::{chain_hash, PrefixIndex};
+        let block = 64 * 64 * 1024u64;
+        let pool = PoolHandle::new_chunked(64 * block, block);
+        let idx = PrefixIndex::new();
+        let mut m = KvCacheManager::with_pool_and_index(
+            KvPolicy::FullOffload,
+            NsaConfig::default(),
+            64 * 1024,
+            GB,
+            pool.clone(),
+            Some(idx.clone()),
+        );
+        let hashes: Vec<u64> = {
+            let mut v = Vec::new();
+            let mut h = 7;
+            for i in 0..2u64 {
+                h = chain_hash(h, i);
+                v.push(h);
+            }
+            v
+        };
+        m.admit_prefix(1, 200, &hashes, &hw()).unwrap(); // 2 shared + 2 private
+        m.admit_prefix(2, 200, &hashes, &hw()).unwrap(); // attaches to both
+        let used = pool.used();
+        assert_eq!(used, 6 * block);
+        // Preempt seq 1 (vLLM recompute-style: retire, requeue later).
+        m.retire(1).unwrap();
+        assert_eq!(pool.used(), used - 2 * block, "only private blocks freed");
+        for &h in &hashes {
+            assert_eq!(pool.shared_refs(h), 2, "seq 2 + index still hold refs");
+        }
+        // Re-admission goes through the index: full prefix hit, no
+        // double-reservation, no re-prefill of the shared blocks.
+        let re = m.admit_prefix(1, 200, &hashes, &hw()).unwrap();
+        assert_eq!(re.hit_blocks, 2);
+        assert_eq!(pool.used(), used);
+        assert_eq!(re.cost.d2r_bytes, 2 * block, "only the private suffix recomputes");
+        m.retire(1).unwrap();
+        m.retire(2).unwrap();
+        assert_eq!(pool.used(), idx.resident_bytes());
+    }
+
+    #[test]
+    fn cow_fork_diverges_on_write() {
+        let block = 64 * 64 * 1024u64;
+        let pool = PoolHandle::new_chunked(64 * block, block);
+        let mut m = KvCacheManager::with_pool(
+            KvPolicy::FullOffload,
+            NsaConfig::default(),
+            64 * 1024,
+            GB,
+            pool.clone(),
+        );
+        // 100 tokens = 2 blocks, tail block half-full (no growth on the
+        // next decode step, so the CoW tail is written in place).
+        m.admit(1, 100, &hw()).unwrap();
+        assert_eq!(pool.used(), 2 * block);
+        m.fork(1, 2).unwrap();
+        assert_eq!(pool.used(), 2 * block, "fork reserves nothing");
+        assert_eq!(m.seq_tokens(2), Some(100));
+        // Parent writes its tail: still shared with the child -> private
+        // copy forked, one new block reserved.
+        m.decode_step(1, &hw()).unwrap();
+        assert_eq!(pool.used(), 3 * block);
+        assert_eq!(m.cow_forks, 1);
+        // Child writes its tail: it is the last holder now -> collapses in
+        // place, no new bytes.
+        m.decode_step(2, &hw()).unwrap();
+        assert_eq!(pool.used(), 3 * block);
+        assert_eq!(m.cow_forks, 1);
+        m.retire(1).unwrap();
+        m.retire(2).unwrap();
+        assert_eq!(pool.used(), 0);
+        assert_eq!(m.remote_kv_bytes, 0);
+    }
+
+    #[test]
+    fn admission_under_pressure_evicts_cold_prefixes() {
+        use crate::kvcache::prefix::{chain_hash, PrefixIndex};
+        let block = 64 * 64 * 1024u64;
+        let pool = PoolHandle::new_chunked(4 * block, block);
+        let idx = PrefixIndex::new();
+        let mut m = KvCacheManager::with_pool_and_index(
+            KvPolicy::FullOffload,
+            NsaConfig::default(),
+            64 * 1024,
+            GB,
+            pool.clone(),
+            Some(idx.clone()),
+        );
+        let mut hashes = Vec::new();
+        let mut h = 9;
+        for i in 0..2u64 {
+            h = chain_hash(h, i);
+            hashes.push(h);
+        }
+        m.admit_prefix(1, 128, &hashes, &hw()).unwrap(); // 2 shared blocks
+        m.retire(1).unwrap(); // cached, cold
+        assert_eq!(pool.used(), 2 * block);
+        // A private 4-block admission needs the whole pool: the cold
+        // cached prefix is evicted to make room.
+        m.admit(2, 256, &hw()).unwrap();
+        assert_eq!(pool.used(), 4 * block);
+        assert!(idx.is_empty(), "cold entries evicted under pressure");
     }
 
     #[test]

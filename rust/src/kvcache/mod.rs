@@ -1,9 +1,59 @@
 //! KV-cache substrate: paged blocks, residency policies (device vs remote
-//! pool), NSA sparse-attention block selection, and per-step transfer/CPU
-//! cost accounting. Consumed by [`crate::serving`] (Tables 3–6, §7.4).
+//! pool), NSA sparse-attention block selection, per-step transfer/CPU cost
+//! accounting — and cluster-wide prefix sharing with copy-on-write blocks.
+//! Consumed by [`crate::serving`] (Tables 3–6, §7.4).
+//!
+//! # The block-sharing model
+//!
+//! Under [`KvPolicy::FullOffload`] every KV block's home is the SuperNode
+//! remote pool, which makes the pool a natural *cluster-wide prefix
+//! cache*: a prompt prefix prefilled by any device is pool-resident, so
+//! any other device can attach to it instead of recomputing prefill.
+//! Three pieces cooperate:
+//!
+//! * **[`PrefixIndex`]** — a radix tree over token-block *chain hashes*
+//!   (`hash_i` commits to block `i`'s tokens and `hash_{i-1}`, so one hash
+//!   identifies a whole prefix and the tree lives in a flat map with
+//!   parent links). The handle is cloneable; `serving/cluster.rs` shares
+//!   one across all replicas.
+//! * **Refcounted residency** — the pool's shared ledger
+//!   ([`crate::memory::PoolHandle::shared_acquire`]) counts each shared
+//!   block's bytes *once* no matter how many sequences (or replicas) read
+//!   it. The index holds one reference per resident entry; each live
+//!   sequence holds one per block it acquired. Eviction
+//!   ([`PrefixIndex::evict`]) only takes LRU *leaves* whose last reference
+//!   is the index's own — a block a sequence is still reading, or an
+//!   interior block of a longer resident prefix, cannot be evicted.
+//! * **Copy-on-write** — [`KvCacheManager::fork`] makes a child sequence
+//!   share every parent block for free; a shared tail that is *written*
+//!   (the per-step persist in [`KvCacheManager::decode_step`]) first forks
+//!   a private copy ([`KvCacheManager::cow_forks`] counts these).
+//!
+//! # Worked example
+//!
+//! Two requests share a 192-token system prompt (3 full 64-token blocks,
+//! hashes `h1..h3`), each with its own 58-token suffix (1 partial block):
+//!
+//! ```text
+//! admit_prefix(seq A, 250 tok, [h1,h2,h3]):   index: h1 -> h2 -> h3
+//!   cold: 3 shared blocks reserved + 1 private   pool: 4 blocks
+//!   prefill computes all 250 tokens              (A refs h1..h3)
+//! admit_prefix(seq B, 250 tok, [h1,h2,h3]):
+//!   hit_blocks = 3, deduped = 3 blocks           pool: 5 blocks (not 8)
+//!   prefill computes only B's 58-token suffix;
+//!   prefix_fetch_bytes = 3 blocks (pool -> device, compiled Prefetch)
+//! retire(A); retire(B):
+//!   private tails freed                          pool: 3 blocks
+//!   h1..h3 stay cached (index refs) until evicted under pressure
+//! ```
+//!
+//! The serving layer surfaces this as `ServingReport::prefix_hit_blocks`,
+//! `prefill_flops_saved` and `pool_bytes_deduped`.
 
 mod manager;
 pub mod nsa;
+pub mod prefix;
 
-pub use manager::{KvCacheManager, KvPolicy, StepCost};
+pub use manager::{KvCacheManager, KvPolicy, PrefixAdmit, StepCost};
 pub use nsa::NsaConfig;
+pub use prefix::{AcquireResult, PrefixIndex};

@@ -1,0 +1,359 @@
+//! Radix-tree prefix index over token-block hashes (the cluster-wide
+//! prefix cache of the serving tier).
+//!
+//! Every *full* KV block of a prompt gets a chain hash: `hash_i` commits to
+//! the block's tokens *and* `hash_{i-1}`, so a hash identifies an entire
+//! prefix, not just one block — the chain hash *is* the radix path, which
+//! lets the tree live in a flat map keyed by hash with parent links and
+//! child counts instead of explicit edges.
+//!
+//! Refcounting is delegated to the pool's shared ledger
+//! ([`PoolHandle::shared_acquire`]): the index holds exactly one reference
+//! per resident node (taken when the node is inserted, dropped when it is
+//! evicted), and every live sequence holds one reference per block it
+//! acquired. A node is evictable only when it is a leaf (no children — so
+//! resident prefixes stay chain-contiguous) *and* the index holds the last
+//! reference (`shared_refs == 1` — no live sequence is reading it).
+//! Eviction is LRU over evictable leaves.
+//!
+//! The handle is cheaply cloneable; all clones share one tree, which is how
+//! `serving/cluster.rs` makes the index cluster-wide: a prefix prefilled on
+//! replica A is resident in the shared pool, so replica B's admission
+//! attaches to it and fetches the blocks instead of recomputing prefill.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::memory::{PoolHandle, SharedAcquire};
+
+/// Cluster-wide prefix index handle. Clones share one tree.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixIndex {
+    state: Arc<Mutex<IndexState>>,
+}
+
+#[derive(Debug, Default)]
+struct IndexState {
+    nodes: HashMap<u64, Node>,
+    /// Logical clock for LRU ordering (bumped on every acquire walk).
+    clock: u64,
+    hits: u64,
+    misses: u64,
+    evicted: u64,
+}
+
+#[derive(Debug)]
+struct Node {
+    parent: Option<u64>,
+    /// Resident children (edges out of this node). Non-zero blocks
+    /// eviction, which keeps resident prefixes chain-contiguous.
+    children: u32,
+    bytes: u64,
+    last_use: u64,
+}
+
+/// Outcome of one [`PrefixIndex::acquire`] walk.
+#[derive(Debug, Clone, Default)]
+pub struct AcquireResult {
+    /// Chain hashes the caller now holds one pool reference each for, in
+    /// chain order. Always a prefix of the requested chain; the first
+    /// [`hit_blocks`](Self::hit_blocks) of them were already resident.
+    pub acquired: Vec<u64>,
+    /// Hashes *inserted* by this walk (the cold tail of `acquired`). The
+    /// caller computes these blocks; pass them to [`PrefixIndex::abort`]
+    /// if the admission is rolled back before they are produced.
+    pub inserted: Vec<u64>,
+    /// Leading blocks that were already resident (dedup hits).
+    pub hit_blocks: usize,
+    /// Pool bytes the hits deduplicated (attached without reserving).
+    pub deduped_bytes: u64,
+}
+
+impl PrefixIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Walk `hashes` (a chain, root first), acquiring one pool reference
+    /// per block for the calling sequence.
+    ///
+    /// Resident blocks attach (a dedup hit: no new pool bytes); absent
+    /// blocks are reserved and inserted, to be computed by the caller's
+    /// prefill and written back. If the pool cannot hold a new block the
+    /// index evicts cold leaves and retries once; if it is still full the
+    /// walk stops there — acquiring a *partial* prefix is fine, the caller
+    /// just computes more of the prompt itself.
+    pub fn acquire(&self, hashes: &[u64], block_bytes: u64, pool: &PoolHandle) -> AcquireResult {
+        let mut s = self.state.lock().unwrap();
+        s.clock += 1;
+        let now = s.clock;
+        let mut out = AcquireResult::default();
+        let mut parent: Option<u64> = None;
+        for &h in hashes {
+            if let Some(node) = s.nodes.get_mut(&h) {
+                node.last_use = now;
+                let r = pool.shared_acquire(h, block_bytes);
+                debug_assert_eq!(r, SharedAcquire::Attached, "resident node must hold a pool ref");
+                out.hit_blocks += 1;
+                out.deduped_bytes += node.bytes;
+                out.acquired.push(h);
+            } else {
+                // Cold: reserve the sequence's reference, evicting once on
+                // pressure, then attach the index's own reference.
+                let mut r = pool.shared_acquire(h, block_bytes);
+                if r == SharedAcquire::Exhausted {
+                    Self::evict_locked(&mut s, pool, block_bytes);
+                    r = pool.shared_acquire(h, block_bytes);
+                }
+                match r {
+                    SharedAcquire::Reserved => {}
+                    SharedAcquire::Exhausted => break,
+                    SharedAcquire::Attached => {
+                        // Resident in the pool but unknown to the index
+                        // (another clone raced us between map lookup and
+                        // ledger call is impossible under one lock; this is
+                        // a caller passing duplicate hashes). Count as hit.
+                        out.hit_blocks += 1;
+                        out.deduped_bytes += block_bytes;
+                        out.acquired.push(h);
+                        parent = Some(h);
+                        continue;
+                    }
+                }
+                let index_ref = pool.shared_acquire(h, block_bytes);
+                debug_assert_eq!(index_ref, SharedAcquire::Attached);
+                let bytes = pool_quantized(pool, block_bytes);
+                s.nodes.insert(h, Node { parent, children: 0, bytes, last_use: now });
+                if let Some(p) = parent {
+                    if let Some(pn) = s.nodes.get_mut(&p) {
+                        pn.children += 1;
+                    }
+                }
+                out.inserted.push(h);
+                out.acquired.push(h);
+            }
+            parent = Some(h);
+        }
+        s.hits += out.hit_blocks as u64;
+        s.misses += (hashes.len() - out.hit_blocks) as u64;
+        out
+    }
+
+    /// Roll back an admission: drop the caller's references on `acquired`
+    /// and remove the `inserted` nodes outright (their blocks were never
+    /// computed, so leaving them resident would advertise KV that does not
+    /// exist). `inserted` must be in chain order, as returned by
+    /// [`acquire`](Self::acquire).
+    pub fn abort(&self, acquired: &[u64], inserted: &[u64], pool: &PoolHandle) {
+        let mut s = self.state.lock().unwrap();
+        for &h in acquired {
+            pool.shared_release(h);
+        }
+        for &h in inserted.iter().rev() {
+            let Some(node) = s.nodes.remove(&h) else { continue };
+            debug_assert_eq!(node.children, 0, "aborted nodes are removed leaf-first");
+            if let Some(p) = node.parent {
+                if let Some(pn) = s.nodes.get_mut(&p) {
+                    pn.children -= 1;
+                }
+            }
+            pool.shared_release(h);
+        }
+    }
+
+    /// Evict cold leaves (LRU first) until at least `want_bytes` have been
+    /// freed or nothing more is evictable. Returns the bytes freed.
+    pub fn evict(&self, pool: &PoolHandle, want_bytes: u64) -> u64 {
+        let mut s = self.state.lock().unwrap();
+        Self::evict_locked(&mut s, pool, want_bytes)
+    }
+
+    fn evict_locked(s: &mut IndexState, pool: &PoolHandle, want_bytes: u64) -> u64 {
+        let mut freed = 0u64;
+        while freed < want_bytes {
+            // An entry is evictable iff it is a leaf and the index holds
+            // the last pool reference (no live sequence reads it).
+            let victim = s
+                .nodes
+                .iter()
+                .filter(|(h, n)| n.children == 0 && pool.shared_refs(**h) == 1)
+                .min_by_key(|(_, n)| n.last_use)
+                .map(|(h, _)| *h);
+            let Some(h) = victim else { break };
+            let node = s.nodes.remove(&h).unwrap();
+            if let Some(p) = node.parent {
+                if let Some(pn) = s.nodes.get_mut(&p) {
+                    pn.children -= 1;
+                }
+            }
+            let released = pool.shared_release(h);
+            debug_assert!(released, "index held the last reference");
+            freed += node.bytes;
+            s.evicted += 1;
+        }
+        freed
+    }
+
+    /// Resident nodes.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Pool bytes held by resident entries (each counted once).
+    pub fn resident_bytes(&self) -> u64 {
+        self.state.lock().unwrap().nodes.values().map(|n| n.bytes).sum()
+    }
+
+    /// Lifetime (hit blocks, missed blocks, evicted entries).
+    pub fn stats(&self) -> (u64, u64, u64) {
+        let s = self.state.lock().unwrap();
+        (s.hits, s.misses, s.evicted)
+    }
+}
+
+fn pool_quantized(pool: &PoolHandle, bytes: u64) -> u64 {
+    let chunk = pool.chunk_bytes();
+    if chunk <= 1 || bytes == 0 {
+        bytes
+    } else {
+        bytes.div_ceil(chunk).saturating_mul(chunk)
+    }
+}
+
+/// Chain-hash `block` token-block ids onto `prev` (FNV-1a style mix). The
+/// workload generator uses this to stamp requests; stability across
+/// replicas and runs is what makes the cache cluster-wide.
+pub fn chain_hash(prev: u64, block_seed: u64) -> u64 {
+    let mut h = prev ^ 0xcbf2_9ce4_8422_2325;
+    for x in [block_seed, prev] {
+        h ^= x;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3).rotate_left(29);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BLK: u64 = 64;
+
+    fn chain(seed: u64, n: usize) -> Vec<u64> {
+        let mut v = Vec::with_capacity(n);
+        let mut h = seed;
+        for i in 0..n {
+            h = chain_hash(h, i as u64);
+            v.push(h);
+        }
+        v
+    }
+
+    #[test]
+    fn cold_then_hit() {
+        let pool = PoolHandle::new_chunked(16 * BLK, BLK);
+        let idx = PrefixIndex::new();
+        let c = chain(1, 4);
+        let a = idx.acquire(&c, BLK, &pool);
+        assert_eq!(a.hit_blocks, 0);
+        assert_eq!(a.acquired, c);
+        assert_eq!(a.inserted, c);
+        assert_eq!(idx.len(), 4);
+        assert_eq!(pool.used(), 4 * BLK, "deduped: one reservation per block");
+        // Same chain again: full hit, no new bytes.
+        let b = idx.acquire(&c, BLK, &pool);
+        assert_eq!(b.hit_blocks, 4);
+        assert!(b.inserted.is_empty());
+        assert_eq!(b.deduped_bytes, 4 * BLK);
+        assert_eq!(pool.used(), 4 * BLK);
+        // Divergent continuation shares the common prefix only.
+        let mut c2 = chain(1, 2);
+        c2.push(chain_hash(999, 0));
+        let d = idx.acquire(&c2, BLK, &pool);
+        assert_eq!(d.hit_blocks, 2);
+        assert_eq!(d.inserted.len(), 1);
+        assert_eq!(idx.len(), 5);
+    }
+
+    #[test]
+    fn sequence_refs_block_eviction() {
+        let pool = PoolHandle::new_chunked(4 * BLK, BLK);
+        let idx = PrefixIndex::new();
+        let c = chain(1, 4);
+        let a = idx.acquire(&c, BLK, &pool);
+        assert_eq!(a.acquired.len(), 4);
+        // Live sequence holds refs: nothing evictable.
+        assert_eq!(idx.evict(&pool, u64::MAX), 0);
+        // Sequence retires (drops its refs): leaves become evictable,
+        // leaf-first so resident prefixes stay chain-contiguous.
+        for &h in &c {
+            pool.shared_release(h);
+        }
+        assert_eq!(idx.evict(&pool, 1), BLK);
+        assert_eq!(idx.len(), 3);
+        assert_eq!(idx.evict(&pool, u64::MAX), 3 * BLK);
+        assert!(idx.is_empty());
+        assert_eq!(pool.used(), 0);
+    }
+
+    #[test]
+    fn acquire_evicts_lru_under_pressure() {
+        let pool = PoolHandle::new_chunked(4 * BLK, BLK);
+        let idx = PrefixIndex::new();
+        let old = chain(1, 2);
+        let a = idx.acquire(&old, BLK, &pool);
+        // Retire the old sequence: its entries are cold but cached.
+        idx_release(&a.acquired, &pool);
+        // A new 4-block chain needs the whole pool: the cold entries go.
+        let newc = chain(2, 4);
+        let b = idx.acquire(&newc, BLK, &pool);
+        assert_eq!(b.acquired.len(), 4);
+        assert_eq!(idx.len(), 4);
+        assert_eq!(pool.used(), 4 * BLK);
+        let (_, _, evicted) = idx.stats();
+        assert_eq!(evicted, 2);
+        // Pool full of *referenced* blocks: a further chain stops short.
+        let c = idx.acquire(&chain(3, 2), BLK, &pool);
+        assert!(c.acquired.is_empty(), "nothing evictable, nothing acquired");
+    }
+
+    #[test]
+    fn abort_unwinds_inserted_nodes() {
+        let pool = PoolHandle::new_chunked(16 * BLK, BLK);
+        let idx = PrefixIndex::new();
+        let c = chain(1, 3);
+        let warm = idx.acquire(&c[..1], BLK, &pool);
+        assert_eq!(warm.inserted.len(), 1);
+        let a = idx.acquire(&c, BLK, &pool);
+        assert_eq!(a.hit_blocks, 1);
+        assert_eq!(a.inserted.len(), 2);
+        idx.abort(&a.acquired, &a.inserted, &pool);
+        // The pre-existing node survives (still referenced by `warm`'s
+        // holder + the index); the aborted tail is gone entirely.
+        assert_eq!(idx.len(), 1);
+        assert_eq!(pool.used(), BLK);
+        assert_eq!(pool.shared_refs(c[0]), 2);
+        assert_eq!(pool.shared_refs(c[1]), 0);
+    }
+
+    #[test]
+    fn resident_bytes_track_pool_ledger() {
+        let pool = PoolHandle::new_chunked(1 << 20, 100);
+        let idx = PrefixIndex::new();
+        let c = chain(7, 5);
+        // 64-byte blocks quantize to the 100-byte pool chunk.
+        idx.acquire(&c, 64, &pool);
+        assert_eq!(idx.resident_bytes(), 500);
+        assert_eq!(pool.used(), 500);
+        assert_eq!(pool.shared_bytes(), 500);
+    }
+
+    fn idx_release(hashes: &[u64], pool: &PoolHandle) {
+        for &h in hashes {
+            pool.shared_release(h);
+        }
+    }
+}

@@ -6,4 +6,4 @@ mod allocator;
 mod tiers;
 
 pub use allocator::{AllocId, DeviceAllocator};
-pub use tiers::{HierarchicalMemory, PoolHandle, Region, RegionId, TransferKind};
+pub use tiers::{HierarchicalMemory, PoolHandle, Region, RegionId, SharedAcquire, TransferKind};

@@ -40,6 +40,30 @@ struct PoolState {
     /// matching the paged layout of the KV tier (a KV block is one chunk).
     /// `1` = byte-granular (the legacy behaviour).
     chunk_bytes: u64,
+    /// Shared (refcounted) reservations, keyed by content hash. The bytes
+    /// of each entry are counted against `used` exactly once no matter how
+    /// many holders attached — the dedup ledger of the prefix-cache tier.
+    shared: HashMap<u64, SharedEntry>,
+}
+
+#[derive(Debug)]
+struct SharedEntry {
+    /// Quantized bytes this entry holds in the ledger.
+    bytes: u64,
+    refs: u64,
+}
+
+/// Outcome of [`PoolHandle::shared_acquire`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SharedAcquire {
+    /// The key was already resident: its refcount grew, no new bytes were
+    /// reserved (a dedup hit).
+    Attached,
+    /// The key was not resident: capacity was reserved for it and the
+    /// refcount is now 1.
+    Reserved,
+    /// The key was not resident and the pool cannot hold its bytes.
+    Exhausted,
 }
 
 impl PoolHandle {
@@ -58,6 +82,7 @@ impl PoolHandle {
                 used: 0,
                 peak: 0,
                 chunk_bytes: chunk_bytes.max(1),
+                shared: HashMap::new(),
             })),
         }
     }
@@ -133,6 +158,58 @@ impl PoolHandle {
         } else {
             s.used as f64 / s.capacity as f64
         }
+    }
+
+    /// Acquire a reference on the shared reservation `key`.
+    ///
+    /// If the key is already resident the refcount grows and no new bytes
+    /// are reserved ([`SharedAcquire::Attached`] — the dedup hit). If not,
+    /// `bytes` (chunk-quantized) are reserved under the key with refcount 1
+    /// ([`SharedAcquire::Reserved`]), or [`SharedAcquire::Exhausted`] is
+    /// returned untouched if the capacity cannot hold them.
+    pub fn shared_acquire(&self, key: u64, bytes: u64) -> SharedAcquire {
+        let mut s = self.state.lock().unwrap();
+        if let Some(e) = s.shared.get_mut(&key) {
+            e.refs += 1;
+            return SharedAcquire::Attached;
+        }
+        let bytes = Self::quantize(s.chunk_bytes, bytes);
+        match s.used.checked_add(bytes) {
+            Some(next) if next <= s.capacity => {
+                s.used = next;
+                s.peak = s.peak.max(next);
+                s.shared.insert(key, SharedEntry { bytes, refs: 1 });
+                SharedAcquire::Reserved
+            }
+            _ => SharedAcquire::Exhausted,
+        }
+    }
+
+    /// Drop one reference on shared reservation `key`. When the last
+    /// reference goes, the entry's bytes return to the pool and `true` is
+    /// returned. Unknown keys are ignored (returns `false`).
+    pub fn shared_release(&self, key: u64) -> bool {
+        let mut s = self.state.lock().unwrap();
+        let Some(e) = s.shared.get_mut(&key) else { return false };
+        e.refs -= 1;
+        if e.refs == 0 {
+            let bytes = e.bytes;
+            s.shared.remove(&key);
+            s.used = s.used.saturating_sub(bytes);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Current refcount of shared reservation `key` (0 if not resident).
+    pub fn shared_refs(&self, key: u64) -> u64 {
+        self.state.lock().unwrap().shared.get(&key).map_or(0, |e| e.refs)
+    }
+
+    /// Total bytes held by shared reservations (each counted once).
+    pub fn shared_bytes(&self) -> u64 {
+        self.state.lock().unwrap().shared.values().map(|e| e.bytes).sum()
     }
 }
 
@@ -514,6 +591,49 @@ mod tests {
         let q = PoolHandle::new_chunked(256, 64);
         assert!(q.try_reserve(128));
         assert_eq!(q.used(), 128);
+    }
+
+    #[test]
+    fn shared_reservations_dedup_bytes() {
+        let p = PoolHandle::new_chunked(256, 64);
+        // First holder reserves; bytes quantize up to one chunk.
+        assert_eq!(p.shared_acquire(7, 33), SharedAcquire::Reserved);
+        assert_eq!(p.used(), 64);
+        assert_eq!(p.shared_refs(7), 1);
+        // Second and third holders attach: no new bytes.
+        assert_eq!(p.shared_acquire(7, 33), SharedAcquire::Attached);
+        assert_eq!(p.shared_acquire(7, 33), SharedAcquire::Attached);
+        assert_eq!(p.used(), 64);
+        assert_eq!(p.shared_refs(7), 3);
+        assert_eq!(p.shared_bytes(), 64);
+        // Private traffic coexists with the shared ledger.
+        assert!(p.try_reserve(128));
+        assert_eq!(p.used(), 192);
+        // Releases: bytes return only on the last one.
+        assert!(!p.shared_release(7));
+        assert!(!p.shared_release(7));
+        assert_eq!(p.used(), 192);
+        assert!(p.shared_release(7));
+        assert_eq!(p.used(), 128);
+        assert_eq!(p.shared_refs(7), 0);
+        assert_eq!(p.shared_bytes(), 0);
+        // Releasing an unknown key is a harmless no-op.
+        assert!(!p.shared_release(7));
+        assert_eq!(p.used(), 128);
+    }
+
+    #[test]
+    fn shared_acquire_respects_capacity_but_attach_always_succeeds() {
+        let p = PoolHandle::new_chunked(128, 64);
+        assert_eq!(p.shared_acquire(1, 64), SharedAcquire::Reserved);
+        assert!(p.try_reserve(64));
+        // Pool full: a *new* key cannot reserve...
+        assert_eq!(p.shared_acquire(2, 64), SharedAcquire::Exhausted);
+        assert_eq!(p.used(), 128);
+        // ...but attaching to a resident key still works (no new bytes).
+        assert_eq!(p.shared_acquire(1, 64), SharedAcquire::Attached);
+        assert_eq!(p.shared_refs(1), 2);
+        assert_eq!(p.peak(), 128);
     }
 
     #[test]

@@ -39,9 +39,18 @@
 //! One [`PoolHandle`] of `hw.remote_capacity` bytes is cloned into every
 //! replica's KV manager: offloaded blocks reserve real capacity, so a
 //! replica can be preempted because a *sibling* filled the pool.
+//!
+//! The same sharing makes the pool a **cluster-wide prefix cache**: one
+//! [`PrefixIndex`] handle is cloned into every replica alongside the
+//! pool, so a prompt prefix prefilled by any replica is pool-resident
+//! and every sibling's admission hits it (refcounted, copy-on-write —
+//! see the [`crate::kvcache`] module docs). The report surfaces the
+//! effect as `prefix_hit_blocks` / `prefill_flops_saved` /
+//! `pool_bytes_deduped` sums.
 
 use anyhow::Result;
 
+use crate::kvcache::PrefixIndex;
 use crate::memory::PoolHandle;
 use crate::sim::Fabric;
 
@@ -134,6 +143,13 @@ pub struct ClusterReport {
     pub compile_us_max: f64,
     /// Summed first-time SLO-deferred writeback bytes across replicas.
     pub slo_deferred_bytes: u64,
+    /// Summed admission-time prefix-cache hits across replicas (blocks
+    /// served from the shared pool instead of recomputed by prefill).
+    pub prefix_hit_blocks: u64,
+    /// Summed prefill FLOPs those hits avoided across replicas.
+    pub prefill_flops_saved: f64,
+    /// Summed pool bytes deduplicated by shared-prefix admissions.
+    pub pool_bytes_deduped: u64,
 }
 
 impl ClusterReport {
@@ -164,8 +180,17 @@ impl SimCluster {
         // with partial blocks.
         let chunk = cfg.engine.nsa.block_bytes(cfg.engine.model.kv_bytes_per_token);
         let pool = PoolHandle::new_chunked(cfg.engine.hw.remote_capacity, chunk);
+        // One prefix index across all replicas: with the pool shared too,
+        // a prefix prefilled anywhere is an admission hit everywhere.
+        let index = PrefixIndex::new();
         let engines: Vec<SimServingEngine> = (0..cfg.n_replicas)
-            .map(|_| SimServingEngine::with_pool(cfg.engine.clone(), pool.clone()))
+            .map(|_| {
+                SimServingEngine::with_pool_and_index(
+                    cfg.engine.clone(),
+                    pool.clone(),
+                    index.clone(),
+                )
+            })
             .collect();
         let router = Router::new(cfg.n_replicas, cfg.route);
         let seen = vec![0; cfg.n_replicas];
@@ -278,6 +303,9 @@ impl SimCluster {
         let compile_us_max =
             per_replica.iter().map(|r| r.compile_us_max).fold(0.0, f64::max);
         let deferred: u64 = per_replica.iter().map(|r| r.slo_deferred_bytes).sum();
+        let prefix_hits: u64 = per_replica.iter().map(|r| r.prefix_hit_blocks).sum();
+        let flops_saved: f64 = per_replica.iter().map(|r| r.prefill_flops_saved).sum();
+        let deduped: u64 = per_replica.iter().map(|r| r.pool_bytes_deduped).sum();
         ClusterReport {
             dispatched: self.dispatched,
             completed,
@@ -303,6 +331,9 @@ impl SimCluster {
             compile_us_total: compile_us,
             compile_us_max,
             slo_deferred_bytes: deferred,
+            prefix_hit_blocks: prefix_hits,
+            prefill_flops_saved: flops_saved,
+            pool_bytes_deduped: deduped,
             per_replica,
         }
     }
@@ -411,6 +442,7 @@ mod tests {
             arrival_us: t,
             prompt_tokens: p,
             gen_tokens: g,
+            block_hashes: vec![],
         };
         // M0: decode monster (1000 steps ~ 5.4 s). S0: token-fat but
         // cheap (prefill-only). At t=150 ms S0 is long done; static
@@ -438,6 +470,45 @@ mod tests {
             online.e2e_latency_us.p99,
             static_.e2e_latency_us.p99
         );
+    }
+
+    /// The prefix cache is cluster-wide: a prefix prefilled by one replica
+    /// is an admission hit on a *different* replica, because both share
+    /// the pool and the index.
+    #[test]
+    fn prefix_cache_is_cluster_wide() {
+        use crate::serving::request::template_prefix_hashes;
+        let engine = EngineConfig::hierarchical(hw(), small_model());
+        // 1024-token template = 16 full 64-token blocks of 4 MiB each.
+        let hashes = template_prefix_hashes(3, 1024, 64);
+        assert_eq!(hashes.len(), 16);
+        let mk = |id, t: f64| Request {
+            id,
+            arrival_us: t,
+            prompt_tokens: 1024 + 256,
+            gen_tokens: 8,
+            block_hashes: hashes.clone(),
+        };
+        // Round-robin pins the requests to different replicas; the second
+        // arrives long after the first finished, so its admission hits the
+        // prefix the sibling replica prefilled into the shared pool.
+        let wl = vec![mk(0, 0.0), mk(1, 1e9)];
+        let report = SimCluster::new(
+            ClusterConfig::new(engine, 2).with_route(RoutePolicy::RoundRobin),
+        )
+        .run(wl)
+        .unwrap();
+        let block = 64 * 64 * 1024u64;
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.rejected, 0);
+        assert_eq!(report.per_replica[0].prefix_hit_blocks, 0, "first admission is cold");
+        assert_eq!(
+            report.per_replica[1].prefix_hit_blocks, 16,
+            "replica 1 must hit replica 0's prefix"
+        );
+        assert_eq!(report.prefix_hit_blocks, 16);
+        assert_eq!(report.pool_bytes_deduped, 16 * block);
+        assert!(report.prefill_flops_saved > 0.0);
     }
 
     /// The shared pool is a real constraint: one replica's residency can

@@ -44,7 +44,7 @@ use std::collections::VecDeque;
 
 use anyhow::Result;
 
-use crate::kvcache::{KvCacheManager, KvPolicy, NsaConfig};
+use crate::kvcache::{KvCacheManager, KvPolicy, NsaConfig, PrefixIndex};
 use crate::memory::PoolHandle;
 use crate::sim::HwConfig;
 
@@ -229,6 +229,14 @@ pub struct SimServingEngine {
     /// Transfers the step compiler split into chunked (partial-tensor)
     /// transfers across all compiled steps.
     chunk_splits: u64,
+    /// Prompt KV blocks served from the shared prefix cache at admission
+    /// (never recomputed by prefill).
+    prefix_hit_blocks: u64,
+    /// Prefill FLOPs those hits avoided.
+    prefill_flops_saved: f64,
+    /// Pool bytes admissions deduplicated by attaching to resident shared
+    /// blocks instead of reserving new capacity.
+    pool_bytes_deduped: u64,
 }
 
 impl SimServingEngine {
@@ -242,18 +250,28 @@ impl SimServingEngine {
 
     /// An engine whose offloaded KV reserves capacity from `pool` — clone
     /// one handle across N engines to model them sharing one SuperNode
-    /// pool (the cluster setup).
+    /// pool (the cluster setup). The prefix index is private; share one
+    /// with [`Self::with_pool_and_index`] for a cluster-wide cache.
     pub fn with_pool(cfg: EngineConfig, pool: PoolHandle) -> Self {
+        Self::with_pool_and_index(cfg, pool, PrefixIndex::new())
+    }
+
+    /// An engine sharing both the pool *and* the prefix `index`: a prompt
+    /// prefix prefilled by any sibling engine is pool-resident and becomes
+    /// an admission hit here — the pool doubles as a cluster-wide prefix
+    /// cache with copy-on-write semantics.
+    pub fn with_pool_and_index(cfg: EngineConfig, pool: PoolHandle, index: PrefixIndex) -> Self {
         let kv_budget = cfg
             .hw
             .device_capacity
             .saturating_sub(cfg.model.weights_bytes + cfg.model.act_bytes);
-        let kv = KvCacheManager::with_pool(
+        let kv = KvCacheManager::with_pool_and_index(
             cfg.kv_policy,
             cfg.nsa.clone(),
             cfg.model.kv_bytes_per_token,
             kv_budget,
             pool,
+            Some(index),
         );
         let step_compiler = (cfg.kv_policy == KvPolicy::FullOffload && !cfg.analytic_oracle)
             .then(|| StepCompiler::new(cfg.hw.clone(), cfg.overlap_transfers));
@@ -278,6 +296,9 @@ impl SimServingEngine {
             slo_deferred_byte_steps: 0,
             decode_step_us_max: 0.0,
             chunk_splits: 0,
+            prefix_hit_blocks: 0,
+            prefill_flops_saved: 0.0,
+            pool_bytes_deduped: 0,
         }
     }
 
@@ -469,25 +490,36 @@ impl SimServingEngine {
     fn prefill(&mut self, p: PendingSeq, fabric: &FabricPressure) -> Result<bool> {
         let start_us = self.clock_us;
 
-        let compute_us = self
-            .cfg
-            .hw
-            .compute_us(self.cfg.model.prefill_flops_per_token * p.prefill_tokens as f64, 0);
-        let Ok(admit) = self.kv.admit(p.req.id, p.prefill_tokens, &self.cfg.hw) else {
+        let Ok(admit) =
+            self.kv.admit_prefix(p.req.id, p.prefill_tokens, &p.req.block_hashes, &self.cfg.hw)
+        else {
             return Ok(false); // device/pool capacity rejection
         };
-        self.defrag_stall_us += admit.defrag_us;
+        self.defrag_stall_us += admit.cost.defrag_us;
+        // Prefix hits are not recomputed: only the un-shared suffix runs
+        // through prefill compute. The shared blocks instead transfer
+        // pool→device (`prefix_fetch_bytes`) so the suffix can attend over
+        // them — a bandwidth trade the compiled schedule hides under the
+        // suffix compute.
+        let suffix_tokens = p.prefill_tokens - admit.hit_tokens;
+        let compute_flops = self.cfg.model.prefill_flops_per_token * suffix_tokens as f64;
+        let compute_us = self.cfg.hw.compute_us(compute_flops, 0);
+        self.prefix_hit_blocks += admit.hit_blocks as u64;
+        self.prefill_flops_saved +=
+            self.cfg.model.prefill_flops_per_token * admit.hit_tokens as f64;
+        self.pool_bytes_deduped += admit.deduped_bytes;
 
         let t = if let Some(sc) = self.step_compiler.as_mut() {
             let spec = StepSpec {
                 phase: StepPhase::Prefill,
                 batch: p.prefill_tokens,
-                compute_flops: self.cfg.model.prefill_flops_per_token * p.prefill_tokens as f64,
+                compute_flops,
                 compute_bytes: 0,
-                kv_fetch_bytes: admit.r2d_bytes,
-                kv_writeback_bytes: admit.d2r_bytes,
-                cpu_us: admit.cpu_us,
-                defrag_us: admit.defrag_us,
+                kv_fetch_bytes: admit.cost.r2d_bytes,
+                prefix_fetch_bytes: admit.prefix_fetch_bytes,
+                kv_writeback_bytes: admit.cost.d2r_bytes,
+                cpu_us: admit.cost.cpu_us,
+                defrag_us: admit.cost.defrag_us,
                 slo_us: None, // the SLO bounds decode steps, not prefill
             };
             let cs = match sc.compile(&spec, fabric) {
@@ -507,25 +539,33 @@ impl SimServingEngine {
             cs.step_us
         } else {
             // Baseline/oracle: defrag stalls serialise into prefill
-            // (§7.3.2); the hierarchical oracle exposes the writeback only
-            // where it outruns prefill compute.
-            let mut t = compute_us + admit.defrag_us + admit.cpu_us;
-            let d2r_us = self.cfg.hw.d2r_us_slowed(admit.d2r_bytes, fabric.d2r_slowdown);
-            let d2r_free_us = self.cfg.hw.d2r_us(admit.d2r_bytes);
-            if admit.d2r_bytes > 0 {
+            // (§7.3.2); the hierarchical oracle exposes transfers — the
+            // writeback stream and the shared-prefix fetch run on opposite
+            // link directions, so they overlap each other — only where
+            // they outrun the suffix prefill compute.
+            let mut t = compute_us + admit.cost.defrag_us + admit.cost.cpu_us;
+            let d2r_us = self.cfg.hw.d2r_us_slowed(admit.cost.d2r_bytes, fabric.d2r_slowdown);
+            let d2r_free_us = self.cfg.hw.d2r_us(admit.cost.d2r_bytes);
+            let pf_us =
+                self.cfg.hw.r2d_us_slowed(admit.prefix_fetch_bytes, fabric.r2d_slowdown);
+            let pf_free_us = self.cfg.hw.r2d_us(admit.prefix_fetch_bytes);
+            let transfer_us = d2r_us.max(pf_us);
+            let transfer_free_us = d2r_free_us.max(pf_free_us);
+            if admit.cost.d2r_bytes + admit.prefix_fetch_bytes > 0 {
                 if self.cfg.overlap_transfers {
-                    let exposed = (d2r_us - compute_us).max(0.0);
-                    let exposed_free = (d2r_free_us - compute_us).max(0.0);
+                    let exposed = (transfer_us - compute_us).max(0.0);
+                    let exposed_free = (transfer_free_us - compute_us).max(0.0);
                     t += exposed;
                     self.exposed_transfer_us += exposed;
                     self.fabric_stall_us += exposed - exposed_free;
                 } else {
-                    t += d2r_us;
-                    self.exposed_transfer_us += d2r_us;
-                    self.fabric_stall_us += d2r_us - d2r_free_us;
+                    t += transfer_us;
+                    self.exposed_transfer_us += transfer_us;
+                    self.fabric_stall_us += transfer_us - transfer_free_us;
                 }
             }
-            self.kv_transfer_bytes += admit.d2r_bytes + admit.r2d_bytes;
+            self.kv_transfer_bytes +=
+                admit.cost.d2r_bytes + admit.cost.r2d_bytes + admit.prefix_fetch_bytes;
             t
         };
 
@@ -628,6 +668,7 @@ impl SimServingEngine {
                 compute_flops: self.cfg.model.decode_flops_per_token * batch as f64,
                 compute_bytes: self.cfg.model.weights_bytes,
                 kv_fetch_bytes: r2d,
+                prefix_fetch_bytes: 0,
                 kv_writeback_bytes: d2r + drain,
                 cpu_us,
                 defrag_us,
@@ -726,6 +767,7 @@ impl SimServingEngine {
                 compute_flops: 0.0,
                 compute_bytes: 0,
                 kv_fetch_bytes: 0,
+                prefix_fetch_bytes: 0,
                 kv_writeback_bytes: bytes,
                 cpu_us: 0.0,
                 defrag_us: 0.0,
@@ -804,6 +846,9 @@ impl SimServingEngine {
             compile_us_total: self.step_compiler.as_ref().map_or(0.0, |sc| sc.compile_us_total),
             compile_us_max: self.step_compiler.as_ref().map_or(0.0, |sc| sc.compile_us_max),
             chunk_splits: self.chunk_splits,
+            prefix_hit_blocks: self.prefix_hit_blocks,
+            prefill_flops_saved: self.prefill_flops_saved,
+            pool_bytes_deduped: self.pool_bytes_deduped,
             residency: self.residency,
         }
     }
@@ -911,7 +956,7 @@ mod tests {
     // ---- steppable-core and satellite behaviours ----
 
     fn req(id: u64, arrival_us: f64, prompt: usize, gen: usize) -> Request {
-        Request { id, arrival_us, prompt_tokens: prompt, gen_tokens: gen }
+        Request { id, arrival_us, prompt_tokens: prompt, gen_tokens: gen, block_hashes: vec![] }
     }
 
     /// A model whose KV blocks are 1 MiB (block_tokens 16 × 64 KiB/tok),
@@ -1021,6 +1066,61 @@ mod tests {
         assert_eq!(r.preempted_events, 3);
         assert_eq!(r.rejected_requests, 1);
         assert_eq!(r.prefill_latency_us.n, 0);
+    }
+
+    #[test]
+    fn preemption_on_shared_prefix_trace_reuses_cache_without_double_free() {
+        // FullOffload with 1 MiB blocks (16 tok x 64 KiB) and a 40-block
+        // pool. R0 (34 blocks private) and R1 (2 shared + 2 private) fill
+        // the pool after their first growth; the next growth OOMs and
+        // preempts both. The shared prefix must survive preemption — the
+        // retire drops only the sequences' own references, the index's
+        // reference keeps the blocks cached — and R1's recompute
+        // re-admission must *hit* the cache instead of re-prefilling it.
+        let model = ModelCost {
+            weights_bytes: GB,
+            act_bytes: GB / 2,
+            prefill_flops_per_token: 16e9,
+            decode_flops_per_token: 16e9,
+            kv_bytes_per_token: 64 * 1024,
+        };
+        let mut hw = HwConfig::ascend910c_like().with_device_capacity(64 * GB);
+        hw.remote_capacity = 40 * MB;
+        let cfg = EngineConfig {
+            nsa: NsaConfig { block_tokens: 16, ..Default::default() },
+            max_batch: 2,
+            ..EngineConfig::hierarchical(hw, model)
+        };
+        let block = MB;
+        let hashes = crate::serving::request::template_prefix_hashes(0, 32, 16);
+        assert_eq!(hashes.len(), 2);
+        let wl = vec![
+            req(0, 0.0, 544, 32),
+            Request { block_hashes: hashes.clone(), ..req(1, 0.0, 64, 100) },
+        ];
+        let mut eng = SimServingEngine::new(cfg);
+        for r in wl {
+            eng.enqueue(r);
+        }
+        while eng.step(&FabricPressure::NONE).unwrap() {}
+        // Everything retired: the pool holds exactly the cached prefix —
+        // a double-free (or a leaked sequence reference) breaks this.
+        let idx = eng.kv.prefix_index().unwrap();
+        assert_eq!(eng.kv.pool().used(), idx.resident_bytes());
+        assert_eq!(idx.resident_bytes(), 2 * block, "prefix must survive preemption");
+        for &h in &hashes {
+            assert_eq!(eng.kv.pool().shared_refs(h), 1, "only the index ref remains");
+        }
+        let r = eng.report();
+        assert!(r.preempted_events >= 1, "the trace must force preemption");
+        assert_eq!(r.rejected_requests, 0);
+        assert_eq!(r.prefill_latency_us.n, 2, "both requests complete");
+        assert_eq!(r.tokens_generated, 32 + 100);
+        // R1's first admission inserts the prefix cold; its post-preemption
+        // recompute re-admission hits both blocks instead of re-prefilling.
+        assert_eq!(r.prefix_hit_blocks, 2);
+        assert_eq!(r.pool_bytes_deduped, 2 * block);
+        assert!(r.prefill_flops_saved > 0.0);
     }
 
     #[test]

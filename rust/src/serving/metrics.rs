@@ -76,6 +76,16 @@ pub struct ServingReport {
     /// Transfers the step compiler split into chunked (partial-tensor)
     /// transfers.
     pub chunk_splits: u64,
+    /// Prompt KV blocks served from the shared prefix cache instead of
+    /// being recomputed by prefill (admission-time hits on the
+    /// cluster-wide prefix index).
+    pub prefix_hit_blocks: u64,
+    /// Prefill FLOPs the prefix hits avoided (the tokens those blocks
+    /// cover, times the model's per-token prefill cost).
+    pub prefill_flops_saved: f64,
+    /// Pool bytes deduplicated by prefix sharing: admissions that attached
+    /// to a resident shared block instead of reserving new capacity.
+    pub pool_bytes_deduped: u64,
     /// Device-residency curve: (time us, device bytes) samples taken at
     /// every admission/decode boundary, non-decreasing in time.
     pub residency: Vec<(f64, u64)>,

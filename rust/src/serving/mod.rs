@@ -46,6 +46,19 @@
 //! bandwidth-contended device↔pool fabric — see the [`cluster`] module
 //! docs for the contract. Fabric pressure reaches the step compiler as
 //! per-direction bandwidth derating and is part of the compile-cache key.
+//!
+//! # Cluster-wide prefix cache
+//!
+//! Requests may carry [`Request::block_hashes`] (stamped by the workload
+//! generator's shared-template trace, `WorkloadConfig::shared_prefix`).
+//! Admission then consults the shared [`crate::kvcache::PrefixIndex`]:
+//! resident prompt blocks attach to the pool's refcounted shared ledger
+//! instead of being recomputed, prefill runs over the un-shared suffix
+//! only, and the hit blocks are lowered as compiled pool→device
+//! `Prefetch` chunks the schedule hides under the suffix compute. The
+//! router keeps hot templates on their warm replica when load allows
+//! (prefix affinity). `ServingReport::prefix_hit_blocks`,
+//! `prefill_flops_saved` and `pool_bytes_deduped` quantify the win.
 
 pub mod cluster;
 mod engine;
@@ -57,6 +70,6 @@ pub mod step_graph;
 pub use cluster::{ClusterConfig, ClusterReport, SimCluster};
 pub use engine::{EngineConfig, FabricPressure, ModelCost, SimServingEngine};
 pub use metrics::{stats, ServingReport, Stats};
-pub use request::{Request, RequestTiming, WorkloadConfig};
-pub use router::{ReplicaView, RoutePolicy, Router};
+pub use request::{template_prefix_hashes, Request, RequestTiming, WorkloadConfig};
+pub use router::{AFFINITY_SLACK, ReplicaView, RoutePolicy, Router};
 pub use step_graph::{CompiledStep, StepCompiler, StepKey, StepPhase, StepSpec};

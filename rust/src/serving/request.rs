@@ -1,5 +1,6 @@
 //! Requests and workload generation for the serving evaluation.
 
+use crate::kvcache::prefix::chain_hash;
 use crate::util::rng::Rng;
 
 /// One inference request.
@@ -10,6 +11,12 @@ pub struct Request {
     pub arrival_us: f64,
     pub prompt_tokens: usize,
     pub gen_tokens: usize,
+    /// Chain hashes of the prompt's leading *full* KV blocks (`hashes[i]`
+    /// commits to blocks `0..=i`). Empty = no shareable prefix, the
+    /// admission path stays cold. Stamped by the workload generator from
+    /// the request's template; stable across runs and replicas, which is
+    /// what makes the prefix cache cluster-wide.
+    pub block_hashes: Vec<u64>,
 }
 
 /// Lifecycle timestamps filled in by the engine.
@@ -45,6 +52,18 @@ pub struct WorkloadConfig {
     pub gen_min: usize,
     pub gen_max: usize,
     pub seed: u64,
+    /// Fraction of requests that open with a shared template prefix
+    /// (system prompt / few-shot scaffold / multi-turn history). 0 = the
+    /// legacy unique-prompt trace, bit-identical to before this knob.
+    pub prefix_share_ratio: f64,
+    /// Distinct templates the shared requests draw from uniformly.
+    pub prefix_templates: usize,
+    /// Tokens in each shared template prefix (prepended to the drawn
+    /// prompt length).
+    pub prefix_tokens: usize,
+    /// Tokens per KV block used to hash the prefix. Must match the
+    /// serving engine's `NsaConfig::block_tokens` for hits to land.
+    pub prefix_block_tokens: usize,
 }
 
 impl WorkloadConfig {
@@ -58,6 +77,10 @@ impl WorkloadConfig {
             gen_min: gen,
             gen_max: gen,
             seed,
+            prefix_share_ratio: 0.0,
+            prefix_templates: 0,
+            prefix_tokens: 0,
+            prefix_block_tokens: 64,
         }
     }
 
@@ -71,6 +94,32 @@ impl WorkloadConfig {
             gen_min: 64,
             gen_max: 256,
             seed,
+            prefix_share_ratio: 0.0,
+            prefix_templates: 0,
+            prefix_tokens: 0,
+            prefix_block_tokens: 64,
+        }
+    }
+
+    /// Shared-system-prompt / multi-turn trace (the prefix-cache
+    /// workload): `share` of the requests open with one of `templates`
+    /// fixed prefixes of `prefix_tokens` tokens, hashed per
+    /// `block_tokens`-token block and stamped into
+    /// [`Request::block_hashes`].
+    pub fn shared_prefix(
+        n: usize,
+        share: f64,
+        templates: usize,
+        prefix_tokens: usize,
+        block_tokens: usize,
+        seed: u64,
+    ) -> Self {
+        Self {
+            prefix_share_ratio: share.clamp(0.0, 1.0),
+            prefix_templates: templates.max(1),
+            prefix_tokens,
+            prefix_block_tokens: block_tokens.max(1),
+            ..Self::short_sequence(n, seed)
         }
     }
 
@@ -82,23 +131,61 @@ impl WorkloadConfig {
                 if self.mean_interarrival_us > 0.0 {
                     t += rng.exponential(self.mean_interarrival_us);
                 }
+                let mut prompt_tokens = if self.prompt_min == self.prompt_max {
+                    self.prompt_min
+                } else {
+                    rng.usize(self.prompt_min, self.prompt_max + 1)
+                };
+                let gen_tokens = if self.gen_min == self.gen_max {
+                    self.gen_min
+                } else {
+                    rng.usize(self.gen_min, self.gen_max + 1)
+                };
+                // Shared-prefix draws come *after* the legacy draws so a
+                // zero share ratio leaves the trace bit-identical to the
+                // pre-prefix generator.
+                let mut block_hashes = Vec::new();
+                if self.prefix_share_ratio > 0.0
+                    && self.prefix_tokens >= self.prefix_block_tokens
+                    && rng.next_f64() < self.prefix_share_ratio
+                {
+                    let template = rng.gen_range(0, self.prefix_templates.max(1) as u64);
+                    block_hashes = template_prefix_hashes(
+                        template,
+                        self.prefix_tokens,
+                        self.prefix_block_tokens,
+                    );
+                    prompt_tokens += self.prefix_tokens;
+                }
                 Request {
                     id: i as u64,
                     arrival_us: t,
-                    prompt_tokens: if self.prompt_min == self.prompt_max {
-                        self.prompt_min
-                    } else {
-                        rng.usize(self.prompt_min, self.prompt_max + 1)
-                    },
-                    gen_tokens: if self.gen_min == self.gen_max {
-                        self.gen_min
-                    } else {
-                        rng.usize(self.gen_min, self.gen_max + 1)
-                    },
+                    prompt_tokens,
+                    gen_tokens,
+                    block_hashes,
                 }
             })
             .collect()
     }
+}
+
+/// Chain hashes of template `template`'s prefix: one per *full*
+/// `block_tokens`-token block of its `prefix_tokens` tokens. Pure in its
+/// arguments, so every generator (and every cluster replica) derives the
+/// same hashes for the same template.
+pub fn template_prefix_hashes(
+    template: u64,
+    prefix_tokens: usize,
+    block_tokens: usize,
+) -> Vec<u64> {
+    let full = prefix_tokens / block_tokens.max(1);
+    let mut h = 0xC0FF_EE00u64 ^ template.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut v = Vec::with_capacity(full);
+    for i in 0..full {
+        h = chain_hash(h, i as u64);
+        v.push(h);
+    }
+    v
 }
 
 #[cfg(test)]
@@ -134,6 +221,61 @@ mod tests {
             assert_eq!(r.gen_tokens, 1000);
             assert_eq!(r.arrival_us, 0.0);
         }
+    }
+
+    #[test]
+    fn unique_prompt_traces_carry_no_hashes() {
+        for r in WorkloadConfig::short_sequence(50, 11).generate() {
+            assert!(r.block_hashes.is_empty());
+        }
+    }
+
+    #[test]
+    fn zero_share_ratio_is_bit_identical_to_legacy_trace() {
+        let legacy = WorkloadConfig::short_sequence(60, 21).generate();
+        let zeroed = WorkloadConfig::shared_prefix(60, 0.0, 4, 1024, 64, 21).generate();
+        for (a, b) in legacy.iter().zip(&zeroed) {
+            assert_eq!(a.prompt_tokens, b.prompt_tokens);
+            assert_eq!(a.gen_tokens, b.gen_tokens);
+            assert_eq!(a.arrival_us, b.arrival_us);
+            assert!(b.block_hashes.is_empty());
+        }
+    }
+
+    #[test]
+    fn shared_prefix_trace_shape() {
+        let cfg = WorkloadConfig::shared_prefix(200, 0.75, 4, 1024, 64, 5);
+        let reqs = cfg.generate();
+        let shared: Vec<&Request> =
+            reqs.iter().filter(|r| !r.block_hashes.is_empty()).collect();
+        // ~75% of 200 share a template (deterministic for the seed).
+        assert!(
+            (120..=180).contains(&shared.len()),
+            "share count {} off the 0.75 ratio",
+            shared.len()
+        );
+        for r in &shared {
+            assert_eq!(r.block_hashes.len(), 1024 / 64);
+            // Template prefix is prepended to the drawn prompt.
+            assert!(r.prompt_tokens >= 1024 + 512);
+        }
+        // Exactly `templates` distinct chains, and requests of the same
+        // template carry the identical chain (the cache-hit condition).
+        let mut roots: Vec<u64> = shared.iter().map(|r| r.block_hashes[0]).collect();
+        roots.sort_unstable();
+        roots.dedup();
+        assert_eq!(roots.len(), 4);
+        for a in &shared {
+            for b in &shared {
+                if a.block_hashes[0] == b.block_hashes[0] {
+                    assert_eq!(a.block_hashes, b.block_hashes);
+                }
+            }
+        }
+        // And the chains are reproducible from the template id alone.
+        assert!(shared
+            .iter()
+            .any(|r| r.block_hashes == template_prefix_hashes(0, 1024, 64)));
     }
 
     #[test]

@@ -9,8 +9,24 @@
 //!   replica state ([`ReplicaView`]: outstanding tokens, KV headroom,
 //!   pool pressure) with completions fed back via [`Router::complete`],
 //!   so a replica that drained early takes new work immediately.
+//!
+//! Online routing is additionally *prefix-affine*: requests carrying
+//! [`Request::block_hashes`] remember which replica last served their
+//! template (keyed by the prefix root hash), and among replicas whose
+//! load is within one [`AFFINITY_SLACK`]-token bucket the affine replica
+//! wins — its device working set is warm even though the pool-resident
+//! prefix itself is shared cluster-wide. Requests without hashes rank
+//! exactly as before (the bucket is a monotone function of the load, so
+//! the tiebreak chain degenerates to plain least-loaded).
+
+use std::collections::HashMap;
 
 use super::request::Request;
+
+/// Load difference (tokens) within which prefix affinity may override
+/// least-loaded placement: replicas are ranked by `outstanding_tokens /
+/// AFFINITY_SLACK` first, affinity second, exact load last.
+pub const AFFINITY_SLACK: u64 = 4096;
 
 /// Live state of one engine replica, sampled at dispatch time by the
 /// cluster orchestrator.
@@ -42,12 +58,15 @@ pub struct Router {
     /// Outstanding work (tokens) per replica.
     load: Vec<u64>,
     next_rr: usize,
+    /// Replica that last served each shared-prefix template, keyed by the
+    /// prefix root (first chain hash). Online dispatch only.
+    affinity: HashMap<u64, usize>,
 }
 
 impl Router {
     pub fn new(n_replicas: usize, policy: RoutePolicy) -> Self {
         assert!(n_replicas > 0);
-        Self { policy, load: vec![0; n_replicas], next_rr: 0 }
+        Self { policy, load: vec![0; n_replicas], next_rr: 0, affinity: HashMap::new() }
     }
 
     pub fn n_replicas(&self) -> usize {
@@ -88,19 +107,27 @@ impl Router {
             RoutePolicy::LeastLoaded => {
                 // Outstanding work dominates; a replica that lacks the KV
                 // headroom for this request (it would defrag or preempt
-                // to take it) is pushed to the back of the ranking.
+                // to take it) is pushed to the back of the ranking. Among
+                // replicas in the same load bucket, the one that last
+                // served this request's prefix template wins the tie.
                 let need = (req.prompt_tokens + req.gen_tokens) as u64;
+                let root = req.block_hashes.first().copied();
                 views
                     .iter()
                     .enumerate()
-                    .min_by_key(|(_, v)| {
+                    .min_by_key(|(i, v)| {
                         let starved = v.kv_headroom_tokens < need;
-                        (starved, v.outstanding_tokens)
+                        let miss =
+                            root.map_or(false, |h| self.affinity.get(&h) != Some(i));
+                        (starved, v.outstanding_tokens / AFFINITY_SLACK, miss, v.outstanding_tokens)
                     })
                     .map(|(i, _)| i)
                     .unwrap()
             }
         };
+        if let Some(&h) = req.block_hashes.first() {
+            self.affinity.insert(h, idx);
+        }
         self.load[idx] += (req.prompt_tokens + req.gen_tokens) as u64;
         idx
     }
@@ -132,7 +159,11 @@ mod tests {
     use super::*;
 
     fn req(id: u64, p: usize, g: usize) -> Request {
-        Request { id, arrival_us: 0.0, prompt_tokens: p, gen_tokens: g }
+        Request { id, arrival_us: 0.0, prompt_tokens: p, gen_tokens: g, block_hashes: vec![] }
+    }
+
+    fn shared_req(id: u64, root: u64) -> Request {
+        Request { block_hashes: vec![root, root ^ 1], ..req(id, 100, 50) }
     }
 
     #[test]
@@ -182,6 +213,36 @@ mod tests {
             ReplicaView { outstanding_tokens: 500, kv_headroom_tokens: 1 << 30, ..Default::default() },
         ];
         assert_eq!(r.route_live(&req(0, 100, 50), &views), 1);
+    }
+
+    #[test]
+    fn route_live_prefix_affinity_breaks_near_ties() {
+        let mut r = Router::new(2, RoutePolicy::LeastLoaded);
+        let views = |a, b| {
+            vec![
+                ReplicaView {
+                    outstanding_tokens: a,
+                    kv_headroom_tokens: 1 << 30,
+                    ..Default::default()
+                },
+                ReplicaView {
+                    outstanding_tokens: b,
+                    kv_headroom_tokens: 1 << 30,
+                    ..Default::default()
+                },
+            ]
+        };
+        // First placement of the template: plain least-loaded (replica 1).
+        assert_eq!(r.route_live(&shared_req(0, 0xABC), &views(500, 0)), 1);
+        // Same template again: replica 0 is now lighter, but within one
+        // affinity bucket — stick with replica 1's warm working set.
+        assert_eq!(r.route_live(&shared_req(1, 0xABC), &views(0, 500)), 1);
+        // Gross imbalance (more than one bucket) overrides affinity.
+        assert_eq!(r.route_live(&shared_req(2, 0xABC), &views(0, 50_000)), 0);
+        // Hashless requests keep the exact least-loaded ordering: the
+        // lighter replica wins even against an affinity-free near-tie.
+        assert_eq!(r.route_live(&req(3, 100, 50), &views(500, 0)), 1);
+        assert_eq!(r.route_live(&req(4, 100, 50), &views(0, 500)), 0);
     }
 
     #[test]

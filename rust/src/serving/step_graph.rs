@@ -73,6 +73,11 @@ pub struct StepSpec {
     pub compute_bytes: u64,
     /// Remote→Device KV bytes the step must fetch (NSA working-set delta).
     pub kv_fetch_bytes: u64,
+    /// Remote→Device bytes of *shared prefix* blocks a prefix-hit prefill
+    /// pulls from the pool instead of recomputing (0 for decode/drain and
+    /// cold prefills). Lowered as chunked pool→device `Prefetch`es the
+    /// schedule overlaps with the suffix compute.
+    pub prefix_fetch_bytes: u64,
     /// Device→Remote KV bytes the step wants to persist (tail blocks +
     /// any backlog drain attempt). Deferrable under a decode SLO.
     pub kv_writeback_bytes: u64,
@@ -97,6 +102,8 @@ pub struct StepKey {
     /// (every value is a multiple of the KV block size), so the raw totals
     /// *are* the block-quantized buckets.
     kv_bytes_bucket: (u64, u64),
+    /// Shared-prefix fetch bytes (block-granular, like the KV buckets).
+    prefix_bucket: u64,
     flops_bits: u64,
     compute_bytes: u64,
     host_us_bits: u64,
@@ -110,6 +117,7 @@ impl StepKey {
             phase: spec.phase,
             batch_bucket: spec.batch.min(u32::MAX as usize) as u32,
             kv_bytes_bucket: (spec.kv_fetch_bytes, spec.kv_writeback_bytes),
+            prefix_bucket: spec.prefix_fetch_bytes,
             flops_bits: spec.compute_flops.to_bits(),
             compute_bytes: spec.compute_bytes,
             host_us_bits: (spec.cpu_us + spec.defrag_us).to_bits(),
@@ -247,7 +255,7 @@ impl StepCompiler {
             step_us: sim.makespan_us,
             exposed_us: exposed,
             exposed_free_us: exposed_free,
-            moved_r2d: spec.kv_fetch_bytes,
+            moved_r2d: spec.kv_fetch_bytes + spec.prefix_fetch_bytes,
             moved_d2r: spec.kv_writeback_bytes - report.deferred_bytes,
             deferred_d2r: report.deferred_bytes,
             throttled: report.throttled,
@@ -257,19 +265,29 @@ impl StepCompiler {
     }
 }
 
+/// Chunk size for lowering a shared-prefix fetch: one `Prefetch` per
+/// ≤128 MB chunk, so a long prefix pipelines instead of arriving as one
+/// monolithic transfer (mirrors the throttle's round-trip chunk size).
+const PREFIX_CHUNK_BYTES: u64 = 128 << 20;
+
 /// Lower one step into the IR:
 ///
 /// ```text
-///   Prefetch(kv.fetch)  ──┐                  (Remote-home working-set delta)
-///   Store(kv.writeback) ──┼──▶ HostWork(cpu + defrag)
-///   Compute(step)       ──┘                  (gates the host tail, §7.3.3)
+///   Prefetch(kv.fetch)     ──┐               (Remote-home working-set delta)
+///   Prefetch(kv.prefix.i)* ──┤               (shared-prefix blocks, chunked)
+///   Store(kv.writeback)    ──┼──▶ HostWork(cpu + defrag)
+///   Compute(step)          ──┘               (gates the host tail, §7.3.3)
 /// ```
 ///
 /// Overlap mode leaves the transfers independent of the compute (the
 /// compiler scheduled them a step ahead, Fig. 4(c)); runtime mode gates
-/// the compute on both transfers instead, exposing them serially. The
-/// writeback tensor is producer-less and Device-home — the KV bytes are on
-/// device until persisted — and is flagged
+/// the compute on every transfer instead, exposing them serially. A
+/// prefix-hit prefill additionally prefetches the shared blocks from the
+/// pool (`kv.prefix.*`, one per [`PREFIX_CHUNK_BYTES`] chunk) — under
+/// overlap they hide beneath the suffix compute, which is where the
+/// prefix cache's latency win comes from. The writeback tensor is
+/// producer-less and Device-home — the KV bytes are on device until
+/// persisted — and is flagged
 /// [`deferrable`](crate::graph::TensorInfo::deferrable) when the step has
 /// an SLO, which is what arms the throttle's spill rewrite.
 fn lower(spec: &StepSpec, overlap: bool) -> Graph {
@@ -280,6 +298,25 @@ fn lower(spec: &StepSpec, overlap: bool) -> Graph {
         .then(|| g.add_tensor("kv.writeback", spec.kv_writeback_bytes, Tier::Device));
     if let (Some(w), true) = (wb, spec.slo_us.is_some()) {
         g.set_deferrable(w, true);
+    }
+
+    let mut prefix_tensors = Vec::new();
+    let mut prefix_pf = Vec::new();
+    if spec.prefix_fetch_bytes > 0 {
+        let n = spec.prefix_fetch_bytes.div_ceil(PREFIX_CHUNK_BYTES).max(1);
+        let base = spec.prefix_fetch_bytes / n;
+        let rem = spec.prefix_fetch_bytes - base * n;
+        for i in 0..n {
+            let bytes = base + u64::from(i < rem);
+            let t = g.add_tensor(format!("kv.prefix.{i}"), bytes, Tier::Remote);
+            prefix_tensors.push(t);
+            prefix_pf.push(g.add_op(
+                format!("prefetch.kv.prefix.{i}"),
+                OpKind::Prefetch { tensor: t },
+                vec![t],
+                vec![],
+            ));
+        }
     }
 
     let pf = fetch
@@ -299,8 +336,8 @@ fn lower(spec: &StepSpec, overlap: bool) -> Graph {
             vec![out],
         );
         if !overlap {
-            // Runtime-style: the step's compute waits for both transfers.
-            for dep in [pf, st].into_iter().flatten() {
+            // Runtime-style: the step's compute waits for every transfer.
+            for dep in [pf, st].into_iter().flatten().chain(prefix_pf.iter().copied()) {
                 g.add_control_dep(c, dep);
             }
         }
@@ -308,13 +345,16 @@ fn lower(spec: &StepSpec, overlap: bool) -> Graph {
     });
 
     let host_us = spec.cpu_us + spec.defrag_us;
-    if host_us > 0.0 || fetch.is_some() {
+    if host_us > 0.0 || fetch.is_some() || !prefix_tensors.is_empty() {
         // The host tail consumes the fetched blocks (sparse gather over
-        // the touched set) and runs after everything else in the step —
-        // CPU sparse-block processing serialises (§7.3.3).
-        let inputs = fetch.into_iter().collect();
+        // the touched set, prefix blocks included) and runs after
+        // everything else in the step — CPU sparse-block processing
+        // serialises (§7.3.3).
+        let inputs: Vec<_> = fetch.into_iter().chain(prefix_tensors.iter().copied()).collect();
         let h = g.add_op("step.host", OpKind::HostWork { us: host_us }, inputs, vec![]);
-        for dep in [compute, pf, st].into_iter().flatten() {
+        for dep in
+            [compute, pf, st].into_iter().flatten().chain(prefix_pf.iter().copied())
+        {
             g.add_control_dep(h, dep);
         }
     }
@@ -337,6 +377,7 @@ mod tests {
             compute_flops: 40e6, // 40 us on the 1 TFLOP/s test device
             compute_bytes: 0,
             kv_fetch_bytes: 16 * 1024, // 16.4 us at 1 GB/s — hides under compute
+            prefix_fetch_bytes: 0,
             kv_writeback_bytes: wb_mb * MB,
             cpu_us: 5.0,
             defrag_us: 0.0,
@@ -408,6 +449,7 @@ mod tests {
             compute_flops: 0.0,
             compute_bytes: 0,
             kv_fetch_bytes: 0,
+            prefix_fetch_bytes: 0,
             kv_writeback_bytes: 4 * MB,
             cpu_us: 0.0,
             defrag_us: 0.0,
@@ -418,5 +460,65 @@ mod tests {
         assert!((cs.step_us - st_us).abs() < 1e-6);
         assert!((cs.exposed_us - st_us).abs() < 1e-6, "nothing to hide under");
         assert_eq!(cs.moved_d2r, 4 * MB);
+    }
+
+    fn prefix_prefill_spec(prefix_bytes: u64) -> StepSpec {
+        StepSpec {
+            phase: StepPhase::Prefill,
+            batch: 256,
+            compute_flops: 40e6, // 40 us of suffix compute
+            compute_bytes: 0,
+            kv_fetch_bytes: 0,
+            prefix_fetch_bytes: prefix_bytes,
+            kv_writeback_bytes: 0,
+            cpu_us: 0.0,
+            defrag_us: 0.0,
+            slo_us: None,
+        }
+    }
+
+    #[test]
+    fn prefix_fetch_hides_under_suffix_compute() {
+        let mut sc = StepCompiler::new(hw(), true);
+        let cs = sc.compile(&prefix_prefill_spec(16 * 1024), &FabricPressure::NONE).unwrap();
+        assert_eq!(cs.moved_r2d, 16 * 1024, "prefix bytes count as fetched");
+        assert!(
+            (cs.step_us - 40.0).abs() < 1e-6,
+            "prefix fetch must hide under the suffix compute: {}",
+            cs.step_us
+        );
+        // Runtime mode gates the compute on the prefix prefetch: serial.
+        let mut rt = StepCompiler::new(hw(), false);
+        let serial = rt.compile(&prefix_prefill_spec(16 * 1024), &FabricPressure::NONE).unwrap();
+        assert!(serial.step_us > cs.step_us);
+        // And the prefix volume is part of the cache key.
+        sc.compile(&prefix_prefill_spec(32 * 1024), &FabricPressure::NONE).unwrap();
+        assert_eq!(sc.misses, 2, "prefix bytes must key separately");
+        sc.compile(&prefix_prefill_spec(16 * 1024), &FabricPressure::NONE).unwrap();
+        assert_eq!(sc.hits, 1);
+    }
+
+    #[test]
+    fn large_prefix_fetch_lowers_chunked() {
+        let g = lower(&prefix_prefill_spec(300 * MB), true);
+        let chunks = g
+            .ops
+            .iter()
+            .filter(|o| o.name.starts_with("prefetch.kv.prefix."))
+            .count();
+        assert_eq!(chunks, 3, "300 MB at a 128 MB chunk size");
+        let total: u64 = g
+            .tensors
+            .iter()
+            .filter(|t| t.name.starts_with("kv.prefix."))
+            .map(|t| t.bytes)
+            .sum();
+        assert_eq!(total, 300 * MB, "chunking conserves bytes");
+        // A small prefix stays a single prefetch.
+        let g1 = lower(&prefix_prefill_spec(MB), true);
+        assert_eq!(
+            g1.ops.iter().filter(|o| o.name.starts_with("prefetch.kv.prefix.")).count(),
+            1
+        );
     }
 }

@@ -41,17 +41,24 @@
 //!     recomputation, and `SimTrace::resume` at any cut (with or without
 //!     speculative extra deps) reproduces the full simulation bit for
 //!     bit — schedule times, peak bytes, makespan.
+//!  P14 Prefix sharing conserves refcounts exactly: under random
+//!     admit/decode/fork/preempt/retire sequences across managers sharing
+//!     one pool and one prefix index, the pool ledger always equals the
+//!     deduped sum (private bytes + resident shared bytes, each shared
+//!     block counted once), draining empties it exactly, and a prefix-hit
+//!     admission is byte-identical downstream to a cold prefill of the
+//!     same tokens.
 
 use hyperoffload::graph::{Graph, GraphBuilder, OpKind, Tier};
-use hyperoffload::kvcache::{KvCacheManager, KvPolicy, NsaConfig};
-use hyperoffload::memory::DeviceAllocator;
+use hyperoffload::kvcache::{KvCacheManager, KvPolicy, NsaConfig, PrefixIndex};
+use hyperoffload::memory::{DeviceAllocator, PoolHandle};
 use hyperoffload::passes::{
     refine, AnalysisCache, CompileError, Compiler, ExecOrderConfig, LifetimeAnalysis,
     OffloadPolicy, SloThrottle,
 };
 use hyperoffload::serving::{
-    ClusterConfig, EngineConfig, ModelCost, Request, RoutePolicy, Router, SimCluster,
-    SimServingEngine, WorkloadConfig,
+    template_prefix_hashes, ClusterConfig, EngineConfig, ModelCost, Request, RoutePolicy,
+    Router, SimCluster, SimServingEngine, WorkloadConfig,
 };
 use hyperoffload::sim::{simulate, HwConfig, SimTrace, GB};
 use hyperoffload::util::rng::Rng;
@@ -256,6 +263,10 @@ fn p7_cluster_conserves_requests_pool_and_time() {
             gen_min: 1,
             gen_max: rng.usize(8, 200),
             seed: seed * 7 + 1,
+            prefix_share_ratio: 0.0,
+            prefix_templates: 0,
+            prefix_tokens: 0,
+            prefix_block_tokens: 64,
         }
         .generate();
         let n_requests = wl.len() as u64;
@@ -471,6 +482,7 @@ fn p12_compiled_serving_conserves_bytes_and_chunking_bounds_peak() {
                 arrival_us: 0.0,
                 prompt_tokens: rng.usize(64, 4096),
                 gen_tokens: rng.usize(1, 80),
+                block_hashes: vec![],
             })
             .collect();
         let slo = if rng.next_f64() < 0.5 {
@@ -747,6 +759,7 @@ fn p6_router_conserves_requests_and_balances() {
                 arrival_us: 0.0,
                 prompt_tokens: rng.usize(16, 4096),
                 gen_tokens: rng.usize(1, 512),
+                block_hashes: vec![],
             })
             .collect();
         let parts = router.partition(&reqs);
@@ -762,5 +775,143 @@ fn p6_router_conserves_requests_and_balances() {
             .unwrap();
         let spread = loads.iter().max().unwrap() - loads.iter().min().unwrap();
         assert!(spread <= max_req, "seed {seed}: spread {spread} > {max_req}");
+    }
+}
+
+#[test]
+fn p14_prefix_sharing_conserves_pool_bytes_and_is_byte_identical_downstream() {
+    // (a) Refcount conservation: the pool ledger is exactly the deduped
+    // sum — each manager's private bytes plus the resident shared blocks,
+    // each shared block counted once — after *every* operation of a random
+    // admit/decode/fork/preempt/retire interleaving across two managers
+    // sharing one pool and one index (two replicas of the cluster-wide
+    // cache).
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed + 16_000);
+        let hw = hw(&mut rng);
+        let kv_per_tok = 64 * 1024u64;
+        let bt = NsaConfig::default().block_tokens;
+        let block = bt as u64 * kv_per_tok;
+        let pool = PoolHandle::new_chunked((16 + rng.gen_range(0, 48)) * block, block);
+        let idx = PrefixIndex::new();
+        let mk = || {
+            KvCacheManager::with_pool_and_index(
+                KvPolicy::FullOffload,
+                NsaConfig::default(),
+                kv_per_tok,
+                1 << 30,
+                pool.clone(),
+                Some(idx.clone()),
+            )
+        };
+        let mut ms = [mk(), mk()];
+        let mut live: Vec<(usize, u64)> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..250 {
+            match rng.usize(0, 8) {
+                0..=2 => {
+                    // Admission, mostly templated. Re-admitting a template
+                    // an earlier (since-retired, i.e. preempted) sequence
+                    // prefilled exercises the requeue path: it must hit the
+                    // cache instead of re-reserving the blocks.
+                    let hashes = if rng.next_f64() < 0.7 {
+                        template_prefix_hashes(rng.gen_range(0, 3), rng.usize(1, 5) * bt, bt)
+                    } else {
+                        vec![]
+                    };
+                    let prompt = hashes.len() * bt + rng.usize(1, 200);
+                    let m = rng.usize(0, 2);
+                    if ms[m].admit_prefix(next_id, prompt, &hashes, &hw).is_ok() {
+                        live.push((m, next_id));
+                    }
+                    next_id += 1;
+                }
+                3..=5 if !live.is_empty() => {
+                    // Decode may fail on pool exhaustion; the ledger must
+                    // stay consistent either way.
+                    let &(m, id) = rng.choose(&live);
+                    let _ = ms[m].decode_step(id, &hw);
+                }
+                6 if !live.is_empty() => {
+                    let &(m, id) = rng.choose(&live);
+                    ms[m].fork(id, next_id).unwrap();
+                    live.push((m, next_id));
+                    next_id += 1;
+                }
+                7 if !live.is_empty() => {
+                    let i = rng.usize(0, live.len());
+                    let (m, id) = live.swap_remove(i);
+                    ms[m].retire(id).unwrap();
+                }
+                _ => {}
+            }
+            let private: u64 = ms.iter().map(|mg| mg.remote_kv_bytes).sum();
+            assert_eq!(
+                pool.used(),
+                private + idx.resident_bytes(),
+                "seed {seed}: pool ledger diverged from the deduped sum"
+            );
+        }
+        // Drain: retiring every sequence leaves exactly the cached
+        // prefixes, and evicting those empties the pool to zero.
+        for (m, id) in live.drain(..) {
+            ms[m].retire(id).unwrap();
+        }
+        let resident = idx.resident_bytes();
+        assert_eq!(pool.used(), resident, "seed {seed}: private bytes leaked");
+        assert_eq!(idx.evict(&pool, u64::MAX), resident, "seed {seed}: eviction fell short");
+        assert_eq!(pool.used(), 0, "seed {seed}: eviction leaked");
+        assert!(idx.is_empty(), "seed {seed}");
+    }
+
+    // (b) A prefix-hit admission is byte-identical downstream to a cold
+    // prefill of the same prompt: the hit blocks never re-prefill, and
+    // every subsequent decode step moves the same bytes and charges the
+    // same host time.
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed + 16_500);
+        let hw = hw(&mut rng);
+        let kv_per_tok = 64 * 1024u64;
+        let bt = NsaConfig::default().block_tokens;
+        let block = bt as u64 * kv_per_tok;
+        let hashes = template_prefix_hashes(seed, rng.usize(1, 6) * bt, bt);
+        let prompt = hashes.len() * bt + rng.usize(1, 400);
+        let steps = rng.usize(1, 120);
+        let run = |warm: bool| {
+            let pool = PoolHandle::new_chunked(1 << 40, block);
+            let idx = PrefixIndex::new();
+            let mut m = KvCacheManager::with_pool_and_index(
+                KvPolicy::FullOffload,
+                NsaConfig::default(),
+                kv_per_tok,
+                1 << 30,
+                pool.clone(),
+                Some(idx.clone()),
+            );
+            if warm {
+                // A sibling prefills the template and retires; the prefix
+                // stays index-resident, so the probe admission hits.
+                m.admit_prefix(1000, prompt, &hashes, &hw).unwrap();
+                m.retire(1000).unwrap();
+            }
+            let admit = m.admit_prefix(1, prompt, &hashes, &hw).unwrap();
+            let costs: Vec<(u64, u64, u64)> = (0..steps)
+                .map(|_| {
+                    let c = m.decode_step(1, &hw).unwrap();
+                    (c.r2d_bytes, c.d2r_bytes, c.cpu_us.to_bits())
+                })
+                .collect();
+            (admit.hit_blocks, admit.cost.d2r_bytes, costs)
+        };
+        let (cold_hits, cold_d2r, cold_costs) = run(false);
+        let (warm_hits, warm_d2r, warm_costs) = run(true);
+        assert_eq!(cold_hits, 0, "seed {seed}: cold run must miss");
+        assert_eq!(warm_hits, hashes.len(), "seed {seed}: warm run must hit every block");
+        assert_eq!(
+            warm_d2r,
+            cold_d2r - hashes.len() as u64 * block,
+            "seed {seed}: hit blocks must not re-prefill"
+        );
+        assert_eq!(cold_costs, warm_costs, "seed {seed}: decode paths diverged after admission");
     }
 }
