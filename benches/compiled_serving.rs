@@ -18,12 +18,14 @@
 //! `BENCH_compiled_serving.json` — throughput, P99 decode step, peak
 //! device bytes, deferred bytes, the compile-cache hit rate and the
 //! step-compile latency (total + worst single compile, miss path only)
-//! per configuration — so CI can track the perf trajectory and assert the
+//! per configuration, plus the TransferSan analyze latency on the
+//! round-trip schedules — so CI can track the perf trajectory and assert the
 //! steady-state hit rate stays ≥ 90%. Pass `tiny` as the first argument
 //! for the CI-sized workload. A representative snapshot is committed at
 //! `benches/snapshots/BENCH_compiled_serving.json`.
 
-use hyperoffload::graph::GraphBuilder;
+use hyperoffload::analysis::analyze;
+use hyperoffload::graph::{Graph, GraphBuilder, OpId, Reach, TrackedSet};
 use hyperoffload::kvcache::NsaConfig;
 use hyperoffload::passes::{Compiler, SloThrottle};
 use hyperoffload::serving::{EngineConfig, ModelCost, ServingReport, SimServingEngine};
@@ -189,12 +191,26 @@ fn main() {
         .expect("split compile");
     let ss = simulate(&split, &rs.order, &chw);
 
+    // TransferSan latency on the compiled schedules: the same cache-op
+    // reachability + lint walk the serving `StepCompiler` runs on every
+    // cache-miss step, timed here so the snapshot tracks its cost next
+    // to the compile it audits.
+    let sanitize_us = |g: &Graph, order: &[OpId]| {
+        let t0 = std::time::Instant::now();
+        let anc = Reach::ancestors(g, order, TrackedSet::CacheOps);
+        let r = analyze(g, order, &anc, &chw);
+        std::hint::black_box(r.findings.len());
+        t0.elapsed().as_secs_f64() * 1e6
+    };
+    let san_u = sanitize_us(&unsplit, &ru.order);
+    let san_s = sanitize_us(&split, &rs.order);
+
     let mut t2 = Table::new(
         "round-trip chunking (256 MB activation, 5 GB/s link)",
-        &["schedule", "chunked transfers", "makespan ms", "peak GB", "byte-time GB*s"],
+        &["schedule", "chunked transfers", "makespan ms", "peak GB", "byte-time GB*s", "san us"],
     );
-    for (name, chunked, s) in
-        [("unsplit", ru.chunked, &su), ("chunked", rs.chunked, &ss)]
+    for (name, chunked, s, san) in
+        [("unsplit", ru.chunked, &su, san_u), ("chunked", rs.chunked, &ss, san_s)]
     {
         t2.row(&[
             name.into(),
@@ -202,6 +218,7 @@ fn main() {
             f(s.makespan_us / 1e3, 2),
             f(s.peak_device_bytes as f64 / 1e9, 2),
             f(s.residency_byte_time() / 1e9 / 1e6, 3),
+            f(san, 1),
         ]);
     }
     t2.print();
@@ -234,11 +251,11 @@ fn main() {
     }
     json.push_str(&format!(
         "    {{\"config\": \"roundtrip-unsplit\", \"makespan_us\": {:.3}, \
-         \"peak_device_bytes\": {}, \"chunked\": {}}},\n    {{\"config\": \
-         \"roundtrip-chunked\", \"makespan_us\": {:.3}, \"peak_device_bytes\": {}, \
-         \"chunked\": {}}}\n",
-        su.makespan_us, su.peak_device_bytes, ru.chunked, ss.makespan_us,
-        ss.peak_device_bytes, rs.chunked,
+         \"peak_device_bytes\": {}, \"chunked\": {}, \"sanitize_us\": {:.1}}},\n    \
+         {{\"config\": \"roundtrip-chunked\", \"makespan_us\": {:.3}, \
+         \"peak_device_bytes\": {}, \"chunked\": {}, \"sanitize_us\": {:.1}}}\n",
+        su.makespan_us, su.peak_device_bytes, ru.chunked, san_u, ss.makespan_us,
+        ss.peak_device_bytes, rs.chunked, san_s,
     ));
     json.push_str("  ]\n}\n");
     let path = "BENCH_compiled_serving.json";

@@ -15,10 +15,11 @@
 
 use std::time::Instant;
 
-use hyperoffload::graph::GraphBuilder;
+use hyperoffload::analysis::{analyze, to_diagnostics, LintConfig};
+use hyperoffload::graph::{GraphBuilder, Reach, TrackedSet};
 use hyperoffload::passes::{
     prefetch_insert, refine, Compiler, ExecOrderConfig, OffloadPolicy, RecomputeVsOffload,
-    SloThrottle,
+    Severity, SloThrottle,
 };
 use hyperoffload::memory::DeviceAllocator;
 use hyperoffload::serving::{EngineConfig, ModelCost, SimServingEngine, WorkloadConfig};
@@ -85,6 +86,48 @@ fn main() {
             format!("{n} ops"),
             format!("{:.1} ms", fast * 1e3),
             format!("{:.2}x vs full-recompute ({:.1} ms)", slow / fast, slow * 1e3),
+        ]);
+    }
+
+    // 1c. TransferSan on the same production-scale compile: cache-op
+    // reachability plus the full lint walk, timed against the pipeline
+    // it audits. The analyzer must stay under 10% of compile time at
+    // 20k ops — that bound is what lets `sanitize(true)` ride in the
+    // default strict-verify CI job and on every serving step compile.
+    {
+        let n = 20_000usize;
+        let (mut g, _) = GraphBuilder::chain_with_remote_weights(n, 4e12, MB, 64 * MB);
+        let t0 = Instant::now();
+        let report = Compiler::new(hw.clone())
+            .policy(OffloadPolicy { min_bytes: 16 << 20, ..Default::default() })
+            .slo_us(1e15)
+            .pass(RecomputeVsOffload::default())
+            .pass(SloThrottle::default())
+            .compile(&mut g)
+            .unwrap();
+        let compile = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let anc = Reach::ancestors(&g, &report.order, TrackedSet::CacheOps);
+        let a = analyze(&g, &report.order, &anc, &hw);
+        let san = t1.elapsed().as_secs_f64();
+        std::hint::black_box(a.findings.len());
+        let diags = to_diagnostics(&a, &LintConfig::default());
+        assert!(
+            diags.iter().all(|d| d.severity != Severity::Error),
+            "TransferSan flagged the compiled {n}-op graph: {:?}",
+            diags.iter().find(|d| d.severity == Severity::Error)
+        );
+        assert!(
+            san < compile * 0.10,
+            "TransferSan {:.1} ms is >=10% of the {:.1} ms full-pipeline compile",
+            san * 1e3,
+            compile * 1e3
+        );
+        t.row(&[
+            "TransferSan (reach+analyze)".into(),
+            format!("{n} ops"),
+            format!("{:.1} ms", san * 1e3),
+            format!("{:.1}% of {:.0} ms compile", 100.0 * san / compile, compile * 1e3),
         ]);
     }
 

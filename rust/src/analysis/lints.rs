@@ -1,0 +1,232 @@
+//! The lint registry: named analyzer findings with configurable levels,
+//! and the mapping from a finished [`AnalysisReport`] to the compiler's
+//! [`Diagnostic`] stream.
+//!
+//! Levels follow the rustc model: every lint ships a default
+//! ([`LintSpec::default`]), a session overrides per name
+//! ([`LintConfig::set`], surfaced as `Compiler::lint`), `Deny` findings
+//! become [`Severity::Error`] diagnostics (a compile failure), `Warn`
+//! findings become warnings (fatal only under `Compiler::deny_warnings`
+//! or `--cfg strict_verify`), and `Allow` findings are dropped.
+
+use crate::passes::{Diagnostic, Severity};
+
+use super::{AnalysisReport, Finding};
+
+pub const RACE_STORE_CONSUMER: &str = "race::store_consumer";
+pub const RACE_ACQUIRE_ACQUIRE: &str = "race::acquire_acquire";
+pub const RESIDENCY_NO_ACQUIRE: &str = "residency::no_acquire";
+pub const RESIDENCY_USE_AFTER_RELEASE: &str = "residency::use_after_release";
+pub const RESIDENCY_DOUBLE_RELEASE: &str = "residency::double_release";
+pub const RESIDENCY_RELEASE_NONRESIDENT: &str = "residency::release_nonresident";
+pub const CHUNK_SIBLING_RELEASE: &str = "chunk::sibling_release";
+pub const LEDGER_LEAK: &str = "ledger::leak";
+pub const PEAK_UNBOUNDED: &str = "peak::unbounded";
+
+/// Diagnostic pass label every TransferSan finding is reported under.
+pub const PASS: &str = "transfer-san";
+
+/// How a lint's findings surface.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LintLevel {
+    /// Dropped.
+    Allow,
+    /// [`Severity::Warning`] — fatal only under `deny_warnings`.
+    Warn,
+    /// [`Severity::Error`] — fails the compile.
+    Deny,
+}
+
+/// One registry entry.
+#[derive(Debug, Clone, Copy)]
+pub struct LintSpec {
+    pub name: &'static str,
+    pub default: LintLevel,
+    /// One-line meaning.
+    pub summary: &'static str,
+    /// What makes it fire (the proved condition).
+    pub trigger: &'static str,
+}
+
+/// Every lint TransferSan can emit. `Compiler::lint` names must come from
+/// this table; unknown names are ignored.
+pub const LINTS: &[LintSpec] = &[
+    LintSpec {
+        name: RESIDENCY_NO_ACQUIRE,
+        default: LintLevel::Deny,
+        summary: "reader of a non-resident tensor without a forced acquire",
+        trigger: "no Prefetch (and no initial/produced residency) is forced before the reader",
+    },
+    LintSpec {
+        name: RESIDENCY_USE_AFTER_RELEASE,
+        default: LintLevel::Deny,
+        summary: "read after a forced release with no re-acquire",
+        trigger: "a Store/Detach is forced before the reader and no Prefetch is forced between",
+    },
+    LintSpec {
+        name: RACE_STORE_CONSUMER,
+        default: LintLevel::Deny,
+        summary: "release races a consumer",
+        trigger: "a Store/Detach and a reader of the same tensor are unordered \
+                  (some linearization runs the release first)",
+    },
+    LintSpec {
+        name: RESIDENCY_DOUBLE_RELEASE,
+        default: LintLevel::Deny,
+        summary: "double free of a device region",
+        trigger: "two releases of one tensor with no re-acquire forced between them",
+    },
+    LintSpec {
+        name: RESIDENCY_RELEASE_NONRESIDENT,
+        default: LintLevel::Deny,
+        summary: "release of bytes that were never device-resident",
+        trigger: "no acquire is forced before the Store/Detach of a remote-home tensor",
+    },
+    LintSpec {
+        name: CHUNK_SIBLING_RELEASE,
+        default: LintLevel::Deny,
+        summary: "chunk release can starve a reader of the parent region",
+        trigger: "a chunk view's Store/Detach can run before a parent-region reader \
+                  with no chunk re-acquire forced between",
+    },
+    LintSpec {
+        name: RACE_ACQUIRE_ACQUIRE,
+        default: LintLevel::Warn,
+        summary: "acquire of possibly already-resident bytes",
+        trigger: "no release is forced between the acquire and a prior residency source \
+                  (initial residency, the producer, or an earlier Prefetch)",
+    },
+    LintSpec {
+        name: LEDGER_LEAK,
+        default: LintLevel::Warn,
+        summary: "acquired bytes with no forced release or use",
+        trigger: "neither a Store/Detach nor a reader is forced after the Prefetch",
+    },
+    LintSpec {
+        name: PEAK_UNBOUNDED,
+        default: LintLevel::Allow,
+        summary: "static residency bound exceeds device capacity",
+        trigger: "the antichain peak bound is larger than HwConfig::device_capacity \
+                  (the pinned order may still fit; the guarantee is order-robust)",
+    },
+];
+
+/// Per-session lint levels: registry defaults plus overrides.
+#[derive(Debug, Clone, Default)]
+pub struct LintConfig {
+    overrides: Vec<(&'static str, LintLevel)>,
+}
+
+impl LintConfig {
+    /// Override `name`'s level. Unknown names are ignored (returns
+    /// `false`) so configs stay forward-compatible across lint additions.
+    pub fn set(&mut self, name: &str, level: LintLevel) -> bool {
+        let Some(spec) = LINTS.iter().find(|s| s.name == name) else {
+            return false;
+        };
+        if let Some(e) = self.overrides.iter_mut().find(|(n, _)| *n == spec.name) {
+            e.1 = level;
+        } else {
+            self.overrides.push((spec.name, level));
+        }
+        true
+    }
+
+    /// Effective level for `name` (override, else registry default, else
+    /// `Allow` for unregistered names).
+    pub fn level_of(&self, name: &str) -> LintLevel {
+        self.overrides
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|&(_, l)| l)
+            .or_else(|| LINTS.iter().find(|s| s.name == name).map(|s| s.default))
+            .unwrap_or(LintLevel::Allow)
+    }
+}
+
+/// Lower a report into the compiler's diagnostic stream under `cfg`'s
+/// levels. Always ends with one `Info` line carrying the static peak
+/// bound, so a clean run still leaves an audit trail in the compile
+/// report.
+pub fn to_diagnostics(report: &AnalysisReport, cfg: &LintConfig) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for f in &report.findings {
+        let severity = match cfg.level_of(f.lint) {
+            LintLevel::Allow => continue,
+            LintLevel::Warn => Severity::Warning,
+            LintLevel::Deny => Severity::Error,
+        };
+        let d = Diagnostic::new(severity, PASS, format!("{}: {}", f.lint, f.message));
+        out.push(match f.op {
+            Some(op) => d.with_op(op),
+            None => d,
+        });
+    }
+    out.push(Diagnostic::info(
+        PASS,
+        format!(
+            "static peak residency bound {} bytes over {} chain(s); device capacity {} bytes",
+            report.peak_bound_bytes, report.chains, report.device_capacity
+        ),
+    ));
+    out
+}
+
+/// Convenience for tests and tools: the registry entry for `name`.
+pub fn spec(name: &str) -> Option<&'static LintSpec> {
+    LINTS.iter().find(|s| s.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_namespaced() {
+        for (i, a) in LINTS.iter().enumerate() {
+            assert!(a.name.contains("::"), "lint '{}' not namespaced", a.name);
+            for b in &LINTS[i + 1..] {
+                assert_ne!(a.name, b.name, "duplicate lint name");
+            }
+        }
+    }
+
+    #[test]
+    fn config_overrides_and_ignores_unknown() {
+        let mut cfg = LintConfig::default();
+        assert_eq!(cfg.level_of(RACE_STORE_CONSUMER), LintLevel::Deny);
+        assert_eq!(cfg.level_of(LEDGER_LEAK), LintLevel::Warn);
+        assert_eq!(cfg.level_of(PEAK_UNBOUNDED), LintLevel::Allow);
+
+        assert!(cfg.set(RACE_STORE_CONSUMER, LintLevel::Allow));
+        assert!(cfg.set(PEAK_UNBOUNDED, LintLevel::Deny));
+        assert_eq!(cfg.level_of(RACE_STORE_CONSUMER), LintLevel::Allow);
+        assert_eq!(cfg.level_of(PEAK_UNBOUNDED), LintLevel::Deny);
+
+        assert!(!cfg.set("race::not_a_lint", LintLevel::Deny));
+        assert_eq!(cfg.level_of("race::not_a_lint"), LintLevel::Allow);
+    }
+
+    #[test]
+    fn deny_becomes_error_warn_becomes_warning_allow_drops() {
+        let report = AnalysisReport {
+            findings: vec![
+                Finding { lint: RACE_STORE_CONSUMER, op: Some(3), message: "x".into() },
+                Finding { lint: LEDGER_LEAK, op: None, message: "y".into() },
+                Finding { lint: PEAK_UNBOUNDED, op: None, message: "z".into() },
+            ],
+            peak_bound_bytes: 7,
+            chains: 2,
+            device_capacity: 100,
+        };
+        let diags = to_diagnostics(&report, &LintConfig::default());
+        assert_eq!(diags.len(), 3, "allow-level finding must drop; info bound must stay");
+        assert_eq!(diags[0].severity, Severity::Error);
+        assert_eq!(diags[0].op, Some(3));
+        assert!(diags[0].message.starts_with("race::store_consumer:"));
+        assert_eq!(diags[1].severity, Severity::Warning);
+        assert_eq!(diags[2].severity, Severity::Info);
+        assert!(diags[2].message.contains("7 bytes"));
+        assert!(diags.iter().all(|d| d.pass == PASS));
+    }
+}

@@ -1,0 +1,157 @@
+//! TransferSan — an order-robust static analyzer for the cache-op IR.
+//!
+//! The verifier (`passes::verify_ir`) checks one *pinned* execution order.
+//! That is not enough: the runtime dispatches any dependency-consistent
+//! linearization, so a schedule that is residency-safe in the order the
+//! decision passes validated can still read an offloaded tensor, double
+//! free a pool region, or race a Store against a consumer in another
+//! valid order. TransferSan proves those properties for **all**
+//! linearizations at once, without simulating any of them.
+//!
+//! ## The abstract domain
+//!
+//! Per managed tensor, the analyzer reasons in a small residency lattice:
+//!
+//! ```text
+//!              ⊤ (unknown)
+//!            /   |        \
+//!      Device   Pool   Partial{chunks}     Released
+//!            \   |        /
+//!              ⊥ (impossible)
+//! ```
+//!
+//! * `Device` — bytes resident in HBM (initial residency, a producer's
+//!   allocation, or a completed `Prefetch`).
+//! * `Pool` — bytes live in the remote pool (`Store` completed, or a
+//!   remote-home tensor before its first `Prefetch`).
+//! * `Partial{chunks}` — chunk views ([`alias_of`]) of the storage moved
+//!   independently; the parent region is split between tiers.
+//! * `Released` — dropped (`Detach`, or double-released storage).
+//!
+//! A concrete linearization walks each tensor through these states. The
+//! analyzer computes, per (tensor, op) pair, the **join over every
+//! linearization** of the states the tensor may be in when the op runs —
+//! but it never enumerates orders. The join is decidable from the
+//! happens-before relation alone: a reader is safe iff an acquire
+//! (`Prefetch`, initial residency, or the producer's allocation) is
+//! *forced* before it and no release (`Store`/`Detach`) can interleave
+//! without a re-acquire. Those "forced before / possibly between"
+//! questions are bitset-reachability queries against the shared
+//! [`Reach`](crate::graph::Reach) matrices (ancestors + descendants over
+//! the cache-op columns), the same structure the verifier uses — so the
+//! whole analysis is a few bit tests per (cache op, consumer) pair and
+//! stays cheap at 20k ops.
+//!
+//! Two-sided queries decide the interleavings: with `anc` the ancestor
+//! matrix and `desc` the descendant matrix, "some acquire is forced
+//! between release `r` and reader `o`" is `row_anc(o) ∩ row_desc(r) ∩
+//! acquires ≠ ∅`; if `r` and `o` are *unordered*, no op can be forced
+//! between them at all, and placing them adjacently is always realizable
+//! — which is why unordered (release, reader) pairs are races outright.
+//!
+//! ## The lint registry
+//!
+//! Findings are reported through a rustc-style lint table
+//! ([`LINTS`]) with per-session levels ([`LintConfig`],
+//! `Compiler::lint`). Deny lints are proofs of a realizable failure;
+//! Warn lints flag wasted transfers or unbalanced pool ledgers.
+//!
+//! | lint | default | fires when |
+//! |------|---------|------------|
+//! | `residency::no_acquire` | Deny | a reader of a non-resident-home tensor has no acquire forced before it |
+//! | `residency::use_after_release` | Deny | a release is forced before a reader with no re-acquire forced between |
+//! | `race::store_consumer` | Deny | a release and a reader are unordered (adjacent placement realizable) |
+//! | `residency::double_release` | Deny | two releases with no re-acquire forced between (or unordered) |
+//! | `residency::release_nonresident` | Deny | a release with no acquire forced before it on a never-resident tensor |
+//! | `chunk::sibling_release` | Deny | a chunk view's release can overtake a reader of the parent region |
+//! | `race::acquire_acquire` | Warn | an acquire whose bytes may already be resident (no release forced since the prior source) |
+//! | `ledger::leak` | Warn | an acquire with neither a release nor a reader forced after it |
+//! | `peak::unbounded` | Allow | the static residency bound exceeds device capacity |
+//!
+//! ## The static peak bound
+//!
+//! [`analyze`] also reports an order-robust **upper bound** on peak device
+//! residency ([`AnalysisReport::peak_bound_bytes`]): tensors are greedily
+//! partitioned into chains such that within a chain, every alloc/free
+//! event of one tensor is forced (happens-before) strictly before the
+//! next tensor's first allocation — so no two tensors of a chain can ever
+//! be resident simultaneously, in *any* linearization, and the bound is
+//! the sum over chains of each chain's largest tensor. The simulator's
+//! time-aware peak for any valid order is ≤ this bound (property P15);
+//! the bound is deliberately loose (it ignores transfer timing) — it is
+//! the capacity guarantee a scheduler may rely on before picking an
+//! order.
+//!
+//! ## Writing a new lint
+//!
+//! A lint is (1) a registry entry and (2) a check in
+//! [`sanitizer::analyze`] that pushes a [`Finding`] with the registered
+//! name. For example, a lint flagging `Detach` of a tensor that was never
+//! device-resident:
+//!
+//! ```text
+//! // lints.rs — register it:
+//! pub const DETACH_COLD: &str = "residency::detach_cold";
+//! LintSpec { name: DETACH_COLD, default: LintLevel::Warn,
+//!            summary: "Detach of a never-resident tensor",
+//!            trigger: "no acquire is forced before the Detach" },
+//!
+//! // sanitizer.rs — inside the per-tensor loop:
+//! for &r in releases {
+//!     if matches!(g.op(r).kind, OpKind::Detach { .. })
+//!         && !anc.row_intersects(r, &acquire_mask)
+//!     {
+//!         findings.push(Finding {
+//!             lint: lints::DETACH_COLD,
+//!             op: Some(r),
+//!             message: format!("detach of cold '{}'", tensor.name),
+//!         });
+//!     }
+//! }
+//! ```
+//!
+//! Severity mapping, `allow`/`warn`/`deny` overrides and the
+//! `deny_warnings` compile mode come for free from
+//! [`to_diagnostics`] — the sanitizer never constructs
+//! [`Diagnostic`](crate::passes::Diagnostic)s itself.
+//!
+//! Run the analyzer as a pipeline stage with `Compiler::sanitize(true)`
+//! (or build with `--cfg strict_verify`, which forces it after every
+//! pass and promotes warnings to failures).
+//!
+//! [`alias_of`]: crate::graph::TensorInfo::alias_of
+
+pub mod lints;
+pub mod sanitizer;
+
+pub use lints::{to_diagnostics, LintConfig, LintLevel, LintSpec, LINTS};
+pub use sanitizer::analyze;
+
+use crate::graph::OpId;
+
+/// One lint hit: a named, op-anchored fact the analyzer proved about the
+/// graph. Severity is *not* part of a finding — the session's
+/// [`LintConfig`] decides that at diagnostic time.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Registered lint name (`LINTS` entry), e.g. `race::store_consumer`.
+    pub lint: &'static str,
+    /// The op the finding anchors to (the reader for residency lints, the
+    /// offending cache op otherwise). `None` for graph-wide findings.
+    pub op: Option<OpId>,
+    pub message: String,
+}
+
+/// Everything one [`analyze`] run proved.
+#[derive(Debug, Clone)]
+pub struct AnalysisReport {
+    /// Lint hits, in tensor-id order.
+    pub findings: Vec<Finding>,
+    /// Order-robust upper bound on peak device residency (bytes): the
+    /// simulator's peak under any valid linearization is at most this.
+    pub peak_bound_bytes: u64,
+    /// Number of antichain-free tensor chains backing the bound.
+    pub chains: usize,
+    /// Device capacity the bound was judged against (`HwConfig`).
+    pub device_capacity: u64,
+}

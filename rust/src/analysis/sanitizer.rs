@@ -1,0 +1,674 @@
+//! The TransferSan core: per-tensor residency checks and the order-robust
+//! peak bound, all answered from the shared [`Reach`] matrices.
+//!
+//! Notation used throughout: `x ⇝ y` means `x` happens-before `y` in
+//! **every** valid linearization (a dependency path exists). `anc` is the
+//! ancestor matrix (row(o) = tracked cache ops forced at-or-before `o`),
+//! `desc` the descendant matrix (row(o) = tracked cache ops forced
+//! at-or-after `o`). Two facts carry most of the analysis:
+//!
+//! 1. "some acquire is forced between `a` and `b`" ⇔
+//!    `row_anc(b) ∩ row_desc(a) ∩ acquires ≠ ∅` — an op in both rows is
+//!    after `a` and before `b` in every order.
+//! 2. If `a` and `b` are *unordered*, nothing can be forced between them
+//!    (it would transitively order them), and scheduling them adjacently
+//!    in either direction is realizable — so unordered (release, reader)
+//!    and (release, release) pairs are violations outright, no
+//!    interleaving analysis needed.
+
+use crate::graph::{Graph, OpId, OpKind, Reach, Tier, TrackedSet};
+use crate::sim::HwConfig;
+
+use super::lints;
+use super::{AnalysisReport, Finding};
+
+/// Chains scanned per tensor when building the peak bound. First-fit over
+/// a bounded window keeps the partition O(tensors × cap) — beyond the cap
+/// a tensor just opens a new chain (the bound gets looser, never wrong).
+const CHAIN_SCAN_CAP: usize = 64;
+
+/// Run every registered lint plus the static peak bound over `g`.
+///
+/// `order` must be a valid topological order (only used to orient the
+/// sweeps — the result is order-robust, since reachability is a property
+/// of the DAG, not of the chosen linearization). `anc` is the cache-op
+/// ancestor matrix for exactly this graph (the compiler session shares
+/// its cached copy); the descendant matrix is built here (it is not
+/// incrementally patchable, and one reverse sweep is cheap).
+pub fn analyze(g: &Graph, order: &[OpId], anc: &Reach, hw: &HwConfig) -> AnalysisReport {
+    let desc = Reach::descendants(g, order, TrackedSet::CacheOps);
+
+    // Cache ops per tensor, in op-id order.
+    let nt = g.tensors.len();
+    let mut acquires: Vec<Vec<OpId>> = vec![Vec::new(); nt];
+    let mut releases: Vec<Vec<OpId>> = vec![Vec::new(); nt];
+    for op in &g.ops {
+        match op.kind {
+            OpKind::Prefetch { tensor } => acquires[tensor].push(op.id),
+            OpKind::Store { tensor } | OpKind::Detach { tensor } => releases[tensor].push(op.id),
+            _ => {}
+        }
+    }
+
+    let mut findings = Vec::new();
+    for t in &g.tensors {
+        let acq = &acquires[t.id];
+        let rel = &releases[t.id];
+        let readers: Vec<OpId> = g
+            .consumers_of(t.id)
+            .iter()
+            .copied()
+            .filter(|&c| !g.op(c).kind.is_cache_op())
+            .collect();
+        let managed = !acq.is_empty() || !rel.is_empty();
+        // Unmanaged tensors are the static planner's business, same as the
+        // verifier: a split rewrite may retire a tensor's transfers and
+        // move its bytes through replacement chunk tensors, keeping the
+        // original input edges only as logical-value bookkeeping.
+        if !managed {
+            continue;
+        }
+        let producer = g.producer_of(t.id);
+        // Residency sources that need no acquire: device-home bytes are
+        // resident from t=0 (graph inputs) or from the producer's
+        // allocation — and every cache op and reader of a produced tensor
+        // has a data edge from the producer, so production is always
+        // forced first.
+        let init = t.home == Tier::Device && producer.is_none();
+        let produced_on_device = t.home == Tier::Device && producer.is_some();
+        let mask_a = anc.mask(acq.iter().copied());
+        let mask_r = anc.mask(rel.iter().copied());
+
+        // -- residency::no_acquire ------------------------------------
+        if !init && !produced_on_device {
+            for &o in &readers {
+                if !anc.row_intersects(o, &mask_a) {
+                    findings.push(Finding {
+                        lint: lints::RESIDENCY_NO_ACQUIRE,
+                        op: Some(o),
+                        message: format!(
+                            "'{}' reads '{}' (home {:?}) with no prefetch forced before it",
+                            g.op(o).name, t.name, t.home
+                        ),
+                    });
+                }
+            }
+        }
+
+        // -- residency::use_after_release / race::store_consumer ------
+        for &r in rel {
+            for &o in &readers {
+                if anc.contains(o, r) {
+                    // r ⇝ o: the reader needs a re-acquire forced between.
+                    if !anc.rows_intersect(o, &desc, r, &mask_a) {
+                        findings.push(Finding {
+                            lint: lints::RESIDENCY_USE_AFTER_RELEASE,
+                            op: Some(o),
+                            message: format!(
+                                "'{}' reads '{}' after '{}' released it, with no \
+                                 re-acquire forced between",
+                                g.op(o).name, t.name, g.op(r).name
+                            ),
+                        });
+                    }
+                } else if !desc.contains(o, r) {
+                    // Unordered: r-then-o adjacent is realizable, and no
+                    // acquire can be forced between unordered ops.
+                    findings.push(Finding {
+                        lint: lints::RACE_STORE_CONSUMER,
+                        op: Some(o),
+                        message: format!(
+                            "release '{}' of '{}' is unordered against reader '{}'",
+                            g.op(r).name, t.name, g.op(o).name
+                        ),
+                    });
+                }
+            }
+        }
+
+        // -- residency::double_release --------------------------------
+        for (i, &r1) in rel.iter().enumerate() {
+            for &r2 in &rel[i + 1..] {
+                // Orient the pair if ordered; unordered pairs flag
+                // unconditionally (the between-mask test is vacuously
+                // false for them).
+                let (first, second) = if anc.contains(r2, r1) {
+                    (r1, r2)
+                } else if anc.contains(r1, r2) {
+                    (r2, r1)
+                } else {
+                    (r1, r2)
+                };
+                if !anc.rows_intersect(second, &desc, first, &mask_a) {
+                    findings.push(Finding {
+                        lint: lints::RESIDENCY_DOUBLE_RELEASE,
+                        op: Some(second),
+                        message: format!(
+                            "'{}' and '{}' can both release '{}' with no re-acquire between",
+                            g.op(first).name, g.op(second).name, t.name
+                        ),
+                    });
+                }
+            }
+        }
+
+        // -- residency::release_nonresident ---------------------------
+        if !init && !produced_on_device {
+            for &r in rel {
+                if !anc.row_intersects(r, &mask_a) {
+                    findings.push(Finding {
+                        lint: lints::RESIDENCY_RELEASE_NONRESIDENT,
+                        op: Some(r),
+                        message: format!(
+                            "'{}' releases '{}' (home {:?}), which has no acquire \
+                             forced before it",
+                            g.op(r).name, t.name, t.home
+                        ),
+                    });
+                }
+            }
+        }
+
+        // -- race::acquire_acquire ------------------------------------
+        // An acquire is wasted (and the pool ledger double-counts) when
+        // some linearization runs it while the bytes are already
+        // device-resident: no release is forced between it and a prior
+        // residency source.
+        for &a2 in acq {
+            if init && !anc.row_intersects(a2, &mask_r) {
+                findings.push(Finding {
+                    lint: lints::RACE_ACQUIRE_ACQUIRE,
+                    op: Some(a2),
+                    message: format!(
+                        "'{}' re-loads initially-resident '{}' with no release forced first",
+                        g.op(a2).name, t.name
+                    ),
+                });
+            }
+            if produced_on_device {
+                let p = producer.expect("produced_on_device implies producer");
+                if !anc.rows_intersect(a2, &desc, p, &mask_r) {
+                    findings.push(Finding {
+                        lint: lints::RACE_ACQUIRE_ACQUIRE,
+                        op: Some(a2),
+                        message: format!(
+                            "'{}' re-loads '{}' with no release forced after its producer",
+                            g.op(a2).name, t.name
+                        ),
+                    });
+                }
+            }
+        }
+        for (i, &x) in acq.iter().enumerate() {
+            for &y in &acq[i + 1..] {
+                let (a1, a2) = if anc.contains(y, x) {
+                    (x, y)
+                } else if anc.contains(x, y) {
+                    (y, x)
+                } else {
+                    (x, y) // unordered: the between-test is vacuously false
+                };
+                if !anc.rows_intersect(a2, &desc, a1, &mask_r) {
+                    findings.push(Finding {
+                        lint: lints::RACE_ACQUIRE_ACQUIRE,
+                        op: Some(a2),
+                        message: format!(
+                            "'{}' can re-load '{}' while '{}'s copy is still resident",
+                            g.op(a2).name, t.name, g.op(a1).name
+                        ),
+                    });
+                }
+            }
+        }
+
+        // -- ledger::leak ---------------------------------------------
+        for &a in acq {
+            let released_after = desc.row_intersects(a, &mask_r);
+            let read_after = readers.iter().any(|&o| anc.contains(o, a));
+            if !released_after && !read_after {
+                findings.push(Finding {
+                    lint: lints::LEDGER_LEAK,
+                    op: Some(a),
+                    message: format!(
+                        "'{}' loads '{}' but no release or reader is forced after it",
+                        g.op(a).name, t.name
+                    ),
+                });
+            }
+        }
+
+        // -- chunk::sibling_release -----------------------------------
+        // A chunk view releases part of the parent's storage; readers of
+        // the *whole* parent region need every chunk release ordered
+        // after them or bridged by a chunk re-acquire. Sibling chunks are
+        // disjoint byte ranges and need no cross-check.
+        if let Some(parent) = t.alias_of {
+            for &r in rel {
+                for &o in g.consumers_of(parent) {
+                    if g.op(o).kind.is_cache_op() {
+                        continue;
+                    }
+                    let violation = if anc.contains(o, r) {
+                        !anc.rows_intersect(o, &desc, r, &mask_a)
+                    } else {
+                        !desc.contains(o, r)
+                    };
+                    if violation {
+                        findings.push(Finding {
+                            lint: lints::CHUNK_SIBLING_RELEASE,
+                            op: Some(o),
+                            message: format!(
+                                "chunk release '{}' of '{}' can run before '{}', which \
+                                 reads the parent region '{}'",
+                                g.op(r).name,
+                                t.name,
+                                g.op(o).name,
+                                g.tensor(parent).name
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- static peak residency bound --------------------------------
+    let (peak_bound_bytes, chains) = peak_bound(g, order, anc, &desc, &acquires, &releases);
+    if hw.device_capacity > 0 && peak_bound_bytes > hw.device_capacity {
+        findings.push(Finding {
+            lint: lints::PEAK_UNBOUNDED,
+            op: None,
+            message: format!(
+                "static residency bound {} bytes exceeds device capacity {} bytes",
+                peak_bound_bytes, hw.device_capacity
+            ),
+        });
+    }
+
+    AnalysisReport { findings, peak_bound_bytes, chains, device_capacity: hw.device_capacity }
+}
+
+/// Greedy antichain/chain partition of device-resident tensors.
+///
+/// A tensor's device bytes only ever move at its *events*: the producer's
+/// allocation (or t=0 for device-home inputs), each Prefetch's start,
+/// each Store/Detach's finish, and the refcount free at its last
+/// consumer (the simulator's accounting — cache ops count as consumers).
+/// So if every event op of tensor `t1` is forced **strictly** before
+/// tensor `t2`'s first-allocation op, then `t1`'s bytes are gone before
+/// `t2`'s arrive, in every linearization — the two can share a chain and
+/// only the larger counts toward the bound. Tensors the simulator never
+/// frees (no consumers, no releases) terminate their chain.
+///
+/// Returns `(bound_bytes, chain_count)`.
+fn peak_bound(
+    g: &Graph,
+    order: &[OpId],
+    anc: &Reach,
+    desc: &Reach,
+    acquires: &[Vec<OpId>],
+    releases: &[Vec<OpId>],
+) -> (u64, usize) {
+    let mut pos = vec![usize::MAX; g.ops.len()];
+    for (i, &o) in order.iter().enumerate() {
+        pos[o] = i;
+    }
+
+    struct Cand {
+        bytes: u64,
+        /// Op whose start is the tensor's first allocation; `None` means
+        /// resident from t=0 (device-home input) or no single provable
+        /// first acquire — such tensors always open their own chain.
+        start: Option<OpId>,
+        sort_pos: usize,
+        ends: Vec<OpId>,
+        has_free: bool,
+    }
+
+    let mut cands: Vec<Cand> = Vec::new();
+    for t in &g.tensors {
+        if t.bytes == 0 {
+            continue;
+        }
+        // Device-home chunk views move bytes *within* the parent's
+        // allocation; the parent is counted in full.
+        if t.alias_of.is_some() && t.home == Tier::Device {
+            continue;
+        }
+        let producer = g.producer_of(t.id);
+        let start = if t.home == Tier::Device {
+            producer
+        } else {
+            match acquires[t.id].as_slice() {
+                [] => continue, // never device-resident
+                [a] => Some(*a),
+                _ => None, // several acquires: no single provable first
+            }
+        };
+        // Every op that can carry one of t's alloc/free events.
+        let mut ends: Vec<OpId> = g.consumers_of(t.id).to_vec();
+        if let Some(p) = producer {
+            if !ends.contains(&p) {
+                ends.push(p);
+            }
+        }
+        for &x in acquires[t.id].iter().chain(releases[t.id].iter()) {
+            if !ends.contains(&x) {
+                ends.push(x);
+            }
+        }
+        let has_free = !g.consumers_of(t.id).is_empty();
+        let sort_pos = start.map(|s| pos[s]).unwrap_or(0);
+        cands.push(Cand { bytes: t.bytes, start, sort_pos, ends, has_free });
+    }
+    cands.sort_by_key(|c| (c.sort_pos, std::cmp::Reverse(c.bytes)));
+
+    struct Chain {
+        tail_ends: Vec<OpId>,
+        can_extend: bool,
+        max_bytes: u64,
+    }
+    let mut chains: Vec<Chain> = Vec::new();
+    for c in cands {
+        let slot = c.start.and_then(|s| {
+            let preds = g.preds(s); // sorted, for the untracked-op fallback
+            chains.iter().take(CHAIN_SCAN_CAP).position(|ch| {
+                ch.can_extend
+                    && ch.tail_ends.iter().all(|&x| {
+                        x != s
+                            && (desc.contains(x, s) // s tracked: x ⇝ s
+                                || anc.contains(s, x) // x tracked: x ⇝ s
+                                || preds.binary_search(&x).is_ok())
+                    })
+            })
+        });
+        match slot {
+            Some(i) => {
+                let ch = &mut chains[i];
+                ch.tail_ends = c.ends;
+                ch.can_extend = c.has_free;
+                ch.max_bytes = ch.max_bytes.max(c.bytes);
+            }
+            None => chains.push(Chain {
+                tail_ends: c.ends,
+                can_extend: c.has_free,
+                max_bytes: c.bytes,
+            }),
+        }
+    }
+    (chains.iter().map(|c| c.max_bytes).sum(), chains.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::sim::simulate;
+
+    fn hw() -> HwConfig {
+        HwConfig::test_default()
+    }
+
+    fn run(g: &Graph) -> AnalysisReport {
+        let order = g.topo_order().unwrap();
+        let anc = Reach::ancestors(g, &order, TrackedSet::CacheOps);
+        analyze(g, &order, &anc, &hw())
+    }
+
+    fn names(r: &AnalysisReport) -> Vec<&'static str> {
+        r.findings.iter().map(|f| f.lint).collect()
+    }
+
+    fn denies(r: &AnalysisReport) -> Vec<&'static str> {
+        let cfg = super::super::LintConfig::default();
+        r.findings
+            .iter()
+            .map(|f| f.lint)
+            .filter(|l| cfg.level_of(l) == super::super::LintLevel::Deny)
+            .collect()
+    }
+
+    /// p ── c1 ── st ── pf ── c2: the canonical offload round trip.
+    fn round_trip() -> Graph {
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 8 << 20, Tier::Device);
+        b.compute("p", 1e9, 0, vec![], vec![w]);
+        let c1 = b.compute("c1", 1e9, 0, vec![w], vec![]);
+        let st = b.store("st", w);
+        b.dep(st, c1);
+        let pf = b.prefetch("pf", w);
+        b.dep(pf, st);
+        let c2 = b.compute("c2", 1e9, 0, vec![w], vec![]);
+        b.dep(c2, pf);
+        b.build()
+    }
+
+    #[test]
+    fn clean_round_trip_has_no_findings() {
+        let r = run(&round_trip());
+        assert!(r.findings.is_empty(), "spurious findings: {:?}", r.findings);
+    }
+
+    #[test]
+    fn unordered_release_and_reader_is_a_race() {
+        // Same shape, but c2 waits on nothing cache-side: the store and
+        // the second reader are unordered.
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 8 << 20, Tier::Device);
+        b.compute("p", 1e9, 0, vec![], vec![w]);
+        let c1 = b.compute("c1", 1e9, 0, vec![w], vec![]);
+        let st = b.store("st", w);
+        b.dep(st, c1);
+        b.compute("c2", 1e9, 0, vec![w], vec![]);
+        let g = b.build();
+        let r = run(&g);
+        assert!(names(&r).contains(&lints::RACE_STORE_CONSUMER), "got {:?}", r.findings);
+    }
+
+    #[test]
+    fn forced_read_after_release_without_reacquire() {
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 8 << 20, Tier::Device);
+        b.compute("p", 1e9, 0, vec![], vec![w]);
+        let st = b.store("st", w);
+        let c2 = b.compute("c2", 1e9, 0, vec![w], vec![]);
+        b.dep(c2, st); // reader ordered after the release, no prefetch back
+        let g = b.build();
+        let r = run(&g);
+        assert!(names(&r).contains(&lints::RESIDENCY_USE_AFTER_RELEASE), "got {:?}", r.findings);
+    }
+
+    #[test]
+    fn reader_of_remote_tensor_without_forced_prefetch() {
+        // One prefetch, two readers, only one of them waiting on it: the
+        // other can dispatch while the bytes are still in flight. (The
+        // exact gap the reactive runtime had before it wired every
+        // consumer to the load.)
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 8 << 20, Tier::Remote);
+        let pf = b.prefetch("pf", w);
+        let c1 = b.compute("c1", 1e9, 0, vec![w], vec![]);
+        b.dep(c1, pf);
+        let c2 = b.compute("c2", 1e9, 0, vec![w], vec![]);
+        let g = b.build();
+        let r = run(&g);
+        assert_eq!(names(&r), vec![lints::RESIDENCY_NO_ACQUIRE]);
+        assert_eq!(r.findings[0].op, Some(c2));
+    }
+
+    #[test]
+    fn double_release_needs_reacquire_between() {
+        // Ordered st1 ⇝ st2 with no prefetch between: double free.
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 8 << 20, Tier::Device);
+        b.compute("p", 1e9, 0, vec![], vec![w]);
+        let st1 = b.store("st1", w);
+        let st2 = b.store("st2", w);
+        b.dep(st2, st1);
+        let g = b.build();
+        let r = run(&g);
+        assert!(names(&r).contains(&lints::RESIDENCY_DOUBLE_RELEASE), "got {:?}", r.findings);
+
+        // With a round trip between them, both releases are justified.
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 8 << 20, Tier::Device);
+        b.compute("p", 1e9, 0, vec![], vec![w]);
+        let st1 = b.store("st1", w);
+        let pf = b.prefetch("pf", w);
+        b.dep(pf, st1);
+        let st2 = b.store("st2", w);
+        b.dep(st2, pf);
+        let g = b.build();
+        let r = run(&g);
+        assert!(!names(&r).contains(&lints::RESIDENCY_DOUBLE_RELEASE), "got {:?}", r.findings);
+    }
+
+    #[test]
+    fn release_of_never_resident_remote_tensor() {
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 8 << 20, Tier::Remote);
+        b.store("st", w);
+        let g = b.build();
+        let r = run(&g);
+        assert!(names(&r).contains(&lints::RESIDENCY_RELEASE_NONRESIDENT), "got {:?}", r.findings);
+    }
+
+    #[test]
+    fn duplicate_unordered_prefetch_warns() {
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 8 << 20, Tier::Remote);
+        let pf1 = b.prefetch("pf1", w);
+        b.prefetch("pf2", w);
+        let c = b.compute("c", 1e9, 0, vec![w], vec![]);
+        b.dep(c, pf1);
+        let g = b.build();
+        let r = run(&g);
+        assert!(names(&r).contains(&lints::RACE_ACQUIRE_ACQUIRE), "got {:?}", r.findings);
+    }
+
+    #[test]
+    fn consumerless_prefetch_leaks() {
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 8 << 20, Tier::Remote);
+        b.prefetch("pf", w);
+        let g = b.build();
+        let r = run(&g);
+        assert_eq!(names(&r), vec![lints::LEDGER_LEAK]);
+    }
+
+    #[test]
+    fn chunk_release_racing_parent_reader() {
+        // Parent produced on device; one chunk stored out with no ordering
+        // against the parent-wide reader.
+        let mut g = Graph::new();
+        let w = g.add_tensor("w", 8 << 20, Tier::Device);
+        let p = g.add_op("p", OpKind::Compute { flops: 1e9, bytes_accessed: 0 }, vec![], vec![w]);
+        let c = g.add_op("c", OpKind::Compute { flops: 1e9, bytes_accessed: 0 }, vec![w], vec![]);
+        let ck = g.add_chunk_tensor(w, "w.chunk0", 4 << 20);
+        let st = g.add_op("store.w.chunk0", OpKind::Store { tensor: ck }, vec![ck], vec![]);
+        g.add_control_dep(st, p);
+        let r = run(&g);
+        assert!(names(&r).contains(&lints::CHUNK_SIBLING_RELEASE), "got {:?}", r.findings);
+
+        // Ordering the chunk store after the reader clears it.
+        let mut g2 = g.clone();
+        g2.add_control_dep(st, c);
+        let r2 = run(&g2);
+        assert!(!names(&r2).contains(&lints::CHUNK_SIBLING_RELEASE), "got {:?}", r2.findings);
+    }
+
+    #[test]
+    fn peak_bound_chains_sequential_tensors_and_dominates_sim() {
+        // w1's whole lifetime (pf1, c1) is forced before w2's prefetch, so
+        // the two share a chain: bound = max bytes, not the sum.
+        let mut b = GraphBuilder::new();
+        let w1 = b.tensor("w1", 8 << 20, Tier::Remote);
+        let w2 = b.tensor("w2", 4 << 20, Tier::Remote);
+        let pf1 = b.prefetch("pf1", w1);
+        let c1 = b.compute("c1", 1e9, 0, vec![w1], vec![]);
+        b.dep(c1, pf1);
+        let pf2 = b.prefetch("pf2", w2);
+        b.dep(pf2, c1);
+        let c2 = b.compute("c2", 1e9, 0, vec![w2], vec![]);
+        b.dep(c2, pf2);
+        let g = b.build();
+        let r = run(&g);
+        assert!(denies(&r).is_empty(), "got {:?}", r.findings);
+        assert_eq!(r.peak_bound_bytes, 8 << 20, "sequential lifetimes must share a chain");
+        assert_eq!(r.chains, 1);
+        let order = g.topo_order().unwrap();
+        let sim = simulate(&g, &order, &hw());
+        assert!(sim.peak_device_bytes <= r.peak_bound_bytes);
+    }
+
+    #[test]
+    fn peak_bound_keeps_parallel_tensors_apart() {
+        // Two unordered prefetched weights can be resident together: the
+        // bound must take the sum.
+        let mut b = GraphBuilder::new();
+        let w1 = b.tensor("w1", 8 << 20, Tier::Remote);
+        let w2 = b.tensor("w2", 4 << 20, Tier::Remote);
+        let pf1 = b.prefetch("pf1", w1);
+        let pf2 = b.prefetch("pf2", w2);
+        let c = b.compute("c", 1e9, 0, vec![w1, w2], vec![]);
+        b.dep(c, pf1);
+        b.dep(c, pf2);
+        let g = b.build();
+        let r = run(&g);
+        assert_eq!(r.peak_bound_bytes, 12 << 20);
+        assert_eq!(r.chains, 2);
+    }
+
+    #[test]
+    fn capacity_overflow_reports_peak_unbounded() {
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 8 << 20, Tier::Remote);
+        let pf = b.prefetch("pf", w);
+        let c = b.compute("c", 1e9, 0, vec![w], vec![]);
+        b.dep(c, pf);
+        let g = b.build();
+        let order = g.topo_order().unwrap();
+        let anc = Reach::ancestors(&g, &order, TrackedSet::CacheOps);
+        let mut small = hw();
+        small.device_capacity = 1 << 20;
+        let r = analyze(&g, &order, &anc, &small);
+        assert_eq!(names(&r), vec![lints::PEAK_UNBOUNDED]);
+        // Default lint level keeps it out of the diagnostic stream...
+        let cfg = super::super::LintConfig::default();
+        let diags = super::super::to_diagnostics(&r, &cfg);
+        assert!(diags.iter().all(|d| d.severity == crate::passes::Severity::Info));
+        // ...but a session can deny it.
+        let mut strict = super::super::LintConfig::default();
+        strict.set(lints::PEAK_UNBOUNDED, super::super::LintLevel::Deny);
+        let diags = super::super::to_diagnostics(&r, &strict);
+        assert!(diags.iter().any(|d| d.severity == crate::passes::Severity::Error));
+    }
+
+    #[test]
+    fn compiled_pipeline_output_is_clean_under_random_orders() {
+        // The default pipeline's output must be clean, and stay verifiable
+        // under arbitrary valid linearizations — the analyzer's whole
+        // claim. Also: the static bound dominates the simulated peak of
+        // every sampled order.
+        let mut g = GraphBuilder::fwd_bwd_chain(4, 8 << 20, 10e9, 24, 1e9);
+        let report = crate::passes::Compiler::new(hw()).verify(true).compile(&mut g).unwrap();
+        assert!(!report.inserted.is_empty());
+        let r = run(&g);
+        assert!(denies(&r).is_empty(), "pipeline output denied: {:?}", r.findings);
+        for seed in 0..8 {
+            let order = g.topo_order_seeded(seed).unwrap();
+            let diags = crate::passes::verify_ir(&g, &order);
+            assert!(
+                diags.iter().all(|d| d.severity != crate::passes::Severity::Error),
+                "seed {seed}: {diags:?}"
+            );
+            let sim = simulate(&g, &order, &hw());
+            assert!(
+                sim.peak_device_bytes <= r.peak_bound_bytes,
+                "seed {seed}: sim peak {} > bound {}",
+                sim.peak_device_bytes,
+                r.peak_bound_bytes
+            );
+        }
+    }
+}

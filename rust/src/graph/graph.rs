@@ -423,6 +423,48 @@ impl Graph {
         Ok(order)
     }
 
+    /// A *random* valid topological order: Kahn with the ready set sampled
+    /// uniformly by a seeded PRNG. Deterministic per seed. This is how the
+    /// order-robustness tests exercise linearizations the canonical order
+    /// (and the pinned schedule) never visit — TransferSan's verdicts must
+    /// hold on every one of them.
+    pub fn topo_order_seeded(&self, seed: u64) -> std::result::Result<Vec<OpId>, CycleError> {
+        let n = self.ops.len();
+        let mut indeg = vec![0usize; n];
+        let mut succs: Vec<Vec<OpId>> = vec![Vec::new(); n];
+        for op in &self.ops {
+            for p in self.preds(op.id) {
+                indeg[op.id] += 1;
+                succs[p].push(op.id);
+            }
+        }
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut ready: Vec<OpId> =
+            indeg.iter().enumerate().filter(|&(_, &d)| d == 0).map(|(i, _)| i).collect();
+        let mut order = Vec::with_capacity(n);
+        while !ready.is_empty() {
+            let pick = rng.usize(0, ready.len());
+            let u = ready.swap_remove(pick);
+            order.push(u);
+            for &v in &succs[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    ready.push(v);
+                }
+            }
+        }
+        if order.len() != n {
+            let culprit_ops: Vec<OpId> = indeg
+                .iter()
+                .enumerate()
+                .filter(|&(_, &d)| d > 0)
+                .map(|(i, _)| i)
+                .collect();
+            return Err(CycleError { culprit_ops });
+        }
+        Ok(order)
+    }
+
     /// [`topo_order_detailed`](Self::topo_order_detailed) with the legacy
     /// `anyhow` error type.
     pub fn topo_order(&self) -> Result<Vec<OpId>> {

@@ -9,9 +9,11 @@ mod builder;
 #[allow(clippy::module_inception)]
 mod graph;
 mod op;
+pub mod reach;
 mod tensor;
 
 pub use builder::GraphBuilder;
 pub use graph::{CycleError, Graph, Mutation, RecomputeClone, RecomputePlan};
 pub use op::{Op, OpId, OpKind};
+pub use reach::{Reach, TrackedSet};
 pub use tensor::{TensorId, TensorInfo, Tier};

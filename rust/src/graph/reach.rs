@@ -1,0 +1,395 @@
+//! Bitset reachability over the op DAG, shared by the IR verifier and the
+//! TransferSan static analyzer.
+//!
+//! Both clients ask the same class of question: *which of a small tracked
+//! set of ops (cache operators, mostly) happen-before / happen-after a
+//! given op on **every** dep-consistent linearization?* The answer is the
+//! transitive closure restricted to tracked columns, stored as one bitset
+//! row per op:
+//!
+//! * [`Reach::ancestors`] — `row(o)` holds tracked op `t` iff `t ⇝ o`
+//!   (or `t == o`): `t` completes before `o` starts in every valid order.
+//! * [`Reach::descendants`] — `row(o)` holds `t` iff `o ⇝ t` (or
+//!   `t == o`).
+//!
+//! Rows are reflexive (a tracked op appears in its own row) so "at or
+//! before" queries are one bit test; callers that need strict ordering
+//! exclude equality themselves (tracked/untracked kind splits usually make
+//! the cases disjoint anyway).
+//!
+//! Historically the verifier rebuilt this matrix from scratch inside every
+//! `verify_ir` call — once per pipeline stage. The matrix now lives here,
+//! is cached by the compiler's `AnalysisCache` keyed on the graph version,
+//! and is **patched forward** from the graph's mutation journal
+//! ([`Reach::update`]) when the interim mutations are local (op appends,
+//! forward-edge insertions). A `NonLocal` event or a tracked-bit overflow
+//! falls back to a full rebuild.
+
+use super::graph::{Graph, Mutation};
+use super::op::OpId;
+
+/// Which ops get a bit column.
+#[derive(Debug, Clone)]
+pub enum TrackedSet {
+    /// All cache operators (`Prefetch` / `Store` / `Detach`), in op-id
+    /// order. The only variant that supports journal-driven
+    /// [`Reach::update`] (membership of an appended op is decidable from
+    /// the op alone).
+    CacheOps,
+    /// An explicit op set (kept in the given order, duplicates dropped).
+    Ops(Vec<OpId>),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Dir {
+    /// `row(o)` = tracked ops that happen at-or-before `o`.
+    Ancestors,
+    /// `row(o)` = tracked ops that happen at-or-after `o`.
+    Descendants,
+}
+
+/// Per-op bitsets over a tracked op set. See module docs.
+#[derive(Debug, Clone)]
+pub struct Reach {
+    dir: Dir,
+    cache_ops_tracked: bool,
+    n_ops: usize,
+    /// Tracked ops in bit order.
+    tracked: Vec<OpId>,
+    /// `bit_of[op]` = bit index, or `usize::MAX` when untracked.
+    bit_of: Vec<usize>,
+    /// Words per row, sized with slack so appending tracked ops does not
+    /// immediately force a rebuild.
+    words: usize,
+    /// Row-major `[op][word]`.
+    rows: Vec<u64>,
+}
+
+/// Word capacity for `n` tracked bits, with headroom for incremental
+/// appends (one spare word ≈ 64 more cache ops before a forced rebuild).
+fn words_for(n: usize) -> usize {
+    n / 64 + 2
+}
+
+impl Reach {
+    /// Build the ancestor matrix: one forward sweep along `order`.
+    ///
+    /// `order` must be a valid topological order of `g` (every pred before
+    /// its successor). Out-of-range preds (structurally broken graphs) are
+    /// skipped so the verifier can still run its structural checks first.
+    pub fn ancestors(g: &Graph, order: &[OpId], tracked: TrackedSet) -> Self {
+        let mut r = Self::empty(g, Dir::Ancestors, tracked);
+        r.sweep_forward(g, order, 0, None);
+        r
+    }
+
+    /// Build the descendant matrix: one reverse sweep along `order`.
+    pub fn descendants(g: &Graph, order: &[OpId], tracked: TrackedSet) -> Self {
+        let mut r = Self::empty(g, Dir::Descendants, tracked);
+        let n = g.ops.len();
+        let w = r.words;
+        // Invert preds once; `Graph::succs` is O(n) per call.
+        let mut succs: Vec<Vec<OpId>> = vec![Vec::new(); n];
+        for op in &g.ops {
+            for p in g.preds(op.id) {
+                if p < n {
+                    succs[p].push(op.id);
+                }
+            }
+        }
+        for &o in order.iter().rev() {
+            if o >= n {
+                continue;
+            }
+            for &s in &succs[o] {
+                for k in 0..w {
+                    let m = r.rows[s * w + k];
+                    r.rows[o * w + k] |= m;
+                }
+            }
+            if r.bit_of[o] != usize::MAX {
+                r.rows[o * w + r.bit_of[o] / 64] |= 1u64 << (r.bit_of[o] % 64);
+            }
+        }
+        r
+    }
+
+    fn empty(g: &Graph, dir: Dir, tracked: TrackedSet) -> Self {
+        let n = g.ops.len();
+        let (tracked, cache_ops_tracked) = match tracked {
+            TrackedSet::CacheOps => (g.cache_ops(), true),
+            TrackedSet::Ops(v) => (v, false),
+        };
+        let mut bit_of = vec![usize::MAX; n];
+        let mut kept = Vec::with_capacity(tracked.len());
+        for &t in &tracked {
+            if t < n && bit_of[t] == usize::MAX {
+                bit_of[t] = kept.len();
+                kept.push(t);
+            }
+        }
+        let words = words_for(kept.len());
+        Self { dir, cache_ops_tracked, n_ops: n, tracked: kept, bit_of, words, rows: vec![0; n * words] }
+    }
+
+    /// Forward sweep recomputing rows from position `start` in `order`.
+    /// With `only` set, rows are recomputed only for flagged ops or ops
+    /// with a flagged pred (the incremental path); newly changed rows flag
+    /// their op in turn.
+    fn sweep_forward(&mut self, g: &Graph, order: &[OpId], start: usize, only: Option<&mut Vec<bool>>) {
+        let n = self.n_ops;
+        let w = self.words;
+        let mut scratch: Vec<u64> = vec![0; w];
+        let mut flags = only;
+        for &o in order.iter().skip(start) {
+            if o >= n {
+                continue;
+            }
+            let preds = g.preds(o);
+            if let Some(flagged) = flags.as_deref_mut() {
+                if !flagged[o] && !preds.iter().any(|&p| p < n && flagged[p]) {
+                    continue;
+                }
+            }
+            scratch.fill(0);
+            for &p in &preds {
+                if p >= n {
+                    continue;
+                }
+                for k in 0..w {
+                    scratch[k] |= self.rows[p * w + k];
+                }
+                if self.bit_of[p] != usize::MAX {
+                    scratch[self.bit_of[p] / 64] |= 1u64 << (self.bit_of[p] % 64);
+                }
+            }
+            if self.bit_of[o] != usize::MAX {
+                scratch[self.bit_of[o] / 64] |= 1u64 << (self.bit_of[o] % 64);
+            }
+            let start_w = o * w;
+            if self.rows[start_w..start_w + w] != scratch[..] {
+                self.rows[start_w..start_w + w].copy_from_slice(&scratch);
+                if let Some(flagged) = flags.as_deref_mut() {
+                    flagged[o] = true;
+                }
+            }
+        }
+    }
+
+    /// Patch the matrix forward across journalled `muts`, given a valid
+    /// topological `order` of the *current* graph. Returns `false` when the
+    /// batch cannot be patched (non-local mutation, tracked-bit overflow,
+    /// stale order) — the caller rebuilds.
+    ///
+    /// Only ancestor matrices over [`TrackedSet::CacheOps`] are patchable:
+    /// appends and forward edges only ever extend rows at-or-after the
+    /// mutated op, so one suffix sweep restores the fixpoint. (Descendant
+    /// rows would have to propagate *backwards* through the whole prefix.)
+    pub fn update(&mut self, g: &Graph, order: &[OpId], muts: &[Mutation]) -> bool {
+        if self.dir != Dir::Ancestors || !self.cache_ops_tracked {
+            return false;
+        }
+        let n = g.ops.len();
+        if order.len() != n || n < self.n_ops {
+            return false;
+        }
+        let mut dirty: Vec<OpId> = Vec::new();
+        for m in muts {
+            match *m {
+                Mutation::TensorAdded { .. } | Mutation::TensorMeta => {}
+                Mutation::OpAdded { op }
+                | Mutation::InputAdded { op, .. }
+                | Mutation::ControlDepAdded { op, .. } => dirty.push(op),
+                Mutation::NonLocal => return false,
+            }
+        }
+        if dirty.iter().any(|&o| o >= n) {
+            return false;
+        }
+        // Grow rows / assign bits for appended ops.
+        if n > self.n_ops {
+            self.bit_of.resize(n, usize::MAX);
+            self.rows.resize(n * self.words, 0);
+            for op in &g.ops[self.n_ops..] {
+                if op.kind.is_cache_op() {
+                    let bit = self.tracked.len();
+                    if bit >= self.words * 64 {
+                        return false; // layout overflow — rebuild with fresh slack
+                    }
+                    self.tracked.push(op.id);
+                    self.bit_of[op.id] = bit;
+                }
+            }
+            self.n_ops = n;
+        }
+        if dirty.is_empty() {
+            return true;
+        }
+        // Validate `order` is a permutation placing every pred of a
+        // to-be-recomputed row before it, then run one suffix sweep from
+        // the earliest dirty position.
+        let mut pos = vec![usize::MAX; n];
+        for (i, &o) in order.iter().enumerate() {
+            if o >= n || pos[o] != usize::MAX {
+                return false;
+            }
+            pos[o] = i;
+        }
+        let start = dirty.iter().map(|&o| pos[o]).min().unwrap_or(n);
+        for &o in order.iter().skip(start) {
+            if g.preds(o).iter().any(|&p| p >= n || pos[p] >= pos[o]) {
+                return false; // order is stale w.r.t. the new edges
+            }
+        }
+        let mut flagged = vec![false; n];
+        for &o in &dirty {
+            flagged[o] = true;
+        }
+        self.sweep_forward(g, order, start, Some(&mut flagged));
+        true
+    }
+
+    /// Number of tracked ops (bit columns).
+    pub fn tracked_len(&self) -> usize {
+        self.tracked.len()
+    }
+
+    /// The tracked ops, in bit order.
+    pub fn tracked(&self) -> &[OpId] {
+        &self.tracked
+    }
+
+    /// Bit index of `op`, if tracked.
+    pub fn bit(&self, op: OpId) -> Option<usize> {
+        match self.bit_of.get(op) {
+            Some(&b) if b != usize::MAX => Some(b),
+            _ => None,
+        }
+    }
+
+    /// Does `op`'s row contain tracked op `t`? For an ancestor matrix this
+    /// is "`t ⇝ op` or `t == op`"; for descendants, "`op ⇝ t` or `t == op`".
+    /// `false` when `t` is untracked or out of range.
+    pub fn contains(&self, op: OpId, t: OpId) -> bool {
+        let Some(bit) = self.bit(t) else { return false };
+        if op >= self.n_ops {
+            return false;
+        }
+        self.rows[op * self.words + bit / 64] & (1u64 << (bit % 64)) != 0
+    }
+
+    /// Build a bitmask (in tracked-bit space) over the given ops; untracked
+    /// ops are ignored.
+    pub fn mask<I: IntoIterator<Item = OpId>>(&self, ops: I) -> Vec<u64> {
+        let mut m = vec![0u64; self.words];
+        for op in ops {
+            if let Some(bit) = self.bit(op) {
+                m[bit / 64] |= 1u64 << (bit % 64);
+            }
+        }
+        m
+    }
+
+    /// Does `row(op) ∩ mask` have any bit set?
+    pub fn row_intersects(&self, op: OpId, mask: &[u64]) -> bool {
+        if op >= self.n_ops {
+            return false;
+        }
+        let row = &self.rows[op * self.words..(op + 1) * self.words];
+        row.iter().zip(mask).any(|(a, b)| a & b != 0)
+    }
+
+    /// Does `row_self(a) ∩ row_other(b) ∩ mask` have any bit set? Both
+    /// matrices must share one tracked layout (e.g. the ancestor and
+    /// descendant matrices over `TrackedSet::CacheOps` of one graph); this
+    /// answers "∃ tracked op in `mask` forced between `b` and `a`".
+    pub fn rows_intersect(&self, a: OpId, other: &Reach, b: OpId, mask: &[u64]) -> bool {
+        debug_assert_eq!(self.tracked.len(), other.tracked.len(), "tracked layouts differ");
+        if a >= self.n_ops || b >= other.n_ops {
+            return false;
+        }
+        let ra = &self.rows[a * self.words..(a + 1) * self.words];
+        let rb = &other.rows[b * other.words..(b + 1) * other.words];
+        let w = self.words.min(other.words).min(mask.len());
+        (0..w).any(|i| ra[i] & rb[i] & mask[i] != 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::GraphBuilder;
+    use super::*;
+
+    /// p ── c1 ── st ── pf ── c2   (round trip on w)
+    fn round_trip() -> (Graph, OpId, OpId, OpId, OpId) {
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 64 << 20, crate::graph::Tier::Device);
+        let x = b.tensor("x", 1 << 20, crate::graph::Tier::Device);
+        let p = b.compute("p", 1e9, 0, vec![], vec![w, x]);
+        let c1 = b.compute("c1", 1e9, 0, vec![w, x], vec![]);
+        let st = b.store("st", w);
+        b.dep(st, c1);
+        let pf = b.prefetch("pf", w);
+        b.dep(pf, st);
+        let c2 = b.compute("c2", 1e9, 0, vec![w], vec![]);
+        b.dep(c2, pf);
+        let _ = p;
+        (b.build(), c1, st, pf, c2)
+    }
+
+    #[test]
+    fn ancestors_and_descendants_agree() {
+        let (g, c1, st, pf, c2) = round_trip();
+        let order = g.topo_order().unwrap();
+        let anc = Reach::ancestors(&g, &order, TrackedSet::CacheOps);
+        let desc = Reach::descendants(&g, &order, TrackedSet::CacheOps);
+        assert_eq!(anc.tracked_len(), 2);
+        // st ⇝ pf ⇝ c2; c1 before both.
+        assert!(anc.contains(c2, pf));
+        assert!(anc.contains(c2, st));
+        assert!(anc.contains(pf, st));
+        assert!(!anc.contains(c1, st));
+        assert!(desc.contains(c1, st));
+        assert!(desc.contains(c1, pf));
+        assert!(!desc.contains(c2, st));
+        // reflexive
+        assert!(anc.contains(st, st));
+        assert!(desc.contains(pf, pf));
+        // "a prefetch forced between st and c2"
+        let acq = anc.mask([pf]);
+        assert!(anc.rows_intersect(c2, &desc, st, &acq));
+        // …but nothing tracked is forced between pf and c2 except pf itself.
+        assert!(!anc.rows_intersect(c2, &desc, pf, &anc.mask([st])));
+    }
+
+    #[test]
+    fn update_patches_appends_and_forward_edges() {
+        let (mut g, _c1, st, pf, c2) = round_trip();
+        let order = g.topo_order().unwrap();
+        let mut anc = Reach::ancestors(&g, &order, TrackedSet::CacheOps);
+        let v0 = g.version();
+        // Append a prefetch + consumer, then wire forward edges.
+        let t = g.add_tensor("y", 8 << 20, crate::graph::Tier::Remote);
+        let pf2 = g.add_op("pf2", crate::graph::OpKind::Prefetch { tensor: t }, vec![t], vec![]);
+        let c3 = g.add_op(
+            "c3",
+            crate::graph::OpKind::Compute { flops: 1e9, bytes_accessed: 0 },
+            vec![t],
+            vec![],
+        );
+        g.add_control_dep(c3, pf2);
+        g.add_control_dep(pf2, c2);
+        let muts = g.mutations_since(v0).unwrap();
+        let order2 = g.topo_order().unwrap();
+        assert!(anc.update(&g, &order2, &muts));
+        let fresh = Reach::ancestors(&g, &order2, TrackedSet::CacheOps);
+        for &o in &order2 {
+            for &t in fresh.tracked() {
+                assert_eq!(anc.contains(o, t), fresh.contains(o, t), "op {o} tracked {t}");
+            }
+        }
+        assert!(anc.contains(c3, pf2));
+        assert!(anc.contains(pf2, st));
+        assert!(anc.contains(pf2, pf));
+    }
+}

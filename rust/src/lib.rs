@@ -68,6 +68,7 @@
 //! `Router::partition` path remains as the blind baseline. A cluster of
 //! N=1 reproduces the single-engine timings bit-for-bit.
 
+pub mod analysis;
 #[cfg(feature = "xla")]
 pub mod coordinator;
 pub mod graph;

@@ -26,7 +26,8 @@
 use std::fmt;
 use std::rc::Rc;
 
-use crate::graph::{CycleError, Graph, Mutation, OpId, OpKind, Tier};
+use crate::analysis::{self, LintConfig, LintLevel};
+use crate::graph::{CycleError, Graph, Mutation, OpId, OpKind, Reach, Tier, TrackedSet};
 use crate::sim::HwConfig;
 
 use super::exec_order::{self, ExecOrderConfig};
@@ -170,6 +171,11 @@ pub struct AnalysisCache {
     /// their speculate/validate baseline is the schedule the session would
     /// otherwise emit.
     pinned: Option<(u64, Rc<Vec<OpId>>)>,
+    /// Cache-op ancestor reachability ([`Reach`] over
+    /// [`TrackedSet::CacheOps`]), shared by `verify_ir` and TransferSan.
+    /// Version-keyed like the analyses; journal-patched on local
+    /// mutations.
+    reach: Option<(u64, Rc<Reach>)>,
     /// Journal-driven delta updates enabled (default). Off = every
     /// version bump forces full recomputation, the pre-incremental
     /// behaviour (kept togglable for A/B measurement — see
@@ -188,6 +194,12 @@ pub struct AnalysisCache {
     pub lifetime_deltas: usize,
     /// Lifetime queries requiring full recomputation.
     pub lifetime_misses: usize,
+    /// Reachability queries served from the cache unchanged.
+    pub reach_hits: usize,
+    /// Reachability queries served by journal-driven matrix patching.
+    pub reach_deltas: usize,
+    /// Reachability queries requiring a full matrix rebuild.
+    pub reach_misses: usize,
 }
 
 impl Default for AnalysisCache {
@@ -196,6 +208,7 @@ impl Default for AnalysisCache {
             topo: None,
             lifetime: None,
             pinned: None,
+            reach: None,
             incremental: true,
             topo_hits: 0,
             topo_deltas: 0,
@@ -203,6 +216,9 @@ impl Default for AnalysisCache {
             lifetime_hits: 0,
             lifetime_deltas: 0,
             lifetime_misses: 0,
+            reach_hits: 0,
+            reach_deltas: 0,
+            reach_misses: 0,
         }
     }
 }
@@ -412,6 +428,42 @@ impl AnalysisCache {
         Some(la)
     }
 
+    /// Cache-op ancestor reachability of `g` — the [`Reach`] matrix over
+    /// [`TrackedSet::CacheOps`] shared by the verifier and the TransferSan
+    /// analyzer: a shared view on a version hit, a journal-patched matrix
+    /// on purely local mutations, a full rebuild otherwise.
+    ///
+    /// Counted by the `reach_*` counters, deliberately *outside*
+    /// [`hits`](Self::hits)/[`misses`](Self::misses) (whose exact values
+    /// predate this analysis and are pinned by tests).
+    pub fn reach(&mut self, g: &Graph) -> Result<Rc<Reach>, CompileError> {
+        let v = g.version();
+        if let Some((cv, r)) = &self.reach {
+            if *cv == v {
+                self.reach_hits += 1;
+                return Ok(Rc::clone(r));
+            }
+        }
+        let (order, _) = self.topo_inner(g)?;
+        if self.incremental {
+            if let Some((cv, mut r)) = self.reach.take() {
+                if let Some(muts) = g.mutations_since(cv) {
+                    // A failed update may leave the (uniquely-owned) clone
+                    // half-patched; it is discarded either way.
+                    if Rc::make_mut(&mut r).update(g, &order, &muts) {
+                        self.reach = Some((v, Rc::clone(&r)));
+                        self.reach_deltas += 1;
+                        return Ok(r);
+                    }
+                }
+            }
+        }
+        self.reach_misses += 1;
+        let r = Rc::new(Reach::ancestors(g, &order, TrackedSet::CacheOps));
+        self.reach = Some((v, Rc::clone(&r)));
+        Ok(r)
+    }
+
     /// Pin `order` as the session's current execution order for `g` (valid
     /// until the next structural mutation).
     pub fn pin_order(&mut self, g: &Graph, order: Vec<OpId>) {
@@ -436,6 +488,7 @@ impl AnalysisCache {
         self.topo = None;
         self.lifetime = None;
         self.pinned = None;
+        self.reach = None;
     }
 }
 
@@ -634,9 +687,38 @@ impl Pass for ExecOrderPass {
 ///    cache-managed tensor while it is offloaded.
 ///
 /// Returns all findings; callers decide whether `Error`s are fatal.
+///
+/// Builds the cache-op reachability matrix ad hoc; inside a compile
+/// session prefer [`verify_ir_with`] and the [`AnalysisCache::reach`]
+/// matrix, which is journal-patched across passes instead of rebuilt.
 pub fn verify_ir(g: &Graph, order: &[OpId]) -> Vec<Diagnostic> {
-    const PASS: &str = "verify";
     let mut diags = Vec::new();
+    if !verify_structure_and_order(g, order, &mut diags) {
+        return diags;
+    }
+    let reach = Reach::ancestors(g, order, TrackedSet::CacheOps);
+    verify_semantics(g, order, &reach, &mut diags);
+    diags
+}
+
+/// [`verify_ir`] against a prebuilt cache-op *ancestor* matrix (see
+/// [`Reach::ancestors`] over [`TrackedSet::CacheOps`]). The matrix encodes
+/// dep reachability, which is a property of the graph, not of any one
+/// linearization — so a matrix built under the canonical topological order
+/// is equally valid for verifying a pinned execution order.
+pub fn verify_ir_with(g: &Graph, order: &[OpId], reach: &Reach) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    if !verify_structure_and_order(g, order, &mut diags) {
+        return diags;
+    }
+    verify_semantics(g, order, reach, &mut diags);
+    diags
+}
+
+/// Steps 1–2: structural checks + order validity. `false` = later stages
+/// must not run (they index tensors/ops freely and trust `order`).
+fn verify_structure_and_order(g: &Graph, order: &[OpId], diags: &mut Vec<Diagnostic>) -> bool {
+    const PASS: &str = "verify";
     let nt = g.tensors.len();
     let n = g.ops.len();
 
@@ -689,7 +771,7 @@ pub fn verify_ir(g: &Graph, order: &[OpId]) -> Vec<Diagnostic> {
         }
     }
     if !structural_ok {
-        return diags;
+        return false;
     }
 
     // 2. The order itself.
@@ -698,8 +780,18 @@ pub fn verify_ir(g: &Graph, order: &[OpId]) -> Vec<Diagnostic> {
             PASS,
             "execution order is not a valid topological order of the graph",
         ));
-        return diags;
+        return false;
     }
+    true
+}
+
+/// Steps 3–4: the semantic checks, against a cache-op ancestor `reach`
+/// matrix (historically rebuilt here on every call; now built once per
+/// graph version by [`AnalysisCache::reach`] and shared).
+fn verify_semantics(g: &Graph, order: &[OpId], reach: &Reach, diags: &mut Vec<Diagnostic>) {
+    const PASS: &str = "verify";
+    let nt = g.tensors.len();
+    let n = g.ops.len();
     let mut pos = vec![usize::MAX; n];
     for (i, &o) in order.iter().enumerate() {
         pos[o] = i;
@@ -711,56 +803,25 @@ pub fn verify_ir(g: &Graph, order: &[OpId]) -> Vec<Diagnostic> {
     // after the prefetch in the order (streams run concurrently).
     // Consumers placed before the prefetch read the pre-offload copy and
     // are exempt (the residency walk below polices them).
-    //
-    // Reachability for all (prefetch, consumer) pairs at once: assign each
-    // prefetch a bit and propagate bitmasks forward along the (valid)
-    // execution order — `reach[op] |= reach[pred]` — instead of one DFS
-    // per pair. One O((n + e) · p/64) sweep; `verify(true)` re-runs this
-    // after every pass, so it dominates verification cost at scale.
-    let prefetches: Vec<OpId> = g
-        .ops
-        .iter()
-        .filter(|o| matches!(o.kind, OpKind::Prefetch { .. }))
-        .map(|o| o.id)
-        .collect();
-    if !prefetches.is_empty() {
-        let words = prefetches.len().div_ceil(64);
-        let mut bit_of = vec![usize::MAX; n];
-        for (i, &p) in prefetches.iter().enumerate() {
-            bit_of[p] = i;
-        }
-        let mut reach: Vec<u64> = vec![0; n * words];
-        for &o in order {
-            for p in g.preds(o) {
-                for w in 0..words {
-                    let m = reach[p * words + w];
-                    reach[o * words + w] |= m;
-                }
+    for &pf in reach.tracked() {
+        let OpKind::Prefetch { tensor } = g.op(pf).kind else { continue };
+        for &c in g.consumers_of(tensor) {
+            if c == pf || g.op(c).kind.is_cache_op() || pos[c] < pos[pf] {
+                continue;
             }
-            if bit_of[o] != usize::MAX {
-                reach[o * words + bit_of[o] / 64] |= 1u64 << (bit_of[o] % 64);
-            }
-        }
-        for (i, &pf) in prefetches.iter().enumerate() {
-            let OpKind::Prefetch { tensor } = g.op(pf).kind else { continue };
-            for &c in g.consumers_of(tensor) {
-                if c == pf || g.op(c).kind.is_cache_op() || pos[c] < pos[pf] {
-                    continue;
-                }
-                if reach[c * words + i / 64] & (1u64 << (i % 64)) == 0 {
-                    diags.push(
-                        Diagnostic::error(
-                            PASS,
-                            format!(
-                                "consumer '{}' of prefetch '{}' is not dependency-ordered \
-                                 after transfer completion",
-                                g.op(c).name,
-                                g.op(pf).name
-                            ),
-                        )
-                        .with_op(c),
-                    );
-                }
+            if !reach.contains(c, pf) {
+                diags.push(
+                    Diagnostic::error(
+                        PASS,
+                        format!(
+                            "consumer '{}' of prefetch '{}' is not dependency-ordered \
+                             after transfer completion",
+                            g.op(c).name,
+                            g.op(pf).name
+                        ),
+                    )
+                    .with_op(c),
+                );
             }
         }
     }
@@ -838,7 +899,6 @@ pub fn verify_ir(g: &Graph, order: &[OpId]) -> Vec<Diagnostic> {
             }
         }
     }
-    diags
 }
 
 /// [`verify_ir`] as a pipeline stage: verifies against the cached topo
@@ -860,11 +920,30 @@ impl Pass for VerifyPass {
         _ctx: &PassCtx,
     ) -> Result<PassReport, CompileError> {
         let order = cache.topo_order(g)?;
-        let diags = check_verdict(self.name(), verify_ir(g, &order))?;
+        let reach = cache.reach(g)?;
+        let diags = check_verdict(self.name(), verify_ir_with(g, &order, &reach))?;
         let mut rep = PassReport::new(self.name());
         rep.diagnostics = diags;
         Ok(rep)
     }
+}
+
+/// Run the TransferSan analyzer over the session's current order and the
+/// cached reachability matrix, route findings through the lint config, and
+/// fail on `deny`-level findings like any verifier error.
+fn run_sanitizer(
+    stage: &str,
+    graph: &Graph,
+    cache: &mut AnalysisCache,
+    ctx: &PassCtx,
+    lints: &LintConfig,
+    diagnostics: &mut Vec<Diagnostic>,
+) -> Result<(), CompileError> {
+    let order = cache.pinned_or_topo(graph)?;
+    let reach = cache.reach(graph)?;
+    let report = analysis::analyze(graph, &order, &reach, &ctx.hw);
+    diagnostics.extend(check_verdict(stage, analysis::to_diagnostics(&report, lints))?);
+    Ok(())
 }
 
 /// Split verifier findings: `Err` with the violations if any are
@@ -934,6 +1013,9 @@ pub struct Compiler {
     dma_contention: f64,
     passes: Vec<Box<dyn Pass>>,
     verify: bool,
+    sanitize: bool,
+    deny_warnings: bool,
+    lints: LintConfig,
     incremental: bool,
     /// Diagnostics raised while *building* the session (e.g. a
     /// `pass_before` anchor that is not scheduled); surfaced at the head
@@ -957,6 +1039,9 @@ impl Compiler {
                 Box::new(ExecOrderPass),
             ],
             verify: false,
+            sanitize: false,
+            deny_warnings: false,
+            lints: LintConfig::default(),
             incremental: true,
             pending_diags: Vec::new(),
         }
@@ -972,6 +1057,9 @@ impl Compiler {
             dma_contention: 1.0,
             passes: Vec::new(),
             verify: false,
+            sanitize: false,
+            deny_warnings: false,
+            lints: LintConfig::default(),
             incremental: true,
             pending_diags: Vec::new(),
         }
@@ -1007,6 +1095,36 @@ impl Compiler {
     /// `Error`-severity finding aborts with [`CompileError::Verify`].
     pub fn verify(mut self, on: bool) -> Self {
         self.verify = on;
+        self
+    }
+
+    /// Run the TransferSan static analyzer (the [`analysis`] module) as a
+    /// final pipeline stage: residency safety under **all** dep-consistent
+    /// linearizations, transfer-race / double-release / ledger-balance
+    /// lints, and a static peak-residency bound — no simulation involved.
+    /// Findings flow through the lint registry into the compile
+    /// diagnostics; `deny`-level findings abort the session like verifier
+    /// errors. Under `--cfg strict_verify` the analyzer additionally runs
+    /// after every pass regardless of this setting.
+    pub fn sanitize(mut self, on: bool) -> Self {
+        self.sanitize = on;
+        self
+    }
+
+    /// Fail the compile if any `Warning`-severity diagnostic was emitted
+    /// (surfaced as [`CompileError::Verify`] from stage `deny-warnings`).
+    /// The CI mode: a droppable warning today is a silent regression
+    /// tomorrow. Implied by `--cfg strict_verify`.
+    pub fn deny_warnings(mut self, on: bool) -> Self {
+        self.deny_warnings = on;
+        self
+    }
+
+    /// Override the level of one TransferSan lint for this session (see
+    /// [`analysis::LINTS`] for the registry). Unknown names are ignored —
+    /// registry membership is asserted in the analysis module's tests.
+    pub fn lint(mut self, name: &str, level: LintLevel) -> Self {
+        self.lints.set(name, level);
         self
     }
 
@@ -1101,11 +1219,17 @@ impl Compiler {
         let mut diagnostics: Vec<Diagnostic> = std::mem::take(&mut self.pending_diags);
         let mut per_pass: Vec<PassReport> = Vec::new();
         let mut order: Option<Vec<OpId>> = None;
+        // The strict-verify build (CI: RUSTFLAGS=--cfg strict_verify) hardens
+        // every session: verifier + TransferSan after every pass, warnings
+        // fatal — regardless of the per-session settings.
+        let strict = cfg!(strict_verify);
+        let mut sanitized_at: Option<u64> = None;
 
         // Early cycle check (and input verification when enabled).
         let input_order = cache.topo_order(graph)?;
-        if self.verify {
-            diagnostics.extend(check_verdict("input", verify_ir(graph, &input_order))?);
+        if self.verify || strict {
+            let reach = cache.reach(graph)?;
+            diagnostics.extend(check_verdict("input", verify_ir_with(graph, &input_order, &reach))?);
         }
 
         for p in self.passes.iter_mut() {
@@ -1115,14 +1239,23 @@ impl Compiler {
             }
             diagnostics.extend(rep.diagnostics.iter().cloned());
             per_pass.push(rep);
-            if self.verify {
+            if self.verify || strict {
                 let vorder: Rc<Vec<OpId>> = match &order {
                     Some(o) if graph.is_valid_order(o) => Rc::new(o.clone()),
                     _ => cache.topo_order(graph)?,
                 };
                 let name = per_pass.last().map(|r| r.pass.clone()).unwrap_or_default();
-                diagnostics.extend(check_verdict(&name, verify_ir(graph, &vorder))?);
+                let reach = cache.reach(graph)?;
+                diagnostics.extend(check_verdict(&name, verify_ir_with(graph, &vorder, &reach))?);
             }
+            if strict {
+                run_sanitizer("transfer-san", graph, &mut cache, &ctx, &self.lints, &mut diagnostics)?;
+                sanitized_at = Some(graph.version());
+            }
+        }
+
+        if (self.sanitize || strict) && sanitized_at != Some(graph.version()) {
+            run_sanitizer("transfer-san", graph, &mut cache, &ctx, &self.lints, &mut diagnostics)?;
         }
 
         let mut final_order = match order {
@@ -1143,6 +1276,20 @@ impl Compiler {
         if !graph.is_valid_order(&final_order) {
             cache.invalidate();
             final_order = (*cache.topo_order(graph)?).clone();
+        }
+
+        if self.deny_warnings || strict {
+            let warns: Vec<Diagnostic> = diagnostics
+                .iter()
+                .filter(|d| d.severity == Severity::Warning)
+                .cloned()
+                .collect();
+            if !warns.is_empty() {
+                return Err(CompileError::Verify {
+                    pass: "deny-warnings".to_string(),
+                    violations: warns,
+                });
+            }
         }
 
         let inserted: Vec<(OpId, OpId)> =
@@ -1287,6 +1434,10 @@ mod tests {
         }
     }
 
+    // Under --cfg strict_verify warnings are fatal, so the "compiles with a
+    // warning" half of this test cannot run; the strict-mode behaviour is
+    // covered by `deny_warnings_surfaces_warning_as_failure` below.
+    #[cfg(not(strict_verify))]
     #[test]
     fn pass_before_missing_anchor_warns() {
         let mut g = GraphBuilder::fwd_bwd_chain(4, 8 << 20, 10e9, 24, 1e9);
@@ -1311,6 +1462,77 @@ mod tests {
             .diagnostics
             .iter()
             .any(|d| d.severity == Severity::Warning && d.message.contains("no pass named")));
+    }
+
+    #[test]
+    fn deny_warnings_surfaces_warning_as_failure() {
+        let mut g = GraphBuilder::fwd_bwd_chain(4, 8 << 20, 10e9, 24, 1e9);
+        // elide ordered "before exec-order" on an empty pipeline: appended
+        // with a Warning — which deny_warnings upgrades to a failure.
+        let res = Compiler::empty(hw())
+            .elide_redundant_transfers()
+            .deny_warnings(true)
+            .compile(&mut g);
+        match res {
+            Err(CompileError::Verify { pass, violations }) => {
+                assert_eq!(pass, "deny-warnings");
+                assert!(!violations.is_empty());
+                assert!(violations.iter().all(|d| d.severity == Severity::Warning));
+            }
+            other => panic!("expected deny-warnings failure, got {other:?}"),
+        }
+        // A warning-free session is unaffected.
+        let mut g2 = GraphBuilder::fwd_bwd_chain(4, 8 << 20, 10e9, 24, 1e9);
+        Compiler::new(hw()).deny_warnings(true).compile(&mut g2).unwrap();
+    }
+
+    #[test]
+    fn sanitize_accepts_default_pipeline_output() {
+        let mut g = GraphBuilder::fwd_bwd_chain(4, 8 << 20, 10e9, 24, 1e9);
+        let report =
+            Compiler::new(hw()).verify(true).sanitize(true).compile(&mut g).unwrap();
+        assert!(!report.inserted.is_empty());
+        assert!(
+            report.diagnostics.iter().any(|d| d.pass == "transfer-san"),
+            "sanitizer stage left no trace in the diagnostics"
+        );
+        assert!(!report.diagnostics.iter().any(|d| d.severity == Severity::Error));
+    }
+
+    #[test]
+    fn reach_cache_patches_and_matches_rebuild() {
+        let mut g = GraphBuilder::fwd_bwd_chain(4, 8 << 20, 10e9, 24, 1e9);
+        let mut cache = AnalysisCache::new();
+        let r1 = cache.reach(&g).unwrap();
+        let _ = cache.reach(&g).unwrap();
+        assert_eq!((cache.reach_hits, cache.reach_misses), (1, 1));
+        // Append a round trip on a fresh tensor: journal-patched, not rebuilt.
+        let t = g.add_tensor("x", 8 << 20, Tier::Remote);
+        let pf = g.add_op("pfx", crate::graph::OpKind::Prefetch { tensor: t }, vec![t], vec![]);
+        let c = g.add_op(
+            "cx",
+            crate::graph::OpKind::Compute { flops: 1e9, bytes_accessed: 0 },
+            vec![t],
+            vec![],
+        );
+        g.add_control_dep(c, pf);
+        let r2 = cache.reach(&g).unwrap();
+        assert_eq!(cache.reach_deltas, 1);
+        assert_eq!(cache.reach_misses, 1);
+        let order = g.topo_order().unwrap();
+        let fresh = crate::graph::Reach::ancestors(&g, &order, crate::graph::TrackedSet::CacheOps);
+        assert_eq!(r2.tracked_len(), fresh.tracked_len());
+        for op in 0..g.ops.len() {
+            for &tr in fresh.tracked() {
+                assert_eq!(r2.contains(op, tr), fresh.contains(op, tr), "op {op} vs {tr}");
+            }
+        }
+        assert!(r2.contains(c, pf));
+        drop(r1);
+        // A removal is non-local: full rebuild.
+        g.remove_ops(&[c]);
+        let _ = cache.reach(&g).unwrap();
+        assert_eq!(cache.reach_misses, 2);
     }
 
     #[test]

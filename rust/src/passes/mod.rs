@@ -20,9 +20,10 @@
 //!             │                            prefetches under an SLO)  │
 //!             └──────────────────────────────────────────────────────┘
 //!                  │                    ▲
-//!                  ▼                    │ memoised topo order +
-//!             verify_ir (between   AnalysisCache  lifetimes + pinned
-//!             stages when enabled)      order, keyed on Graph::version()
+//!                  ▼                    │ memoised topo order, lifetimes,
+//!        verify_ir + TransferSan   AnalysisCache  cache-op reachability +
+//!        (between stages when          pinned order, keyed on
+//!        enabled / --cfg strict_verify)    Graph::version()
 //!
 //!  ──▶ Result<CompileReport { order, per-pass reports, diagnostics }>
 //! ```
@@ -65,6 +66,28 @@
 //! the serving engine accounts every step-compile miss in
 //! `ServingReport::compile_us_total` / `compile_us_max` (the compile
 //! stall a first-of-its-shape decode step absorbs).
+//!
+//! ## TransferSan — the static cache-op sanitizer
+//!
+//! [`Compiler::sanitize`]`(true)` appends a static analysis stage (the
+//! [`analysis`](crate::analysis) module) after the pipeline. Where
+//! `verify_ir` walks *one* linearization, TransferSan proves properties
+//! over **every** execution order the dependence graph admits, using the
+//! session's cached [`Reach`](crate::graph::Reach) bitsets: readers whose
+//! prefetch is not forced before them, store/consumer races, double
+//! releases, use-after-release, pool-ledger leaks, chunk/parent aliasing
+//! hazards, and a static antichain upper bound on peak residency — all
+//! without running the simulator. Findings surface through the usual
+//! [`Diagnostic`] stream under the `transfer-san` pass name, levelled by
+//! a lint registry: [`Compiler::lint`]`("race::store_consumer", …)`
+//! re-levels one lint, [`Compiler::deny_warnings`]`(true)` promotes every
+//! surviving warning to a compile failure. Deny-level findings abort the
+//! compile as [`CompileError::Verify`]. Under `--cfg strict_verify` (the
+//! hardened CI job) the sanitizer additionally runs after *every* pass
+//! with warnings denied, so a rewrite that corrupts the cache-op IR is
+//! caught at the pass that introduced it. The mutation corpus in
+//! `rust/tests/sanitizer_mutations.rs` pins each lint to the class of
+//! pass bug it exists to catch.
 //!
 //! ## Decision passes and their cost model
 //!
@@ -161,8 +184,9 @@ use crate::graph::Graph;
 use crate::sim::HwConfig;
 
 pub use compiler::{
-    verify_ir, AnalysisCache, CompileError, CompileReport, Compiler, Diagnostic, ExecOrderPass,
-    LifetimePass, Pass, PassCtx, PassReport, PrefetchInsertPass, Severity, VerifyPass,
+    verify_ir, verify_ir_with, AnalysisCache, CompileError, CompileReport, Compiler, Diagnostic,
+    ExecOrderPass, LifetimePass, Pass, PassCtx, PassReport, PrefetchInsertPass, Severity,
+    VerifyPass,
 };
 pub use elide::ElideRedundantTransfers;
 pub use exec_order::{refine, refine_from, ExecOrderConfig, Refinement};

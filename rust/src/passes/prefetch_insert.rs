@@ -225,6 +225,20 @@ pub fn insert_cache_ops(
             let cpos = pos.get(c).copied().unwrap_or(usize::MAX);
             if cpos != usize::MAX && cpos >= anchor_pos {
                 graph.add_control_dep(c, pf);
+            } else if cpos != usize::MAX {
+                // Pre-window consumers read the pre-offload copy, so the
+                // Store must wait for them. Anchoring it on `after` alone
+                // orders it only against the *last* pre-window use: an
+                // earlier consumer with no data path to `after` would be
+                // free to land after the Store in another valid
+                // linearization and read an offloaded tensor — benign in
+                // the order the plans were selected against, a race
+                // everywhere else (TransferSan: race::store_consumer).
+                if let Some(st) = st {
+                    if !graph.op(st).control_deps.contains(&c) {
+                        graph.add_control_dep(st, c);
+                    }
+                }
             }
         }
         inserted.push((st.unwrap_or(pf), pf));

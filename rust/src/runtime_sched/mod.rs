@@ -91,28 +91,34 @@ fn transform_into(
         .filter(|&o| !matches!(g.op(o).kind, OpKind::Compute { .. }))
         .collect();
 
-    // Remote tensors consumed by compute ops, ordered by first consumer
-    // (collected up front: the loop below mutates the graph).
-    let mut targets: Vec<(TensorId, String, OpId)> = Vec::new();
+    // Remote tensors consumed by compute ops, keyed by their earliest
+    // consumer (collected up front: the loop below mutates the graph).
+    let pos_in_compute = |op: OpId| compute_order.iter().position(|&x| x == op);
+    let mut targets: Vec<(TensorId, String, OpId, Vec<OpId>)> = Vec::new();
     for t in &g.tensors {
         if t.home != Tier::Remote {
             continue;
         }
-        if let Some(&u) = g
+        let users: Vec<OpId> = g
             .consumers_of(t.id)
             .iter()
-            .find(|&&c| matches!(g.op(c).kind, OpKind::Compute { .. }))
-        {
-            targets.push((t.id, t.name.clone(), u));
-        }
+            .copied()
+            .filter(|&c| matches!(g.op(c).kind, OpKind::Compute { .. }))
+            .collect();
+        let Some(&u) = users
+            .iter()
+            .min_by_key(|&&c| pos_in_compute(c).unwrap_or(usize::MAX))
+        else {
+            continue;
+        };
+        targets.push((t.id, t.name.clone(), u, users));
     }
-    let pos_in_compute = |op: OpId| compute_order.iter().position(|&x| x == op);
-    targets.sort_by_key(|&(_, _, u)| pos_in_compute(u).unwrap_or(usize::MAX));
+    targets.sort_by_key(|&(_, _, u, _)| pos_in_compute(u).unwrap_or(usize::MAX));
 
     // fire_at[j] = ops dispatched just before compute_order[j].
     let mut fire_at: Vec<Vec<OpId>> = vec![Vec::new(); compute_order.len() + 1];
     let mut transfers = 0usize;
-    for (t, tname, u) in targets {
+    for (t, tname, u, users) in targets {
         let u_pos = pos_in_compute(u).unwrap_or(0);
         // Where does the runtime fire? OnDemand: at the consumer itself.
         // Prefetch{k}: k compute ops earlier.
@@ -138,7 +144,14 @@ fn transform_into(
             vec![],
         );
         g.add_control_dep(pf, stall);
-        g.add_control_dep(u, pf);
+        // Every compute consumer waits on the load, not just the one that
+        // fires it — the device cannot read bytes still in flight. `u` is
+        // the earliest consumer, so the extra edges are forward edges and
+        // the dispatch order assembled below stays valid (TransferSan:
+        // residency::no_acquire).
+        for &c in &users {
+            g.add_control_dep(c, pf);
+        }
         fire_at[fire_pos].push(stall);
         fire_at[fire_pos].push(pf);
 

@@ -151,6 +151,10 @@ pub struct CompiledStep {
     pub chunk_splits: usize,
     /// True iff `SloThrottle` appeared in the step's `CompileReport`.
     pub throttle_in_report: bool,
+    /// True iff TransferSan ran on the step (its peak-bound audit line is
+    /// in the diagnostics) and found nothing fatal — a failed sanitize is
+    /// a `CompileError`, so a cached step is always a sanitized step.
+    pub sanitized: bool,
 }
 
 /// Compiles engine steps through the `Compiler` session, memoising on
@@ -230,11 +234,15 @@ impl StepCompiler {
             defer_prefetches: false,
             ..Default::default()
         };
+        // `sanitize` is free on cache hits (the compiled step is memoised)
+        // and proves the step schedule residency-safe under *any* dispatch
+        // order, not just the pinned one the engine replays.
         let mut session = Compiler::empty(chw.clone())
             .pass(ExecOrderPass)
             .pass(throttle)
             .pass(ElideRedundantTransfers::default())
-            .verify(true);
+            .verify(true)
+            .sanitize(true);
         if let Some(slo) = spec.slo_us {
             session = session.slo_us(slo);
         }
@@ -261,6 +269,10 @@ impl StepCompiler {
             throttled: report.throttled,
             chunk_splits: report.chunked,
             throttle_in_report: report.per_pass.iter().any(|p| p.pass == "slo-throttle"),
+            sanitized: report
+                .diagnostics
+                .iter()
+                .any(|d| d.pass == crate::analysis::lints::PASS),
         })
     }
 }
@@ -520,5 +532,37 @@ mod tests {
             g1.ops.iter().filter(|o| o.name.starts_with("prefetch.kv.prefix.")).count(),
             1
         );
+    }
+
+    #[test]
+    fn every_step_shape_compiles_sanitized() {
+        // TransferSan is wired unconditionally into the step pipeline, so
+        // each shape compiling at all proves its schedule residency-safe
+        // under every dispatch order — overlap and runtime lowerings,
+        // SLO-spilled writeback, drain, and the chunked prefix fetch.
+        for overlap in [true, false] {
+            let mut sc = StepCompiler::new(hw(), overlap);
+            let drain = StepSpec {
+                phase: StepPhase::Drain,
+                batch: 0,
+                compute_flops: 0.0,
+                compute_bytes: 0,
+                kv_fetch_bytes: 0,
+                prefix_fetch_bytes: 0,
+                kv_writeback_bytes: 4 * MB,
+                cpu_us: 0.0,
+                defrag_us: 0.0,
+                slo_us: None,
+            };
+            for spec in [
+                decode_spec(8, None),
+                decode_spec(8, Some(60.0)),
+                prefix_prefill_spec(300 * MB),
+                drain,
+            ] {
+                let cs = sc.compile(&spec, &FabricPressure::NONE).unwrap();
+                assert!(cs.sanitized, "transfer-san audit line missing from step compile");
+            }
+        }
     }
 }

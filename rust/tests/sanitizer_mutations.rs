@@ -1,0 +1,445 @@
+//! TransferSan mutation corpus + property P15.
+//!
+//! Each mutation test takes a *clean* graph — usually one the real
+//! pipeline compiled — applies one targeted corruption, and asserts the
+//! analyzer flags it under the expected lint name. The corruptions mirror
+//! real wiring mistakes the passes could make: a dropped completion dep,
+//! a duplicated transfer, a stranded release. Mutations edit the public
+//! `Graph::ops` fields directly (the P9 idiom); `inputs` are never edited
+//! in place because the consumer index is maintained by the mutation
+//! methods.
+//!
+//! P15 (bottom): the analyzer raises **zero deny-level findings** on
+//! anything the suite's pipelines produce — default compilation, the
+//! recompute decision pass, the SLO throttle's spill/split rewrites — and
+//! its static peak bound dominates the simulated peak of arbitrary valid
+//! linearizations of those graphs.
+
+use hyperoffload::analysis::{analyze, lints, AnalysisReport, LintConfig, LintLevel};
+use hyperoffload::graph::{Graph, GraphBuilder, OpId, OpKind, Reach, Tier, TrackedSet};
+use hyperoffload::passes::{Compiler, ExecOrderPass, OffloadPolicy, Severity, SloThrottle};
+use hyperoffload::sim::{simulate, HwConfig};
+use hyperoffload::util::rng::Rng;
+
+fn hw() -> HwConfig {
+    HwConfig::test_default()
+}
+
+fn run(g: &Graph) -> AnalysisReport {
+    let order = g.topo_order().unwrap();
+    let anc = Reach::ancestors(g, &order, TrackedSet::CacheOps);
+    analyze(g, &order, &anc, &hw())
+}
+
+fn names(r: &AnalysisReport) -> Vec<&'static str> {
+    r.findings.iter().map(|f| f.lint).collect()
+}
+
+fn denies(r: &AnalysisReport) -> Vec<&'static str> {
+    let cfg = LintConfig::default();
+    r.findings
+        .iter()
+        .map(|f| f.lint)
+        .filter(|l| cfg.level_of(l) == LintLevel::Deny)
+        .collect()
+}
+
+/// The Fig. 4 forward/backward chain, compiled by the default pipeline —
+/// the canonical graph with inserted Store/Prefetch round trips.
+fn compiled_fig4() -> Graph {
+    let mut g = GraphBuilder::fwd_bwd_chain(4, 8 << 20, 10e9, 24, 1e9);
+    let report = Compiler::new(hw()).verify(true).compile(&mut g).unwrap();
+    assert!(!report.inserted.is_empty(), "fixture must offload something");
+    g
+}
+
+/// First inserted round trip of `g`: `(tensor, store, prefetch)` with the
+/// prefetch wired after the store.
+fn first_round_trip(g: &Graph) -> (usize, OpId, OpId) {
+    for op in &g.ops {
+        if let OpKind::Store { tensor } = op.kind {
+            if let Some(pf) = g.ops.iter().find(|o| {
+                matches!(o.kind, OpKind::Prefetch { tensor: pt } if pt == tensor)
+                    && o.control_deps.contains(&op.id)
+            }) {
+                return (tensor, op.id, pf.id);
+            }
+        }
+    }
+    panic!("no store/prefetch round trip in the compiled graph");
+}
+
+/// A reader of `t` ordered after `pf` by an explicit control dep.
+fn guarded_reader(g: &Graph, t: usize, pf: OpId) -> OpId {
+    g.consumers_of(t)
+        .iter()
+        .copied()
+        .find(|&c| !g.op(c).kind.is_cache_op() && g.op(c).control_deps.contains(&pf))
+        .expect("round trip has no dep-guarded reader")
+}
+
+// ---------------------------------------------------------------------
+// Deny-level corruptions
+// ---------------------------------------------------------------------
+
+#[test]
+fn race_store_consumer_when_reader_loses_its_prefetch_dep() {
+    let mut g = compiled_fig4();
+    assert!(denies(&run(&g)).is_empty(), "fixture not clean");
+    let (t, _, pf) = first_round_trip(&g);
+    let c = guarded_reader(&g, t, pf);
+    g.ops[c].control_deps.retain(|&d| d != pf);
+    let r = run(&g);
+    assert!(
+        names(&r).contains(&lints::RACE_STORE_CONSUMER),
+        "dropped completion dep not flagged: {:?}",
+        r.findings
+    );
+}
+
+#[test]
+fn race_store_consumer_when_prefetch_loses_its_store_dep() {
+    // Unordered (store, reload): the store can land mid-reload — and the
+    // reload itself may run while the first copy is still resident, so
+    // the acquire/acquire warning fires alongside.
+    let mut g = compiled_fig4();
+    let (_, st, pf) = first_round_trip(&g);
+    g.ops[pf].control_deps.retain(|&d| d != st);
+    let r = run(&g);
+    assert!(names(&r).contains(&lints::RACE_STORE_CONSUMER), "got {:?}", r.findings);
+    assert!(names(&r).contains(&lints::RACE_ACQUIRE_ACQUIRE), "got {:?}", r.findings);
+}
+
+#[test]
+fn residency_double_release_on_duplicated_store() {
+    let mut g = compiled_fig4();
+    let (t, _, _) = first_round_trip(&g);
+    g.add_op(
+        format!("store.dup.{}", g.tensor(t).name),
+        OpKind::Store { tensor: t },
+        vec![t],
+        vec![],
+    );
+    let r = run(&g);
+    assert!(names(&r).contains(&lints::RESIDENCY_DOUBLE_RELEASE), "got {:?}", r.findings);
+}
+
+#[test]
+fn residency_release_nonresident_on_retargeted_store() {
+    // A store whose kind points at a tensor that never reaches the
+    // device: the release frees bytes that were never allocated.
+    let mut g = compiled_fig4();
+    let (_, st, _) = first_round_trip(&g);
+    let rogue = g.add_tensor("rogue.remote", 1 << 20, Tier::Remote);
+    g.ops[st].kind = OpKind::Store { tensor: rogue };
+    let r = run(&g);
+    assert!(
+        names(&r).contains(&lints::RESIDENCY_RELEASE_NONRESIDENT),
+        "got {:?}",
+        r.findings
+    );
+}
+
+#[test]
+fn residency_use_after_release_on_late_reader() {
+    // A reader wired after the store with no reload between: forced
+    // use-after-free, not merely a race.
+    let mut g = compiled_fig4();
+    let (t, st, _) = first_round_trip(&g);
+    let rogue = g.add_op(
+        "rogue.read",
+        OpKind::Compute { flops: 1e9, bytes_accessed: 0 },
+        vec![t],
+        vec![],
+    );
+    g.add_control_dep(rogue, st);
+    let r = run(&g);
+    let hit = r
+        .findings
+        .iter()
+        .find(|f| f.lint == lints::RESIDENCY_USE_AFTER_RELEASE)
+        .unwrap_or_else(|| panic!("use-after-release not flagged: {:?}", r.findings));
+    assert_eq!(hit.op, Some(rogue));
+}
+
+#[test]
+fn residency_no_acquire_when_consumer_skips_the_load() {
+    // Weight-streaming chain: a consumer of a remote weight loses its dep
+    // on the inserted prefetch and can dispatch before the bytes land.
+    let mut g = GraphBuilder::chain_with_remote_weights(16, 4e12, 1 << 20, 200 << 20).0;
+    let report = Compiler::new(hw()).verify(true).compile(&mut g).unwrap();
+    assert!(!report.inserted.is_empty());
+    assert!(denies(&run(&g)).is_empty(), "fixture not clean");
+    let (t, pf) = g
+        .ops
+        .iter()
+        .find_map(|o| match o.kind {
+            OpKind::Prefetch { tensor } if g.tensor(tensor).home == Tier::Remote => {
+                Some((tensor, o.id))
+            }
+            _ => None,
+        })
+        .expect("no remote-weight prefetch inserted");
+    let c = guarded_reader(&g, t, pf);
+    g.ops[c].control_deps.retain(|&d| d != pf);
+    let r = run(&g);
+    assert!(names(&r).contains(&lints::RESIDENCY_NO_ACQUIRE), "got {:?}", r.findings);
+}
+
+#[test]
+fn race_store_consumer_on_stranded_detach() {
+    // The recompute rewrite's shape: a Detach freeing the original copy
+    // after its last keeper. Strand the Detach and the free races the
+    // reader.
+    let mut g = Graph::new();
+    let w = g.add_tensor("act", 8 << 20, Tier::Device);
+    g.add_op("p", OpKind::Compute { flops: 1e9, bytes_accessed: 0 }, vec![], vec![w]);
+    let c = g.add_op("use", OpKind::Compute { flops: 1e9, bytes_accessed: 0 }, vec![w], vec![]);
+    let dt = g.add_op("detach.act", OpKind::Detach { tensor: w }, vec![w], vec![]);
+    g.add_control_dep(dt, c);
+    assert!(denies(&run(&g)).is_empty(), "fixture not clean");
+    g.ops[dt].control_deps.clear();
+    let r = run(&g);
+    assert!(names(&r).contains(&lints::RACE_STORE_CONSUMER), "got {:?}", r.findings);
+}
+
+#[test]
+fn chunk_sibling_release_when_parent_reader_overtakes() {
+    // The split-round-trip shape: a chunk view of the parent's storage
+    // leaves and returns while the parent-wide reader waits on the chunk
+    // prefetch. Drop that dep and the chunk store can beat the reader.
+    let mut g = Graph::new();
+    let w = g.add_tensor("act", 8 << 20, Tier::Device);
+    let _p = g.add_op("p", OpKind::Compute { flops: 1e9, bytes_accessed: 0 }, vec![], vec![w]);
+    let c1 = g.add_op("c1", OpKind::Compute { flops: 1e9, bytes_accessed: 0 }, vec![w], vec![]);
+    let ck = g.add_chunk_tensor(w, "act.chunk0", 4 << 20);
+    let stc = g.add_op("store.act.chunk0", OpKind::Store { tensor: ck }, vec![ck], vec![]);
+    g.add_control_dep(stc, c1);
+    let pfc = g.add_op("prefetch.act.chunk0", OpKind::Prefetch { tensor: ck }, vec![ck], vec![]);
+    g.add_control_dep(pfc, stc);
+    // The split rewrite lists the chunk as a data input of every window
+    // consumer (refcount bookkeeping) and orders it after the reload.
+    let c2 = g.add_op(
+        "c2",
+        OpKind::Compute { flops: 1e9, bytes_accessed: 0 },
+        vec![w, ck],
+        vec![],
+    );
+    g.add_control_dep(c2, pfc);
+    assert!(denies(&run(&g)).is_empty(), "fixture not clean");
+    g.ops[c2].control_deps.retain(|&d| d != pfc);
+    let r = run(&g);
+    assert!(names(&r).contains(&lints::CHUNK_SIBLING_RELEASE), "got {:?}", r.findings);
+}
+
+// ---------------------------------------------------------------------
+// Warn-level corruptions: flagged, but not deny-level
+// ---------------------------------------------------------------------
+
+#[test]
+fn race_acquire_acquire_on_duplicated_prefetch() {
+    let mut g = compiled_fig4();
+    let (t, _, _) = first_round_trip(&g);
+    g.add_op(
+        format!("prefetch.dup.{}", g.tensor(t).name),
+        OpKind::Prefetch { tensor: t },
+        vec![t],
+        vec![],
+    );
+    let r = run(&g);
+    assert!(names(&r).contains(&lints::RACE_ACQUIRE_ACQUIRE), "got {:?}", r.findings);
+    // A wasted transfer, not a soundness hole: no deny lint may fire.
+    assert!(denies(&r).is_empty(), "warn-level corruption denied: {:?}", r.findings);
+}
+
+#[test]
+fn ledger_leak_on_consumerless_prefetch() {
+    let mut g = compiled_fig4();
+    let orphan = g.add_tensor("orphan.remote", 1 << 20, Tier::Remote);
+    g.add_op("prefetch.orphan", OpKind::Prefetch { tensor: orphan }, vec![orphan], vec![]);
+    let r = run(&g);
+    assert!(names(&r).contains(&lints::LEDGER_LEAK), "got {:?}", r.findings);
+    assert!(denies(&r).is_empty(), "warn-level corruption denied: {:?}", r.findings);
+}
+
+#[test]
+fn peak_unbounded_on_starved_device() {
+    let g = compiled_fig4();
+    let order = g.topo_order().unwrap();
+    let anc = Reach::ancestors(&g, &order, TrackedSet::CacheOps);
+    let mut starved = hw();
+    starved.device_capacity = 1 << 20; // 1 MiB device vs 8 MiB activations
+    let r = analyze(&g, &order, &anc, &starved);
+    assert!(names(&r).contains(&lints::PEAK_UNBOUNDED), "got {:?}", r.findings);
+    // Allow by default (the pinned order may still fit) — promotable.
+    let mut cfg = LintConfig::default();
+    assert!(hyperoffload::analysis::to_diagnostics(&r, &cfg)
+        .iter()
+        .all(|d| d.severity != Severity::Error));
+    cfg.set(lints::PEAK_UNBOUNDED, LintLevel::Deny);
+    assert!(hyperoffload::analysis::to_diagnostics(&r, &cfg)
+        .iter()
+        .any(|d| d.severity == Severity::Error));
+}
+
+// ---------------------------------------------------------------------
+// P15: no false positives on anything the suite's pipelines emit, and
+// the static bound dominates the simulated peak of sampled orders.
+// ---------------------------------------------------------------------
+
+/// Same adversarial generator as the proptest suite: layered DAG with
+/// random remote weights, skips and fan-out.
+fn random_graph(rng: &mut Rng) -> Graph {
+    let n = rng.usize(4, 40);
+    let mut b = GraphBuilder::new();
+    let mut tensors: Vec<usize> = Vec::new();
+    for i in 0..n {
+        let bytes = 1u64 << rng.usize(16, 27);
+        let out = b.tensor(&format!("t{i}"), bytes, Tier::Device);
+        let mut inputs = Vec::new();
+        for _ in 0..rng.usize(0, 4.min(tensors.len() + 1)) {
+            if !tensors.is_empty() {
+                inputs.push(*rng.choose(&tensors));
+            }
+        }
+        if rng.next_f64() < 0.3 {
+            let w = b.tensor(&format!("w{i}"), 1u64 << rng.usize(20, 28), Tier::Remote);
+            inputs.push(w);
+        }
+        inputs.sort_unstable();
+        inputs.dedup();
+        b.compute(&format!("op{i}"), rng.f64_range(1e9, 1e13), 0, inputs, vec![out]);
+        tensors.push(out);
+    }
+    b.build()
+}
+
+fn assert_deny_clean_and_bound_dominates(g: &Graph, what: &str) {
+    let r = run(g);
+    assert!(
+        denies(&r).is_empty(),
+        "{what}: analyzer denied legitimate pipeline output: {:?}",
+        r.findings
+    );
+    for seed in 0..4u64 {
+        let order = g.topo_order_seeded(seed).unwrap();
+        let sim = simulate(g, &order, &hw());
+        assert!(
+            sim.peak_device_bytes <= r.peak_bound_bytes,
+            "{what} seed {seed}: simulated peak {} > static bound {}",
+            sim.peak_device_bytes,
+            r.peak_bound_bytes
+        );
+    }
+}
+
+#[test]
+fn p15_default_pipeline_output_is_deny_clean() {
+    // Compiling *with* the sanitizer stage must succeed (no Error-level
+    // diagnostics), and direct analysis of the result must agree.
+    let mut g = GraphBuilder::fwd_bwd_chain(4, 8 << 20, 10e9, 24, 1e9);
+    let report = Compiler::new(hw()).verify(true).sanitize(true).compile(&mut g).unwrap();
+    assert!(report.diagnostics.iter().all(|d| d.severity != Severity::Error));
+    assert!(
+        report.diagnostics.iter().any(|d| d.pass == lints::PASS),
+        "sanitizer left no audit trail in the report"
+    );
+    assert_deny_clean_and_bound_dominates(&g, "fig4");
+
+    let mut g = GraphBuilder::chain_with_remote_weights(16, 4e12, 1 << 20, 200 << 20).0;
+    Compiler::new(hw()).verify(true).sanitize(true).compile(&mut g).unwrap();
+    assert_deny_clean_and_bound_dominates(&g, "weight-stream");
+}
+
+#[test]
+fn p15_random_dags_compile_deny_clean_across_pipelines() {
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(seed + 21_000);
+        let g0 = random_graph(&mut rng);
+        let policy = OffloadPolicy { min_bytes: 1 << 18, ..Default::default() };
+
+        let mut a = g0.clone();
+        Compiler::new(hw())
+            .policy(policy.clone())
+            .verify(true)
+            .sanitize(true)
+            .compile(&mut a)
+            .unwrap_or_else(|e| panic!("seed {seed}: default pipeline {e}"));
+        assert_deny_clean_and_bound_dominates(&a, &format!("random {seed}"));
+
+        // The recompute decision pass replaces round trips with Detach +
+        // replay clones — its output must satisfy the analyzer too.
+        let mut b = g0.clone();
+        Compiler::new(hw())
+            .policy(policy)
+            .recompute_vs_offload()
+            .verify(true)
+            .sanitize(true)
+            .compile(&mut b)
+            .unwrap_or_else(|e| panic!("seed {seed}: recompute pipeline {e}"));
+        assert_deny_clean_and_bound_dominates(&b, &format!("recompute {seed}"));
+    }
+}
+
+#[test]
+fn p15_slo_throttle_rewrites_stay_deny_clean() {
+    // (a) Spill: a deferrable writeback shrunk to a `.keep` chunk view.
+    let mut g = Graph::new();
+    let w = g.add_tensor("kv.wb", 32 << 20, Tier::Device);
+    g.set_deferrable(w, true);
+    let st = g.add_op("store.kv.wb", OpKind::Store { tensor: w }, vec![w], vec![]);
+    let out = g.add_tensor("out", 0, Tier::Device);
+    let c = g.add_op("decode", OpKind::Compute { flops: 40e6, bytes_accessed: 0 }, vec![], vec![out]);
+    let h = g.add_op("host", OpKind::HostWork { us: 5.0 }, vec![], vec![]);
+    g.add_control_dep(h, c);
+    g.add_control_dep(h, st);
+    let report = Compiler::empty(hw())
+        .pass(ExecOrderPass)
+        .pass(SloThrottle::default())
+        .slo_us(50.0)
+        .verify(true)
+        .sanitize(true)
+        .compile(&mut g)
+        .unwrap();
+    assert!(report.deferred_bytes > 0, "spill must fire for the rewrite to be exercised");
+    assert_deny_clean_and_bound_dominates(&g, "spill");
+
+    // (b) Split: a monolithic activation round trip chunked into partial
+    // round trips (chunk views of the parent's storage).
+    let mut b = GraphBuilder::new();
+    let act = b.tensor("act", 256 << 20, Tier::Device);
+    let sink = b.tensor("sink", 0, Tier::Device);
+    b.compute("fwd", 1e6, 0, vec![], vec![act]);
+    let mut prev = None;
+    for i in 0..10 {
+        let t = b.tensor(&format!("m{i}"), 0, Tier::Device);
+        let inputs = prev.map(|p| vec![p]).unwrap_or_default();
+        // ~80 ms of compute per mid op at the 1 TFLOP/s test device: the
+        // 256 MiB round trip (~540 ms of wire) hides with headroom, so
+        // the insertion pass reliably commits it.
+        let o = b.compute(&format!("mid{i}"), 8e10, 0, inputs, vec![t]);
+        if i == 0 {
+            b.dep(o, 0);
+        }
+        prev = Some(t);
+    }
+    b.compute("bwd", 1e6, 0, vec![act, prev.unwrap()], vec![sink]);
+    let g0 = b.build();
+
+    let mut base = g0.clone();
+    let rb = Compiler::new(hw()).compile(&mut base).unwrap();
+    assert!(!rb.inserted.is_empty(), "fixture must produce a round trip");
+    let slo = simulate(&base, &rb.order, &hw()).makespan_us * 1.1;
+
+    let mut split = g0;
+    let throttle =
+        SloThrottle { split_min_bytes: 64 << 20, defer_prefetches: false, ..Default::default() };
+    Compiler::new(hw())
+        .slo_us(slo)
+        .pass(throttle)
+        .verify(true)
+        .sanitize(true)
+        .compile(&mut split)
+        .unwrap();
+    assert_deny_clean_and_bound_dominates(&split, "split");
+}
