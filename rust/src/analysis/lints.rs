@@ -22,6 +22,7 @@ pub const RESIDENCY_RELEASE_NONRESIDENT: &str = "residency::release_nonresident"
 pub const CHUNK_SIBLING_RELEASE: &str = "chunk::sibling_release";
 pub const LEDGER_LEAK: &str = "ledger::leak";
 pub const PEAK_UNBOUNDED: &str = "peak::unbounded";
+pub const TIER_COLD_READ: &str = "tier::cold_read";
 
 /// Diagnostic pass label every TransferSan finding is reported under.
 pub const PASS: &str = "transfer-san";
@@ -88,6 +89,14 @@ pub const LINTS: &[LintSpec] = &[
         summary: "chunk release can starve a reader of the parent region",
         trigger: "a chunk view's Store/Detach can run before a parent-region reader \
                   with no chunk re-acquire forced between",
+    },
+    LintSpec {
+        name: TIER_COLD_READ,
+        default: LintLevel::Deny,
+        summary: "transfer reads a tensor from a tier its copy provably is not at",
+        trigger: "a Store/Promote parking the copy at another tier is forced before the \
+                  Prefetch/Promote with no corrective move to the read tier forced between \
+                  (only enforced when a cold DRAM/CXL/SSD tier is involved)",
     },
     LintSpec {
         name: RACE_ACQUIRE_ACQUIRE,

@@ -44,8 +44,10 @@ pub fn analyze(g: &Graph, order: &[OpId], anc: &Reach, hw: &HwConfig) -> Analysi
     let mut releases: Vec<Vec<OpId>> = vec![Vec::new(); nt];
     for op in &g.ops {
         match op.kind {
-            OpKind::Prefetch { tensor } => acquires[tensor].push(op.id),
-            OpKind::Store { tensor } | OpKind::Detach { tensor } => releases[tensor].push(op.id),
+            OpKind::Prefetch { tensor, .. } => acquires[tensor].push(op.id),
+            OpKind::Store { tensor, .. } | OpKind::Detach { tensor } => {
+                releases[tensor].push(op.id)
+            }
             _ => {}
         }
     }
@@ -232,6 +234,78 @@ pub fn analyze(g: &Graph, order: &[OpId], anc: &Reach, hw: &HwConfig) -> Analysi
                     message: format!(
                         "'{}' loads '{}' but no release or reader is forced after it",
                         g.op(a).name, t.name
+                    ),
+                });
+            }
+        }
+
+        // -- tier::cold_read ------------------------------------------
+        // N-tier hierarchy: every transfer that reads the offloaded copy
+        // (a Prefetch from `src`, a Promote out of `src`) must find it
+        // there. A Store/Promote parks the copy at its destination tier;
+        // a read from a different tier with no corrective move to the
+        // read tier forced between is a cold read. Only enforced when a
+        // cold (DRAM/CXL/SSD) tier is involved — the legacy Host/pool
+        // conflation stays diagnostic-free.
+        let movers: Vec<(OpId, Tier)> = g
+            .ops
+            .iter()
+            .filter_map(|op| match op.kind {
+                OpKind::Store { tensor, dst } if tensor == t.id => Some((op.id, dst)),
+                OpKind::Promote { tensor, dst, .. } if tensor == t.id => Some((op.id, dst)),
+                _ => None,
+            })
+            .collect();
+        let tier_readers: Vec<(OpId, Tier)> = g
+            .ops
+            .iter()
+            .filter_map(|op| match op.kind {
+                OpKind::Prefetch { tensor, src } if tensor == t.id => Some((op.id, src)),
+                OpKind::Promote { tensor, src, .. } if tensor == t.id => Some((op.id, src)),
+                _ => None,
+            })
+            .collect();
+        for &(a, src) in &tier_readers {
+            let to_src =
+                anc.mask(movers.iter().filter(|&&(m, d)| m != a && d == src).map(|&(m, _)| m));
+            for &(m, d) in &movers {
+                if m == a || d == src || !(d.is_cold() || src.is_cold()) {
+                    continue;
+                }
+                if anc.contains(a, m) && !anc.rows_intersect(a, &desc, m, &to_src) {
+                    findings.push(Finding {
+                        lint: lints::TIER_COLD_READ,
+                        op: Some(a),
+                        message: format!(
+                            "'{}' reads '{}' from tier {:?}, but '{}' parks the copy at \
+                             {:?} with no move back forced between",
+                            g.op(a).name,
+                            t.name,
+                            src,
+                            g.op(m).name,
+                            d
+                        ),
+                    });
+                }
+            }
+            // Initial placement: the copy starts at the tensor's home
+            // tier; reading another tier needs a mover to it first.
+            if t.home != Tier::Device
+                && t.home != src
+                && (t.home.is_cold() || src.is_cold())
+                && !anc.row_intersects(a, &to_src)
+            {
+                findings.push(Finding {
+                    lint: lints::TIER_COLD_READ,
+                    op: Some(a),
+                    message: format!(
+                        "'{}' reads '{}' from tier {:?}, but the copy starts at its home \
+                         tier {:?} and no move to {:?} is forced before it",
+                        g.op(a).name,
+                        t.name,
+                        src,
+                        t.home,
+                        src
                     ),
                 });
             }
@@ -557,6 +631,68 @@ mod tests {
     }
 
     #[test]
+    fn demoted_then_read_without_promotion_is_denied() {
+        // The store parks w at DRAM; the prefetch reads from the pool with
+        // no promotion between — the canonical N-tier bug.
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 8 << 20, Tier::Device);
+        let p = b.compute("p", 1e9, 0, vec![], vec![w]);
+        let st = b.store_to("st", w, Tier::Dram);
+        b.dep(st, p);
+        let pf = b.prefetch("pf", w);
+        b.dep(pf, st);
+        let c2 = b.compute("c2", 1e9, 0, vec![w], vec![]);
+        b.dep(c2, pf);
+        let g = b.build();
+        let r = run(&g);
+        assert!(names(&r).contains(&lints::TIER_COLD_READ), "got {:?}", r.findings);
+        assert!(denies(&r).contains(&lints::TIER_COLD_READ));
+
+        // A promotion back to the pool, dependency-ordered between the
+        // demotion and the prefetch, clears it.
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 8 << 20, Tier::Device);
+        let p = b.compute("p", 1e9, 0, vec![], vec![w]);
+        let st = b.store_to("st", w, Tier::Dram);
+        b.dep(st, p);
+        let pm = b.promote("pm", w, Tier::Dram, Tier::Remote);
+        b.dep(pm, st);
+        let pf = b.prefetch("pf", w);
+        b.dep(pf, pm);
+        let c2 = b.compute("c2", 1e9, 0, vec![w], vec![]);
+        b.dep(c2, pf);
+        let g = b.build();
+        let r = run(&g);
+        assert!(!names(&r).contains(&lints::TIER_COLD_READ), "got {:?}", r.findings);
+    }
+
+    #[test]
+    fn cold_home_tensor_read_from_wrong_tier_is_denied() {
+        // An SSD-home input prefetched straight from the pool: the copy
+        // was never moved up, so the read is cold.
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 8 << 20, Tier::Ssd);
+        let pf = b.prefetch("pf", w); // legacy constructor: src = pool
+        let c = b.compute("c", 1e9, 0, vec![w], vec![]);
+        b.dep(c, pf);
+        let g = b.build();
+        let r = run(&g);
+        assert!(names(&r).contains(&lints::TIER_COLD_READ), "got {:?}", r.findings);
+
+        // Promoting SSD → pool before the prefetch clears it.
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 8 << 20, Tier::Ssd);
+        let pm = b.promote("pm", w, Tier::Ssd, Tier::Remote);
+        let pf = b.prefetch("pf", w);
+        b.dep(pf, pm);
+        let c = b.compute("c", 1e9, 0, vec![w], vec![]);
+        b.dep(c, pf);
+        let g = b.build();
+        let r = run(&g);
+        assert!(!names(&r).contains(&lints::TIER_COLD_READ), "got {:?}", r.findings);
+    }
+
+    #[test]
     fn chunk_release_racing_parent_reader() {
         // Parent produced on device; one chunk stored out with no ordering
         // against the parent-wide reader.
@@ -565,7 +701,7 @@ mod tests {
         let p = g.add_op("p", OpKind::Compute { flops: 1e9, bytes_accessed: 0 }, vec![], vec![w]);
         let c = g.add_op("c", OpKind::Compute { flops: 1e9, bytes_accessed: 0 }, vec![w], vec![]);
         let ck = g.add_chunk_tensor(w, "w.chunk0", 4 << 20);
-        let st = g.add_op("store.w.chunk0", OpKind::Store { tensor: ck }, vec![ck], vec![]);
+        let st = g.add_op("store.w.chunk0", OpKind::store(ck), vec![ck], vec![]);
         g.add_control_dep(st, p);
         let r = run(&g);
         assert!(names(&r).contains(&lints::CHUNK_SIBLING_RELEASE), "got {:?}", r.findings);

@@ -29,16 +29,33 @@ impl GraphBuilder {
         self.graph.add_op(name, OpKind::Compute { flops, bytes_accessed }, inputs, outputs)
     }
 
+    /// Pool → device prefetch (the two-home legacy shape).
     pub fn prefetch(&mut self, name: &str, t: TensorId) -> OpId {
-        self.graph.add_op(name, OpKind::Prefetch { tensor: t }, vec![t], vec![])
+        self.prefetch_from(name, t, Tier::Remote)
     }
 
+    /// `src`-tier → device prefetch.
+    pub fn prefetch_from(&mut self, name: &str, t: TensorId, src: Tier) -> OpId {
+        self.graph.add_op(name, OpKind::Prefetch { tensor: t, src }, vec![t], vec![])
+    }
+
+    /// Device → pool store (the two-home legacy shape).
     pub fn store(&mut self, name: &str, t: TensorId) -> OpId {
-        self.graph.add_op(name, OpKind::Store { tensor: t }, vec![t], vec![])
+        self.store_to(name, t, Tier::Remote)
+    }
+
+    /// Device → `dst`-tier store.
+    pub fn store_to(&mut self, name: &str, t: TensorId, dst: Tier) -> OpId {
+        self.graph.add_op(name, OpKind::Store { tensor: t, dst }, vec![t], vec![])
     }
 
     pub fn detach(&mut self, name: &str, t: TensorId) -> OpId {
         self.graph.add_op(name, OpKind::Detach { tensor: t }, vec![t], vec![])
+    }
+
+    /// Non-device `src` → `dst` move (promotion/demotion on the cold side).
+    pub fn promote(&mut self, name: &str, t: TensorId, src: Tier, dst: Tier) -> OpId {
+        self.graph.add_op(name, OpKind::Promote { tensor: t, src, dst }, vec![t], vec![])
     }
 
     pub fn collective(&mut self, name: &str, bytes: u64, deps: Vec<TensorId>) -> OpId {

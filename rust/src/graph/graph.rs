@@ -29,6 +29,11 @@ pub enum Mutation {
     TensorAdded { tensor: TensorId },
     /// Tensor metadata changed (deferrable flag). No analysis effect.
     TensorMeta,
+    /// A transfer op's tier endpoint was retargeted in place
+    /// ([`Graph::retarget_transfer_tier`]). No structural effect: the op's
+    /// edges, inputs and cache-op classification are unchanged — only its
+    /// simulated duration (a per-query quantity, never cached) moves.
+    OpRetargeted { op: OpId },
     /// An op was appended. Its id is the current maximum and nothing can
     /// depend on it yet, so any cached canonical topological order stays
     /// canonical with the new op appended at the end.
@@ -240,6 +245,29 @@ impl Graph {
         self.ops[op].inputs.push(t);
         self.consumers.entry(t).or_default().push(op);
         self.bump(Mutation::InputAdded { op, tensor: t });
+    }
+
+    /// Point a transfer op at a different non-device tier: a `Store`'s
+    /// destination or a `Prefetch`'s source. A structural no-op (edges and
+    /// cache-op classification are untouched) journalled as
+    /// [`Mutation::OpRetargeted`], so cached analyses patch through it.
+    /// Ignores same-tier retargets; panics (debug) on non-transfer ops.
+    pub fn retarget_transfer_tier(&mut self, op: OpId, tier: Tier) {
+        debug_assert!(op < self.ops.len(), "op {op} unknown");
+        match &mut self.ops[op].kind {
+            OpKind::Store { dst, .. } if *dst != tier => {
+                *dst = tier;
+                self.bump(Mutation::OpRetargeted { op });
+            }
+            OpKind::Prefetch { src, .. } if *src != tier => {
+                *src = tier;
+                self.bump(Mutation::OpRetargeted { op });
+            }
+            OpKind::Store { .. } | OpKind::Prefetch { .. } => {}
+            other => {
+                debug_assert!(false, "retarget_transfer_tier on non-transfer op {op}: {other:?}");
+            }
+        }
     }
 
     /// Add an explicit ordering edge `dep → op`.
@@ -751,7 +779,7 @@ mod tests {
         let w = g.add_tensor("w", 1024, Tier::Remote);
         let x = g.add_tensor("x", 64, Tier::Device);
         let y = g.add_tensor("y", 64, Tier::Device);
-        let pf = g.add_op("pf.w", OpKind::Prefetch { tensor: w }, vec![w], vec![]);
+        let pf = g.add_op("pf.w", OpKind::prefetch(w), vec![w], vec![]);
         let c0 = g.add_op("mm0", OpKind::Compute { flops: 1.0, bytes_accessed: 64 }, vec![], vec![x]);
         let c1 = g.add_op("mm1", OpKind::Compute { flops: 1.0, bytes_accessed: 64 }, vec![x, w], vec![y]);
         g.add_control_dep(c1, pf);
@@ -766,7 +794,7 @@ mod tests {
     fn validate_rejects_cache_op_without_tensor_input() {
         let mut g = Graph::new();
         let w = g.add_tensor("w", 1024, Tier::Remote);
-        g.add_op("pf.bad", OpKind::Prefetch { tensor: w }, vec![], vec![]);
+        g.add_op("pf.bad", OpKind::prefetch(w), vec![], vec![]);
         assert!(g.validate().is_err());
     }
 
@@ -896,9 +924,9 @@ mod tests {
         let mut g = Graph::new();
         let t0 = g.add_tensor("t0", 8, Tier::Device);
         let a = g.add_op("a", OpKind::Compute { flops: 1.0, bytes_accessed: 0 }, vec![], vec![t0]);
-        let st = g.add_op("st", OpKind::Store { tensor: t0 }, vec![t0], vec![]);
+        let st = g.add_op("st", OpKind::store(t0), vec![t0], vec![]);
         g.add_control_dep(st, a);
-        let pf = g.add_op("pf", OpKind::Prefetch { tensor: t0 }, vec![t0], vec![]);
+        let pf = g.add_op("pf", OpKind::prefetch(t0), vec![t0], vec![]);
         g.add_control_dep(pf, st);
         let t1 = g.add_tensor("t1", 8, Tier::Device);
         let d = g.add_op("d", OpKind::Compute { flops: 1.0, bytes_accessed: 0 }, vec![], vec![t1]);

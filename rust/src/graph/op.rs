@@ -2,11 +2,19 @@
 //!
 //! The paper's key move (§4.2): cache operations are *first-class graph
 //! nodes*, peers of compute operators — not runtime side effects. `Prefetch`,
-//! `Store` and `Detach` therefore appear here next to `Compute`, participate
-//! in dependency inference and topological ordering, and are scheduled by
-//! the same execution-order machinery.
+//! `Store`, `Detach` and `Promote` therefore appear here next to `Compute`,
+//! participate in dependency inference and topological ordering, and are
+//! scheduled by the same execution-order machinery.
+//!
+//! Transfers carry their non-device endpoint explicitly: a `Prefetch` names
+//! the tier it reads from, a `Store` the tier it evicts to. The two-home
+//! legacy graphs use [`OpKind::prefetch`]/[`OpKind::store`], which default
+//! the endpoint to the shared pool ([`Tier::Remote`]) — cost- and
+//! semantics-identical to the pre-tier IR. `Promote` moves a cold copy
+//! between two non-device tiers (promotion up or demotion down the stack)
+//! and never changes device residency.
 
-use super::tensor::TensorId;
+use super::tensor::{TensorId, Tier};
 
 /// Index of an op inside its [`Graph`](super::Graph).
 pub type OpId = usize;
@@ -21,14 +29,19 @@ pub enum OpKind {
         /// HBM traffic (bytes read+written), the other roofline axis.
         bytes_accessed: u64,
     },
-    /// Remote → Device transfer of `tensor` (asynchronous DMA-in).
+    /// `src` tier → Device transfer of `tensor` (asynchronous DMA-in).
     /// Correctness: completion must precede the first consumer (§4.2.1).
-    Prefetch { tensor: TensorId },
-    /// Device → Remote transfer of `tensor` (asynchronous DMA-out); device
-    /// residency is released at completion (§4.2.1).
-    Store { tensor: TensorId },
+    Prefetch { tensor: TensorId, src: Tier },
+    /// Device → `dst` tier transfer of `tensor` (asynchronous DMA-out);
+    /// device residency is released at completion (§4.2.1).
+    Store { tensor: TensorId, dst: Tier },
     /// Release device residency of `tensor` without a transfer (§4.2.1).
     Detach { tensor: TensorId },
+    /// Move the non-device copy of `tensor` from `src` to `dst` — promotion
+    /// (colder → hotter) ahead of reuse, or demotion (hotter → colder)
+    /// under pressure. Runs on the cold-DMA stream and leaves device
+    /// residency untouched; a later `Prefetch` must read from `dst`.
+    Promote { tensor: TensorId, src: Tier, dst: Tier },
     /// Inter-device collective (TP/PP/EP traffic). Runs on the network
     /// stream.
     Collective { bytes: u64 },
@@ -38,12 +51,31 @@ pub enum OpKind {
 }
 
 impl OpKind {
-    /// True for the paper's cache operators (`Prefetch`/`Store`/`Detach`).
-    pub fn is_cache_op(&self) -> bool {
-        matches!(self, OpKind::Prefetch { .. } | OpKind::Store { .. } | OpKind::Detach { .. })
+    /// A pool-endpoint `Prefetch` — the two-home legacy shape.
+    pub fn prefetch(tensor: TensorId) -> Self {
+        OpKind::Prefetch { tensor, src: Tier::Remote }
     }
 
-    /// True for transfer ops that move bytes across the device boundary.
+    /// A pool-endpoint `Store` — the two-home legacy shape.
+    pub fn store(tensor: TensorId) -> Self {
+        OpKind::Store { tensor, dst: Tier::Remote }
+    }
+
+    /// True for the paper's cache operators
+    /// (`Prefetch`/`Store`/`Detach`/`Promote`).
+    pub fn is_cache_op(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Prefetch { .. }
+                | OpKind::Store { .. }
+                | OpKind::Detach { .. }
+                | OpKind::Promote { .. }
+        )
+    }
+
+    /// True for transfer ops that move bytes across the *device* boundary.
+    /// `Promote` moves bytes between non-device tiers only, so it is a
+    /// cache op but not a device transfer.
     pub fn is_transfer(&self) -> bool {
         matches!(self, OpKind::Prefetch { .. } | OpKind::Store { .. })
     }
@@ -51,9 +83,10 @@ impl OpKind {
     /// The tensor a cache operator manages, if any.
     pub fn cache_tensor(&self) -> Option<TensorId> {
         match self {
-            OpKind::Prefetch { tensor } | OpKind::Store { tensor } | OpKind::Detach { tensor } => {
-                Some(*tensor)
-            }
+            OpKind::Prefetch { tensor, .. }
+            | OpKind::Store { tensor, .. }
+            | OpKind::Detach { tensor }
+            | OpKind::Promote { tensor, .. } => Some(*tensor),
             _ => None,
         }
     }
@@ -86,23 +119,36 @@ mod tests {
 
     #[test]
     fn cache_op_classification() {
-        assert!(OpKind::Prefetch { tensor: 0 }.is_cache_op());
-        assert!(OpKind::Store { tensor: 0 }.is_cache_op());
+        assert!(OpKind::prefetch(0).is_cache_op());
+        assert!(OpKind::store(0).is_cache_op());
         assert!(OpKind::Detach { tensor: 0 }.is_cache_op());
+        assert!(OpKind::Promote { tensor: 0, src: Tier::Ssd, dst: Tier::Remote }.is_cache_op());
         assert!(!OpKind::Compute { flops: 1.0, bytes_accessed: 1 }.is_cache_op());
         assert!(!OpKind::Collective { bytes: 8 }.is_cache_op());
     }
 
     #[test]
     fn transfer_classification() {
-        assert!(OpKind::Prefetch { tensor: 1 }.is_transfer());
-        assert!(OpKind::Store { tensor: 1 }.is_transfer());
+        assert!(OpKind::prefetch(1).is_transfer());
+        assert!(OpKind::store(1).is_transfer());
         assert!(!OpKind::Detach { tensor: 1 }.is_transfer());
+        // Promote never crosses the device boundary.
+        assert!(!OpKind::Promote { tensor: 1, src: Tier::Dram, dst: Tier::Remote }.is_transfer());
     }
 
     #[test]
     fn cache_tensor_extraction() {
-        assert_eq!(OpKind::Prefetch { tensor: 7 }.cache_tensor(), Some(7));
+        assert_eq!(OpKind::prefetch(7).cache_tensor(), Some(7));
+        assert_eq!(
+            OpKind::Promote { tensor: 9, src: Tier::Cxl, dst: Tier::Remote }.cache_tensor(),
+            Some(9)
+        );
         assert_eq!(OpKind::HostWork { us: 1.0 }.cache_tensor(), None);
+    }
+
+    #[test]
+    fn legacy_constructors_default_to_the_pool() {
+        assert_eq!(OpKind::prefetch(3), OpKind::Prefetch { tensor: 3, src: Tier::Remote });
+        assert_eq!(OpKind::store(3), OpKind::Store { tensor: 3, dst: Tier::Remote });
     }
 }

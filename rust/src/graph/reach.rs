@@ -196,7 +196,11 @@ impl Reach {
         let mut dirty: Vec<OpId> = Vec::new();
         for m in muts {
             match *m {
-                Mutation::TensorAdded { .. } | Mutation::TensorMeta => {}
+                // A retarget changes no edges and cannot alter cache-op
+                // membership (Store stays Store, Prefetch stays Prefetch).
+                Mutation::TensorAdded { .. }
+                | Mutation::TensorMeta
+                | Mutation::OpRetargeted { .. } => {}
                 Mutation::OpAdded { op }
                 | Mutation::InputAdded { op, .. }
                 | Mutation::ControlDepAdded { op, .. } => dirty.push(op),
@@ -370,7 +374,7 @@ mod tests {
         let v0 = g.version();
         // Append a prefetch + consumer, then wire forward edges.
         let t = g.add_tensor("y", 8 << 20, crate::graph::Tier::Remote);
-        let pf2 = g.add_op("pf2", crate::graph::OpKind::Prefetch { tensor: t }, vec![t], vec![]);
+        let pf2 = g.add_op("pf2", crate::graph::OpKind::prefetch(t), vec![t], vec![]);
         let c3 = g.add_op(
             "c3",
             crate::graph::OpKind::Compute { flops: 1e9, bytes_accessed: 0 },

@@ -9,6 +9,13 @@
 pub type TensorId = usize;
 
 /// Memory tier in the SuperNode hierarchy (DESIGN.md §2).
+///
+/// The hot end (`Device`, `Remote`) is the paper's two-home model; the
+/// cold end (`Dram`, `Cxl`, `Ssd`) is the N-level extension
+/// (`sim::TierTopology`): optional levels below the pool with
+/// order-of-magnitude bandwidth/latency spreads. Cache operators carry
+/// explicit source/destination tiers, and `Promote` moves a cold copy
+/// between non-device tiers without touching device residency.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Tier {
     /// On-device HBM — fast, scarce.
@@ -17,6 +24,21 @@ pub enum Tier {
     Remote,
     /// Host DRAM (staging tier; the paper's H2R/R2H primitives touch it).
     Host,
+    /// Node-local cold DRAM below the pool (first cold level).
+    Dram,
+    /// Disaggregated CXL-attached memory below DRAM.
+    Cxl,
+    /// NVMe/SSD — the coldest, highest-capacity level.
+    Ssd,
+}
+
+impl Tier {
+    /// True for the cold levels below the pool (`Dram`/`Cxl`/`Ssd`).
+    /// The legacy two-home paths treat every non-device tier alike; only
+    /// cold tiers activate the N-level cost model and residency checks.
+    pub fn is_cold(self) -> bool {
+        matches!(self, Tier::Dram | Tier::Cxl | Tier::Ssd)
+    }
 }
 
 /// Static description of a tensor in the graph.

@@ -23,7 +23,12 @@
 //!   sequence holds one per block it acquired. Eviction
 //!   ([`PrefixIndex::evict`]) only takes LRU *leaves* whose last reference
 //!   is the index's own — a block a sequence is still reading, or an
-//!   interior block of a longer resident prefix, cannot be evicted.
+//!   interior block of a longer resident prefix, cannot be evicted. With
+//!   a [`crate::memory::TieredLedger`] carrying cold DRAM/CXL/SSD tiers,
+//!   pressure is relieved demotion-first: the LRU unreferenced entry
+//!   moves its reservation below the pool and *stays resident* (later
+//!   hits fetch it over the cold path, reported per tier in
+//!   `cold_fetch`); only when every cold tier is full does eviction run.
 //! * **Copy-on-write** — [`KvCacheManager::fork`] makes a child sequence
 //!   share every parent block for free; a shared tail that is *written*
 //!   (the per-step persist in [`KvCacheManager::decode_step`]) first forks
@@ -54,6 +59,6 @@ mod manager;
 pub mod nsa;
 pub mod prefix;
 
-pub use manager::{KvCacheManager, KvPolicy, PrefixAdmit, StepCost};
+pub use manager::{KvCacheManager, KvError, KvPolicy, PrefixAdmit, StepCost};
 pub use nsa::NsaConfig;
 pub use prefix::{AcquireResult, PrefixIndex};

@@ -16,6 +16,19 @@
 //! reference (`shared_refs == 1` — no live sequence is reading it).
 //! Eviction is LRU over evictable leaves.
 //!
+//! With a [`TieredLedger`] carrying cold tiers (DRAM/CXL/SSD below the
+//! pool), pool pressure is relieved **demotion-first, eviction-second**:
+//! the LRU unreferenced node — leaf or not, demotion keeps it resident —
+//! moves its shared reservation one tier down
+//! ([`TieredLedger::shared_move`]) and stays readable over the deeper
+//! fabric path; only when no cold capacity remains does the LRU
+//! unreferenced *leaf* actually evict. A later admission hitting a
+//! demoted node attaches on the node's current tier and reports the bytes
+//! in [`AcquireResult::cold_fetch`], so the serving engine lowers the
+//! read as a cold-tier `Prefetch` instead of a pool fetch. Nodes a live
+//! sequence still references never move, which keeps every holder's
+//! recorded tier valid for the lifetime of its reference.
+//!
 //! The handle is cheaply cloneable; all clones share one tree, which is how
 //! `serving/cluster.rs` makes the index cluster-wide: a prefix prefilled on
 //! replica A is resident in the shared pool, so replica B's admission
@@ -24,7 +37,8 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::memory::{PoolHandle, SharedAcquire};
+use crate::graph::Tier;
+use crate::memory::{PoolHandle, SharedAcquire, TieredLedger};
 
 /// Cluster-wide prefix index handle. Clones share one tree.
 #[derive(Debug, Clone, Default)]
@@ -40,6 +54,8 @@ struct IndexState {
     hits: u64,
     misses: u64,
     evicted: u64,
+    /// Nodes pushed below the pool instead of evicted (tiered ledgers).
+    demoted: u64,
 }
 
 #[derive(Debug)]
@@ -50,6 +66,9 @@ struct Node {
     children: u32,
     bytes: u64,
     last_use: u64,
+    /// Which tier's ledger holds this node's shared reservation. Freshly
+    /// inserted nodes live at the pool; demotion moves them down.
+    tier: Tier,
 }
 
 /// Outcome of one [`PrefixIndex::acquire`] walk.
@@ -63,10 +82,17 @@ pub struct AcquireResult {
     /// caller computes these blocks; pass them to [`PrefixIndex::abort`]
     /// if the admission is rolled back before they are produced.
     pub inserted: Vec<u64>,
+    /// The tier each `acquired` entry's reservation lives at (parallel to
+    /// [`acquired`](Self::acquired)). The caller must release each
+    /// reference on that tier's ledger. All-`Remote` on untiered setups.
+    pub tiers: Vec<Tier>,
     /// Leading blocks that were already resident (dedup hits).
     pub hit_blocks: usize,
     /// Pool bytes the hits deduplicated (attached without reserving).
     pub deduped_bytes: u64,
+    /// Bytes of hit blocks resident *below* the pool, summed per cold
+    /// tier — the device must fetch these over the deep fabric path.
+    pub cold_fetch: Vec<(Tier, u64)>,
 }
 
 impl PrefixIndex {
@@ -84,6 +110,21 @@ impl PrefixIndex {
     /// walk stops there — acquiring a *partial* prefix is fine, the caller
     /// just computes more of the prompt itself.
     pub fn acquire(&self, hashes: &[u64], block_bytes: u64, pool: &PoolHandle) -> AcquireResult {
+        self.acquire_tiered(hashes, block_bytes, &TieredLedger::single(pool.clone()))
+    }
+
+    /// [`acquire`](Self::acquire) against a tier stack: hits on demoted
+    /// nodes attach on the node's *current* tier (and are summed into
+    /// [`AcquireResult::cold_fetch`]); pool pressure on cold inserts is
+    /// relieved demotion-first. With a single-tier ledger this is exactly
+    /// the untiered walk.
+    pub fn acquire_tiered(
+        &self,
+        hashes: &[u64],
+        block_bytes: u64,
+        ledger: &TieredLedger,
+    ) -> AcquireResult {
+        let pool = ledger.pool();
         let mut s = self.state.lock().unwrap();
         s.clock += 1;
         let now = s.clock;
@@ -92,17 +133,28 @@ impl PrefixIndex {
         for &h in hashes {
             if let Some(node) = s.nodes.get_mut(&h) {
                 node.last_use = now;
-                let r = pool.shared_acquire(h, block_bytes);
-                debug_assert_eq!(r, SharedAcquire::Attached, "resident node must hold a pool ref");
+                let tier = node.tier;
+                let bytes = node.bytes;
+                let handle = ledger.handle(tier).unwrap_or(pool);
+                let r = handle.shared_acquire(h, block_bytes);
+                debug_assert_eq!(r, SharedAcquire::Attached, "resident node must hold a ref");
                 out.hit_blocks += 1;
-                out.deduped_bytes += node.bytes;
+                out.deduped_bytes += bytes;
                 out.acquired.push(h);
+                out.tiers.push(tier);
+                if tier != Tier::Remote {
+                    match out.cold_fetch.iter_mut().find(|(t, _)| *t == tier) {
+                        Some(e) => e.1 += bytes,
+                        None => out.cold_fetch.push((tier, bytes)),
+                    }
+                }
             } else {
-                // Cold: reserve the sequence's reference, evicting once on
-                // pressure, then attach the index's own reference.
+                // Cold: reserve the sequence's reference, relieving pool
+                // pressure once (demote-first, evict-second), then attach
+                // the index's own reference.
                 let mut r = pool.shared_acquire(h, block_bytes);
                 if r == SharedAcquire::Exhausted {
-                    Self::evict_locked(&mut s, pool, block_bytes);
+                    Self::evict_locked(&mut s, ledger, block_bytes);
                     r = pool.shared_acquire(h, block_bytes);
                 }
                 match r {
@@ -116,6 +168,7 @@ impl PrefixIndex {
                         out.hit_blocks += 1;
                         out.deduped_bytes += block_bytes;
                         out.acquired.push(h);
+                        out.tiers.push(Tier::Remote);
                         parent = Some(h);
                         continue;
                     }
@@ -123,7 +176,10 @@ impl PrefixIndex {
                 let index_ref = pool.shared_acquire(h, block_bytes);
                 debug_assert_eq!(index_ref, SharedAcquire::Attached);
                 let bytes = pool_quantized(pool, block_bytes);
-                s.nodes.insert(h, Node { parent, children: 0, bytes, last_use: now });
+                s.nodes.insert(
+                    h,
+                    Node { parent, children: 0, bytes, last_use: now, tier: Tier::Remote },
+                );
                 if let Some(p) = parent {
                     if let Some(pn) = s.nodes.get_mut(&p) {
                         pn.children += 1;
@@ -131,6 +187,7 @@ impl PrefixIndex {
                 }
                 out.inserted.push(h);
                 out.acquired.push(h);
+                out.tiers.push(Tier::Remote);
             }
             parent = Some(h);
         }
@@ -145,9 +202,22 @@ impl PrefixIndex {
     /// exist). `inserted` must be in chain order, as returned by
     /// [`acquire`](Self::acquire).
     pub fn abort(&self, acquired: &[u64], inserted: &[u64], pool: &PoolHandle) {
+        self.abort_tiered(acquired, inserted, &TieredLedger::single(pool.clone()));
+    }
+
+    /// [`abort`](Self::abort) against a tier stack: each acquired hash is
+    /// released on the tier its node's reservation currently lives at
+    /// (pool for nodes already gone from the index).
+    pub fn abort_tiered(&self, acquired: &[u64], inserted: &[u64], ledger: &TieredLedger) {
+        let pool = ledger.pool();
         let mut s = self.state.lock().unwrap();
         for &h in acquired {
-            pool.shared_release(h);
+            let handle = s
+                .nodes
+                .get(&h)
+                .and_then(|n| ledger.handle(n.tier))
+                .unwrap_or(pool);
+            handle.shared_release(h);
         }
         for &h in inserted.iter().rev() {
             let Some(node) = s.nodes.remove(&h) else { continue };
@@ -157,6 +227,7 @@ impl PrefixIndex {
                     pn.children -= 1;
                 }
             }
+            // Inserted nodes are always fresh pool residents.
             pool.shared_release(h);
         }
     }
@@ -164,19 +235,56 @@ impl PrefixIndex {
     /// Evict cold leaves (LRU first) until at least `want_bytes` have been
     /// freed or nothing more is evictable. Returns the bytes freed.
     pub fn evict(&self, pool: &PoolHandle, want_bytes: u64) -> u64 {
-        let mut s = self.state.lock().unwrap();
-        Self::evict_locked(&mut s, pool, want_bytes)
+        self.evict_tiered(&TieredLedger::single(pool.clone()), want_bytes)
     }
 
-    fn evict_locked(s: &mut IndexState, pool: &PoolHandle, want_bytes: u64) -> u64 {
+    /// [`evict`](Self::evict) against a tier stack: pool pressure is
+    /// relieved demotion-first (LRU unreferenced node moves one tier
+    /// down, staying resident), eviction-second (only when no cold tier
+    /// has room). Returns the *pool* bytes freed either way.
+    pub fn evict_tiered(&self, ledger: &TieredLedger, want_bytes: u64) -> u64 {
+        let mut s = self.state.lock().unwrap();
+        Self::evict_locked(&mut s, ledger, want_bytes)
+    }
+
+    fn evict_locked(s: &mut IndexState, ledger: &TieredLedger, want_bytes: u64) -> u64 {
+        let pool = ledger.pool();
         let mut freed = 0u64;
         while freed < want_bytes {
-            // An entry is evictable iff it is a leaf and the index holds
-            // the last pool reference (no live sequence reads it).
+            // Demotion-first: the LRU pool-tier entry nobody reads — leaf
+            // or not, demotion keeps it resident — moves its reservation
+            // one tier down if any cold tier has room.
+            if ledger.below(Tier::Remote).is_some() {
+                let candidate = s
+                    .nodes
+                    .iter()
+                    .filter(|(h, n)| n.tier == Tier::Remote && pool.shared_refs(**h) == 1)
+                    .min_by_key(|(_, n)| n.last_use)
+                    .map(|(h, n)| (*h, n.bytes));
+                if let Some((h, bytes)) = candidate {
+                    // Shallowest cold tier with room wins (Dram before
+                    // Cxl before Ssd).
+                    let dst = ledger
+                        .tiers()
+                        .skip(1)
+                        .find(|&d| ledger.shared_move(h, Tier::Remote, d));
+                    if let Some(d) = dst {
+                        s.nodes.get_mut(&h).unwrap().tier = d;
+                        s.demoted += 1;
+                        freed += bytes;
+                        continue;
+                    }
+                }
+            }
+            // Eviction: an entry is evictable iff it is a pool-tier leaf
+            // and the index holds the last reference (no live sequence
+            // reads it).
             let victim = s
                 .nodes
                 .iter()
-                .filter(|(h, n)| n.children == 0 && pool.shared_refs(**h) == 1)
+                .filter(|(h, n)| {
+                    n.children == 0 && n.tier == Tier::Remote && pool.shared_refs(**h) == 1
+                })
                 .min_by_key(|(_, n)| n.last_use)
                 .map(|(h, _)| *h);
             let Some(h) = victim else { break };
@@ -203,15 +311,38 @@ impl PrefixIndex {
         self.len() == 0
     }
 
-    /// Pool bytes held by resident entries (each counted once).
+    /// Ledger bytes held by resident entries across all tiers (each
+    /// counted once). Equals the pool's shared bytes on untiered setups.
     pub fn resident_bytes(&self) -> u64 {
         self.state.lock().unwrap().nodes.values().map(|n| n.bytes).sum()
+    }
+
+    /// Bytes of resident entries demoted below the pool, per cold tier.
+    pub fn cold_resident_bytes(&self) -> Vec<(Tier, u64)> {
+        let s = self.state.lock().unwrap();
+        let mut out: Vec<(Tier, u64)> = Vec::new();
+        for n in s.nodes.values() {
+            if n.tier == Tier::Remote {
+                continue;
+            }
+            match out.iter_mut().find(|(t, _)| *t == n.tier) {
+                Some(e) => e.1 += n.bytes,
+                None => out.push((n.tier, n.bytes)),
+            }
+        }
+        out
     }
 
     /// Lifetime (hit blocks, missed blocks, evicted entries).
     pub fn stats(&self) -> (u64, u64, u64) {
         let s = self.state.lock().unwrap();
         (s.hits, s.misses, s.evicted)
+    }
+
+    /// Lifetime count of entries demoted below the pool instead of
+    /// evicted.
+    pub fn demoted(&self) -> u64 {
+        self.state.lock().unwrap().demoted
     }
 }
 
@@ -355,5 +486,78 @@ mod tests {
         for &h in hashes {
             pool.shared_release(h);
         }
+    }
+
+    fn dram_ledger(pool_blocks: u64, dram_blocks: u64) -> TieredLedger {
+        use crate::sim::{HwConfig, TierTopology};
+        let hw = HwConfig::ascend910c_like();
+        let topo = TierTopology::two_tier(&hw).with_cold_tier(
+            Tier::Dram,
+            10.0,
+            10.0,
+            5.0,
+            dram_blocks * BLK,
+        );
+        let pool = PoolHandle::new_chunked(pool_blocks * BLK, BLK);
+        TieredLedger::from_topology(pool, &topo, BLK)
+    }
+
+    #[test]
+    fn pressure_demotes_before_evicting_and_hits_report_cold_fetch() {
+        let ledger = dram_ledger(2, 2);
+        let idx = PrefixIndex::new();
+        let old = chain(1, 2);
+        let a = idx.acquire_tiered(&old, BLK, &ledger);
+        assert_eq!(a.inserted.len(), 2);
+        assert_eq!(a.tiers, vec![Tier::Remote, Tier::Remote]);
+        assert!(a.cold_fetch.is_empty());
+        idx_release(&a.acquired, ledger.pool());
+        // A new 2-block chain needs the whole pool: the cold entries are
+        // demoted to DRAM, not evicted — they stay resident.
+        let newc = chain(2, 2);
+        let b = idx.acquire_tiered(&newc, BLK, &ledger);
+        assert_eq!(b.acquired.len(), 2);
+        assert_eq!(idx.len(), 4, "demotion keeps entries resident");
+        assert_eq!(idx.demoted(), 2);
+        let (_, _, evicted) = idx.stats();
+        assert_eq!(evicted, 0);
+        assert_eq!(idx.cold_resident_bytes(), vec![(Tier::Dram, 2 * BLK)]);
+        assert_eq!(ledger.pool().used(), 2 * BLK);
+        assert_eq!(ledger.handle(Tier::Dram).unwrap().used(), 2 * BLK);
+        assert_eq!(ledger.total_used(), 4 * BLK);
+        // Hitting the demoted chain attaches on DRAM and reports the
+        // bytes as a cold fetch.
+        let c = idx.acquire_tiered(&old, BLK, &ledger);
+        assert_eq!(c.hit_blocks, 2);
+        assert_eq!(c.tiers, vec![Tier::Dram, Tier::Dram]);
+        assert_eq!(c.cold_fetch, vec![(Tier::Dram, 2 * BLK)]);
+        assert_eq!(ledger.handle(Tier::Dram).unwrap().shared_refs(old[0]), 2);
+        // Rollback releases on the tier actually holding the entry.
+        idx.abort_tiered(&c.acquired, &c.inserted, &ledger);
+        assert_eq!(ledger.handle(Tier::Dram).unwrap().shared_refs(old[0]), 1);
+        assert_eq!(ledger.total_used(), 4 * BLK);
+    }
+
+    #[test]
+    fn eviction_resumes_when_the_cold_tier_is_full() {
+        let ledger = dram_ledger(2, 1);
+        let idx = PrefixIndex::new();
+        let x = chain(1, 1);
+        let y = chain(2, 1);
+        idx_release(&idx.acquire_tiered(&x, BLK, &ledger).acquired, ledger.pool());
+        idx_release(&idx.acquire_tiered(&y, BLK, &ledger).acquired, ledger.pool());
+        // Two fresh blocks: the first displacement demotes LRU `x` into
+        // the one-block DRAM tier; the second finds DRAM full and falls
+        // back to evicting `y`.
+        let z = chain(3, 2);
+        let b = idx.acquire_tiered(&z, BLK, &ledger);
+        assert_eq!(b.acquired.len(), 2);
+        assert_eq!(idx.demoted(), 1);
+        let (_, _, evicted) = idx.stats();
+        assert_eq!(evicted, 1);
+        assert_eq!(idx.len(), 3, "x demoted, y evicted, z resident");
+        assert_eq!(idx.cold_resident_bytes(), vec![(Tier::Dram, BLK)]);
+        assert_eq!(ledger.pool().used(), 2 * BLK);
+        assert_eq!(ledger.handle(Tier::Dram).unwrap().used(), BLK);
     }
 }

@@ -1,9 +1,21 @@
-//! SuperNode hierarchical memory substrate (DESIGN.md §2): device HBM
-//! allocator with fragmentation/compaction, remote shared pool, host tier,
-//! and the unified transfer primitives of §6.
+//! SuperNode hierarchical memory substrate (DESIGN.md §2): the device HBM
+//! allocator with fragmentation/compaction at the top of the stack, then
+//! one capacity ledger per tier below it — the remote shared pool
+//! ([`PoolHandle`]) and, under a configured
+//! [`TierTopology`](crate::sim::TierTopology), the cold DRAM/CXL/SSD
+//! levels ([`TieredLedger`]) — plus the unified transfer primitives of §6.
+//!
+//! Reservation semantics are uniform down the stack: every tier's ledger
+//! supports private bytes (`try_reserve`/`release`) and refcounted shared
+//! entries (`shared_acquire`/`shared_release` — the prefix-cache dedup
+//! ledger), and [`TieredLedger`] adds the demotion/promotion moves that
+//! shift either flavour between adjacent tiers without ever dropping or
+//! double-counting a byte.
 
 mod allocator;
 mod tiers;
 
 pub use allocator::{AllocId, DeviceAllocator};
-pub use tiers::{HierarchicalMemory, PoolHandle, Region, RegionId, SharedAcquire, TransferKind};
+pub use tiers::{
+    HierarchicalMemory, PoolHandle, Region, RegionId, SharedAcquire, TieredLedger, TransferKind,
+};

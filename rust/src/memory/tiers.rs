@@ -1,5 +1,18 @@
-//! Hierarchical memory: Device HBM + SuperNode remote pool + host DRAM,
+//! Hierarchical memory: the tier stack of one SuperNode device slice,
 //! with the unified transfer primitives of §6 (H2R/R2H/R2D/D2R/D2D).
+//!
+//! The stack is Device HBM at the top, the fabric-attached remote pool
+//! below it, and — when a [`TierTopology`](crate::sim::TierTopology) is
+//! configured — any of DRAM / CXL / SSD below the pool. Capacity is
+//! accounted per tier: the pool's ledger is a [`PoolHandle`] (cloneable,
+//! shared across slices), and [`TieredLedger`] generalises that to one
+//! handle *per* non-device tier, preserving both reservation flavours at
+//! every level — private bytes (`try_reserve`/`release`) and refcounted
+//! shared entries (`shared_acquire`/`shared_release`, the dedup ledger of
+//! the prefix cache). `TieredLedger::move_private` / `shared_move`
+//! implement demotion and promotion: bytes leave one tier's ledger and
+//! enter another's atomically, so `Σ per-tier used` is conserved by every
+//! move (property P16 in `rust/tests/proptest_invariants.rs`).
 //!
 //! This is the state-tracking side (who holds which bytes, what a transfer
 //! costs); the *timing* of transfers is simulated by [`crate::sim`] or the
@@ -211,6 +224,153 @@ impl PoolHandle {
     pub fn shared_bytes(&self) -> u64 {
         self.state.lock().unwrap().shared.values().map(|e| e.bytes).sum()
     }
+
+    /// Ledger bytes and refcount of shared reservation `key`, if resident.
+    pub fn shared_entry(&self, key: u64) -> Option<(u64, u64)> {
+        self.state.lock().unwrap().shared.get(&key).map(|e| (e.bytes, e.refs))
+    }
+
+    /// Install a shared reservation wholesale (bytes already quantized,
+    /// refcount carried over) — the receiving half of a tier move. Fails
+    /// without reserving anything if the key is already resident or the
+    /// capacity cannot hold the bytes.
+    fn shared_install(&self, key: u64, bytes: u64, refs: u64) -> bool {
+        let mut s = self.state.lock().unwrap();
+        if s.shared.contains_key(&key) {
+            return false;
+        }
+        match s.used.checked_add(bytes) {
+            Some(next) if next <= s.capacity => {
+                s.used = next;
+                s.peak = s.peak.max(next);
+                s.shared.insert(key, SharedEntry { bytes, refs });
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Remove a shared reservation wholesale, returning its
+    /// `(bytes, refs)` — the sending half of a tier move. The entry's
+    /// bytes return to this ledger regardless of the refcount.
+    fn shared_remove(&self, key: u64) -> Option<(u64, u64)> {
+        let mut s = self.state.lock().unwrap();
+        let e = s.shared.remove(&key)?;
+        s.used = s.used.saturating_sub(e.bytes);
+        Some((e.bytes, e.refs))
+    }
+}
+
+/// One capacity ledger per non-device tier of a
+/// [`TierTopology`](crate::sim::TierTopology) — the pool's
+/// [`PoolHandle`] semantics, generalised down the stack.
+///
+/// The first entry is always the pool tier ([`Tier::Remote`]); deeper
+/// entries are the topology's cold tiers in order. Clones share every
+/// ledger (the handles are themselves shared), so a node-wide
+/// `TieredLedger` models all device slices drawing on one tier stack.
+///
+/// Demotion and promotion go through [`move_private`](Self::move_private)
+/// / [`shared_move`](Self::shared_move): the destination tier is reserved
+/// *first* and the source released only after, so a failed move changes
+/// nothing and a successful one conserves `Σ used` across the stack.
+#[derive(Debug, Clone)]
+pub struct TieredLedger {
+    tiers: Vec<(Tier, PoolHandle)>,
+}
+
+impl TieredLedger {
+    /// The degenerate single-tier ledger: just the pool. Every tier-aware
+    /// code path handed this behaves bit-identically to the pre-tier
+    /// pool-only path (there is nowhere to demote to).
+    pub fn single(pool: PoolHandle) -> Self {
+        Self { tiers: vec![(Tier::Remote, pool)] }
+    }
+
+    /// Build the ledger stack below `topo`'s device tier, reusing `pool`
+    /// as the pool tier's ledger (so existing clones of the handle keep
+    /// accounting against the same capacity) and creating one
+    /// `chunk_bytes`-granular handle per cold tier with the topology's
+    /// capacity (0 = unbounded).
+    pub fn from_topology(
+        pool: PoolHandle,
+        topo: &crate::sim::TierTopology,
+        chunk_bytes: u64,
+    ) -> Self {
+        let mut tiers = vec![(Tier::Remote, pool)];
+        for (i, &t) in topo.tiers.iter().enumerate().skip(2) {
+            let cap = match topo.capacities.get(i) {
+                Some(&c) if c > 0 => c,
+                _ => u64::MAX,
+            };
+            tiers.push((t, PoolHandle::new_chunked(cap, chunk_bytes)));
+        }
+        Self { tiers }
+    }
+
+    /// The pool tier's handle (always present).
+    pub fn pool(&self) -> &PoolHandle {
+        &self.tiers[0].1
+    }
+
+    /// The ledger handle for `tier`, if that tier is in the stack.
+    /// [`Tier::Host`] resolves to the pool tier, mirroring
+    /// `TierTopology::index_of`.
+    pub fn handle(&self, tier: Tier) -> Option<&PoolHandle> {
+        let tier = if tier == Tier::Host { Tier::Remote } else { tier };
+        self.tiers.iter().find(|(t, _)| *t == tier).map(|(_, h)| h)
+    }
+
+    /// Tiers in stack order (pool first, then cold tiers).
+    pub fn tiers(&self) -> impl Iterator<Item = Tier> + '_ {
+        self.tiers.iter().map(|(t, _)| *t)
+    }
+
+    /// The tier one level below `tier` in the stack, if any.
+    pub fn below(&self, tier: Tier) -> Option<Tier> {
+        let i = self.tiers.iter().position(|(t, _)| *t == tier)?;
+        self.tiers.get(i + 1).map(|(t, _)| *t)
+    }
+
+    /// Σ used bytes across every tier in the stack.
+    pub fn total_used(&self) -> u64 {
+        self.tiers.iter().map(|(_, h)| h.used()).sum()
+    }
+
+    /// Move `bytes` of *private* reservation from `src` to `dst`.
+    /// Reserves at the destination first; on any failure nothing changes.
+    pub fn move_private(&self, src: Tier, dst: Tier, bytes: u64) -> bool {
+        if src == dst {
+            return true;
+        }
+        let (Some(s), Some(d)) = (self.handle(src), self.handle(dst)) else {
+            return false;
+        };
+        if s.used() < bytes || !d.try_reserve(bytes) {
+            return false;
+        }
+        s.release(bytes);
+        true
+    }
+
+    /// Move the *shared* reservation `key` from `src` to `dst`, carrying
+    /// its refcount. Installs at the destination first; on capacity
+    /// failure the entry stays at the source untouched.
+    pub fn shared_move(&self, key: u64, src: Tier, dst: Tier) -> bool {
+        if src == dst {
+            return true;
+        }
+        let (Some(s), Some(d)) = (self.handle(src), self.handle(dst)) else {
+            return false;
+        };
+        let Some((bytes, refs)) = s.shared_entry(key) else { return false };
+        if !d.shared_install(key, bytes, refs) {
+            return false;
+        }
+        let removed = s.shared_remove(key);
+        debug_assert!(removed.is_some(), "entry vanished mid-move");
+        true
+    }
 }
 
 /// A transfer primitive between tiers (§6 "Unified Memory Primitives").
@@ -236,6 +396,20 @@ impl TransferKind {
             (Device, Device) => TransferKind::D2D,
             (Host, Device) => TransferKind::H2D,
             (Device, Host) => TransferKind::D2H,
+            // Cold tiers (DRAM/CXL/SSD) ride the host-side links in this
+            // coarse primitive taxonomy: a move between two non-device,
+            // non-pool levels is host-lateral traffic (H2R class). The
+            // per-edge timing of a configured TierTopology supersedes
+            // these labels in `HierarchicalMemory::migrate`.
+            (a, b) if a.is_cold() || b.is_cold() => {
+                let fa = if a.is_cold() { Host } else { a };
+                let fb = if b.is_cold() { Host } else { b };
+                if fa == fb {
+                    TransferKind::H2R
+                } else {
+                    return Self::between(fa, fb);
+                }
+            }
             (a, b) => bail!("unsupported transfer {a:?} -> {b:?}"),
         })
     }
@@ -277,6 +451,9 @@ pub struct HierarchicalMemory {
     /// all slices).
     remote_local: u64,
     pub host_used: u64,
+    /// Bytes this slice holds in each cold tier (DRAM/CXL/SSD); capacity
+    /// is checked against the hardware's `TierTopology` on registration.
+    cold_used: HashMap<Tier, u64>,
     regions: HashMap<u64, Region>,
     next_region: u64,
     /// Cumulative microseconds of defrag stall charged (compaction moves
@@ -300,6 +477,7 @@ impl HierarchicalMemory {
             pool,
             remote_local: 0,
             host_used: 0,
+            cold_used: HashMap::new(),
             regions: HashMap::new(),
             next_region: 1,
             defrag_stall_us: 0.0,
@@ -338,6 +516,10 @@ impl HierarchicalMemory {
                 self.host_used += bytes;
                 None
             }
+            t @ (Tier::Dram | Tier::Cxl | Tier::Ssd) => {
+                self.reserve_cold(t, bytes, hw)?;
+                None
+            }
         };
         let id = self.next_region;
         self.next_region += 1;
@@ -354,7 +536,18 @@ impl HierarchicalMemory {
             return Ok((TransferKind::between(region.tier, dst).unwrap_or(TransferKind::D2D), 0.0, 0.0));
         }
         let kind = TransferKind::between(region.tier, dst)?;
-        let dur = kind.duration_us(region.bytes, hw);
+        // A configured TierTopology routes the timing over the actual
+        // tier path (per-hop latencies, bottleneck bandwidth); the flat
+        // per-kind costs are the legacy two-level fallback.
+        let dur = if hw.tiers.is_some() {
+            match (region.tier, dst) {
+                (Tier::Device, d) => hw.evict_us(d, region.bytes),
+                (s, Tier::Device) => hw.fetch_us(s, region.bytes),
+                (s, d) => hw.promote_us(s, d, region.bytes),
+            }
+        } else {
+            kind.duration_us(region.bytes, hw)
+        };
 
         // Acquire the destination *first*: src != dst here, so the two
         // never compete for the same capacity, and a failed acquisition
@@ -379,6 +572,10 @@ impl HierarchicalMemory {
                 self.host_used += region.bytes;
                 None
             }
+            t @ (Tier::Dram | Tier::Cxl | Tier::Ssd) => {
+                self.reserve_cold(t, region.bytes, hw)?;
+                None
+            }
         };
         // Release the source.
         match region.tier {
@@ -392,6 +589,11 @@ impl HierarchicalMemory {
                 self.remote_local -= region.bytes;
             }
             Tier::Host => self.host_used -= region.bytes,
+            t @ (Tier::Dram | Tier::Cxl | Tier::Ssd) => {
+                if let Some(u) = self.cold_used.get_mut(&t) {
+                    *u = u.saturating_sub(region.bytes);
+                }
+            }
         }
         let r = self.regions.get_mut(&id).unwrap();
         r.tier = dst;
@@ -413,6 +615,11 @@ impl HierarchicalMemory {
                 self.remote_local -= region.bytes;
             }
             Tier::Host => self.host_used -= region.bytes,
+            t @ (Tier::Dram | Tier::Cxl | Tier::Ssd) => {
+                if let Some(u) = self.cold_used.get_mut(&t) {
+                    *u = u.saturating_sub(region.bytes);
+                }
+            }
         }
         Ok(())
     }
@@ -423,6 +630,25 @@ impl HierarchicalMemory {
 
     pub fn device_used(&self) -> u64 {
         self.device.used()
+    }
+
+    /// Bytes this slice holds in cold tier `tier` (0 if none).
+    pub fn cold_used(&self, tier: Tier) -> u64 {
+        self.cold_used.get(&tier).copied().unwrap_or(0)
+    }
+
+    /// Account `bytes` into cold tier `t`, checking the topology's
+    /// capacity. Rejects tiers absent from the hardware's tier stack.
+    fn reserve_cold(&mut self, t: Tier, bytes: u64, hw: &HwConfig) -> Result<()> {
+        let Some(cap) = hw.tier_capacity(t) else {
+            bail!("tier {t:?} is not in the hardware topology");
+        };
+        let used = self.cold_used.get(&t).copied().unwrap_or(0);
+        if cap > 0 && used.saturating_add(bytes) > cap {
+            bail!("{t:?} tier exhausted: {bytes} B over {cap} B capacity");
+        }
+        *self.cold_used.entry(t).or_insert(0) += bytes;
+        Ok(())
     }
 
     /// Compaction stall: moved bytes at HBM bandwidth (read+write).
@@ -447,6 +673,7 @@ mod tests {
             host_overhead_us: 150.0,
             device_capacity: 4 * GB,
             remote_capacity: 64 * GB,
+            tiers: None,
         }
     }
 
@@ -643,5 +870,90 @@ mod tests {
         assert_eq!(TransferKind::between(Remote, Host).unwrap(), TransferKind::R2H);
         assert_eq!(TransferKind::between(Device, Remote).unwrap(), TransferKind::D2R);
         assert_eq!(TransferKind::between(Remote, Device).unwrap(), TransferKind::R2D);
+        // Cold tiers fold onto the host-class links.
+        assert_eq!(TransferKind::between(Remote, Dram).unwrap(), TransferKind::R2H);
+        assert_eq!(TransferKind::between(Ssd, Device).unwrap(), TransferKind::H2D);
+        assert_eq!(TransferKind::between(Dram, Cxl).unwrap(), TransferKind::H2R);
+    }
+
+    #[test]
+    fn tiered_ledger_moves_conserve_total_used() {
+        use crate::sim::TierTopology;
+        let hw = hw();
+        let pool = PoolHandle::new(4 * GB);
+        let ledger = TieredLedger::from_topology(pool.clone(), &TierTopology::five_tier(&hw), 1);
+        let tiers: Vec<Tier> = ledger.tiers().collect();
+        assert_eq!(tiers, vec![Tier::Remote, Tier::Dram, Tier::Cxl, Tier::Ssd]);
+        assert_eq!(ledger.below(Tier::Remote), Some(Tier::Dram));
+        assert_eq!(ledger.below(Tier::Ssd), None);
+
+        assert!(ledger.pool().try_reserve(3 * GB));
+        let before = ledger.total_used();
+        // Demote 1 GB pool → DRAM, then DRAM → SSD: Σ used is invariant.
+        assert!(ledger.move_private(Tier::Remote, Tier::Dram, GB));
+        assert_eq!(pool.used(), 2 * GB);
+        assert_eq!(ledger.handle(Tier::Dram).unwrap().used(), GB);
+        assert!(ledger.move_private(Tier::Dram, Tier::Ssd, GB));
+        assert_eq!(ledger.total_used(), before);
+        // Promote back up.
+        assert!(ledger.move_private(Tier::Ssd, Tier::Remote, GB));
+        assert_eq!(pool.used(), 3 * GB);
+        assert_eq!(ledger.total_used(), before);
+        // A move bigger than the source's holdings changes nothing.
+        assert!(!ledger.move_private(Tier::Remote, Tier::Dram, 100 * GB), "src underflow");
+        assert_eq!(ledger.total_used(), before);
+    }
+
+    #[test]
+    fn tiered_ledger_shared_move_carries_refs() {
+        use crate::sim::TierTopology;
+        let hw = hw();
+        let block = 64u64;
+        let pool = PoolHandle::new_chunked(4 * block, block);
+        let ledger =
+            TieredLedger::from_topology(pool.clone(), &TierTopology::three_tier(&hw), block);
+        assert_eq!(pool.shared_acquire(7, block), SharedAcquire::Reserved);
+        assert_eq!(pool.shared_acquire(7, block), SharedAcquire::Attached);
+        // Demote the shared entry pool → DRAM: refcount and bytes move.
+        assert!(ledger.shared_move(7, Tier::Remote, Tier::Dram));
+        assert_eq!(pool.shared_refs(7), 0);
+        assert_eq!(pool.used(), 0);
+        let dram = ledger.handle(Tier::Dram).unwrap();
+        assert_eq!(dram.shared_refs(7), 2);
+        assert_eq!(dram.used(), block);
+        // Release both holders on the new tier; bytes return there.
+        assert!(!dram.shared_release(7));
+        assert!(dram.shared_release(7));
+        assert_eq!(dram.used(), 0);
+        // Moving an absent key fails without touching either ledger.
+        assert!(!ledger.shared_move(7, Tier::Remote, Tier::Dram));
+        assert_eq!(ledger.total_used(), 0);
+    }
+
+    #[test]
+    fn cold_tier_regions_register_and_migrate() {
+        use crate::sim::TierTopology;
+        let mut hw = hw();
+        // Without a topology, cold tiers are rejected outright.
+        let mut flat = HierarchicalMemory::new(&hw);
+        assert!(flat.register("x", GB, Tier::Dram, &hw).is_err());
+
+        hw.tiers = Some(TierTopology::five_tier(&hw));
+        let mut m = HierarchicalMemory::new(&hw);
+        let (id, _) = m.register("act", GB, Tier::Remote, &hw).unwrap();
+        // Demote pool → SSD: bytes leave the pool ledger for the cold one.
+        let (kind, dur, _) = m.migrate(id, Tier::Ssd, &hw).unwrap();
+        assert_eq!(kind, TransferKind::R2H);
+        let expect = hw.promote_us(Tier::Remote, Tier::Ssd, GB);
+        assert!((dur - expect).abs() < 1e-6, "dur {dur} vs {expect}");
+        assert_eq!(m.remote_used(), 0);
+        assert_eq!(m.cold_used(Tier::Ssd), GB);
+        // Fetch it all the way to device: full path timing.
+        let (kind, dur, _) = m.migrate(id, Tier::Device, &hw).unwrap();
+        assert_eq!(kind, TransferKind::H2D);
+        assert!((dur - hw.fetch_us(Tier::Ssd, GB)).abs() < 1e-6);
+        assert_eq!(m.cold_used(Tier::Ssd), 0);
+        m.release(id).unwrap();
+        assert_eq!(m.device_used(), 0);
     }
 }

@@ -311,7 +311,9 @@ impl AnalysisCache {
         }
         for m in muts {
             match m {
-                Mutation::TensorAdded { .. } | Mutation::TensorMeta => {}
+                Mutation::TensorAdded { .. }
+                | Mutation::TensorMeta
+                | Mutation::OpRetargeted { .. } => {}
                 Mutation::OpAdded { op } => {
                     // Safe to append only if nothing already placed
                     // consumes one of the new op's outputs (a consumer can
@@ -421,7 +423,9 @@ impl AnalysisCache {
                 Mutation::InputAdded { tensor, .. } => {
                     la.lifetimes.insert(tensor, super::lifetime::lifetime_of(g, tensor, &pos));
                 }
-                Mutation::ControlDepAdded { .. } | Mutation::TensorMeta => {}
+                Mutation::ControlDepAdded { .. }
+                | Mutation::TensorMeta
+                | Mutation::OpRetargeted { .. } => {}
                 Mutation::NonLocal => unreachable!("filtered above"),
             }
         }
@@ -540,6 +544,9 @@ pub struct PassReport {
     pub elided: usize,
     /// Offload round trips replaced by recompute subgraphs.
     pub recomputed: usize,
+    /// Round trips rehomed to a deeper tier (Store retargeted + a Promote
+    /// emitted ahead of reuse) by the tier-placement decision pass.
+    pub retiered: usize,
     /// Prefetches deferred or split by SLO throttling.
     pub throttled: usize,
     /// Transfers split into chunked (partial-tensor) transfers by SLO
@@ -804,7 +811,7 @@ fn verify_semantics(g: &Graph, order: &[OpId], reach: &Reach, diags: &mut Vec<Di
     // Consumers placed before the prefetch read the pre-offload copy and
     // are exempt (the residency walk below polices them).
     for &pf in reach.tracked() {
-        let OpKind::Prefetch { tensor } = g.op(pf).kind else { continue };
+        let OpKind::Prefetch { tensor, .. } = g.op(pf).kind else { continue };
         for &c in g.consumers_of(tensor) {
             if c == pf || g.op(c).kind.is_cache_op() || pos[c] < pos[pf] {
                 continue;
@@ -826,7 +833,13 @@ fn verify_semantics(g: &Graph, order: &[OpId], reach: &Reach, diags: &mut Vec<Di
         }
     }
 
-    // 4. Residency walk over cache-managed tensors.
+    // 4. Residency walk over cache-managed tensors. Alongside the device
+    // residency bit, track *where* each offloaded copy lives (`cold_at`):
+    // a Store parks the copy at its destination tier, a Promote moves it,
+    // and a Prefetch must read it from where it actually is. Mismatches
+    // are only reported when a cold tier (DRAM/CXL/SSD) is involved — the
+    // legacy pipelines conflate Host and the pool, and that conflation
+    // stays diagnostic-free.
     let mut managed = vec![false; nt];
     for op in &g.ops {
         if let Some(t) = op.kind.cache_tensor() {
@@ -838,10 +851,18 @@ fn verify_semantics(g: &Graph, order: &[OpId], reach: &Reach, diags: &mut Vec<Di
         .iter()
         .map(|t| t.home == Tier::Device && g.producer_of(t.id).is_none())
         .collect();
+    let mut cold_at: Vec<Option<Tier>> = g
+        .tensors
+        .iter()
+        .map(|t| (t.home != Tier::Device).then_some(t.home))
+        .collect();
+    let cold_involved = |src: Tier, at: Option<Tier>| {
+        src.is_cold() || at.is_some_and(|t| t.is_cold())
+    };
     for &o in order {
         let op = g.op(o);
         match op.kind {
-            OpKind::Prefetch { tensor } => {
+            OpKind::Prefetch { tensor, src } => {
                 if resident[tensor] {
                     diags.push(
                         Diagnostic::warning(
@@ -855,9 +876,26 @@ fn verify_semantics(g: &Graph, order: &[OpId], reach: &Reach, diags: &mut Vec<Di
                         .with_op(op.id),
                     );
                 }
+                if cold_involved(src, cold_at[tensor]) && cold_at[tensor] != Some(src) {
+                    diags.push(
+                        Diagnostic::error(
+                            PASS,
+                            format!(
+                                "prefetch '{}' reads tensor '{}' from tier {:?}, but its \
+                                 offloaded copy is at {} (promotion missing?)",
+                                op.name,
+                                g.tensor(tensor).name,
+                                src,
+                                cold_at[tensor]
+                                    .map_or("no tier".to_string(), |t| format!("{t:?}")),
+                            ),
+                        )
+                        .with_op(op.id),
+                    );
+                }
                 resident[tensor] = true;
             }
-            OpKind::Store { tensor } | OpKind::Detach { tensor } => {
+            OpKind::Store { tensor, dst } => {
                 if !resident[tensor] {
                     diags.push(
                         Diagnostic::error(
@@ -873,6 +911,45 @@ fn verify_semantics(g: &Graph, order: &[OpId], reach: &Reach, diags: &mut Vec<Di
                     );
                 }
                 resident[tensor] = false;
+                cold_at[tensor] = Some(dst);
+            }
+            OpKind::Detach { tensor } => {
+                if !resident[tensor] {
+                    diags.push(
+                        Diagnostic::error(
+                            PASS,
+                            format!(
+                                "'{}' releases tensor '{}' which has no device residency at \
+                                 that point (double release?)",
+                                op.name,
+                                g.tensor(tensor).name
+                            ),
+                        )
+                        .with_op(op.id),
+                    );
+                }
+                resident[tensor] = false;
+            }
+            OpKind::Promote { tensor, src, dst } => {
+                // Moves the non-device copy; device residency is untouched.
+                if cold_involved(src, cold_at[tensor]) && cold_at[tensor] != Some(src) {
+                    diags.push(
+                        Diagnostic::error(
+                            PASS,
+                            format!(
+                                "promote '{}' moves tensor '{}' from tier {:?}, but its \
+                                 offloaded copy is at {}",
+                                op.name,
+                                g.tensor(tensor).name,
+                                src,
+                                cold_at[tensor]
+                                    .map_or("no tier".to_string(), |t| format!("{t:?}")),
+                            ),
+                        )
+                        .with_op(op.id),
+                    );
+                }
+                cold_at[tensor] = Some(dst);
             }
             _ => {
                 for &t in &op.inputs {
@@ -976,6 +1053,8 @@ pub struct CompileReport {
     pub elided: usize,
     /// Offload round trips replaced by recompute (see `RecomputeVsOffload`).
     pub recomputed: usize,
+    /// Round trips rehomed to a deeper tier (see `TierPlacement`).
+    pub retiered: usize,
     /// Prefetches deferred or split by SLO throttling (see `SloThrottle`).
     pub throttled: usize,
     /// Transfers split into chunked (partial-tensor) transfers.
@@ -1186,6 +1265,15 @@ impl Compiler {
         self.pass_before("exec-order", pass)
     }
 
+    /// Enable the [`TierPlacement`](super::TierPlacement) decision pass
+    /// (inserted before exec-order so the promotions it emits are anchored
+    /// with everything else). A strict no-op unless the session hardware
+    /// carries a [`TierTopology`](crate::sim::TierTopology) with at least
+    /// one cold level below the pool.
+    pub fn tier_placement(self) -> Self {
+        self.pass_before("exec-order", super::tier_placement::TierPlacement::default())
+    }
+
     /// Enable the [`RecomputeVsOffload`](super::RecomputeVsOffload)
     /// decision pass (appended after exec-order so it speculates against
     /// the refined schedule the session would otherwise emit).
@@ -1298,6 +1386,7 @@ impl Compiler {
         let moved = per_pass.iter().map(|r| r.moved).sum();
         let elided = per_pass.iter().map(|r| r.elided).sum();
         let recomputed = per_pass.iter().map(|r| r.recomputed).sum();
+        let retiered = per_pass.iter().map(|r| r.retiered).sum();
         let throttled = per_pass.iter().map(|r| r.throttled).sum();
         let chunked = per_pass.iter().map(|r| r.chunked).sum();
         let deferred_bytes = per_pass.iter().map(|r| r.deferred_bytes).sum();
@@ -1308,6 +1397,7 @@ impl Compiler {
             moved,
             elided,
             recomputed,
+            retiered,
             throttled,
             chunked,
             deferred_bytes,
@@ -1508,7 +1598,7 @@ mod tests {
         assert_eq!((cache.reach_hits, cache.reach_misses), (1, 1));
         // Append a round trip on a fresh tensor: journal-patched, not rebuilt.
         let t = g.add_tensor("x", 8 << 20, Tier::Remote);
-        let pf = g.add_op("pfx", crate::graph::OpKind::Prefetch { tensor: t }, vec![t], vec![]);
+        let pf = g.add_op("pfx", crate::graph::OpKind::prefetch(t), vec![t], vec![]);
         let c = g.add_op(
             "cx",
             crate::graph::OpKind::Compute { flops: 1e9, bytes_accessed: 0 },

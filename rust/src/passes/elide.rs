@@ -88,8 +88,8 @@ impl Pass for ElideRedundantTransfers {
                 let mut detaches = 0usize;
                 for op in &g.ops {
                     match op.kind {
-                        OpKind::Store { tensor } if tensor == t.id => stores.push(op.id),
-                        OpKind::Prefetch { tensor } if tensor == t.id => prefetches.push(op.id),
+                        OpKind::Store { tensor, .. } if tensor == t.id => stores.push(op.id),
+                        OpKind::Prefetch { tensor, .. } if tensor == t.id => prefetches.push(op.id),
                         OpKind::Detach { tensor } if tensor == t.id => detaches += 1,
                         _ => {}
                     }

@@ -15,6 +15,8 @@
 //!             │                            round-trip elision)       │
 //!             │ (RecomputeVsOffload        opt-in: replay cheap      │
 //!             │                            producers vs transfer)    │
+//!             │ (TierPlacement             opt-in: rehome idle       │
+//!             │                            round trips below pool)   │
 //!             │ ExecOrderPass         §4.3 Algorithm 1 refinement    │
 //!             │ (SloThrottle               opt-in: defer/split       │
 //!             │                            prefetches under an SLO)  │
@@ -179,6 +181,7 @@ pub mod lifetime;
 pub mod prefetch_insert;
 pub mod recompute;
 pub mod slo_throttle;
+pub mod tier_placement;
 
 use crate::graph::Graph;
 use crate::sim::HwConfig;
@@ -194,6 +197,7 @@ pub use lifetime::{Lifetime, LifetimeAnalysis};
 pub use prefetch_insert::{InsertionResult, OffloadPlan, OffloadPolicy};
 pub use recompute::RecomputeVsOffload;
 pub use slo_throttle::SloThrottle;
+pub use tier_placement::TierPlacement;
 
 /// The legacy positional-config entry point, kept as a thin shim over the
 /// default [`Compiler`] pipeline with identical output.

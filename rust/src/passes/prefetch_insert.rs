@@ -192,7 +192,7 @@ pub fn insert_cache_ops(
         let st = p.after_op.map(|after| {
             let st = graph.add_op(
                 format!("store.{tname}"),
-                OpKind::Store { tensor: p.tensor },
+                OpKind::store(p.tensor),
                 vec![p.tensor],
                 vec![],
             );
@@ -201,7 +201,7 @@ pub fn insert_cache_ops(
         });
         let pf = graph.add_op(
             format!("prefetch.{tname}"),
-            OpKind::Prefetch { tensor: p.tensor },
+            OpKind::prefetch(p.tensor),
             vec![p.tensor],
             vec![],
         );

@@ -265,8 +265,8 @@ impl RecomputeVsOffload {
             .ops
             .iter()
             .map(|o| match o.kind {
-                OpKind::Prefetch { tensor } => chw.r2d_us(g.tensor(tensor).bytes),
-                OpKind::Store { tensor } => chw.d2r_us(g.tensor(tensor).bytes),
+                OpKind::Prefetch { tensor, src } => chw.fetch_us(src, g.tensor(tensor).bytes),
+                OpKind::Store { tensor, dst } => chw.evict_us(dst, g.tensor(tensor).bytes),
                 _ => 0.0,
             })
             .sum();
@@ -282,8 +282,8 @@ impl RecomputeVsOffload {
             (vec![Vec::new(); nt], vec![Vec::new(); nt], vec![0usize; nt]);
         for op in &g.ops {
             match op.kind {
-                OpKind::Store { tensor } => stores[tensor].push(op.id),
-                OpKind::Prefetch { tensor } => prefetches[tensor].push(op.id),
+                OpKind::Store { tensor, .. } => stores[tensor].push(op.id),
+                OpKind::Prefetch { tensor, .. } => prefetches[tensor].push(op.id),
                 OpKind::Detach { tensor } => detaches[tensor] += 1,
                 _ => {}
             }
@@ -389,11 +389,11 @@ impl Availability {
         let mut last_cache_pos = vec![usize::MAX; nt];
         for (i, &o) in order.iter().enumerate() {
             match g.op(o).kind {
-                OpKind::Prefetch { tensor } => {
+                OpKind::Prefetch { tensor, .. } => {
                     events[tensor].push((i, true));
                     last_cache_pos[tensor] = i;
                 }
-                OpKind::Store { tensor } | OpKind::Detach { tensor } => {
+                OpKind::Store { tensor, .. } | OpKind::Detach { tensor } => {
                     events[tensor].push((i, false));
                     last_cache_pos[tensor] = i;
                 }
@@ -496,7 +496,7 @@ fn apply_recompute(g: &Graph, order: &[OpId], c: &Candidate) -> Option<TrialRewr
         let inputs = trial.op(ro).inputs.clone();
         for x in inputs {
             for old in 0..g.ops.len() {
-                if matches!(g.op(old).kind, OpKind::Prefetch { tensor } if tensor == x)
+                if matches!(g.op(old).kind, OpKind::Prefetch { tensor, .. } if tensor == x)
                     && pos[old] < c.u_pos
                 {
                     if let Some(new_pf) = map[old] {

@@ -494,7 +494,7 @@ fn window_consumers(g: &Graph, pf: OpId) -> Vec<OpId> {
 /// First Store of a deferrable, not-yet-decided tensor.
 fn next_deferrable_store(g: &Graph, decided: &[TensorId]) -> Option<(OpId, TensorId)> {
     g.ops.iter().find_map(|o| match o.kind {
-        OpKind::Store { tensor }
+        OpKind::Store { tensor, .. }
             if g.tensor(tensor).deferrable
                 && g.tensor(tensor).alias_of.is_none()
                 && !decided.contains(&tensor) =>
@@ -543,14 +543,19 @@ fn spill_store(
         .collect();
 
     // Build the keep-k trial: replace Store(t) by Store(t.keep) of `keep`
-    // bytes with the same wiring (or drop it entirely at keep == 0).
+    // bytes with the same wiring (or drop it entirely at keep == 0). The
+    // keep-store inherits the original store's destination tier.
+    let st_dst = match g.op(s).kind {
+        OpKind::Store { dst, .. } => dst,
+        _ => Tier::Remote,
+    };
     let build = |keep: u64| -> Option<(Graph, Vec<OpId>)> {
         let mut trial = g.clone();
         if keep > 0 {
             let kc = trial.add_chunk_tensor(t, format!("{name}.keep"), keep);
             let st2 = trial.add_op(
                 format!("store.{name}.keep"),
-                OpKind::Store { tensor: kc },
+                OpKind::Store { tensor: kc, dst: st_dst },
                 vec![kc],
                 vec![],
             );
@@ -615,6 +620,10 @@ fn split_prefetch(g: &Graph, t: TensorId, pf: OpId, k: usize) -> Option<Graph> {
         .collect();
     let bytes = g.tensor(t).bytes;
     let name = g.tensor(t).name.clone();
+    let pf_src = match g.op(pf).kind {
+        OpKind::Prefetch { src, .. } => src,
+        _ => Tier::Remote,
+    };
     let mut trial = g.clone();
     let map = trial.remove_ops(&[pf]);
     let chunk = bytes / k as u64;
@@ -623,7 +632,7 @@ fn split_prefetch(g: &Graph, t: TensorId, pf: OpId, k: usize) -> Option<Graph> {
         let tc = trial.add_tensor(format!("{name}.chunk{j}"), sz, Tier::Remote);
         let pfc = trial.add_op(
             format!("prefetch.{name}.chunk{j}"),
-            OpKind::Prefetch { tensor: tc },
+            OpKind::Prefetch { tensor: tc, src: pf_src },
             vec![tc],
             vec![],
         );
@@ -655,6 +664,14 @@ fn split_prefetch(g: &Graph, t: TensorId, pf: OpId, k: usize) -> Option<Graph> {
 fn split_round_trip(g: &Graph, t: TensorId, st: OpId, pf: OpId, k: usize) -> Option<Graph> {
     let bytes = g.tensor(t).bytes;
     let name = g.tensor(t).name.clone();
+    let st_dst = match g.op(st).kind {
+        OpKind::Store { dst, .. } => dst,
+        _ => Tier::Remote,
+    };
+    let pf_src = match g.op(pf).kind {
+        OpKind::Prefetch { src, .. } => src,
+        _ => Tier::Remote,
+    };
     let st_deps = g.op(st).control_deps.clone();
     let pf_deps: Vec<OpId> =
         g.op(pf).control_deps.iter().copied().filter(|&d| d != st).collect();
@@ -670,7 +687,7 @@ fn split_round_trip(g: &Graph, t: TensorId, st: OpId, pf: OpId, k: usize) -> Opt
         let tc = trial.add_chunk_tensor(t, format!("{name}.chunk{j}"), sz);
         let stc = trial.add_op(
             format!("store.{name}.chunk{j}"),
-            OpKind::Store { tensor: tc },
+            OpKind::Store { tensor: tc, dst: st_dst },
             vec![tc],
             vec![],
         );
@@ -679,7 +696,7 @@ fn split_round_trip(g: &Graph, t: TensorId, st: OpId, pf: OpId, k: usize) -> Opt
         }
         let pfc = trial.add_op(
             format!("prefetch.{name}.chunk{j}"),
-            OpKind::Prefetch { tensor: tc },
+            OpKind::Prefetch { tensor: tc, src: pf_src },
             vec![tc],
             vec![],
         );
@@ -921,7 +938,7 @@ mod tests {
         let mut g = Graph::new();
         let w = g.add_tensor("kv.wb", 32 << 20, crate::graph::Tier::Device);
         g.set_deferrable(w, true);
-        let st = g.add_op("store.kv.wb", OpKind::Store { tensor: w }, vec![w], vec![]);
+        let st = g.add_op("store.kv.wb", OpKind::store(w), vec![w], vec![]);
         let t0 = g.add_tensor("out", 0, crate::graph::Tier::Device);
         let c = g.add_op(
             "decode",
@@ -962,7 +979,7 @@ mod tests {
             .filter(|o| matches!(o.kind, OpKind::Store { .. }))
             .collect();
         assert_eq!(kept.len(), 1);
-        let OpKind::Store { tensor } = kept[0].kind else { unreachable!() };
+        let OpKind::Store { tensor, .. } = kept[0].kind else { unreachable!() };
         assert_eq!(g.tensor(tensor).alias_of, Some(0));
         assert_eq!(g.tensor(tensor).bytes + r.deferred_bytes, 32 << 20, "byte conservation");
     }

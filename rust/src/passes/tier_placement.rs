@@ -1,0 +1,370 @@
+//! Tier-placement decision pass: pick a *home tier* for each offloaded
+//! round trip from its lifetime, and emit promotions ahead of reuse.
+//!
+//! The insertion pass always parks offloaded tensors in the shared pool
+//! (tier 1). With a deeper [`TierTopology`](crate::sim::TierTopology)
+//! installed, that wastes the stack: an activation idle for most of the
+//! schedule can sit in DRAM/CXL/SSD and leave the pool's capacity (and
+//! its fabric edge) to tenants that actually need the hot tier — the
+//! paper's "graph-driven hierarchical" placement applied below the pool.
+//!
+//! For every single-Store/single-Prefetch round trip the pass asks, per
+//! cold tier deepest-first: does the *deep* path — Store straight to the
+//! cold tier, a `Promote` back up to the pool ahead of reuse, the
+//! existing pool Prefetch — still hide inside the tensor's idle window
+//! with [`hide_factor`](TierPlacement::hide_factor) headroom, and does
+//! the tier have capacity for the bytes already routed there? The first
+//! tier that passes wins:
+//!
+//! ```text
+//! before:  Store(t → pool) ............................. Prefetch(t ← pool)
+//! after:   Store(t → ssd) ......... Promote(t: ssd → pool) → Prefetch(t ← pool)
+//!          deep(t) = evict(ssd) + promote(ssd → pool) + fetch(pool)
+//!          commit when deep(t) ≤ hide_factor × window_compute(t)
+//! ```
+//!
+//! The rewrite keeps the device-side schedule shape — the Prefetch still
+//! reads the pool, so the reload hop the exec-order pass anchors is
+//! unchanged — and the `Promote` rides the cold-DMA stream, invisible to
+//! the device fabric. Control deps (`Promote` after the Store, the
+//! Prefetch after the `Promote`) make the residency walk airtight:
+//! verify_ir's `cold_at` tracking and TransferSan's `tier::cold_read`
+//! lint both see the copy where each reader expects it.
+//!
+//! With no topology (or a degenerate two-tier one) the pass is a strict
+//! no-op — the opt-in path that keeps two-tier compiles bit-identical.
+
+use std::collections::HashMap;
+
+use crate::graph::{Graph, OpId, OpKind, TensorId, Tier};
+
+use super::compiler::{AnalysisCache, CompileError, Diagnostic, Pass, PassCtx, PassReport};
+
+/// The tier-placement decision pass. Opt in with
+/// [`Compiler::tier_placement`](super::Compiler::tier_placement); it runs
+/// before exec-order so the promotions it emits get anchored like any
+/// other cache op.
+#[derive(Debug, Clone)]
+pub struct TierPlacement {
+    /// Fraction of the idle window's compute the deep round trip may
+    /// consume. 0.5 leaves half the window as schedule slack; lower is
+    /// more conservative (0.0 disables every rewrite).
+    pub hide_factor: f64,
+    /// Round trips below this size stay in the pool — per-hop latency
+    /// dominates small transfers, and the pool bytes saved are noise.
+    pub min_bytes: u64,
+}
+
+impl Default for TierPlacement {
+    fn default() -> Self {
+        Self { hide_factor: 0.5, min_bytes: 1 << 20 }
+    }
+}
+
+impl Pass for TierPlacement {
+    fn name(&self) -> &'static str {
+        "tier-placement"
+    }
+
+    fn run(
+        &mut self,
+        g: &mut Graph,
+        cache: &mut AnalysisCache,
+        ctx: &PassCtx,
+    ) -> Result<PassReport, CompileError> {
+        let mut rep = PassReport::new(self.name());
+        let chw = ctx.contended_hw();
+        let Some(topo) = chw.tiers.clone() else {
+            return Ok(rep);
+        };
+        if topo.cold_tiers().is_empty() || self.hide_factor <= 0.0 {
+            return Ok(rep);
+        }
+
+        let order = cache.topo_order(g)?;
+        let mut pos = vec![usize::MAX; g.ops.len()];
+        for (i, &o) in order.iter().enumerate() {
+            pos[o] = i;
+        }
+        let compute_us = |o: OpId| match g.op(o).kind {
+            OpKind::Compute { flops, bytes_accessed } => chw.compute_us(flops, bytes_accessed),
+            _ => 0.0,
+        };
+        // Compute prefix sums along the order: window compute in O(1).
+        let mut pc = vec![0.0f64; order.len() + 1];
+        for (i, &o) in order.iter().enumerate() {
+            pc[i + 1] = pc[i] + compute_us(o);
+        }
+
+        // Per-tensor cache-op index; only untouched pool round trips
+        // (exactly one Store and one Prefetch, both pool-homed, store
+        // before prefetch) are candidates.
+        let nt = g.tensors.len();
+        let (mut stores, mut prefetches) = (vec![Vec::new(); nt], vec![Vec::new(); nt]);
+        let mut promoted = vec![false; nt];
+        for op in &g.ops {
+            match op.kind {
+                OpKind::Store { tensor, dst } => stores[tensor].push((op.id, dst)),
+                OpKind::Prefetch { tensor, src } => prefetches[tensor].push((op.id, src)),
+                OpKind::Promote { tensor, .. } => promoted[tensor] = true,
+                _ => {}
+            }
+        }
+
+        struct Candidate {
+            tensor: TensorId,
+            st: OpId,
+            pf: OpId,
+            bytes: u64,
+            window_us: f64,
+            /// Canonical position of the Store's latest dependency — where
+            /// the Store *can* start, which is where exec-order parks it.
+            /// The Store's own canonical position is meaningless here: the
+            /// min-id tie-break drifts appended ops toward their consumers.
+            st_anchor: usize,
+            u_pos: usize,
+        }
+        let mut cands: Vec<Candidate> = Vec::new();
+        for t in &g.tensors {
+            if t.bytes < self.min_bytes || promoted[t.id] || t.alias_of.is_some() {
+                continue;
+            }
+            if stores[t.id].len() != 1 || prefetches[t.id].len() != 1 {
+                continue;
+            }
+            let (st, st_dst) = stores[t.id][0];
+            let (pf, pf_src) = prefetches[t.id][0];
+            if st_dst != Tier::Remote || pf_src != Tier::Remote || pos[st] >= pos[pf] {
+                continue;
+            }
+            // The window that has to hide the deep path: store → first
+            // real consumer after it (the prefetch's deadline).
+            let Some(u_pos) = g
+                .consumers_of(t.id)
+                .iter()
+                .filter(|&&c| !g.op(c).kind.is_cache_op() && pos[c] > pos[st])
+                .map(|&c| pos[c])
+                .min()
+            else {
+                continue;
+            };
+            let st_anchor = g.preds(st).iter().map(|&p| pos[p]).max().unwrap_or(0);
+            let window_us = pc[u_pos] - pc[st_anchor + 1];
+            cands.push(Candidate {
+                tensor: t.id,
+                st,
+                pf,
+                bytes: t.bytes,
+                window_us,
+                st_anchor,
+                u_pos,
+            });
+        }
+        // Biggest tensors first: each pool byte shed is worth the most,
+        // and cold-tier capacity goes to the tensors that relieve the
+        // pool hardest. Ties break on id for determinism.
+        cands.sort_by(|a, b| b.bytes.cmp(&a.bytes).then(a.tensor.cmp(&b.tensor)));
+
+        let mut routed: HashMap<Tier, u64> = HashMap::new();
+        let mut per_tier: HashMap<Tier, usize> = HashMap::new();
+        for c in cands {
+            // Deepest tier first: the deepest level whose full path still
+            // hides is the cheapest home the window can afford.
+            let chosen = topo.cold_tiers().iter().rev().copied().find(|&tier| {
+                let deep = chw.evict_us(tier, c.bytes)
+                    + chw.promote_us(tier, Tier::Remote, c.bytes)
+                    + chw.fetch_us(Tier::Remote, c.bytes);
+                if deep > self.hide_factor * c.window_us {
+                    return false;
+                }
+                let cap = chw.tier_capacity(tier).unwrap_or(u64::MAX);
+                routed.get(&tier).copied().unwrap_or(0).saturating_add(c.bytes) <= cap
+            });
+            let Some(tier) = chosen else { continue };
+            g.retarget_transfer_tier(c.st, tier);
+            let pm = g.add_op(
+                format!("promote.{}", g.tensor(c.tensor).name),
+                OpKind::Promote { tensor: c.tensor, src: tier, dst: Tier::Remote },
+                vec![c.tensor],
+                vec![],
+            );
+            g.add_control_dep(pm, c.st);
+            g.add_control_dep(c.pf, pm);
+            // Promote *ahead of reuse*, not eagerly: anchored to the
+            // latest op that still leaves 1/hide_factor × the up-path
+            // time of compute before the consumer, the copy parks in the
+            // cold tier for the bulk of its idle window. With no such
+            // anchor the promote simply follows the store (still sound,
+            // just colder for less of the window).
+            let lead_us = (chw.promote_us(tier, Tier::Remote, c.bytes)
+                + chw.fetch_us(Tier::Remote, c.bytes))
+                / self.hide_factor;
+            // Non-cache anchors only: exec-order refinement relocates
+            // Store/Prefetch ops, so a cache-op anchor could drift and drag
+            // the promote with it; compute ops keep their slots.
+            let anchor = (c.st_anchor + 1..c.u_pos)
+                .rev()
+                .filter(|&p| !g.op(order[p]).kind.is_cache_op())
+                .find(|&p| pc[c.u_pos] - pc[p + 1] >= lead_us)
+                .map(|p| order[p]);
+            if let Some(a) = anchor {
+                g.add_control_dep(pm, a);
+            }
+            *routed.entry(tier).or_insert(0) += c.bytes;
+            *per_tier.entry(tier).or_insert(0) += 1;
+            rep.retiered += 1;
+        }
+
+        if rep.retiered > 0 {
+            let mut parts: Vec<String> = topo
+                .cold_tiers()
+                .iter()
+                .filter_map(|t| {
+                    per_tier.get(t).map(|n| {
+                        format!("{n} -> {t:?} ({} MiB)", routed[t] >> 20)
+                    })
+                })
+                .collect();
+            parts.sort();
+            rep.diagnostics.push(Diagnostic::info(
+                self.name(),
+                format!(
+                    "{} round trip(s) rehomed below the pool: {}",
+                    rep.retiered,
+                    parts.join(", ")
+                ),
+            ));
+        }
+        Ok(rep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::passes::Compiler;
+    use crate::sim::{simulate, HwConfig, TierTopology};
+
+    fn hw() -> HwConfig {
+        HwConfig::test_default()
+    }
+
+    /// The mod.rs pipeline fixture: long fwd ops producing big
+    /// activations consumed in reverse by the bwd half — wide idle
+    /// windows, so the default pipeline reliably inserts round trips.
+    fn fixture() -> Graph {
+        GraphBuilder::fwd_bwd_chain(4, 8 << 20, 10e9, 24, 1e9)
+    }
+
+    #[test]
+    fn no_topology_means_bit_identical_to_the_default_pipeline() {
+        let mut plain = fixture();
+        let rp = Compiler::new(hw()).verify(true).compile(&mut plain).unwrap();
+        let mut tiered = fixture();
+        let rt = Compiler::new(hw()).tier_placement().verify(true).compile(&mut tiered).unwrap();
+        assert_eq!(rt.retiered, 0);
+        assert_eq!(rp.order, rt.order);
+        assert_eq!(plain.ops.len(), tiered.ops.len());
+        for (a, b) in plain.ops.iter().zip(&tiered.ops) {
+            assert_eq!(a.kind, b.kind, "op {} diverged", a.id);
+        }
+        // Same for a mirrored two-tier topology: no cold tier, no rewrite.
+        let hw2 = hw();
+        let hw2 = hw2.clone().with_tiers(TierTopology::two_tier(&hw2));
+        let mut two = fixture();
+        let r2 = Compiler::new(hw2).tier_placement().verify(true).compile(&mut two).unwrap();
+        assert_eq!(r2.retiered, 0);
+        assert_eq!(rp.order, r2.order);
+    }
+
+    #[test]
+    fn deep_stack_rehomes_round_trips_and_stays_clean() {
+        let base = hw();
+        let hw3 = base.clone().with_tiers(TierTopology::three_tier(&base));
+        // Longer mid section than `fixture()`: on test_default hardware the
+        // deep path for an 8 MiB block is ~41.9 ms (evict 16.8 + promote
+        // 16.8 + fetch 8.4), so with hide_factor 0.5 the early activations
+        // (windows 120/100 ms -> budgets 60/50 ms) rehome with wide margin
+        // and the late ones (budgets 40/30 ms) robustly stay in the pool.
+        let mut g = GraphBuilder::fwd_bwd_chain(4, 8 << 20, 10e9, 60, 1e9);
+        let report = Compiler::new(hw3.clone())
+            .tier_placement()
+            .verify(true)
+            .sanitize(true)
+            .compile(&mut g)
+            .unwrap();
+        assert_eq!(report.retiered, 2, "expected exactly the two wide-window round trips");
+        // Every rehomed trip: Store to Dram + a Promote back to the pool.
+        let deep_stores = g
+            .ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::Store { dst: Tier::Dram, .. }))
+            .count();
+        let promotes = g
+            .ops
+            .iter()
+            .filter(|o| {
+                matches!(
+                    o.kind,
+                    OpKind::Promote { src: Tier::Dram, dst: Tier::Remote, .. }
+                )
+            })
+            .count();
+        assert_eq!(deep_stores, report.retiered);
+        assert_eq!(promotes, report.retiered);
+        // The simulator sees the bytes park in DRAM and move back up.
+        let sim = simulate(&g, &report.order, &hw3);
+        let dram_peak = sim
+            .tier_peaks
+            .iter()
+            .find(|(t, _)| *t == Tier::Dram)
+            .map(|&(_, b)| b)
+            .unwrap_or(0);
+        assert!(dram_peak >= 8 << 20, "rehomed block never resident in DRAM");
+        assert_eq!(sim.cold_dma_bytes, 2 * (8 << 20), "each rehomed trip promotes once");
+
+        // Against the pool-only compile on the same deep hardware: the pool
+        // is no worse off (the sim's copy accounting never releases a pool
+        // copy, and the promote re-materialises one, so the *peak* can tie
+        // — the byte-level relief shows up in the serving ledger, where
+        // demotion really frees pool blocks) and the deep detour stays
+        // hidden: makespan within schedule noise of the pool-only run.
+        let mut pool_only = GraphBuilder::fwd_bwd_chain(4, 8 << 20, 10e9, 60, 1e9);
+        let rp = Compiler::new(hw3.clone()).verify(true).compile(&mut pool_only).unwrap();
+        let sp = simulate(&pool_only, &rp.order, &hw3);
+        let pool_peak = |s: &crate::sim::SimResult| {
+            s.tier_peaks
+                .iter()
+                .find(|(t, _)| *t == Tier::Remote)
+                .map(|&(_, b)| b)
+                .unwrap_or(0)
+        };
+        assert!(
+            pool_peak(&sim) <= pool_peak(&sp),
+            "pool peak regressed: {} vs {}",
+            pool_peak(&sim),
+            pool_peak(&sp)
+        );
+        assert!(
+            sim.makespan_us <= sp.makespan_us * 1.05,
+            "deep detour not hidden: {} vs {}",
+            sim.makespan_us,
+            sp.makespan_us
+        );
+    }
+
+    #[test]
+    fn zero_hide_factor_rewrites_nothing() {
+        let base = hw();
+        let hw3 = base.clone().with_tiers(TierTopology::three_tier(&base));
+        let mut g = fixture();
+        let report = Compiler::new(hw3)
+            .pass_before("exec-order", TierPlacement { hide_factor: 0.0, min_bytes: 1 })
+            .verify(true)
+            .compile(&mut g)
+            .unwrap();
+        assert_eq!(report.retiered, 0);
+        assert!(!g.ops.iter().any(|o| matches!(o.kind, OpKind::Promote { .. })));
+    }
+}

@@ -139,7 +139,7 @@ fn transform_into(
         }
         let pf = g.add_op(
             format!("runtime.load.{tname}"),
-            OpKind::Prefetch { tensor: t },
+            OpKind::prefetch(t),
             vec![t],
             vec![],
         );

@@ -150,6 +150,9 @@ pub struct ClusterReport {
     pub prefill_flops_saved: f64,
     /// Summed pool bytes deduplicated by shared-prefix admissions.
     pub pool_bytes_deduped: u64,
+    /// Summed bytes fetched from tiers below the pool across replicas
+    /// (demoted prefix blocks). 0 on untiered setups.
+    pub cold_fetch_bytes: u64,
 }
 
 impl ClusterReport {
@@ -306,6 +309,7 @@ impl SimCluster {
         let prefix_hits: u64 = per_replica.iter().map(|r| r.prefix_hit_blocks).sum();
         let flops_saved: f64 = per_replica.iter().map(|r| r.prefill_flops_saved).sum();
         let deduped: u64 = per_replica.iter().map(|r| r.pool_bytes_deduped).sum();
+        let cold_fetch: u64 = per_replica.iter().map(|r| r.cold_fetch_bytes).sum();
         ClusterReport {
             dispatched: self.dispatched,
             completed,
@@ -334,6 +338,7 @@ impl SimCluster {
             prefix_hit_blocks: prefix_hits,
             prefill_flops_saved: flops_saved,
             pool_bytes_deduped: deduped,
+            cold_fetch_bytes: cold_fetch,
             per_replica,
         }
     }

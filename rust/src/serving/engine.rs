@@ -44,8 +44,9 @@ use std::collections::VecDeque;
 
 use anyhow::Result;
 
+use crate::graph::Tier;
 use crate::kvcache::{KvCacheManager, KvPolicy, NsaConfig, PrefixIndex};
-use crate::memory::PoolHandle;
+use crate::memory::{PoolHandle, TieredLedger};
 use crate::sim::HwConfig;
 
 use super::metrics::{stats, ServingReport};
@@ -110,6 +111,12 @@ pub struct EngineConfig {
     /// by the P12 conservation proptest and the `compiled_serving` bench;
     /// production configurations leave it false.
     pub analytic_oracle: bool,
+    /// Opt-in pressure valve forwarded to the KV manager
+    /// ([`KvCacheManager::with_device_spill`]): growth blocks that fit
+    /// nowhere in the pool stack land in device HBM instead of preempting
+    /// the sequence. Off in every preset — the tier-hierarchy bench turns
+    /// it on to price pool exhaustion in peak HBM instead of preemptions.
+    pub device_spill: bool,
 }
 
 impl EngineConfig {
@@ -124,6 +131,7 @@ impl EngineConfig {
             max_preemptions: 3,
             decode_slo_us: None,
             analytic_oracle: false,
+            device_spill: false,
         }
     }
 
@@ -138,6 +146,7 @@ impl EngineConfig {
             max_preemptions: 3,
             decode_slo_us: None,
             analytic_oracle: false,
+            device_spill: false,
         }
     }
 
@@ -165,6 +174,18 @@ pub struct FabricPressure {
 impl FabricPressure {
     /// No contention: private, fully-provisioned link.
     pub const NONE: Self = Self { d2r_slowdown: 1.0, r2d_slowdown: 1.0 };
+}
+
+/// Stack order of a tier for canonical sorting (device first, then down
+/// the pyramid).
+fn tier_rank(t: Tier) -> u8 {
+    match t {
+        Tier::Device => 0,
+        Tier::Remote | Tier::Host => 1,
+        Tier::Dram => 2,
+        Tier::Cxl => 3,
+        Tier::Ssd => 4,
+    }
 }
 
 struct Active {
@@ -237,6 +258,9 @@ pub struct SimServingEngine {
     /// Pool bytes admissions deduplicated by attaching to resident shared
     /// blocks instead of reserving new capacity.
     pool_bytes_deduped: u64,
+    /// Bytes read from tiers *below* the pool (demoted prefix blocks the
+    /// prefill and decode steps touched). 0 on untiered setups.
+    cold_fetch_bytes: u64,
 }
 
 impl SimServingEngine {
@@ -265,14 +289,26 @@ impl SimServingEngine {
             .hw
             .device_capacity
             .saturating_sub(cfg.model.weights_bytes + cfg.model.act_bytes);
-        let kv = KvCacheManager::with_pool_and_index(
+        // With a tier topology on the hardware, the manager's ledger
+        // grows one cold handle per tier below the pool (demotion
+        // targets); without one, the degenerate single-tier ledger
+        // reproduces the pool-only manager bit-for-bit.
+        let chunk = cfg.nsa.block_bytes(cfg.model.kv_bytes_per_token);
+        let ledger = match &cfg.hw.tiers {
+            Some(topo) => TieredLedger::from_topology(pool, topo, chunk),
+            None => TieredLedger::single(pool),
+        };
+        let mut kv = KvCacheManager::with_ledger(
             cfg.kv_policy,
             cfg.nsa.clone(),
             cfg.model.kv_bytes_per_token,
             kv_budget,
-            pool,
+            ledger,
             Some(index),
         );
+        if cfg.device_spill {
+            kv = kv.with_device_spill();
+        }
         let step_compiler = (cfg.kv_policy == KvPolicy::FullOffload && !cfg.analytic_oracle)
             .then(|| StepCompiler::new(cfg.hw.clone(), cfg.overlap_transfers));
         Self {
@@ -299,6 +335,7 @@ impl SimServingEngine {
             prefix_hit_blocks: 0,
             prefill_flops_saved: 0.0,
             pool_bytes_deduped: 0,
+            cold_fetch_bytes: 0,
         }
     }
 
@@ -508,6 +545,7 @@ impl SimServingEngine {
         self.prefill_flops_saved +=
             self.cfg.model.prefill_flops_per_token * admit.hit_tokens as f64;
         self.pool_bytes_deduped += admit.deduped_bytes;
+        self.cold_fetch_bytes += admit.cold_fetch.iter().map(|&(_, b)| b).sum::<u64>();
 
         let t = if let Some(sc) = self.step_compiler.as_mut() {
             let spec = StepSpec {
@@ -518,6 +556,7 @@ impl SimServingEngine {
                 kv_fetch_bytes: admit.cost.r2d_bytes,
                 prefix_fetch_bytes: admit.prefix_fetch_bytes,
                 kv_writeback_bytes: admit.cost.d2r_bytes,
+                cold_fetch: admit.cold_fetch.clone(),
                 cpu_us: admit.cost.cpu_us,
                 defrag_us: admit.cost.defrag_us,
                 slo_us: None, // the SLO bounds decode steps, not prefill
@@ -549,9 +588,14 @@ impl SimServingEngine {
             let pf_us =
                 self.cfg.hw.r2d_us_slowed(admit.prefix_fetch_bytes, fabric.r2d_slowdown);
             let pf_free_us = self.cfg.hw.r2d_us(admit.prefix_fetch_bytes);
-            let transfer_us = d2r_us.max(pf_us);
-            let transfer_free_us = d2r_free_us.max(pf_free_us);
-            if admit.cost.d2r_bytes + admit.prefix_fetch_bytes > 0 {
+            // Demoted prefix blocks arrive over their cold tier's deeper
+            // path (the node-local fabric pressure does not contend it).
+            let cold_us: f64 =
+                admit.cold_fetch.iter().map(|&(t, b)| self.cfg.hw.fetch_us(t, b)).sum();
+            let cold_bytes: u64 = admit.cold_fetch.iter().map(|&(_, b)| b).sum();
+            let transfer_us = d2r_us.max(pf_us).max(cold_us);
+            let transfer_free_us = d2r_free_us.max(pf_free_us).max(cold_us);
+            if admit.cost.d2r_bytes + admit.prefix_fetch_bytes + cold_bytes > 0 {
                 if self.cfg.overlap_transfers {
                     let exposed = (transfer_us - compute_us).max(0.0);
                     let exposed_free = (transfer_free_us - compute_us).max(0.0);
@@ -565,7 +609,8 @@ impl SimServingEngine {
                 }
             }
             self.kv_transfer_bytes +=
-                admit.cost.d2r_bytes + admit.cost.r2d_bytes + admit.prefix_fetch_bytes;
+                admit.cost.d2r_bytes + admit.cost.r2d_bytes + admit.prefix_fetch_bytes
+                    + cold_bytes;
             t
         };
 
@@ -601,6 +646,7 @@ impl SimServingEngine {
 
         let mut r2d = 0u64;
         let mut d2r = 0u64;
+        let mut cold: Vec<(Tier, u64)> = Vec::new();
         let mut cpu_us = 0.0;
         let mut defrag_us = 0.0;
         let mut preempted: Vec<usize> = Vec::new();
@@ -609,6 +655,12 @@ impl SimServingEngine {
                 Ok(c) => {
                     r2d += c.r2d_bytes;
                     d2r += c.d2r_bytes;
+                    for &(t, b) in &c.cold_fetch {
+                        match cold.iter_mut().find(|(ct, _)| *ct == t) {
+                            Some(e) => e.1 += b,
+                            None => cold.push((t, b)),
+                        }
+                    }
                     cpu_us += c.cpu_us;
                     defrag_us += c.defrag_us;
                     a.remaining = a.remaining.saturating_sub(1);
@@ -620,6 +672,10 @@ impl SimServingEngine {
                 }
             }
         }
+        // Canonical tier order keeps the compile-cache key stable across
+        // steps with the same cold-fetch shape.
+        cold.sort_by_key(|&(t, _)| tier_rank(t));
+        self.cold_fetch_bytes += cold.iter().map(|&(_, b)| b).sum::<u64>();
         for &i in preempted.iter().rev() {
             let a = self.active.swap_remove(i);
             let _ = self.kv.retire(a.req.id);
@@ -670,6 +726,7 @@ impl SimServingEngine {
                 kv_fetch_bytes: r2d,
                 prefix_fetch_bytes: 0,
                 kv_writeback_bytes: d2r + drain,
+                cold_fetch: cold.clone(),
                 cpu_us,
                 defrag_us,
                 slo_us: slo,
@@ -721,15 +778,19 @@ impl SimServingEngine {
             }
         }
 
-        self.kv_transfer_bytes += r2d + d2r;
+        let cold_bytes: u64 = cold.iter().map(|&(_, b)| b).sum();
+        let cold_us: f64 = cold.iter().map(|&(t, b)| self.cfg.hw.fetch_us(t, b)).sum();
+        self.kv_transfer_bytes += r2d + d2r + cold_bytes;
         self.defrag_stall_us += defrag_us;
 
         let transfer_us = self
             .cfg
             .hw
             .r2d_us_slowed(r2d, fabric.r2d_slowdown)
-            .max(self.cfg.hw.d2r_us_slowed(d2r, fabric.d2r_slowdown));
-        let transfer_free_us = self.cfg.hw.r2d_us(r2d).max(self.cfg.hw.d2r_us(d2r));
+            .max(self.cfg.hw.d2r_us_slowed(d2r, fabric.d2r_slowdown))
+            .max(cold_us);
+        let transfer_free_us =
+            self.cfg.hw.r2d_us(r2d).max(self.cfg.hw.d2r_us(d2r)).max(cold_us);
         let step_us = if self.cfg.overlap_transfers {
             // Graph-driven: transfers hide under the step's compute.
             let exposed = (transfer_us - compute_us).max(0.0);
@@ -737,7 +798,7 @@ impl SimServingEngine {
             self.exposed_transfer_us += exposed;
             self.fabric_stall_us += exposed - exposed_free;
             compute_us + exposed + cpu_us + defrag_us
-        } else if r2d + d2r > 0 {
+        } else if r2d + d2r + cold_bytes > 0 {
             self.exposed_transfer_us += transfer_us;
             self.fabric_stall_us += transfer_us - transfer_free_us;
             compute_us + transfer_us + cpu_us + defrag_us
@@ -769,6 +830,7 @@ impl SimServingEngine {
                 kv_fetch_bytes: 0,
                 prefix_fetch_bytes: 0,
                 kv_writeback_bytes: bytes,
+                cold_fetch: vec![],
                 cpu_us: 0.0,
                 defrag_us: 0.0,
                 slo_us: None,
@@ -849,6 +911,7 @@ impl SimServingEngine {
             prefix_hit_blocks: self.prefix_hit_blocks,
             prefill_flops_saved: self.prefill_flops_saved,
             pool_bytes_deduped: self.pool_bytes_deduped,
+            cold_fetch_bytes: self.cold_fetch_bytes,
             residency: self.residency,
         }
     }

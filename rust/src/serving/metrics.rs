@@ -86,6 +86,9 @@ pub struct ServingReport {
     /// Pool bytes deduplicated by prefix sharing: admissions that attached
     /// to a resident shared block instead of reserving new capacity.
     pub pool_bytes_deduped: u64,
+    /// Bytes fetched from tiers *below* the pool (demoted prefix blocks
+    /// touched by prefill or decode). 0 on untiered setups.
+    pub cold_fetch_bytes: u64,
     /// Device-residency curve: (time us, device bytes) samples taken at
     /// every admission/decode boundary, non-decreasing in time.
     pub residency: Vec<(f64, u64)>,

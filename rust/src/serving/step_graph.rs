@@ -81,6 +81,13 @@ pub struct StepSpec {
     /// Device→Remote KV bytes the step wants to persist (tail blocks +
     /// any backlog drain attempt). Deferrable under a decode SLO.
     pub kv_writeback_bytes: u64,
+    /// KV bytes the step must pull from *cold* tiers below the pool
+    /// (DRAM/CXL/SSD-demoted prefix blocks), one entry per source tier.
+    /// Empty on 2-tier configurations — the lowering is then byte-for-byte
+    /// the legacy step graph. Each entry lowers as a `Prefetch` whose
+    /// `src` is the cold tier, so the simulator charges the full
+    /// multi-hop fabric path and TransferSan can prove the read sound.
+    pub cold_fetch: Vec<(Tier, u64)>,
     /// Host-side sparse-block processing (us).
     pub cpu_us: f64,
     /// Allocator defragmentation stall (us).
@@ -104,6 +111,8 @@ pub struct StepKey {
     kv_bytes_bucket: (u64, u64),
     /// Shared-prefix fetch bytes (block-granular, like the KV buckets).
     prefix_bucket: u64,
+    /// Per-cold-tier fetch bytes (block-granular; empty on 2-tier).
+    cold_bucket: Vec<(Tier, u64)>,
     flops_bits: u64,
     compute_bytes: u64,
     host_us_bits: u64,
@@ -118,6 +127,7 @@ impl StepKey {
             batch_bucket: spec.batch.min(u32::MAX as usize) as u32,
             kv_bytes_bucket: (spec.kv_fetch_bytes, spec.kv_writeback_bytes),
             prefix_bucket: spec.prefix_fetch_bytes,
+            cold_bucket: spec.cold_fetch.clone(),
             flops_bits: spec.compute_flops.to_bits(),
             compute_bytes: spec.compute_bytes,
             host_us_bits: (spec.cpu_us + spec.defrag_us).to_bits(),
@@ -263,7 +273,9 @@ impl StepCompiler {
             step_us: sim.makespan_us,
             exposed_us: exposed,
             exposed_free_us: exposed_free,
-            moved_r2d: spec.kv_fetch_bytes + spec.prefix_fetch_bytes,
+            moved_r2d: spec.kv_fetch_bytes
+                + spec.prefix_fetch_bytes
+                + spec.cold_fetch.iter().map(|&(_, b)| b).sum::<u64>(),
             moved_d2r: spec.kv_writeback_bytes - report.deferred_bytes,
             deferred_d2r: report.deferred_bytes,
             throttled: report.throttled,
@@ -324,17 +336,35 @@ fn lower(spec: &StepSpec, overlap: bool) -> Graph {
             prefix_tensors.push(t);
             prefix_pf.push(g.add_op(
                 format!("prefetch.kv.prefix.{i}"),
-                OpKind::Prefetch { tensor: t },
+                OpKind::prefetch(t),
                 vec![t],
                 vec![],
             ));
         }
     }
 
-    let pf = fetch
-        .map(|t| g.add_op("prefetch.kv.fetch", OpKind::Prefetch { tensor: t }, vec![t], vec![]));
-    let st =
-        wb.map(|t| g.add_op("store.kv.writeback", OpKind::Store { tensor: t }, vec![t], vec![]));
+    // Cold-tier fetches: blocks demoted below the pool arrive over the
+    // deep fabric path. Their tensors are *home* at the cold tier, so the
+    // sanitizer's tier lints see a consistent source and the simulator
+    // charges every hop of the DRAM/CXL/SSD edge.
+    let mut cold_tensors = Vec::new();
+    let mut cold_pf = Vec::new();
+    for (i, &(tier, bytes)) in spec.cold_fetch.iter().enumerate() {
+        if bytes == 0 {
+            continue;
+        }
+        let t = g.add_tensor(format!("kv.cold.{i}"), bytes, tier);
+        cold_tensors.push(t);
+        cold_pf.push(g.add_op(
+            format!("prefetch.kv.cold.{i}"),
+            OpKind::Prefetch { tensor: t, src: tier },
+            vec![t],
+            vec![],
+        ));
+    }
+
+    let pf = fetch.map(|t| g.add_op("prefetch.kv.fetch", OpKind::prefetch(t), vec![t], vec![]));
+    let st = wb.map(|t| g.add_op("store.kv.writeback", OpKind::store(t), vec![t], vec![]));
 
     let compute = (spec.compute_flops > 0.0 || spec.compute_bytes > 0).then(|| {
         let out = g.add_tensor("step.out", 0, Tier::Device);
@@ -349,7 +379,12 @@ fn lower(spec: &StepSpec, overlap: bool) -> Graph {
         );
         if !overlap {
             // Runtime-style: the step's compute waits for every transfer.
-            for dep in [pf, st].into_iter().flatten().chain(prefix_pf.iter().copied()) {
+            for dep in [pf, st]
+                .into_iter()
+                .flatten()
+                .chain(prefix_pf.iter().copied())
+                .chain(cold_pf.iter().copied())
+            {
                 g.add_control_dep(c, dep);
             }
         }
@@ -357,15 +392,22 @@ fn lower(spec: &StepSpec, overlap: bool) -> Graph {
     });
 
     let host_us = spec.cpu_us + spec.defrag_us;
-    if host_us > 0.0 || fetch.is_some() || !prefix_tensors.is_empty() {
+    if host_us > 0.0 || fetch.is_some() || !prefix_tensors.is_empty() || !cold_tensors.is_empty() {
         // The host tail consumes the fetched blocks (sparse gather over
-        // the touched set, prefix blocks included) and runs after
-        // everything else in the step — CPU sparse-block processing
+        // the touched set, prefix and cold-tier blocks included) and runs
+        // after everything else in the step — CPU sparse-block processing
         // serialises (§7.3.3).
-        let inputs: Vec<_> = fetch.into_iter().chain(prefix_tensors.iter().copied()).collect();
+        let inputs: Vec<_> = fetch
+            .into_iter()
+            .chain(prefix_tensors.iter().copied())
+            .chain(cold_tensors.iter().copied())
+            .collect();
         let h = g.add_op("step.host", OpKind::HostWork { us: host_us }, inputs, vec![]);
-        for dep in
-            [compute, pf, st].into_iter().flatten().chain(prefix_pf.iter().copied())
+        for dep in [compute, pf, st]
+            .into_iter()
+            .flatten()
+            .chain(prefix_pf.iter().copied())
+            .chain(cold_pf.iter().copied())
         {
             g.add_control_dep(h, dep);
         }
@@ -391,6 +433,7 @@ mod tests {
             kv_fetch_bytes: 16 * 1024, // 16.4 us at 1 GB/s — hides under compute
             prefix_fetch_bytes: 0,
             kv_writeback_bytes: wb_mb * MB,
+            cold_fetch: vec![],
             cpu_us: 5.0,
             defrag_us: 0.0,
             slo_us: slo,
@@ -463,6 +506,7 @@ mod tests {
             kv_fetch_bytes: 0,
             prefix_fetch_bytes: 0,
             kv_writeback_bytes: 4 * MB,
+            cold_fetch: vec![],
             cpu_us: 0.0,
             defrag_us: 0.0,
             slo_us: None,
@@ -483,6 +527,7 @@ mod tests {
             kv_fetch_bytes: 0,
             prefix_fetch_bytes: prefix_bytes,
             kv_writeback_bytes: 0,
+            cold_fetch: vec![],
             cpu_us: 0.0,
             defrag_us: 0.0,
             slo_us: None,
@@ -535,6 +580,41 @@ mod tests {
     }
 
     #[test]
+    fn cold_fetch_lowers_from_the_cold_tier_and_keys_separately() {
+        use crate::sim::TierTopology;
+        let base = hw();
+        let tiered = base.clone().with_tiers(TierTopology::three_tier(&base));
+        let mut sc = StepCompiler::new(tiered, true);
+
+        let mut spec = decode_spec(8, None);
+        spec.cold_fetch = vec![(Tier::Dram, 2 * MB)];
+        let cs = sc.compile(&spec, &FabricPressure::NONE).unwrap();
+        // The cold fetch counts as moved bytes and hides under the 8 MB
+        // writeback (2 MB over the 0.5 GB/s DRAM edge ≈ 4.2 ms < 8.4 ms).
+        assert_eq!(cs.moved_r2d, 16 * 1024 + 2 * MB);
+        let wb_us = (8 * MB) as f64 / 1e9 * 1e6;
+        assert!((cs.step_us - (wb_us + 5.0)).abs() < 1e-6, "step {}", cs.step_us);
+        assert!(cs.sanitized, "cold-fetch step must pass TransferSan");
+
+        // The cold volume is part of the compile-cache key.
+        let warm = decode_spec(8, None);
+        sc.compile(&warm, &FabricPressure::NONE).unwrap();
+        assert_eq!(sc.misses, 2, "cold fetch must key separately");
+        sc.compile(&spec, &FabricPressure::NONE).unwrap();
+        assert_eq!(sc.hits, 1);
+
+        // And the lowering is structurally what the sim costs: one
+        // Prefetch whose src is the cold tier, tensor home at that tier.
+        let g = lower(&spec, true);
+        let cold: Vec<_> =
+            g.ops.iter().filter(|o| o.name.starts_with("prefetch.kv.cold.")).collect();
+        assert_eq!(cold.len(), 1);
+        assert!(matches!(cold[0].kind, OpKind::Prefetch { src: Tier::Dram, .. }));
+        let t = g.tensors.iter().find(|t| t.name == "kv.cold.0").unwrap();
+        assert_eq!(t.home, Tier::Dram);
+    }
+
+    #[test]
     fn every_step_shape_compiles_sanitized() {
         // TransferSan is wired unconditionally into the step pipeline, so
         // each shape compiling at all proves its schedule residency-safe
@@ -550,6 +630,7 @@ mod tests {
                 kv_fetch_bytes: 0,
                 prefix_fetch_bytes: 0,
                 kv_writeback_bytes: 4 * MB,
+                cold_fetch: vec![],
                 cpu_us: 0.0,
                 defrag_us: 0.0,
                 slo_us: None,

@@ -1,11 +1,14 @@
 //! Discrete-event execution simulator.
 //!
-//! Models the SuperNode device as four in-order streams — compute, DMA-in
-//! (R2D), DMA-out (D2R), network, plus a host stream for CPU control work —
-//! executing a graph in a given total order (list scheduling): an op starts
-//! when its stream is free AND all dependency predecessors have finished.
-//! Produces the timeline quantities the paper's figures report: makespan,
-//! exposed vs overlapped communication, peak device residency.
+//! Models the SuperNode device as in-order streams — compute, DMA-in
+//! (R2D), DMA-out (D2R), network, a host stream for CPU control work, and
+//! a cold-DMA stream for non-device tier moves (`Promote`) — executing a
+//! graph in a given total order (list scheduling): an op starts when its
+//! stream is free AND all dependency predecessors have finished. Produces
+//! the timeline quantities the paper's figures report: makespan, exposed
+//! vs overlapped communication, peak device residency — and, when the
+//! `HwConfig` carries a `TierTopology`, per-tier residency peaks for the
+//! cold levels below the pool.
 
 use std::collections::HashMap;
 
@@ -21,6 +24,10 @@ pub enum Stream {
     DmaOut,
     Net,
     Host,
+    /// Moves between non-device tiers (promotion/demotion). A separate
+    /// engine from the device DMA pair: the pool↔DRAM↔SSD fabric does not
+    /// contend with the device links.
+    ColdDma,
 }
 
 pub fn stream_of(kind: &OpKind) -> Stream {
@@ -29,18 +36,22 @@ pub fn stream_of(kind: &OpKind) -> Stream {
         OpKind::Prefetch { .. } => Stream::DmaIn,
         OpKind::Store { .. } => Stream::DmaOut,
         OpKind::Detach { .. } => Stream::Host, // bookkeeping, ~free
+        OpKind::Promote { .. } => Stream::ColdDma,
         OpKind::Collective { .. } => Stream::Net,
         OpKind::HostWork { .. } => Stream::Host,
     }
 }
 
-/// Duration of `kind` on `hw` in microseconds.
+/// Duration of `kind` on `hw` in microseconds. Transfers cost the fabric
+/// edge(s) between their explicit tiers; without a `TierTopology` this is
+/// exactly the legacy pool-link formula.
 pub fn duration_us(kind: &OpKind, g: &Graph, hw: &HwConfig) -> f64 {
     match kind {
         OpKind::Compute { flops, bytes_accessed } => hw.compute_us(*flops, *bytes_accessed),
-        OpKind::Prefetch { tensor } => hw.r2d_us(g.tensor(*tensor).bytes),
-        OpKind::Store { tensor } => hw.d2r_us(g.tensor(*tensor).bytes),
+        OpKind::Prefetch { tensor, src } => hw.fetch_us(*src, g.tensor(*tensor).bytes),
+        OpKind::Store { tensor, dst } => hw.evict_us(*dst, g.tensor(*tensor).bytes),
         OpKind::Detach { .. } => 0.0,
+        OpKind::Promote { tensor, src, dst } => hw.promote_us(*src, *dst, g.tensor(*tensor).bytes),
         OpKind::Collective { bytes } => hw.net_us(*bytes),
         OpKind::HostWork { us } => *us,
     }
@@ -79,6 +90,13 @@ pub struct SimResult {
     pub peak_device_bytes: u64,
     /// (time_us, resident_bytes) residency curve, one point per change.
     pub residency: Vec<(f64, u64)>,
+    /// Peak residency per *non-device* tier, in topology (hot → cold)
+    /// order. Empty when the `HwConfig` carries no `TierTopology` — the
+    /// legacy two-home accounting is unchanged.
+    pub tier_peaks: Vec<(Tier, u64)>,
+    /// Bytes moved between non-device tiers (`Promote` traffic). Not part
+    /// of `dma_bytes`, which counts device-boundary transfers only.
+    pub cold_dma_bytes: u64,
     pub intervals: Vec<Interval>,
 }
 
@@ -141,7 +159,7 @@ pub fn simulate(graph: &Graph, order: &[OpId], hw: &HwConfig) -> SimResult {
     // last Store, the static planner frees it after that last consumer.
     let mut last_cache_free_pos: HashMap<usize, usize> = HashMap::new();
     for op in &graph.ops {
-        if let OpKind::Store { tensor } | OpKind::Detach { tensor } = op.kind {
+        if let OpKind::Store { tensor, .. } | OpKind::Detach { tensor } = op.kind {
             if pos[op.id] != usize::MAX {
                 let e = last_cache_free_pos.entry(tensor).or_insert(0);
                 *e = (*e).max(pos[op.id]);
@@ -158,8 +176,33 @@ pub fn simulate(graph: &Graph, order: &[OpId], hw: &HwConfig) -> SimResult {
         }
     }
 
+    // --- per-tier (non-device) residency, only under a TierTopology -----
+    // Copy semantics on the cold side mirror the pool: a Store materialises
+    // a copy at its destination tier, a Prefetch reads without consuming
+    // it, and a Promote *moves* the copy (destination reserved at start,
+    // source released at completion). Non-device-home graph inputs are
+    // resident in their home tier from t=0.
+    let topo = hw.tiers.as_ref();
+    let mut tier_events: Vec<Vec<(f64, i64)>> = match topo {
+        Some(t) => vec![Vec::new(); t.tiers.len()],
+        None => Vec::new(),
+    };
+    if let Some(t) = topo {
+        for tn in &graph.tensors {
+            if tn.home != Tier::Device
+                && tn.alias_of.is_none()
+                && graph.producer_of(tn.id).is_none()
+            {
+                if let Some(i) = t.index_of(tn.home) {
+                    tier_events[i].push((0.0, tn.bytes as i64));
+                }
+            }
+        }
+    }
+
     // --- list scheduling ---------------------------------------------------
     let mut dma_bytes = 0u64;
+    let mut cold_dma_bytes = 0u64;
     for &op_id in order {
         let op = graph.op(op_id);
         let stream = stream_of(&op.kind);
@@ -184,18 +227,38 @@ pub fn simulate(graph: &Graph, order: &[OpId], hw: &HwConfig) -> SimResult {
                     }
                 }
             }
-            OpKind::Prefetch { tensor } => {
-                // Destination reserved at transfer start.
+            OpKind::Prefetch { tensor, .. } => {
+                // Destination reserved at transfer start. The source-tier
+                // copy persists (pool copy semantics).
                 mem_events.push((s, graph.tensor(tensor).bytes as i64));
                 dma_bytes += graph.tensor(tensor).bytes;
             }
-            OpKind::Store { tensor } => {
-                // Device copy released once the transfer completes.
+            OpKind::Store { tensor, dst } => {
+                // Device copy released once the transfer completes; the
+                // destination tier gains a copy at the same instant.
                 mem_events.push((f, -(graph.tensor(tensor).bytes as i64)));
                 dma_bytes += graph.tensor(tensor).bytes;
+                if let Some(t) = topo {
+                    if let Some(i) = t.index_of(dst) {
+                        tier_events[i].push((f, graph.tensor(tensor).bytes as i64));
+                    }
+                }
             }
             OpKind::Detach { tensor } => {
                 mem_events.push((f, -(graph.tensor(tensor).bytes as i64)));
+            }
+            OpKind::Promote { tensor, src, dst } => {
+                // A move, not a copy: destination reserved up front, source
+                // released when the transfer lands. No device-side event.
+                cold_dma_bytes += graph.tensor(tensor).bytes;
+                if let Some(t) = topo {
+                    if let Some(i) = t.index_of(dst) {
+                        tier_events[i].push((s, graph.tensor(tensor).bytes as i64));
+                    }
+                    if let Some(i) = t.index_of(src) {
+                        tier_events[i].push((f, -(graph.tensor(tensor).bytes as i64)));
+                    }
+                }
             }
             _ => {}
         }
@@ -214,7 +277,7 @@ pub fn simulate(graph: &Graph, order: &[OpId], hw: &HwConfig) -> SimResult {
         let Some(&last) = last_use.get(&t.id) else { continue };
         let has_device_copy = t.home == Tier::Device
             || graph.ops.iter().any(
-                |o| matches!(o.kind, OpKind::Prefetch { tensor } if tensor == t.id),
+                |o| matches!(o.kind, OpKind::Prefetch { tensor, .. } if tensor == t.id),
             );
         if !has_device_copy {
             continue;
@@ -283,6 +346,22 @@ pub fn simulate(graph: &Graph, order: &[OpId], hw: &HwConfig) -> SimResult {
         residency.push((t, cur.max(0) as u64));
     }
 
+    // Per-tier peaks (non-device levels), same free-before-alloc tie rule.
+    let mut tier_peaks = Vec::new();
+    if let Some(t) = topo {
+        for (i, tier) in t.tiers.iter().enumerate().skip(1) {
+            let mut ev = std::mem::take(&mut tier_events[i]);
+            ev.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            let mut cur: i64 = 0;
+            let mut peak: i64 = 0;
+            for (_, d) in ev {
+                cur += d;
+                peak = peak.max(cur);
+            }
+            tier_peaks.push((*tier, peak.max(0) as u64));
+        }
+    }
+
     SimResult {
         makespan_us: makespan,
         compute_busy_us: compute_busy,
@@ -293,6 +372,8 @@ pub fn simulate(graph: &Graph, order: &[OpId], hw: &HwConfig) -> SimResult {
         dma_bytes,
         peak_device_bytes: peak.max(0) as u64,
         residency,
+        tier_peaks,
+        cold_dma_bytes,
         intervals,
     }
 }
@@ -418,10 +499,9 @@ mod tests {
         let mut pfs = Vec::new();
         for j in 0..2u32 {
             let tc = g.add_chunk_tensor(t, format!("t.chunk{j}"), 2048);
-            let st = g.add_op(format!("st{j}"), OpKind::Store { tensor: tc }, vec![tc], vec![]);
+            let st = g.add_op(format!("st{j}"), OpKind::store(tc), vec![tc], vec![]);
             g.add_control_dep(st, p);
-            let pf =
-                g.add_op(format!("pf{j}"), OpKind::Prefetch { tensor: tc }, vec![tc], vec![]);
+            let pf = g.add_op(format!("pf{j}"), OpKind::prefetch(tc), vec![tc], vec![]);
             g.add_control_dep(pf, st);
             pfs.push(pf);
         }
@@ -450,6 +530,77 @@ mod tests {
         assert_eq!(r.residency.last().unwrap().1, 0);
         // Four chunk transfers moved exactly the tensor's bytes twice.
         assert_eq!(r.dma_bytes, 2 * 4096);
+    }
+
+    #[test]
+    fn two_tier_topology_is_bit_identical_to_legacy() {
+        use super::super::hw::TierTopology;
+        // Same graph, same order: the mirrored two-tier topology must
+        // reproduce the legacy cost model bit for bit.
+        let (g, ws) = GraphBuilder::chain_with_remote_weights(4, 5e6, 64, 2000);
+        let mut b = GraphBuilder { graph: g };
+        for (i, &w) in ws.iter().enumerate() {
+            let pf = b.prefetch(&format!("pf.{i}"), w);
+            b.dep(i, pf);
+        }
+        let st = b.store("st.final", 3); // one store for DMA-out coverage
+        b.dep(st, 3);
+        let g = b.build();
+        let order = g.topo_order().unwrap();
+        let legacy = simulate(&g, &order, &hw());
+        let tiered = simulate(&g, &order, &hw().with_tiers(TierTopology::two_tier(&hw())));
+        assert_eq!(legacy.makespan_us, tiered.makespan_us);
+        assert_eq!(legacy.exposed_comm_us, tiered.exposed_comm_us);
+        assert_eq!(legacy.dma_busy_us, tiered.dma_busy_us);
+        assert_eq!(legacy.peak_device_bytes, tiered.peak_device_bytes);
+        assert_eq!(legacy.residency, tiered.residency);
+        // The only divergence is the new additive accounting.
+        assert!(legacy.tier_peaks.is_empty());
+        assert_eq!(tiered.tier_peaks.len(), 1); // pool level tracked
+    }
+
+    #[test]
+    fn tiered_round_trip_costs_cold_edges_and_moves_the_copy() {
+        use super::super::hw::TierTopology;
+        let base = hw();
+        let hw3 = hw().with_tiers(TierTopology::three_tier(&base));
+        // produce -> store(Dram) -> promote(Dram->Remote) -> prefetch -> consume
+        let mut b = GraphBuilder::new();
+        let a = b.tensor("a", 4096, Tier::Device);
+        let o = b.tensor("o", 0, Tier::Device);
+        let p = b.compute("produce", 1e6, 0, vec![], vec![a]);
+        let st = b.store_to("st.a", a, Tier::Dram);
+        b.dep(st, p);
+        let pm = b.promote("pm.a", a, Tier::Dram, Tier::Remote);
+        b.dep(pm, st);
+        let pf = b.prefetch("pf.a", a);
+        b.dep(pf, pm);
+        let c = b.compute("consume", 1e6, 0, vec![a], vec![o]);
+        b.dep(c, pf);
+        let g = b.build();
+        let order = g.topo_order().unwrap();
+        let r = simulate(&g, &order, &hw3);
+        // Store to Dram pays both hops: 2us latency + 4096B at 0.5 GB/s.
+        let st_iv = r.intervals.iter().find(|iv| iv.stream == Stream::DmaOut).unwrap();
+        let expect_st = 2.0 + 4096.0 / 0.5e9 * 1e6;
+        assert!(
+            (st_iv.finish_us - st_iv.start_us - expect_st).abs() < 1e-9,
+            "store dur {}",
+            st_iv.finish_us - st_iv.start_us
+        );
+        // Promote rides its own stream and moves the copy Dram -> pool.
+        let pm_iv = r.intervals.iter().find(|iv| iv.stream == Stream::ColdDma).unwrap();
+        assert!((pm_iv.finish_us - pm_iv.start_us - expect_st).abs() < 1e-9);
+        assert_eq!(r.cold_dma_bytes, 4096);
+        let peaks: std::collections::HashMap<Tier, u64> = r.tier_peaks.iter().copied().collect();
+        assert_eq!(peaks[&Tier::Dram], 4096);
+        assert_eq!(peaks[&Tier::Remote], 4096);
+        // Prefetch from the pool costs the hot edge only (1 GB/s, no lat).
+        let pf_iv = r.intervals.iter().find(|iv| iv.stream == Stream::DmaIn).unwrap();
+        assert!((pf_iv.finish_us - pf_iv.start_us - 4096.0 / 1e9 * 1e6).abs() < 1e-9);
+        // Device residency is untouched by the cold-side moves.
+        assert_eq!(r.peak_device_bytes, 4096);
+        assert_eq!(r.residency.last().unwrap().1, 0);
     }
 
     #[test]

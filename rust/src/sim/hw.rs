@@ -4,6 +4,26 @@
 //! bandwidths and latencies; the paper's bandwidth sweeps (Fig. 6) become
 //! sweeps over `d2r_gbps`/`r2d_gbps`. Values default to the paper's
 //! measured point (33.6 GB/s D2H) and public Ascend 910C specs.
+//!
+//! # The tier stack
+//!
+//! The base config models the paper's two homes — device HBM and the
+//! shared pool. [`TierTopology`] generalises that to an ordered chain of
+//! tiers with per-edge bandwidth/latency and per-tier capacity:
+//!
+//! ```text
+//!   Device (HBM) ── d2r/r2d ── Remote (pool) ── dram link ── Dram
+//!                                                   └── cxl link ── Cxl ── ssd link ── Ssd
+//! ```
+//!
+//! A transfer between tiers `i..j` pays the sum of per-hop latencies and
+//! the bandwidth of the narrowest edge on the path. With `tiers: None`
+//! (or a topology whose device↔pool edge mirrors `d2r_gbps`/`r2d_gbps`/
+//! `link_latency_us`), the hot-edge cost expression is *bit-identical* to
+//! the legacy `d2r_us`/`r2d_us` formulas — the two-tier configuration is
+//! a degenerate case, not a fork.
+
+use crate::graph::Tier;
 
 /// Hardware/platform parameters for the discrete-event simulator.
 #[derive(Debug, Clone)]
@@ -28,6 +48,9 @@ pub struct HwConfig {
     pub device_capacity: u64,
     /// Shared remote pool capacity (bytes).
     pub remote_capacity: u64,
+    /// Optional N-level tier stack below the device. `None` means the
+    /// legacy two-home model (device + pool) with exactly the costs above.
+    pub tiers: Option<TierTopology>,
 }
 
 pub const GB: u64 = 1024 * 1024 * 1024;
@@ -50,6 +73,7 @@ impl HwConfig {
             host_overhead_us: 150.0,
             device_capacity: 96 * GB,
             remote_capacity: 1024 * GB,
+            tiers: None,
         }
     }
 
@@ -70,6 +94,7 @@ impl HwConfig {
             host_overhead_us: 0.0,
             device_capacity: 1 << 30,
             remote_capacity: 1 << 40,
+            tiers: None,
         }
     }
 
@@ -124,6 +149,211 @@ impl HwConfig {
     /// Duration of a collective of `bytes` (us) — flat ring model.
     pub fn net_us(&self, bytes: u64) -> f64 {
         self.link_latency_us + bytes as f64 / (self.net_gbps * 1e9) * 1e6
+    }
+
+    /// Install an N-level tier stack. See [`TierTopology`].
+    pub fn with_tiers(mut self, tiers: TierTopology) -> Self {
+        self.tiers = Some(tiers);
+        self
+    }
+
+    /// Duration of a `src`-tier → Device transfer (a tiered `Prefetch`).
+    /// Falls back to the legacy [`r2d_us`](Self::r2d_us) expression —
+    /// bit-for-bit — when no topology is installed or `src` is one of the
+    /// hot legacy tiers the topology resolves to the pool edge.
+    pub fn fetch_us(&self, src: Tier, bytes: u64) -> f64 {
+        self.fetch_us_slowed(src, bytes, 1.0)
+    }
+
+    /// [`fetch_us`](Self::fetch_us) with a fabric-contention slowdown
+    /// applied to the bandwidth term only (per-hop latency never
+    /// stretches).
+    pub fn fetch_us_slowed(&self, src: Tier, bytes: u64, slowdown: f64) -> f64 {
+        if let Some(topo) = &self.tiers {
+            if let Some(i) = topo.index_of(src) {
+                if i > 0 {
+                    return topo.path_us(i, 0, bytes, slowdown);
+                }
+            }
+        }
+        self.r2d_us_slowed(bytes, slowdown)
+    }
+
+    /// Duration of a Device → `dst`-tier transfer (a tiered `Store`).
+    pub fn evict_us(&self, dst: Tier, bytes: u64) -> f64 {
+        self.evict_us_slowed(dst, bytes, 1.0)
+    }
+
+    /// [`evict_us`](Self::evict_us) with a fabric-contention slowdown.
+    pub fn evict_us_slowed(&self, dst: Tier, bytes: u64, slowdown: f64) -> f64 {
+        if let Some(topo) = &self.tiers {
+            if let Some(i) = topo.index_of(dst) {
+                if i > 0 {
+                    return topo.path_us(0, i, bytes, slowdown);
+                }
+            }
+        }
+        self.d2r_us_slowed(bytes, slowdown)
+    }
+
+    /// Duration of a non-device `src` → `dst` move (a `Promote`, in either
+    /// direction). Without a topology — a graph that should not contain
+    /// promotes — this degrades to the pool-link cost as a conservative
+    /// stand-in rather than panicking.
+    pub fn promote_us(&self, src: Tier, dst: Tier, bytes: u64) -> f64 {
+        if let Some(topo) = &self.tiers {
+            if let (Some(i), Some(j)) = (topo.index_of(src), topo.index_of(dst)) {
+                if i != j {
+                    return topo.path_us(i, j, bytes, 1.0);
+                }
+                return 0.0;
+            }
+        }
+        self.r2d_us(bytes)
+    }
+
+    /// Capacity of `tier` in the installed topology; `Device`/`Remote`
+    /// fall back to the flat config fields when no topology is present.
+    pub fn tier_capacity(&self, tier: Tier) -> Option<u64> {
+        if let Some(topo) = &self.tiers {
+            if let Some(i) = topo.index_of(tier) {
+                return Some(topo.capacities[i]);
+            }
+        }
+        match tier {
+            Tier::Device => Some(self.device_capacity),
+            Tier::Remote | Tier::Host => Some(self.remote_capacity),
+            _ => None,
+        }
+    }
+}
+
+/// One edge of the tier chain, connecting two adjacent tiers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierLink {
+    /// Bandwidth in the hotter → colder direction (GB/s): stores, demotions.
+    pub down_gbps: f64,
+    /// Bandwidth in the colder → hotter direction (GB/s): prefetches,
+    /// promotions.
+    pub up_gbps: f64,
+    /// One-way latency per hop (us).
+    pub latency_us: f64,
+}
+
+/// An ordered memory-tier chain: `tiers[0]` is always [`Tier::Device`],
+/// `tiers[1]` the shared pool ([`Tier::Remote`]), then optional cold
+/// levels in hot → cold order. `links[i]` connects `tiers[i]` and
+/// `tiers[i+1]`; `capacities[i]` bounds `tiers[i]`.
+///
+/// A transfer between tiers pays the *sum* of per-hop latencies and the
+/// bandwidth of the *narrowest* edge on the path (store-and-forward
+/// through intermediate levels is modelled as pipelined). The legacy
+/// [`Tier::Host`] staging tier resolves to the pool level so two-home
+/// graphs cost identically under a mirrored topology.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierTopology {
+    pub tiers: Vec<Tier>,
+    pub links: Vec<TierLink>,
+    pub capacities: Vec<u64>,
+}
+
+impl TierTopology {
+    /// The degenerate two-tier stack mirroring `hw`'s flat fields exactly:
+    /// one device↔pool edge at `d2r_gbps`/`r2d_gbps`/`link_latency_us`.
+    /// Costs through this topology are bit-identical to the legacy
+    /// `d2r_us`/`r2d_us` path (pinned by the differential proptest).
+    pub fn two_tier(hw: &HwConfig) -> Self {
+        Self {
+            tiers: vec![Tier::Device, Tier::Remote],
+            links: vec![TierLink {
+                down_gbps: hw.d2r_gbps,
+                up_gbps: hw.r2d_gbps,
+                latency_us: hw.link_latency_us,
+            }],
+            capacities: vec![hw.device_capacity, hw.remote_capacity],
+        }
+    }
+
+    /// Append a cold tier below the current coldest level. Panics if
+    /// `tier` is not a cold tier or already present.
+    pub fn with_cold_tier(
+        mut self,
+        tier: Tier,
+        down_gbps: f64,
+        up_gbps: f64,
+        latency_us: f64,
+        capacity: u64,
+    ) -> Self {
+        assert!(tier.is_cold(), "only Dram/Cxl/Ssd can sit below the pool");
+        assert!(!self.tiers.contains(&tier), "tier {tier:?} already in the topology");
+        self.tiers.push(tier);
+        self.links.push(TierLink { down_gbps, up_gbps, latency_us });
+        self.capacities.push(capacity);
+        self
+    }
+
+    /// Three-level stack: device, pool, and a cold DRAM level at roughly
+    /// half the pool-link bandwidth and DDR-class capacity.
+    pub fn three_tier(hw: &HwConfig) -> Self {
+        Self::two_tier(hw).with_cold_tier(
+            Tier::Dram,
+            hw.d2r_gbps * 0.5,
+            hw.r2d_gbps * 0.5,
+            hw.link_latency_us + 2.0,
+            2 * hw.remote_capacity,
+        )
+    }
+
+    /// Five-level stack: device, pool, DRAM, CXL, SSD with
+    /// order-of-magnitude bandwidth/latency spreads per level (the ITME
+    /// pyramid).
+    pub fn five_tier(hw: &HwConfig) -> Self {
+        Self::three_tier(hw)
+            .with_cold_tier(
+                Tier::Cxl,
+                hw.d2r_gbps * 0.25,
+                hw.r2d_gbps * 0.25,
+                5.0 * (hw.link_latency_us + 1.0),
+                4 * hw.remote_capacity,
+            )
+            .with_cold_tier(
+                Tier::Ssd,
+                hw.d2r_gbps * 0.1,
+                hw.r2d_gbps * 0.1,
+                20.0 * (hw.link_latency_us + 1.0),
+                16 * hw.remote_capacity,
+            )
+    }
+
+    /// Position of `tier` in the chain. The legacy `Host` staging tier
+    /// resolves to the pool level (index 1).
+    pub fn index_of(&self, tier: Tier) -> Option<usize> {
+        if tier == Tier::Host {
+            return Some(1);
+        }
+        self.tiers.iter().position(|&t| t == tier)
+    }
+
+    /// Tiers strictly below the pool, hot → cold.
+    pub fn cold_tiers(&self) -> &[Tier] {
+        &self.tiers[2.min(self.tiers.len())..]
+    }
+
+    /// Transfer duration between tier indices `from` → `to` (us): sum of
+    /// per-hop latencies plus the bytes over the narrowest edge on the
+    /// path, with `slowdown` stretching the bandwidth term only. For a
+    /// single device↔pool hop this reduces to exactly the legacy
+    /// `d2r_us_slowed`/`r2d_us_slowed` expression.
+    pub fn path_us(&self, from: usize, to: usize, bytes: u64, slowdown: f64) -> f64 {
+        debug_assert!(from != to, "zero-length tier path");
+        let (lo, hi, down) = if from < to { (from, to, true) } else { (to, from, false) };
+        let mut latency = 0.0;
+        let mut gbps = f64::INFINITY;
+        for link in &self.links[lo..hi] {
+            latency += link.latency_us;
+            gbps = gbps.min(if down { link.down_gbps } else { link.up_gbps });
+        }
+        latency + slowdown * (bytes as f64 / (gbps * 1e9) * 1e6)
     }
 }
 

@@ -5,11 +5,34 @@
 //! training steps, terabyte pools). Costs are analytic (roofline compute,
 //! bandwidth+latency transfers); results are *shape-faithful*, not
 //! absolute-number-faithful.
+//!
+//! ## The tier stack
+//!
+//! Hardware is described by [`HwConfig`]. Historically that meant exactly
+//! two memory levels — HBM ("device") and the fabric-attached pool
+//! ("remote") — and the flat `d2r_gbps`/`r2d_gbps`/`link_latency_us`
+//! numbers still describe that edge. An optional [`TierTopology`]
+//! (`HwConfig::with_tiers`) generalises the stack to an ordered list of
+//! tiers — device, pool, then any of DRAM / CXL / SSD below it — with a
+//! [`TierLink`] (bandwidth each way + latency) per adjacent pair and a
+//! capacity per tier. Transfer costs between non-adjacent tiers are the
+//! *path* cost: the sum of per-hop latencies plus one serialisation term
+//! at the bottleneck hop's bandwidth (`TierTopology::path_us`).
+//!
+//! The simulator charges each cache op on the right edge: `Prefetch`
+//! pulls from its source tier to device, `Store` pushes to its
+//! destination tier, and `Promote` moves a cold copy between non-device
+//! tiers on its own `Stream::ColdDma` engine without touching device
+//! residency. With tiers configured, [`SimResult::tier_peaks`] reports
+//! the peak resident bytes per non-device tier and
+//! [`SimResult::cold_dma_bytes`] the bytes moved on the cold fabric.
+//! `HwConfig { tiers: None, .. }` is the legacy two-level machine and is
+//! bit-identical to the pre-tier simulator.
 
 mod engine;
 mod hw;
 mod window;
 
 pub use engine::{duration_us, simulate, stream_of, Interval, SimResult, Stream};
-pub use hw::{Fabric, HwConfig, GB, MB};
+pub use hw::{Fabric, HwConfig, TierLink, TierTopology, GB, MB};
 pub use window::SimTrace;

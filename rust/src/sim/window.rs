@@ -33,8 +33,12 @@ fn stream_idx(s: Stream) -> usize {
         Stream::DmaOut => 2,
         Stream::Net => 3,
         Stream::Host => 4,
+        Stream::ColdDma => 5,
     }
 }
+
+/// Number of in-order streams ([`stream_idx`] codomain).
+const N_STREAMS: usize = 6;
 
 /// A recorded baseline simulation that trial schedules can resume from.
 #[derive(Debug, Clone)]
@@ -47,7 +51,7 @@ pub struct SimTrace {
     finish: Vec<f64>,
     /// Stream occupancy *before* each position (`order.len() + 1`
     /// entries): the complete cross-window entry state of every suffix.
-    stream_free: Vec<[f64; 5]>,
+    stream_free: Vec<[f64; N_STREAMS]>,
     /// The baseline result (identical to `simulate(graph, order, hw)`).
     pub base: SimResult,
 }
@@ -60,7 +64,7 @@ impl SimTrace {
         let n = graph.ops.len();
         let mut start = vec![0.0f64; n];
         let mut finish = vec![0.0f64; n];
-        let mut sf = [0.0f64; 5];
+        let mut sf = [0.0f64; N_STREAMS];
         let mut snaps = Vec::with_capacity(order.len() + 1);
         for &op_id in order {
             snaps.push(sf);
@@ -139,7 +143,7 @@ impl SimTrace {
         }
         let mut last_cache_free_pos: Vec<Option<usize>> = vec![None; graph.tensors.len()];
         for op in &graph.ops {
-            if let OpKind::Store { tensor } | OpKind::Detach { tensor } = op.kind {
+            if let OpKind::Store { tensor, .. } | OpKind::Detach { tensor } = op.kind {
                 if pos[op.id] != usize::MAX {
                     let e = last_cache_free_pos[tensor].get_or_insert(0);
                     *e = (*e).max(pos[op.id]);
@@ -153,9 +157,35 @@ impl SimTrace {
             }
         }
 
+        // --- per-tier (non-device) residency (mirrors `simulate`) --------
+        let topo = hw.tiers.as_ref();
+        let mut tier_events: Vec<Vec<(f64, i64)>> = match topo {
+            Some(t) => vec![Vec::new(); t.tiers.len()],
+            None => Vec::new(),
+        };
+        if let Some(t) = topo {
+            for tn in &graph.tensors {
+                if tn.home != Tier::Device
+                    && tn.alias_of.is_none()
+                    && graph.producer_of(tn.id).is_none()
+                {
+                    if let Some(i) = t.index_of(tn.home) {
+                        tier_events[i].push((0.0, tn.bytes as i64));
+                    }
+                }
+            }
+        }
+
         // --- prefix: recorded times, trial-graph events ------------------
         let mut dma_bytes = 0u64;
-        let emit = |op_id: OpId, s: f64, f: f64, mem_events: &mut Vec<(f64, i64)>, dma_bytes: &mut u64| {
+        let mut cold_dma_bytes = 0u64;
+        let emit = |op_id: OpId,
+                    s: f64,
+                    f: f64,
+                    mem_events: &mut Vec<(f64, i64)>,
+                    tier_events: &mut Vec<Vec<(f64, i64)>>,
+                    dma_bytes: &mut u64,
+                    cold_dma_bytes: &mut u64| {
             let op = graph.op(op_id);
             match op.kind {
                 OpKind::Compute { .. } => {
@@ -165,16 +195,32 @@ impl SimTrace {
                         }
                     }
                 }
-                OpKind::Prefetch { tensor } => {
+                OpKind::Prefetch { tensor, .. } => {
                     mem_events.push((s, graph.tensor(tensor).bytes as i64));
                     *dma_bytes += graph.tensor(tensor).bytes;
                 }
-                OpKind::Store { tensor } => {
+                OpKind::Store { tensor, dst } => {
                     mem_events.push((f, -(graph.tensor(tensor).bytes as i64)));
                     *dma_bytes += graph.tensor(tensor).bytes;
+                    if let Some(t) = topo {
+                        if let Some(i) = t.index_of(dst) {
+                            tier_events[i].push((f, graph.tensor(tensor).bytes as i64));
+                        }
+                    }
                 }
                 OpKind::Detach { tensor } => {
                     mem_events.push((f, -(graph.tensor(tensor).bytes as i64)));
+                }
+                OpKind::Promote { tensor, src, dst } => {
+                    *cold_dma_bytes += graph.tensor(tensor).bytes;
+                    if let Some(t) = topo {
+                        if let Some(i) = t.index_of(dst) {
+                            tier_events[i].push((s, graph.tensor(tensor).bytes as i64));
+                        }
+                        if let Some(i) = t.index_of(src) {
+                            tier_events[i].push((f, -(graph.tensor(tensor).bytes as i64)));
+                        }
+                    }
                 }
                 _ => {}
             }
@@ -191,7 +237,7 @@ impl SimTrace {
                 finish_us: f,
                 stream: stream_of(&graph.op(o).kind),
             });
-            emit(o, s, f, &mut mem_events, &mut dma_bytes);
+            emit(o, s, f, &mut mem_events, &mut tier_events, &mut dma_bytes, &mut cold_dma_bytes);
         }
 
         // --- suffix: list scheduling from the recorded entry state -------
@@ -213,7 +259,15 @@ impl SimTrace {
             finish[op_id] = f;
             sf[stream_idx(stream)] = f;
             intervals.push(Interval { op: op_id, start_us: s, finish_us: f, stream });
-            emit(op_id, s, f, &mut mem_events, &mut dma_bytes);
+            emit(
+                op_id,
+                s,
+                f,
+                &mut mem_events,
+                &mut tier_events,
+                &mut dma_bytes,
+                &mut cold_dma_bytes,
+            );
         }
 
         // --- refcount frees (mirrors `simulate`) -------------------------
@@ -226,7 +280,7 @@ impl SimTrace {
                 || graph
                     .ops
                     .iter()
-                    .any(|o| matches!(o.kind, OpKind::Prefetch { tensor } if tensor == t.id));
+                    .any(|o| matches!(o.kind, OpKind::Prefetch { tensor, .. } if tensor == t.id));
             if !has_device_copy {
                 continue;
             }
@@ -297,6 +351,22 @@ impl SimTrace {
             residency.push((t, cur.max(0) as u64));
         }
 
+        // Per-tier peaks, same free-before-alloc tie rule as `simulate`.
+        let mut tier_peaks = Vec::new();
+        if let Some(t) = topo {
+            for (i, tier) in t.tiers.iter().enumerate().skip(1) {
+                let mut ev = std::mem::take(&mut tier_events[i]);
+                ev.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                let mut cur: i64 = 0;
+                let mut peak: i64 = 0;
+                for (_, d) in ev {
+                    cur += d;
+                    peak = peak.max(cur);
+                }
+                tier_peaks.push((*tier, peak.max(0) as u64));
+            }
+        }
+
         SimResult {
             makespan_us: makespan,
             compute_busy_us: compute_busy,
@@ -307,6 +377,8 @@ impl SimTrace {
             dma_bytes,
             peak_device_bytes: peak.max(0) as u64,
             residency,
+            tier_peaks,
+            cold_dma_bytes,
             intervals,
         }
     }
@@ -338,7 +410,7 @@ mod tests {
     fn resume_from_zero_matches_full_simulation() {
         let (mut g, ws) = GraphBuilder::chain_with_remote_weights(6, 5e6, 0, 2000);
         for (i, &w) in ws.iter().enumerate() {
-            let pf = g.add_op(format!("pf.{i}"), OpKind::Prefetch { tensor: w }, vec![w], vec![]);
+            let pf = g.add_op(format!("pf.{i}"), OpKind::prefetch(w), vec![w], vec![]);
             g.add_control_dep(i, pf);
         }
         let order = g.topo_order().unwrap();
@@ -356,7 +428,7 @@ mod tests {
         let (mut g, ws) = GraphBuilder::chain_with_remote_weights(4, 5e6, 0, 2000);
         let mut pfs = Vec::new();
         for (i, &w) in ws.iter().enumerate() {
-            let pf = g.add_op(format!("pf.{i}"), OpKind::Prefetch { tensor: w }, vec![w], vec![]);
+            let pf = g.add_op(format!("pf.{i}"), OpKind::prefetch(w), vec![w], vec![]);
             g.add_control_dep(i, pf);
             pfs.push(pf);
         }

@@ -227,13 +227,13 @@ mod tests {
                 .graph
                 .ops
                 .iter()
-                .filter(|o| matches!(o.kind, crate::graph::OpKind::Prefetch { tensor } if tensor == t))
+                .filter(|o| matches!(o.kind, crate::graph::OpKind::Prefetch { tensor, .. } if tensor == t))
                 .count();
             let stores = sg
                 .graph
                 .ops
                 .iter()
-                .filter(|o| matches!(o.kind, crate::graph::OpKind::Store { tensor } if tensor == t))
+                .filter(|o| matches!(o.kind, crate::graph::OpKind::Store { tensor, .. } if tensor == t))
                 .count();
             assert_eq!(prefetches, 1, "opt state {t} missing its reload");
             assert_eq!(stores, 1, "opt state {t} missing its writeback");

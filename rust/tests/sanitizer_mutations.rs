@@ -57,9 +57,9 @@ fn compiled_fig4() -> Graph {
 /// prefetch wired after the store.
 fn first_round_trip(g: &Graph) -> (usize, OpId, OpId) {
     for op in &g.ops {
-        if let OpKind::Store { tensor } = op.kind {
+        if let OpKind::Store { tensor, .. } = op.kind {
             if let Some(pf) = g.ops.iter().find(|o| {
-                matches!(o.kind, OpKind::Prefetch { tensor: pt } if pt == tensor)
+                matches!(o.kind, OpKind::Prefetch { tensor: pt, .. } if pt == tensor)
                     && o.control_deps.contains(&op.id)
             }) {
                 return (tensor, op.id, pf.id);
@@ -116,7 +116,7 @@ fn residency_double_release_on_duplicated_store() {
     let (t, _, _) = first_round_trip(&g);
     g.add_op(
         format!("store.dup.{}", g.tensor(t).name),
-        OpKind::Store { tensor: t },
+        OpKind::store(t),
         vec![t],
         vec![],
     );
@@ -131,7 +131,7 @@ fn residency_release_nonresident_on_retargeted_store() {
     let mut g = compiled_fig4();
     let (_, st, _) = first_round_trip(&g);
     let rogue = g.add_tensor("rogue.remote", 1 << 20, Tier::Remote);
-    g.ops[st].kind = OpKind::Store { tensor: rogue };
+    g.ops[st].kind = OpKind::store(rogue);
     let r = run(&g);
     assert!(
         names(&r).contains(&lints::RESIDENCY_RELEASE_NONRESIDENT),
@@ -174,7 +174,7 @@ fn residency_no_acquire_when_consumer_skips_the_load() {
         .ops
         .iter()
         .find_map(|o| match o.kind {
-            OpKind::Prefetch { tensor } if g.tensor(tensor).home == Tier::Remote => {
+            OpKind::Prefetch { tensor, .. } if g.tensor(tensor).home == Tier::Remote => {
                 Some((tensor, o.id))
             }
             _ => None,
@@ -213,9 +213,9 @@ fn chunk_sibling_release_when_parent_reader_overtakes() {
     let _p = g.add_op("p", OpKind::Compute { flops: 1e9, bytes_accessed: 0 }, vec![], vec![w]);
     let c1 = g.add_op("c1", OpKind::Compute { flops: 1e9, bytes_accessed: 0 }, vec![w], vec![]);
     let ck = g.add_chunk_tensor(w, "act.chunk0", 4 << 20);
-    let stc = g.add_op("store.act.chunk0", OpKind::Store { tensor: ck }, vec![ck], vec![]);
+    let stc = g.add_op("store.act.chunk0", OpKind::store(ck), vec![ck], vec![]);
     g.add_control_dep(stc, c1);
-    let pfc = g.add_op("prefetch.act.chunk0", OpKind::Prefetch { tensor: ck }, vec![ck], vec![]);
+    let pfc = g.add_op("prefetch.act.chunk0", OpKind::prefetch(ck), vec![ck], vec![]);
     g.add_control_dep(pfc, stc);
     // The split rewrite lists the chunk as a data input of every window
     // consumer (refcount bookkeeping) and orders it after the reload.
@@ -242,7 +242,7 @@ fn race_acquire_acquire_on_duplicated_prefetch() {
     let (t, _, _) = first_round_trip(&g);
     g.add_op(
         format!("prefetch.dup.{}", g.tensor(t).name),
-        OpKind::Prefetch { tensor: t },
+        OpKind::prefetch(t),
         vec![t],
         vec![],
     );
@@ -256,7 +256,7 @@ fn race_acquire_acquire_on_duplicated_prefetch() {
 fn ledger_leak_on_consumerless_prefetch() {
     let mut g = compiled_fig4();
     let orphan = g.add_tensor("orphan.remote", 1 << 20, Tier::Remote);
-    g.add_op("prefetch.orphan", OpKind::Prefetch { tensor: orphan }, vec![orphan], vec![]);
+    g.add_op("prefetch.orphan", OpKind::prefetch(orphan), vec![orphan], vec![]);
     let r = run(&g);
     assert!(names(&r).contains(&lints::LEDGER_LEAK), "got {:?}", r.findings);
     assert!(denies(&r).is_empty(), "warn-level corruption denied: {:?}", r.findings);
@@ -387,7 +387,7 @@ fn p15_slo_throttle_rewrites_stay_deny_clean() {
     let mut g = Graph::new();
     let w = g.add_tensor("kv.wb", 32 << 20, Tier::Device);
     g.set_deferrable(w, true);
-    let st = g.add_op("store.kv.wb", OpKind::Store { tensor: w }, vec![w], vec![]);
+    let st = g.add_op("store.kv.wb", OpKind::store(w), vec![w], vec![]);
     let out = g.add_tensor("out", 0, Tier::Device);
     let c = g.add_op("decode", OpKind::Compute { flops: 40e6, bytes_accessed: 0 }, vec![], vec![out]);
     let h = g.add_op("host", OpKind::HostWork { us: 5.0 }, vec![], vec![]);
