@@ -1,0 +1,231 @@
+//! Peer-to-peer HBM harvesting — idle-replica HBM as a revocable middle
+//! tier between local HBM and the shared SuperNode pool (ISSUE 10).
+//!
+//! Four replicas serve one skewed, bursty open-loop trace
+//! ([`WorkloadConfig::skewed_bursty`]): zipf-reused shared templates plus
+//! arrivals alternating calm and burst phases. During the calm phases
+//! most replicas drain idle and open themselves as *lenders*; the replica
+//! still decoding borrows their spare HBM, so its private KV blocks live
+//! at `Tier::Peer(lender)` and every working-set fetch rides the
+//! device↔device edge instead of the 33.6 GB/s pool link. A burst then
+//! loads the lenders past their revocation threshold: every live lease is
+//! revoked and the borrowed blocks demote to the pool — reserve-first,
+//! exactly once, never dropped (a full pool parks the block at the peer
+//! for a later sweep).
+//!
+//! Two rows run the identical trace on the identical hardware:
+//!
+//! * **pool-only** — harvesting off; all KV traffic funnels through the
+//!   shared pool fabric.
+//! * **harvest** — idle HBM lent and revoked as the phases alternate.
+//!
+//! Asserted acceptance criteria (ISSUE 10): the harvest row finishes with
+//! *strictly* higher throughput AND *strictly* lower P99 e2e latency at
+//! equal-or-lower peak pool occupancy, its revocation count is nonzero
+//! (the protocol's hard path ran), and a zero-spare harvest config — all
+//! the wiring engaged, no bytes to lend — reproduces the pool-only run
+//! bit for bit.
+//!
+//! Besides the table the run emits `BENCH_peer_harvest.json` for CI
+//! (schema-checked against the committed snapshot at
+//! `benches/snapshots/BENCH_peer_harvest.json`). Pass `tiny` as the first
+//! argument for the CI-sized workload.
+
+use hyperoffload::serving::{
+    ClusterConfig, ClusterReport, EngineConfig, ModelCost, PeerHarvestConfig, SimCluster,
+    WorkloadConfig,
+};
+use hyperoffload::sim::{HwConfig, GB};
+use hyperoffload::util::table::{f, Table};
+
+const N_REPLICAS: usize = 4;
+
+/// Ascend-910C-like replicas joined by a 392 GB/s device↔device edge
+/// (the SuperNode intra-node fabric), with the shared pool sized so a
+/// burst's live KV brushes capacity — pool pressure is what makes the
+/// harvested middle tier worth having.
+fn hw() -> HwConfig {
+    let mut hw = HwConfig::ascend910c_like()
+        .with_device_capacity(64 * GB)
+        .with_peer_link(392.0, 5.0);
+    hw.remote_capacity = 3 * GB;
+    hw
+}
+
+fn model() -> ModelCost {
+    ModelCost {
+        weights_bytes: 8 * GB,
+        act_bytes: GB,
+        prefill_flops_per_token: 16e9,
+        decode_flops_per_token: 16e9,
+        kv_bytes_per_token: 64 * 1024,
+    }
+}
+
+/// Lender policy: a replica lends while nearly idle (≤ 512 outstanding
+/// tokens — less than one typical request), stops matching new borrows
+/// above that, and revokes outright once a burst piles more than two
+/// requests' worth of work on it.
+fn harvest_policy() -> PeerHarvestConfig {
+    PeerHarvestConfig {
+        spare_bytes: 8 * GB,
+        lend_below_tokens: 512,
+        revoke_above_tokens: 4096,
+    }
+}
+
+fn run(harvest: Option<PeerHarvestConfig>, wl: &[hyperoffload::serving::Request]) -> ClusterReport {
+    // Generous preemption retries: pool exhaustion under the burst may
+    // preempt, but the identical trace must complete in every row.
+    let engine = EngineConfig {
+        max_preemptions: 64,
+        ..EngineConfig::hierarchical(hw(), model())
+    };
+    let mut cfg = ClusterConfig::new(engine, N_REPLICAS);
+    if let Some(ph) = harvest {
+        cfg = cfg.with_peer_harvest(ph);
+    }
+    SimCluster::new(cfg).run(wl.to_vec()).expect("cluster run")
+}
+
+fn main() {
+    let tiny = std::env::args().any(|a| a == "tiny");
+    let (n_requests, phases) = if tiny { (48, 2) } else { (192, 3) };
+
+    // Calm gaps (400 ms mean across the cluster) let replicas drain idle
+    // between requests; burst phases compress the gaps 12x, stacking
+    // several requests' worth of work on every replica at once.
+    let wl = WorkloadConfig::skewed_bursty(n_requests, 400_000.0, phases, 12.0, 29).generate();
+    let total = wl.len() as u64;
+
+    let rows = [
+        ("pool-only", run(None, &wl)),
+        ("harvest", run(Some(harvest_policy()), &wl)),
+    ];
+
+    let mut t = Table::new(
+        format!(
+            "peer-HBM harvesting ({total} requests, {N_REPLICAS} replicas, \
+             {phases} burst phases, 3 GiB pool)"
+        ),
+        &[
+            "config",
+            "tok/s",
+            "p99 e2e ms",
+            "pool peak GB",
+            "peer fetch MB",
+            "revoked MB",
+            "revocations",
+            "preempt",
+            "rejected",
+        ],
+    );
+    for (name, r) in &rows {
+        t.row(&[
+            (*name).into(),
+            f(r.throughput_tok_per_s, 0),
+            f(r.e2e_latency_us.p99 / 1e3, 1),
+            f(r.pool_peak_bytes as f64 / 1e9, 3),
+            f(r.peer_fetch_bytes as f64 / 1e6, 1),
+            f(r.peer_revoked_bytes as f64 / 1e6, 1),
+            r.peer_revocations.to_string(),
+            r.preempted_events.to_string(),
+            r.rejected.to_string(),
+        ]);
+    }
+    t.print();
+
+    let (pool, peer) = (&rows[0].1, &rows[1].1);
+    for (name, r) in &rows {
+        assert_eq!(r.rejected, 0, "{name}: rejected requests");
+        assert_eq!(r.completed, total, "{name}: completed {} of {total}", r.completed);
+        assert!(
+            r.pool_peak_bytes <= r.pool_capacity_bytes,
+            "{name}: pool over capacity"
+        );
+    }
+    assert_eq!(pool.peer_fetch_bytes, 0, "pool-only row must never touch a peer");
+    assert_eq!(pool.peer_revocations, 0);
+    assert!(peer.borrowed_bytes_peak > 0, "calm phases must open lenders");
+    assert!(peer.peer_fetch_bytes > 0, "decode must fetch over the peer edge");
+    assert!(
+        peer.peer_revocations > 0,
+        "bursts must revoke live leases — the protocol's hard path never ran"
+    );
+    assert!(peer.peer_revoked_bytes > 0, "revocation must demote bytes to the pool");
+    assert!(
+        peer.throughput_tok_per_s > pool.throughput_tok_per_s,
+        "harvest throughput {} must strictly beat pool-only {}",
+        peer.throughput_tok_per_s,
+        pool.throughput_tok_per_s
+    );
+    assert!(
+        peer.e2e_latency_us.p99 < pool.e2e_latency_us.p99,
+        "harvest p99 {} must strictly beat pool-only {}",
+        peer.e2e_latency_us.p99,
+        pool.e2e_latency_us.p99
+    );
+    assert!(
+        peer.pool_peak_bytes <= pool.pool_peak_bytes,
+        "harvest must not raise peak pool occupancy ({} > {})",
+        peer.pool_peak_bytes,
+        pool.pool_peak_bytes
+    );
+
+    // A zero-spare harvest is the protocol's fixpoint: lease registered,
+    // broker running, router consulted — and no byte can ever match, so
+    // the run must reproduce the pool-only row bit for bit.
+    let off = run(Some(PeerHarvestConfig::default()), &wl);
+    assert_eq!(off.borrowed_bytes_peak, 0);
+    assert_eq!(off.peer_fetch_bytes, 0);
+    assert_eq!(off.peer_revocations, 0);
+    assert_eq!(off.total_time_us, pool.total_time_us, "zero-spare must be a fixpoint");
+    assert_eq!(off.kv_transfer_bytes, pool.kv_transfer_bytes);
+    assert_eq!(off.exposed_transfer_us, pool.exposed_transfer_us);
+    assert_eq!(off.peak_device_bytes, pool.peak_device_bytes);
+    assert_eq!(off.throughput_tok_per_s, pool.throughput_tok_per_s);
+
+    // Machine-readable trajectory for CI (schema-checked, values tracked
+    // as an artifact).
+    let mut json = String::from("{\n  \"bench\": \"peer_harvest\",\n  \"rows\": [\n");
+    for (i, (name, r)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"config\": \"{}\", \"throughput_tok_s\": {:.3}, \
+             \"p99_e2e_us\": {:.3}, \"pool_peak_bytes\": {}, \
+             \"peer_fetch_bytes\": {}, \"peer_store_bytes\": {}, \
+             \"borrowed_bytes_peak\": {}, \"peer_revocations\": {}, \
+             \"peer_revoked_bytes\": {}, \"preempted_events\": {}, \
+             \"rejected_requests\": {}}}{}\n",
+            name,
+            r.throughput_tok_per_s,
+            r.e2e_latency_us.p99,
+            r.pool_peak_bytes,
+            r.peer_fetch_bytes,
+            r.peer_store_bytes,
+            r.borrowed_bytes_peak,
+            r.peer_revocations,
+            r.peer_revoked_bytes,
+            r.preempted_events,
+            r.rejected,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let path = "BENCH_peer_harvest.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+
+    println!(
+        "\nboth rows serve the identical skewed/bursty trace: the only\n\
+         difference is whether a replica that drains idle during a calm\n\
+         phase lends its spare HBM. borrowed KV rides the 392 GB/s\n\
+         device-device edge instead of the 33.6 GB/s pool link and pays\n\
+         no pool capacity, so calm-phase decode runs faster and the pool\n\
+         peak stays at or below the pool-only row; when a burst loads a\n\
+         lender, its leases revoke and every borrowed block demotes into\n\
+         the pool exactly once — throughput and tail latency improve\n\
+         without ever dropping a byte."
+    );
+}

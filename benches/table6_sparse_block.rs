@@ -29,6 +29,9 @@ fn main() {
         prefix_templates: 0,
         prefix_tokens: 0,
         prefix_block_tokens: 64,
+        prefix_zipf_s: 0.0,
+        burst_phases: 0,
+        burst_factor: 1.0,
     }
     .generate();
 

@@ -50,6 +50,9 @@ fn main() -> anyhow::Result<()> {
         prefix_templates: 4,
         prefix_tokens: 1_024,
         prefix_block_tokens: 64,
+        prefix_zipf_s: 0.0,
+        burst_phases: 0,
+        burst_factor: 1.0,
     }
     .generate();
 

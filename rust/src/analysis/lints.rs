@@ -23,6 +23,7 @@ pub const CHUNK_SIBLING_RELEASE: &str = "chunk::sibling_release";
 pub const LEDGER_LEAK: &str = "ledger::leak";
 pub const PEAK_UNBOUNDED: &str = "peak::unbounded";
 pub const TIER_COLD_READ: &str = "tier::cold_read";
+pub const PEER_REVOKED_READ: &str = "peer::revoked_read";
 
 /// Diagnostic pass label every TransferSan finding is reported under.
 pub const PASS: &str = "transfer-san";
@@ -97,6 +98,14 @@ pub const LINTS: &[LintSpec] = &[
         trigger: "a Store/Promote parking the copy at another tier is forced before the \
                   Prefetch/Promote with no corrective move to the read tier forced between \
                   (only enforced when a cold DRAM/CXL/SSD tier is involved)",
+    },
+    LintSpec {
+        name: PEER_REVOKED_READ,
+        default: LintLevel::Deny,
+        summary: "peer fetch of a copy provably moved off the lender",
+        trigger: "a Store/Promote parking the copy at another tier is forced before a \
+                  Prefetch/Promote reading `Tier::Peer` with no corrective move back to \
+                  the peer forced between (the revocation-demotion race)",
     },
     LintSpec {
         name: RACE_ACQUIRE_ACQUIRE,

@@ -269,12 +269,23 @@ pub fn analyze(g: &Graph, order: &[OpId], anc: &Reach, hw: &HwConfig) -> Analysi
             let to_src =
                 anc.mask(movers.iter().filter(|&&(m, d)| m != a && d == src).map(|&(m, _)| m));
             for &(m, d) in &movers {
-                if m == a || d == src || !(d.is_cold() || src.is_cold()) {
+                if m == a || d == src {
                     continue;
                 }
+                // The same structural proof backs two lints: the cold-tier
+                // variant, and the peer variant — a fetch from borrowed
+                // HBM after the copy provably moved off the lender (the
+                // revocation-demotion race a stale lease would hit).
+                let lint = if src.is_peer() || d.is_peer() {
+                    lints::PEER_REVOKED_READ
+                } else if d.is_cold() || src.is_cold() {
+                    lints::TIER_COLD_READ
+                } else {
+                    continue;
+                };
                 if anc.contains(a, m) && !anc.rows_intersect(a, &desc, m, &to_src) {
                     findings.push(Finding {
-                        lint: lints::TIER_COLD_READ,
+                        lint,
                         op: Some(a),
                         message: format!(
                             "'{}' reads '{}' from tier {:?}, but '{}' parks the copy at \
@@ -290,13 +301,20 @@ pub fn analyze(g: &Graph, order: &[OpId], anc: &Reach, hw: &HwConfig) -> Analysi
             }
             // Initial placement: the copy starts at the tensor's home
             // tier; reading another tier needs a mover to it first.
+            let init_lint = if t.home.is_peer() || src.is_peer() {
+                Some(lints::PEER_REVOKED_READ)
+            } else if t.home.is_cold() || src.is_cold() {
+                Some(lints::TIER_COLD_READ)
+            } else {
+                None
+            };
             if t.home != Tier::Device
                 && t.home != src
-                && (t.home.is_cold() || src.is_cold())
+                && init_lint.is_some()
                 && !anc.row_intersects(a, &to_src)
             {
                 findings.push(Finding {
-                    lint: lints::TIER_COLD_READ,
+                    lint: init_lint.unwrap(),
                     op: Some(a),
                     message: format!(
                         "'{}' reads '{}' from tier {:?}, but the copy starts at its home \
@@ -690,6 +708,46 @@ mod tests {
         let g = b.build();
         let r = run(&g);
         assert!(!names(&r).contains(&lints::TIER_COLD_READ), "got {:?}", r.findings);
+    }
+
+    #[test]
+    fn revoked_peer_read_is_denied() {
+        // Lease install parks w at peer 1; revocation demotes the copy to
+        // the pool; a stale reader still fetches from the peer — the
+        // revocation-demotion race, denied under its own lint name.
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 8 << 20, Tier::Device);
+        let p = b.compute("p", 1e9, 0, vec![], vec![w]);
+        let st = b.store_to("st", w, Tier::Peer(1));
+        b.dep(st, p);
+        let dm = b.promote("dm", w, Tier::Peer(1), Tier::Remote);
+        b.dep(dm, st);
+        let pf = b.prefetch_from("pf", w, Tier::Peer(1));
+        b.dep(pf, dm);
+        let c2 = b.compute("c2", 1e9, 0, vec![w], vec![]);
+        b.dep(c2, pf);
+        let g = b.build();
+        let r = run(&g);
+        assert!(names(&r).contains(&lints::PEER_REVOKED_READ), "got {:?}", r.findings);
+        assert!(denies(&r).contains(&lints::PEER_REVOKED_READ));
+        assert!(!names(&r).contains(&lints::TIER_COLD_READ), "peer race has its own lint");
+
+        // Fetching from the pool — where the demotion parked the copy —
+        // is the correct post-revocation read and stays clean.
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 8 << 20, Tier::Device);
+        let p = b.compute("p", 1e9, 0, vec![], vec![w]);
+        let st = b.store_to("st", w, Tier::Peer(1));
+        b.dep(st, p);
+        let dm = b.promote("dm", w, Tier::Peer(1), Tier::Remote);
+        b.dep(dm, st);
+        let pf = b.prefetch("pf", w);
+        b.dep(pf, dm);
+        let c2 = b.compute("c2", 1e9, 0, vec![w], vec![]);
+        b.dep(c2, pf);
+        let g = b.build();
+        let r = run(&g);
+        assert!(!names(&r).contains(&lints::PEER_REVOKED_READ), "got {:?}", r.findings);
     }
 
     #[test]

@@ -16,6 +16,12 @@ pub type TensorId = usize;
 /// order-of-magnitude bandwidth/latency spreads. Cache operators carry
 /// explicit source/destination tiers, and `Promote` moves a cold copy
 /// between non-device tiers without touching device residency.
+///
+/// `Peer(replica)` is the harvested middle tier: spare HBM on an idle
+/// sibling replica, reached over the device↔device fabric link — faster
+/// than the pool, but *revocable* (the lender can reclaim it, demoting
+/// the borrowed copy to the pool). Peer homes only appear when a lease
+/// is active; no lease, no `Peer` tiers anywhere in the IR.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Tier {
     /// On-device HBM — fast, scarce.
@@ -24,6 +30,9 @@ pub enum Tier {
     Remote,
     /// Host DRAM (staging tier; the paper's H2R/R2H primitives touch it).
     Host,
+    /// Borrowed HBM on sibling replica `.0`, reached device↔device.
+    /// Hotter than the pool, revocable by the lender.
+    Peer(u16),
     /// Node-local cold DRAM below the pool (first cold level).
     Dram,
     /// Disaggregated CXL-attached memory below DRAM.
@@ -38,6 +47,11 @@ impl Tier {
     /// cold tiers activate the N-level cost model and residency checks.
     pub fn is_cold(self) -> bool {
         matches!(self, Tier::Dram | Tier::Cxl | Tier::Ssd)
+    }
+
+    /// True for harvested peer-HBM homes ([`Tier::Peer`]).
+    pub fn is_peer(self) -> bool {
+        matches!(self, Tier::Peer(_))
     }
 }
 

@@ -57,6 +57,12 @@ enum BlockHome {
     /// (manager-local refcount; one pool reservation backs all holders).
     /// Writing it forks a private copy.
     Cow(u64),
+    /// Private block homed in `lender`'s spare HBM under a
+    /// [`LeaseLedger`] lease: fetched over the device↔device peer edge
+    /// instead of the pool link. Revocation rehomes it to `Remote`
+    /// (never drops it); only private blocks borrow — shared prefix
+    /// entries stay in the refcounted pool/cold ledgers.
+    Peer { lender: u16 },
 }
 
 /// Structured failure modes of the KV-cache manager, carried through the
@@ -134,6 +140,12 @@ pub struct StepCost {
     /// Bytes fetched from *below* the pool (demoted blocks the step
     /// touches), summed per cold tier. Empty on untiered setups.
     pub cold_fetch: Vec<(Tier, u64)>,
+    /// Bytes fetched from borrowed peer-HBM homes, per lender replica —
+    /// they ride the device↔device edge, not the pool link. Empty
+    /// without an active lease.
+    pub peer_fetch: Vec<(u16, u64)>,
+    /// Bytes written back to borrowed peer-HBM homes, per lender replica.
+    pub peer_store: Vec<(u16, u64)>,
     /// Host-side sparse block processing time (us).
     pub cpu_us: f64,
     /// Device-allocator defragmentation stall (us).
@@ -193,6 +205,16 @@ pub struct KvCacheManager {
     /// Prefix index consulted by [`admit_prefix`](Self::admit_prefix);
     /// cluster-wide when the handle is shared across managers.
     index: Option<PrefixIndex>,
+    /// Peer-HBM lease broker (cluster-wide when shared) and this
+    /// manager's replica id in it. `None` disables harvesting: every
+    /// placement decision is bit-identical to the pool-only manager.
+    lease: Option<crate::memory::LeaseLedger>,
+    replica: u16,
+    /// Borrower-side gate: the engine closes it when the tail budget
+    /// has no headroom for revocation risk (the SLO veto).
+    peer_enabled: bool,
+    /// Bytes this manager currently holds in borrowed peer HBM.
+    pub peer_kv_bytes: u64,
     /// Copy-on-write blocks shared between forked sequences.
     cow: HashMap<u64, CowBlock>,
     next_cow: u64,
@@ -285,6 +307,10 @@ impl KvCacheManager {
             ledger,
             device_spill: false,
             index,
+            lease: None,
+            replica: 0,
+            peer_enabled: true,
+            peer_kv_bytes: 0,
             cow: HashMap::new(),
             next_cow: 1,
             cow_forks: 0,
@@ -301,6 +327,30 @@ impl KvCacheManager {
     pub fn with_device_spill(mut self) -> Self {
         self.device_spill = true;
         self
+    }
+
+    /// Attach this manager (replica `replica`) to a peer-HBM lease
+    /// broker: *private* block placements prefer borrowed peer HBM over
+    /// the pool whenever the ledger has an open lender, and
+    /// [`revoke_peer`](Self::revoke_peer) rehomes borrowed blocks when a
+    /// lender reclaims. Never set → bit-identical pool-only behaviour.
+    pub fn set_peer_lease(&mut self, lease: crate::memory::LeaseLedger, replica: u16) {
+        self.lease = Some(lease);
+        self.replica = replica;
+    }
+
+    /// Borrower-side SLO veto: while disabled, no *new* borrows happen
+    /// (existing leases stay until retired or revoked).
+    pub fn set_peer_enabled(&mut self, on: bool) {
+        self.peer_enabled = on;
+    }
+
+    /// Try to borrow `bytes` of peer HBM for a private placement.
+    fn try_borrow_peer(&self, bytes: u64) -> Option<u16> {
+        if !self.peer_enabled {
+            return None;
+        }
+        self.lease.as_ref()?.try_borrow(self.replica, bytes)
     }
 
     /// The remote pool this manager reserves offloaded KV from.
@@ -401,31 +451,57 @@ impl KvCacheManager {
                 };
                 let shared_n = acq.acquired.len();
                 let private = (nblocks - shared_n) as u64 * block_bytes;
-                // Reserve the suffix atomically, so a mid-admit failure
-                // leaks nothing (the acquired prefix unwinds via abort).
-                if private > 0 && !self.try_reserve_evicting(private) {
-                    if let Some(idx) = &self.index {
-                        idx.abort_tiered(&acq.acquired, &acq.inserted, &self.ledger);
+                // The private suffix prefers borrowed peer HBM: faster
+                // than the pool link and it sheds pool pressure. All or
+                // nothing from one lender — a partial lease would
+                // scatter one sequence's suffix across homes.
+                let peer_lender = if private > 0 { self.try_borrow_peer(private) } else { None };
+                match peer_lender {
+                    Some(_) => self.peer_kv_bytes += private,
+                    None => {
+                        // Reserve the suffix atomically, so a mid-admit
+                        // failure leaks nothing (the acquired prefix
+                        // unwinds via abort).
+                        if private > 0 && !self.try_reserve_evicting(private) {
+                            if let Some(idx) = &self.index {
+                                idx.abort_tiered(&acq.acquired, &acq.inserted, &self.ledger);
+                            }
+                            return Err(KvError::PoolExhausted {
+                                bytes: private,
+                                what: "prefill blocks",
+                            }
+                            .into());
+                        }
+                        self.remote_kv_bytes += private;
                     }
-                    return Err(KvError::PoolExhausted {
-                        bytes: private,
-                        what: "prefill blocks",
-                    }
-                    .into());
                 }
-                self.remote_kv_bytes += private;
                 for (i, &h) in acq.acquired.iter().enumerate() {
                     let tier = acq.tiers.get(i).copied().unwrap_or(Tier::Remote);
                     blocks.push(BlockHome::Shared { hash: h, tier });
                 }
-                blocks.resize(nblocks, BlockHome::Remote);
+                blocks.resize(
+                    nblocks,
+                    match peer_lender {
+                        Some(lender) => BlockHome::Peer { lender },
+                        None => BlockHome::Remote,
+                    },
+                );
                 // Hit blocks are not recomputed; everything else — cold
                 // shared blocks included, this prefill produces them —
-                // streams to the pool as it is written back.
+                // streams back to its home as it is written: shared
+                // blocks to the pool, a peer-homed suffix over the
+                // device↔device edge.
                 admit.hit_blocks = acq.hit_blocks;
                 admit.hit_tokens = acq.hit_blocks * self.nsa.block_tokens;
                 admit.deduped_bytes = acq.deduped_bytes;
-                admit.cost.d2r_bytes += (nblocks - acq.hit_blocks) as u64 * block_bytes;
+                let computed = (nblocks - acq.hit_blocks) as u64 * block_bytes;
+                match peer_lender {
+                    Some(lender) => {
+                        admit.cost.peer_store.push((lender, private));
+                        admit.cost.d2r_bytes += computed.saturating_sub(private);
+                    }
+                    None => admit.cost.d2r_bytes += computed,
+                }
                 if admit.hit_tokens < prompt_tokens && acq.hit_blocks > 0 {
                     // The suffix prefill attends over the shared prefix,
                     // so the hit blocks transfer to the device first —
@@ -477,7 +553,10 @@ impl KvCacheManager {
         // fail half-way with some parent blocks already converted.
         for b in &parent_blocks {
             match *b {
-                BlockHome::Device(_) => {
+                // Peer homes are device-class memory (a sibling's HBM):
+                // like spilled device blocks they cannot back a CoW
+                // share, whose reservation lives in the pool ledger.
+                BlockHome::Device(_) | BlockHome::Peer { .. } => {
                     return Err(KvError::DeviceResidentFork { seq: parent }.into());
                 }
                 BlockHome::Cow(id) if !self.cow.contains_key(&id) => {
@@ -507,7 +586,7 @@ impl KvCacheManager {
                     self.cow.get_mut(&id).expect("validated above").refs += 1;
                     blocks.push(BlockHome::Cow(id));
                 }
-                BlockHome::Device(_) => {
+                BlockHome::Device(_) | BlockHome::Peer { .. } => {
                     return Err(KvError::DeviceResidentFork { seq: parent }.into());
                 }
             }
@@ -563,6 +642,14 @@ impl KvCacheManager {
                                 None => cost.cold_fetch.push((tier, block_bytes)),
                             }
                         }
+                        Some(&BlockHome::Peer { lender }) => {
+                            // Borrowed blocks arrive over the peer edge,
+                            // not the pool link.
+                            match cost.peer_fetch.iter_mut().find(|(r, _)| *r == lender) {
+                                Some(e) => e.1 += block_bytes,
+                                None => cost.peer_fetch.push((lender, block_bytes)),
+                            }
+                        }
                         _ => new_blocks += 1,
                     }
                 }
@@ -573,6 +660,7 @@ impl KvCacheManager {
                 // still shared with a forked sibling forks a private copy
                 // before the write lands.
                 let mut tail_writeback = true;
+                let mut tail_peer = None;
                 match tail {
                     BlockHome::Cow(id) => {
                         let refs = match self.cow.get(&id) {
@@ -599,6 +687,8 @@ impl KvCacheManager {
                             BlockHome::Remote;
                     }
                     BlockHome::Remote => {}
+                    // A borrowed tail persists over the peer edge.
+                    BlockHome::Peer { lender } => tail_peer = Some(lender),
                     // A spilled growth block decodes in place: the write
                     // lands in HBM, nothing transfers back to the pool.
                     BlockHome::Device(_) if self.device_spill => tail_writeback = false,
@@ -611,7 +701,15 @@ impl KvCacheManager {
                     }
                 }
                 if tail_writeback {
-                    cost.d2r_bytes += block_bytes;
+                    match tail_peer {
+                        Some(lender) => {
+                            match cost.peer_store.iter_mut().find(|(r, _)| *r == lender) {
+                                Some(e) => e.1 += block_bytes,
+                                None => cost.peer_store.push((lender, block_bytes)),
+                            }
+                        }
+                        None => cost.d2r_bytes += block_bytes,
+                    }
                 }
                 // Host-side sparse processing over every touched block
                 // (partial KV updates, gather/scatter) — the term that
@@ -666,6 +764,15 @@ impl KvCacheManager {
                         self.remote_kv_bytes -= self.block_bytes();
                     }
                 }
+                BlockHome::Peer { lender } => {
+                    // Return the borrowed bytes to the lender's ledger —
+                    // a retire/preempt ends the lease without touching
+                    // the pool.
+                    if let Some(lease) = &self.lease {
+                        lease.release(lender, self.block_bytes());
+                    }
+                    self.peer_kv_bytes = self.peer_kv_bytes.saturating_sub(self.block_bytes());
+                }
             }
         }
         if self.seqs.is_empty() {
@@ -715,6 +822,13 @@ impl KvCacheManager {
             }
             KvPolicy::FullOffload => {
                 let bytes = self.block_bytes();
+                // Growth blocks prefer borrowed peer HBM for the same
+                // reason admission suffixes do: the peer edge beats the
+                // pool link and borrowing sheds pool pressure.
+                if let Some(lender) = self.try_borrow_peer(bytes) {
+                    self.peer_kv_bytes += bytes;
+                    return Ok(BlockHome::Peer { lender });
+                }
                 if !self.try_reserve_evicting(bytes) {
                     if self.device_spill {
                         // Pressure valve: the growth block lands in HBM.
@@ -753,6 +867,47 @@ impl KvCacheManager {
 
     fn note_peak(&mut self) {
         self.peak_device_kv = self.peak_device_kv.max(self.device_kv_bytes());
+    }
+
+    /// Lender `lender` revoked its lease: rehome every block this
+    /// manager borrowed from it into the pool. Each block moves exactly
+    /// once — [`LeaseLedger::demote`] reserves the pool destination
+    /// first, so a full pool leaves the block parked at the peer (still
+    /// on lease) for a later sweep instead of dropping it. Returns the
+    /// bytes demoted (the Peer→Remote transfer volume the caller must
+    /// charge to the fabric).
+    pub fn revoke_peer(&mut self, lender: u16) -> u64 {
+        let Some(lease) = self.lease.clone() else { return 0 };
+        let block_bytes = self.block_bytes();
+        let targets: Vec<(u64, usize)> = self
+            .seqs
+            .iter()
+            .flat_map(|(&id, s)| {
+                s.blocks.iter().enumerate().filter_map(move |(i, b)| {
+                    matches!(*b, BlockHome::Peer { lender: l } if l == lender)
+                        .then_some((id, i))
+                })
+            })
+            .collect();
+        let mut moved = 0u64;
+        for (id, i) in targets {
+            if !lease.demote(lender, block_bytes, self.ledger.pool()) {
+                // Pool full: relieve pressure through the prefix index
+                // once and retry; a second failure leaves the copy at
+                // the peer — conservation over promptness.
+                if let Some(idx) = &self.index {
+                    idx.evict_tiered(&self.ledger, block_bytes);
+                }
+                if !lease.demote(lender, block_bytes, self.ledger.pool()) {
+                    continue;
+                }
+            }
+            self.seqs.get_mut(&id).unwrap().blocks[i] = BlockHome::Remote;
+            self.remote_kv_bytes += block_bytes;
+            self.peer_kv_bytes = self.peer_kv_bytes.saturating_sub(block_bytes);
+            moved += block_bytes;
+        }
+        moved
     }
 }
 
@@ -1157,6 +1312,101 @@ mod tests {
         m.retire(1).unwrap();
         assert_eq!(m.allocator.used(), 0);
         assert_eq!(pool.used(), 0);
+    }
+
+    #[test]
+    fn peer_lease_places_private_blocks_and_revoke_rehomes_them() {
+        use crate::memory::LeaseLedger;
+        let block = 64 * 64 * 1024u64;
+        let pool = PoolHandle::new_chunked(16 * block, block);
+        let lease = LeaseLedger::new();
+        lease.register_lender(1, 4 * block);
+        let mut m = KvCacheManager::with_pool(
+            KvPolicy::FullOffload,
+            NsaConfig::default(),
+            64 * 1024,
+            GB,
+            pool.clone(),
+        );
+        m.set_peer_lease(lease.clone(), 0);
+        // 3-block private admission: the whole suffix borrows from the
+        // idle lender, nothing touches the pool.
+        let a = m.admit(1, 64 * 3, &hw()).unwrap();
+        assert_eq!(pool.used(), 0);
+        assert_eq!(lease.lent(1), 3 * block);
+        assert_eq!(m.peer_kv_bytes, 3 * block);
+        assert_eq!(a.d2r_bytes, 0, "prefill writes back over the peer edge");
+        assert_eq!(a.peer_store, vec![(1, 3 * block)]);
+        // Decode fetches the working set from the peer, not the pool,
+        // and the tail writeback rides the peer edge too. The growth
+        // block (193rd token) borrows the lender's last spare block.
+        let c = m.decode_step(1, &hw()).unwrap();
+        assert_eq!(c.r2d_bytes, 0);
+        assert!(c.peer_fetch.iter().any(|&(r, b)| r == 1 && b > 0));
+        assert_eq!(c.peer_store, vec![(1, block)]);
+        assert_eq!(lease.lent(1), 4 * block);
+        // Lender load spike: revoke demotes every borrowed block into
+        // the pool — exactly once, never dropped.
+        lease.begin_revoke(1);
+        let moved = m.revoke_peer(1);
+        assert_eq!(moved, 4 * block);
+        assert_eq!(pool.used(), 4 * block);
+        assert_eq!(lease.lent(1), 0);
+        assert_eq!(m.peer_kv_bytes, 0);
+        assert_eq!(m.remote_kv_bytes, 4 * block);
+        // A second sweep finds nothing: no double-demote.
+        assert_eq!(m.revoke_peer(1), 0);
+        assert_eq!(pool.used(), 4 * block);
+        m.retire(1).unwrap();
+        assert_eq!(pool.used(), 0);
+    }
+
+    #[test]
+    fn peer_retire_releases_the_lease_without_touching_the_pool() {
+        use crate::memory::LeaseLedger;
+        let block = 64 * 64 * 1024u64;
+        let pool = PoolHandle::new_chunked(16 * block, block);
+        let lease = LeaseLedger::new();
+        lease.register_lender(2, 8 * block);
+        let mut m = KvCacheManager::with_pool(
+            KvPolicy::FullOffload,
+            NsaConfig::default(),
+            64 * 1024,
+            GB,
+            pool.clone(),
+        );
+        m.set_peer_lease(lease.clone(), 0);
+        m.admit(1, 64 * 2, &hw()).unwrap();
+        assert_eq!(lease.lent(2), 2 * block);
+        m.retire(1).unwrap();
+        assert_eq!(lease.lent(2), 0);
+        assert_eq!(pool.used(), 0);
+        assert_eq!(m.peer_kv_bytes, 0);
+    }
+
+    #[test]
+    fn peer_disabled_or_exhausted_falls_back_to_the_pool() {
+        use crate::memory::LeaseLedger;
+        let block = 64 * 64 * 1024u64;
+        let pool = PoolHandle::new_chunked(16 * block, block);
+        let lease = LeaseLedger::new();
+        lease.register_lender(1, block); // too small for a 2-block suffix
+        let mut m = KvCacheManager::with_pool(
+            KvPolicy::FullOffload,
+            NsaConfig::default(),
+            64 * 1024,
+            GB,
+            pool.clone(),
+        );
+        m.set_peer_lease(lease.clone(), 0);
+        m.admit(1, 64 * 2, &hw()).unwrap();
+        assert_eq!(pool.used(), 2 * block, "undersized lender: pool fallback");
+        assert_eq!(lease.lent(1), 0);
+        // SLO veto closes the borrower side entirely.
+        m.set_peer_enabled(false);
+        m.admit(2, 32, &hw()).unwrap();
+        assert_eq!(pool.used(), 3 * block);
+        assert_eq!(lease.lent(1), 0);
     }
 
     #[test]

@@ -1,0 +1,299 @@
+//! Peer-HBM lease broker: idle-replica HBM as a revocable middle tier.
+//!
+//! A SuperNode replica that is momentarily idle has the fastest spare
+//! capacity in the cluster — its own HBM, reachable over the
+//! device↔device fabric edge ([`crate::sim::PeerLink`]) without touching
+//! the shared pool. The [`LeaseLedger`] brokers that capacity:
+//!
+//! - A **lender** registers spare HBM (`register_lender`) and opens or
+//!   closes itself for new borrows as its own load moves (`set_open`).
+//! - A **borrower** asks the ledger for a lender (`try_borrow`); on
+//!   success its KV blocks are homed at [`Tier::Peer(lender)`]
+//!   (`crate::graph::Tier::Peer`) instead of the pool, and every fetch of
+//!   those blocks rides the faster peer edge.
+//! - On a load spike the lender **revokes** (`begin_revoke`): the lease
+//!   closes immediately and each borrowed block is *demoted to the pool*,
+//!   never dropped — [`demote`](LeaseLedger::demote) reserves the pool
+//!   destination **first** and only then retires the borrowed bytes, so a
+//!   full pool leaves the block safely parked at the peer until a later
+//!   retry. Conservation holds through revoke: every borrowed byte is
+//!   either still lent out or has landed in the pool exactly once
+//!   (property P18 in `rust/tests/proptest_invariants.rs`).
+//!
+//! The ledger tracks *bytes*, not blocks: block identity and re-homing
+//! live in `kvcache::KvCacheManager`, which owns the `Tier::Peer` →
+//! `Tier::Remote` rewrite on revocation. Like [`super::PoolHandle`] this
+//! handle is cheaply cloneable and all clones share one ledger, so the
+//! cluster's engines contend for the same spare HBM.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::tiers::PoolHandle;
+
+/// Cluster-wide broker for harvested peer HBM. Cloneable; all clones
+/// share state.
+#[derive(Debug, Clone, Default)]
+pub struct LeaseLedger {
+    state: Arc<Mutex<LeaseState>>,
+}
+
+#[derive(Debug, Default)]
+struct LeaseState {
+    lenders: HashMap<u16, Lender>,
+    /// Running peak of Σ lent across all lenders.
+    borrowed_peak: u64,
+    /// Revocation events (one per `begin_revoke` that found live leases).
+    revocations: u64,
+    /// Bytes demoted to the pool by revocations.
+    revoked_bytes: u64,
+}
+
+#[derive(Debug, Default)]
+struct Lender {
+    /// Spare HBM this replica exposes (bytes).
+    capacity: u64,
+    /// Bytes currently borrowed out of it.
+    lent: u64,
+    /// Accepting new borrows? Closed lenders keep existing leases alive
+    /// (until revoked) but match no new ones.
+    open: bool,
+}
+
+impl LeaseLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Expose `capacity` bytes of spare HBM on `replica`. Lenders start
+    /// open. Re-registering resizes the exposed capacity in place.
+    pub fn register_lender(&self, replica: u16, capacity: u64) {
+        let mut s = self.state.lock().unwrap();
+        let l = s.lenders.entry(replica).or_default();
+        l.capacity = capacity;
+        l.open = true;
+    }
+
+    /// Open or close `replica` for *new* borrows. No-op for unregistered
+    /// replicas. Closing does not touch existing leases.
+    pub fn set_open(&self, replica: u16, open: bool) {
+        let mut s = self.state.lock().unwrap();
+        if let Some(l) = s.lenders.get_mut(&replica) {
+            l.open = open;
+        }
+    }
+
+    pub fn is_open(&self, replica: u16) -> bool {
+        let s = self.state.lock().unwrap();
+        s.lenders.get(&replica).is_some_and(|l| l.open)
+    }
+
+    /// Bytes currently borrowed out of `replica`'s HBM.
+    pub fn lent(&self, replica: u16) -> u64 {
+        let s = self.state.lock().unwrap();
+        s.lenders.get(&replica).map_or(0, |l| l.lent)
+    }
+
+    /// Spare bytes still borrowable from `replica` (0 when closed).
+    pub fn headroom(&self, replica: u16) -> u64 {
+        let s = self.state.lock().unwrap();
+        s.lenders
+            .get(&replica)
+            .filter(|l| l.open)
+            .map_or(0, |l| l.capacity.saturating_sub(l.lent))
+    }
+
+    /// Σ bytes borrowed out across all lenders.
+    pub fn total_lent(&self) -> u64 {
+        let s = self.state.lock().unwrap();
+        s.lenders.values().map(|l| l.lent).sum()
+    }
+
+    /// Pick a lender for `borrower` with room for `bytes` and record the
+    /// borrow. Deterministic: among open lenders (≠ `borrower`) with
+    /// enough headroom, the one with the most headroom wins, ties broken
+    /// by lowest replica id. Returns the lender's id.
+    pub fn try_borrow(&self, borrower: u16, bytes: u64) -> Option<u16> {
+        let mut s = self.state.lock().unwrap();
+        let pick = s
+            .lenders
+            .iter()
+            .filter(|(r, l)| {
+                **r != borrower && l.open && l.capacity.saturating_sub(l.lent) >= bytes
+            })
+            // max_by_key keeps the *last* maximum; order by (headroom,
+            // Reverse(id)) so the lowest id wins ties deterministically.
+            .max_by_key(|(r, l)| (l.capacity.saturating_sub(l.lent), std::cmp::Reverse(**r)))
+            .map(|(r, _)| *r)?;
+        let l = s.lenders.get_mut(&pick).unwrap();
+        l.lent += bytes;
+        let total: u64 = s.lenders.values().map(|l| l.lent).sum();
+        s.borrowed_peak = s.borrowed_peak.max(total);
+        Some(pick)
+    }
+
+    /// Record a borrow against a *specific* lender (growing an existing
+    /// lease keeps blocks of one sequence on one peer). Fails if the
+    /// lender is closed or lacks headroom.
+    pub fn borrow_from(&self, lender: u16, bytes: u64) -> bool {
+        let mut s = self.state.lock().unwrap();
+        let Some(l) = s.lenders.get_mut(&lender) else { return false };
+        if !l.open || l.capacity.saturating_sub(l.lent) < bytes {
+            return false;
+        }
+        l.lent += bytes;
+        let total: u64 = s.lenders.values().map(|l| l.lent).sum();
+        s.borrowed_peak = s.borrowed_peak.max(total);
+        true
+    }
+
+    /// Return `bytes` of `lender`'s HBM (borrower freed or migrated the
+    /// blocks itself — a retire/preempt, not a revocation).
+    pub fn release(&self, lender: u16, bytes: u64) {
+        let mut s = self.state.lock().unwrap();
+        if let Some(l) = s.lenders.get_mut(&lender) {
+            debug_assert!(l.lent >= bytes, "lease release exceeds lent bytes");
+            l.lent = l.lent.saturating_sub(bytes);
+        }
+    }
+
+    /// Lender-side load spike: close `lender` to new borrows and return
+    /// the bytes currently out on lease (what the borrowers must now
+    /// demote). Counts as a revocation event iff any lease was live.
+    pub fn begin_revoke(&self, lender: u16) -> u64 {
+        let mut s = self.state.lock().unwrap();
+        let Some(l) = s.lenders.get_mut(&lender) else { return 0 };
+        l.open = false;
+        let out = l.lent;
+        if out > 0 {
+            s.revocations += 1;
+        }
+        out
+    }
+
+    /// Demote `bytes` of a revoked lease into `pool`. The pool
+    /// reservation is taken **first**; only on success does the lease
+    /// retire the bytes — so a full pool fails the demotion cleanly (the
+    /// copy stays at the peer, the borrower retries later) and a
+    /// successful one moves every byte exactly once.
+    pub fn demote(&self, lender: u16, bytes: u64, pool: &PoolHandle) -> bool {
+        let mut s = self.state.lock().unwrap();
+        let Some(l) = s.lenders.get_mut(&lender) else { return false };
+        // Overdraw answers `false` rather than asserting: a revocation
+        // sweep can race a borrower-side release, and the sweep retrying
+        // against an already-empty lease must be a clean no-op.
+        if l.lent < bytes || !pool.try_reserve(bytes) {
+            return false;
+        }
+        l.lent -= bytes;
+        s.revoked_bytes += bytes;
+        true
+    }
+
+    /// Running peak of Σ lent across all lenders.
+    pub fn borrowed_peak(&self) -> u64 {
+        self.state.lock().unwrap().borrowed_peak
+    }
+
+    /// Revocation events so far.
+    pub fn revocations(&self) -> u64 {
+        self.state.lock().unwrap().revocations
+    }
+
+    /// Bytes demoted to the pool by revocations so far.
+    pub fn revoked_bytes(&self) -> u64 {
+        self.state.lock().unwrap().revoked_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn borrow_picks_max_headroom_lowest_id() {
+        let lease = LeaseLedger::new();
+        lease.register_lender(1, 100);
+        lease.register_lender(2, 100);
+        lease.register_lender(3, 50);
+        // 1 and 2 tie on headroom; lowest id wins.
+        assert_eq!(lease.try_borrow(0, 40), Some(1));
+        // Now 2 has the most headroom.
+        assert_eq!(lease.try_borrow(0, 40), Some(2));
+        assert_eq!(lease.lent(1), 40);
+        assert_eq!(lease.lent(2), 40);
+        assert_eq!(lease.total_lent(), 80);
+    }
+
+    #[test]
+    fn borrower_never_matches_itself() {
+        let lease = LeaseLedger::new();
+        lease.register_lender(7, 100);
+        assert_eq!(lease.try_borrow(7, 10), None);
+        assert_eq!(lease.try_borrow(3, 10), Some(7));
+    }
+
+    #[test]
+    fn closed_lender_matches_nothing_but_keeps_leases() {
+        let lease = LeaseLedger::new();
+        lease.register_lender(1, 100);
+        assert!(lease.borrow_from(1, 60));
+        lease.set_open(1, false);
+        assert!(!lease.borrow_from(1, 10));
+        assert_eq!(lease.try_borrow(0, 10), None);
+        assert_eq!(lease.lent(1), 60);
+        assert_eq!(lease.headroom(1), 0);
+    }
+
+    #[test]
+    fn revoke_demotes_into_pool_exactly_once() {
+        let lease = LeaseLedger::new();
+        let pool = PoolHandle::new(100);
+        lease.register_lender(1, 100);
+        assert!(lease.borrow_from(1, 80));
+        let out = lease.begin_revoke(1);
+        assert_eq!(out, 80);
+        assert_eq!(lease.revocations(), 1);
+        assert!(lease.demote(1, 80, &pool));
+        assert_eq!(pool.used(), 80);
+        assert_eq!(lease.lent(1), 0);
+        assert_eq!(lease.revoked_bytes(), 80);
+        // Nothing left to demote: a second attempt must not double-move.
+        assert!(!lease.demote(1, 80, &pool));
+        assert_eq!(pool.used(), 80);
+    }
+
+    #[test]
+    fn demote_into_full_pool_leaves_lease_intact() {
+        let lease = LeaseLedger::new();
+        let pool = PoolHandle::new(50);
+        lease.register_lender(1, 100);
+        assert!(lease.borrow_from(1, 80));
+        lease.begin_revoke(1);
+        // Pool too small: demotion fails, bytes stay on lease.
+        assert!(!lease.demote(1, 80, &pool));
+        assert_eq!(pool.used(), 0);
+        assert_eq!(lease.lent(1), 80);
+        assert_eq!(lease.revoked_bytes(), 0);
+    }
+
+    #[test]
+    fn empty_revoke_is_not_an_event() {
+        let lease = LeaseLedger::new();
+        lease.register_lender(1, 100);
+        assert_eq!(lease.begin_revoke(1), 0);
+        assert_eq!(lease.revocations(), 0);
+    }
+
+    #[test]
+    fn borrowed_peak_tracks_cluster_total() {
+        let lease = LeaseLedger::new();
+        lease.register_lender(1, 100);
+        lease.register_lender(2, 100);
+        assert!(lease.borrow_from(1, 60));
+        assert!(lease.borrow_from(2, 50));
+        lease.release(1, 60);
+        assert_eq!(lease.total_lent(), 50);
+        assert_eq!(lease.borrowed_peak(), 110);
+    }
+}

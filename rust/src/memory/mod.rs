@@ -11,11 +11,22 @@
 //! ledger), and [`TieredLedger`] adds the demotion/promotion moves that
 //! shift either flavour between adjacent tiers without ever dropping or
 //! double-counting a byte.
+//!
+//! Orthogonal to the vertical chain sits the *harvested* middle tier:
+//! [`LeaseLedger`] brokers spare HBM on idle sibling replicas
+//! (`Tier::Peer`), faster than the pool but revocable. The lease
+//! protocol is lender/borrower: an idle lender exposes capacity, a
+//! loaded borrower homes KV blocks there, and a lender-side load spike
+//! revokes the lease by *demoting* every borrowed byte into the pool —
+//! reserve-destination-first, exactly once, so conservation holds
+//! through revocation (never drop, never double-count).
 
 mod allocator;
+mod lease;
 mod tiers;
 
 pub use allocator::{AllocId, DeviceAllocator};
+pub use lease::LeaseLedger;
 pub use tiers::{
     HierarchicalMemory, PoolHandle, Region, RegionId, SharedAcquire, TieredLedger, TransferKind,
 };

@@ -410,6 +410,19 @@ impl TransferKind {
                     return Self::between(fa, fb);
                 }
             }
+            // Borrowed peer HBM is device-class memory on a sibling: a
+            // move touching a `Peer` home is device↔device traffic. The
+            // peer-edge timing in `HwConfig::peer` supersedes this coarse
+            // label wherever the simulator costs the op directly.
+            (a, b) if a.is_peer() || b.is_peer() => {
+                let fa = if a.is_peer() { Device } else { a };
+                let fb = if b.is_peer() { Device } else { b };
+                if fa == fb {
+                    TransferKind::D2D
+                } else {
+                    return Self::between(fa, fb);
+                }
+            }
             (a, b) => bail!("unsupported transfer {a:?} -> {b:?}"),
         })
     }
@@ -520,6 +533,10 @@ impl HierarchicalMemory {
                 self.reserve_cold(t, bytes, hw)?;
                 None
             }
+            // Borrowed peer HBM is brokered by the lease ledger, not
+            // registered as a region: leases carry KV blocks, not
+            // training regions.
+            Tier::Peer(_) => bail!("peer tier is not a region home"),
         };
         let id = self.next_region;
         self.next_region += 1;
@@ -576,6 +593,7 @@ impl HierarchicalMemory {
                 self.reserve_cold(t, region.bytes, hw)?;
                 None
             }
+            Tier::Peer(_) => bail!("peer tier is not a region home"),
         };
         // Release the source.
         match region.tier {
@@ -594,6 +612,8 @@ impl HierarchicalMemory {
                     *u = u.saturating_sub(region.bytes);
                 }
             }
+            // Unreachable: `register`/`migrate` refuse Peer homes.
+            Tier::Peer(_) => {}
         }
         let r = self.regions.get_mut(&id).unwrap();
         r.tier = dst;
@@ -620,6 +640,8 @@ impl HierarchicalMemory {
                     *u = u.saturating_sub(region.bytes);
                 }
             }
+            // Unreachable: `register`/`migrate` refuse Peer homes.
+            Tier::Peer(_) => {}
         }
         Ok(())
     }
@@ -674,6 +696,7 @@ mod tests {
             device_capacity: 4 * GB,
             remote_capacity: 64 * GB,
             tiers: None,
+            peer: None,
         }
     }
 

@@ -547,8 +547,12 @@ pub struct PassReport {
     /// Round trips rehomed to a deeper tier (Store retargeted + a Promote
     /// emitted ahead of reuse) by the tier-placement decision pass.
     pub retiered: usize,
-    /// Prefetches deferred or split by SLO throttling.
+    /// Rewrites committed by SLO throttling (vetoes + spills + splits +
+    /// deferrals).
     pub throttled: usize,
+    /// Placement detours (deep/peer Store + Promote round trips) unwound
+    /// by SLO throttling — a subset of `throttled`.
+    pub vetoed: usize,
     /// Transfers split into chunked (partial-tensor) transfers by SLO
     /// throttling — a subset of `throttled`.
     pub chunked: usize,
@@ -856,8 +860,11 @@ fn verify_semantics(g: &Graph, order: &[OpId], reach: &Reach, diags: &mut Vec<Di
         .iter()
         .map(|t| (t.home != Tier::Device).then_some(t.home))
         .collect();
+    // Peer (harvested-HBM) copies get the same where-is-the-copy
+    // discipline as the cold tiers: a fetch from a peer the copy provably
+    // left (a revocation demoted it) is an error, not a conflation.
     let cold_involved = |src: Tier, at: Option<Tier>| {
-        src.is_cold() || at.is_some_and(|t| t.is_cold())
+        src.is_cold() || src.is_peer() || at.is_some_and(|t| t.is_cold() || t.is_peer())
     };
     for &o in order {
         let op = g.op(o);
@@ -1057,6 +1064,9 @@ pub struct CompileReport {
     pub retiered: usize,
     /// Prefetches deferred or split by SLO throttling (see `SloThrottle`).
     pub throttled: usize,
+    /// Placement detours unwound by SLO throttling (see
+    /// `SloThrottle::veto_promotions`).
+    pub vetoed: usize,
     /// Transfers split into chunked (partial-tensor) transfers.
     pub chunked: usize,
     /// Deferrable Store bytes spilled past the schedule by SLO throttling.
@@ -1388,6 +1398,7 @@ impl Compiler {
         let recomputed = per_pass.iter().map(|r| r.recomputed).sum();
         let retiered = per_pass.iter().map(|r| r.retiered).sum();
         let throttled = per_pass.iter().map(|r| r.throttled).sum();
+        let vetoed = per_pass.iter().map(|r| r.vetoed).sum();
         let chunked = per_pass.iter().map(|r| r.chunked).sum();
         let deferred_bytes = per_pass.iter().map(|r| r.deferred_bytes).sum();
         Ok(CompileReport {
@@ -1399,6 +1410,7 @@ impl Compiler {
             recomputed,
             retiered,
             throttled,
+            vetoed,
             chunked,
             deferred_bytes,
             per_pass,

@@ -7,9 +7,17 @@
 //! Guarantees": offload traffic must not push the serving/step latency past
 //! its budget, and transfer *timing* — not just placement — is a resource
 //! to allocate. This pass runs after exec-order on the session's pinned
-//! schedule and applies three rewrites, each speculated and validated by
+//! schedule and applies four rewrites, each speculated and validated by
 //! re-simulation under the session's assumed fabric contention:
 //!
+//! * **veto** — a pass-inserted placement detour (the
+//!   [`TierPlacement`](super::TierPlacement) shape: Store retargeted to a
+//!   cold or [`Tier::Peer`] tier plus a `Promote` back to the pool ahead
+//!   of the pool Prefetch) is *unwound* when the schedule blows the SLO:
+//!   the Store goes back to the pool and the `Promote` is removed. The
+//!   placement passes reason about hiding transfers under idle windows;
+//!   the throttle is the tail-budget authority, so a detour the budget
+//!   can no longer afford is vetoed before any traffic is shed.
 //! * **spill** — a Store of a [`deferrable`](crate::graph::TensorInfo::deferrable)
 //!   tensor whose transfer pushes the schedule past the SLO is shrunk to
 //!   the largest chunk that fits the budget (a `.keep` chunk view aliasing
@@ -61,8 +69,9 @@ pub struct SloThrottle {
     pub split_min_bytes: u64,
     /// Upper bound on chunks per split.
     pub max_chunks: usize,
-    /// Safety bound on committed rewrites (spills + splits + deferrals)
-    /// per compile — each commit re-simulates, so this bounds compile time.
+    /// Safety bound on committed rewrites (vetoes + spills + splits +
+    /// deferrals) per compile — each commit re-simulates, so this bounds
+    /// compile time.
     pub max_decisions: usize,
     /// Shed Store traffic of `deferrable` tensors past the schedule when
     /// the SLO demands it (the spill rewrite). Inert on graphs without
@@ -83,6 +92,12 @@ pub struct SloThrottle {
     /// off = the pre-incremental per-rewrite validation `benches/
     /// hot_path.rs` uses as its A/B baseline.
     pub windowed: bool,
+    /// Unwind pass-inserted deep/peer placement detours
+    /// ([`TierPlacement`](super::TierPlacement)'s Store→cold +
+    /// Promote→pool rewrite and its `Tier::Peer` analog) while the
+    /// schedule is over the SLO (the veto rewrite). Each veto must
+    /// strictly improve the re-simulated makespan and hold the peak cap.
+    pub veto_promotions: bool,
 }
 
 impl Default for SloThrottle {
@@ -94,6 +109,7 @@ impl Default for SloThrottle {
             spill_deferrable_stores: true,
             defer_prefetches: true,
             windowed: true,
+            veto_promotions: true,
         }
     }
 }
@@ -125,7 +141,47 @@ impl Pass for SloThrottle {
         let mut deferred = 0usize;
         let mut cur = base.clone();
 
-        // ---- phase 0: spill deferrable Store traffic past the SLO -------
+        // ---- phase 0: veto placement detours the budget can't afford ----
+        // A TierPlacement-shaped detour (Store to a cold or peer tier +
+        // Promote back to the pool ahead of the pool Prefetch) was
+        // committed on hiding grounds; under a blown SLO the throttle is
+        // the tail-budget authority and unwinds it — the Store retargets
+        // back to the pool and the Promote is removed. Removal renumbers
+        // op ids, so the pinned order is remapped through the removal map
+        // (splice semantics keep it a valid linear extension).
+        let mut vetoes = 0usize;
+        if self.veto_promotions {
+            let mut decided_veto: Vec<TensorId> = Vec::new();
+            while vetoes < self.max_decisions && cur.makespan_us > slo * (1.0 + 1e-12) {
+                let Some((t, st, pm)) = next_detour(g, &decided_veto) else { break };
+                decided_veto.push(t);
+                let mut trial = g.clone();
+                trial.retarget_transfer_tier(st, Tier::Remote);
+                let map = trial.remove_ops(&[pm]);
+                let torder: Vec<OpId> = order.iter().filter_map(|&o| map[o]).collect();
+                let sim = simulate(&trial, &torder, &chw);
+                if sim.makespan_us < cur.makespan_us * (1.0 - 1e-12)
+                    && sim.peak_device_bytes <= peak_cap
+                {
+                    let name = g.tensor(t).name.clone();
+                    rep.diagnostics.push(Diagnostic::info(
+                        self.name(),
+                        format!(
+                            "vetoed placement detour of '{name}': makespan {:.1} -> {:.1} us \
+                             (slo {slo:.1})",
+                            cur.makespan_us, sim.makespan_us
+                        ),
+                    ));
+                    *g = trial;
+                    order = torder;
+                    cur = sim;
+                    vetoes += 1;
+                }
+            }
+            rep.vetoed = vetoes;
+        }
+
+        // ---- phase 1: spill deferrable Store traffic past the SLO -------
         // Unlike the later phases this one *reduces* an over-SLO entry
         // makespan instead of accepting it: a writeback the caller marked
         // deferrable need not complete inside this schedule at all, so its
@@ -134,7 +190,7 @@ impl Pass for SloThrottle {
         let mut spills = 0usize;
         if self.spill_deferrable_stores {
             let mut decided_spill: Vec<TensorId> = Vec::new();
-            while spills + split_count + deferred < self.max_decisions
+            while vetoes + spills + split_count + deferred < self.max_decisions
                 && cur.makespan_us > slo * (1.0 + 1e-12)
             {
                 let Some((s, t)) = next_deferrable_store(g, &decided_spill) else { break };
@@ -164,7 +220,7 @@ impl Pass for SloThrottle {
         // spills have pulled the makespan as close to the SLO as they can).
         let budget = slo.max(cur.makespan_us);
 
-        // ---- phase 1: split oversized transfers into chunks -------------
+        // ---- phase 2: split oversized transfers into chunks -------------
         // Pool-resident prefetches arrive staggered; Store/Prefetch round
         // trips leave and return per chunk (partial-tensor residency).
         let mut decided: Vec<TensorId> = Vec::new();
@@ -177,8 +233,9 @@ impl Pass for SloThrottle {
             // each round — committed splits can expose further candidates
             // (over-sized chunks of a split prefetch).
             loop {
-                let remaining =
-                    self.max_decisions.saturating_sub(spills + split_count + deferred);
+                let remaining = self
+                    .max_decisions
+                    .saturating_sub(vetoes + spills + split_count + deferred);
                 if remaining == 0 {
                     break;
                 }
@@ -205,7 +262,7 @@ impl Pass for SloThrottle {
                 rep.chunked += committed;
             }
         } else {
-            while spills + split_count + deferred < self.max_decisions {
+            while vetoes + spills + split_count + deferred < self.max_decisions {
                 let Some(&(t, kind, k)) = self.split_candidates(g, &decided).first() else {
                     break;
                 };
@@ -242,7 +299,7 @@ impl Pass for SloThrottle {
             }
         }
 
-        // ---- phase 2: defer prefetches into the SLO slack ----------------
+        // ---- phase 3: defer prefetches into the SLO slack ----------------
         // Latest-consumer prefetches first: their windows close last, so
         // they have the most slack to spend. `cur` stays valid across
         // rejected speculations — only commits change the graph. In
@@ -255,7 +312,9 @@ impl Pass for SloThrottle {
         } else {
             None
         };
-        while self.defer_prefetches && spills + split_count + deferred < self.max_decisions {
+        while self.defer_prefetches
+            && vetoes + spills + split_count + deferred < self.max_decisions
+        {
             let mut committed = false;
             let prefetches: Vec<OpId> = order
                 .iter()
@@ -297,13 +356,13 @@ impl Pass for SloThrottle {
         }
 
         let final_sim = cur;
-        rep.throttled = spills + split_count + deferred;
+        rep.throttled = vetoes + spills + split_count + deferred;
         rep.diagnostics.push(Diagnostic::info(
             self.name(),
             format!(
-                "{spills} spill(s) ({} bytes), {split_count} split(s), {deferred} \
-                 deferral(s); makespan {:.1} us against a {budget:.1} us budget, peak {} \
-                 bytes (entry {})",
+                "{vetoes} veto(es), {spills} spill(s) ({} bytes), {split_count} split(s), \
+                 {deferred} deferral(s); makespan {:.1} us against a {budget:.1} us budget, \
+                 peak {} bytes (entry {})",
                 rep.deferred_bytes, final_sim.makespan_us, final_sim.peak_device_bytes, peak_cap
             ),
         ));
@@ -383,6 +442,50 @@ impl SloThrottle {
         }
         out
     }
+}
+
+/// The next vetoable placement detour on the live graph: a non-alias
+/// tensor not homed at the detour tier with exactly one Store to a cold
+/// or peer tier, exactly one Promote from that tier back to the pool,
+/// and exactly one pool Prefetch — the shape `TierPlacement` (and its
+/// peer analog) leaves behind. Returns `(tensor, store, promote)`; op
+/// ids are re-derived per call because committed vetoes renumber them.
+fn next_detour(g: &Graph, decided: &[TensorId]) -> Option<(TensorId, OpId, OpId)> {
+    for t in &g.tensors {
+        if t.alias_of.is_some() || decided.contains(&t.id) {
+            continue;
+        }
+        let mut stores = Vec::new();
+        let mut promotes = Vec::new();
+        let mut prefetches = Vec::new();
+        for op in &g.ops {
+            match op.kind {
+                OpKind::Store { tensor, dst } if tensor == t.id => stores.push((op.id, dst)),
+                OpKind::Promote { tensor, src, dst } if tensor == t.id => {
+                    promotes.push((op.id, src, dst))
+                }
+                OpKind::Prefetch { tensor, src } if tensor == t.id => {
+                    prefetches.push((op.id, src))
+                }
+                _ => {}
+            }
+        }
+        if stores.len() != 1 || promotes.len() != 1 || prefetches.len() != 1 {
+            continue;
+        }
+        let (st, st_dst) = stores[0];
+        let (pm, pm_src, pm_dst) = promotes[0];
+        let (_, pf_src) = prefetches[0];
+        if (st_dst.is_cold() || st_dst.is_peer())
+            && pm_src == st_dst
+            && pm_dst == Tier::Remote
+            && pf_src == Tier::Remote
+            && t.home != st_dst
+        {
+            return Some((t.id, st, pm));
+        }
+    }
+    None
 }
 
 /// Re-locate `t`'s cache ops on (a possibly already-rewritten) `g` and
@@ -1117,5 +1220,119 @@ mod tests {
             s.residency_byte_time(),
             sa.residency_byte_time()
         );
+    }
+
+    /// The detour shape hand-built on the peer edge: w round-trips
+    /// through a neighbor's HBM (Store → Peer, Promote Peer → pool, pool
+    /// Prefetch). Over a slow device↔device link the detour costs ~270 ms
+    /// of transfers where the direct pool round trip costs ~67 ms.
+    fn peer_detour_graph() -> Graph {
+        let mut b = GraphBuilder::new();
+        let w = b.tensor("w", 32 << 20, crate::graph::Tier::Device);
+        let out = b.tensor("out", 0, crate::graph::Tier::Device);
+        let p = b.compute("produce", 10e9, 0, vec![], vec![w]);
+        let st = b.store_to("store.w", w, crate::graph::Tier::Peer(1));
+        let pm =
+            b.promote("promote.w", w, crate::graph::Tier::Peer(1), crate::graph::Tier::Remote);
+        let pf = b.prefetch("fetch.w", w);
+        let c = b.compute("consume", 10e9, 0, vec![w], vec![out]);
+        b.dep(st, p);
+        b.dep(pm, st);
+        b.dep(pf, pm);
+        b.dep(c, pf);
+        b.build()
+    }
+
+    #[test]
+    fn over_budget_peer_detour_is_vetoed_back_to_the_pool() {
+        let phw = hw().with_peer_link(0.25, 10.0);
+        let mut a = peer_detour_graph();
+        let ra = Compiler::empty(phw.clone()).verify(true).compile(&mut a).unwrap();
+        let sa = simulate(&a, &ra.order, &phw);
+
+        // An SLO far under the detoured makespan but above the pool-only
+        // round trip: the veto must fire and land inside the budget.
+        let slo = 100_000.0;
+        assert!(sa.makespan_us > slo, "fixture detour must blow the SLO: {}", sa.makespan_us);
+        let mut g = peer_detour_graph();
+        let r = Compiler::empty(phw.clone())
+            .slo_us(slo)
+            .slo_throttle()
+            .verify(true)
+            .compile(&mut g)
+            .unwrap();
+        let s = simulate(&g, &r.order, &phw);
+
+        assert_eq!(r.vetoed, 1, "the peer detour must be vetoed");
+        assert!(r.throttled >= 1);
+        assert!(!g.ops.iter().any(|o| matches!(o.kind, OpKind::Promote { .. })));
+        assert!(g
+            .ops
+            .iter()
+            .any(|o| matches!(o.kind, OpKind::Store { dst: Tier::Remote, .. })));
+        assert!(s.makespan_us <= slo * (1.0 + 1e-9), "SLO missed: {}", s.makespan_us);
+        assert!(s.peak_device_bytes <= sa.peak_device_bytes);
+
+        // A generous SLO leaves the (affordable) detour alone.
+        let mut k = peer_detour_graph();
+        let rk = Compiler::empty(phw)
+            .slo_us(1e9)
+            .slo_throttle()
+            .verify(true)
+            .compile(&mut k)
+            .unwrap();
+        assert_eq!(rk.vetoed, 0);
+        assert!(k.ops.iter().any(|o| matches!(o.kind, OpKind::Promote { .. })));
+    }
+
+    #[test]
+    fn tier_placement_detours_are_vetoed_under_a_tight_slo() {
+        use crate::passes::TierPlacement;
+        use crate::sim::TierTopology;
+        let base = hw();
+        let hw3 = base.clone().with_tiers(TierTopology::three_tier(&base));
+        // hide_factor 10: placement optimistically rehomes round trips
+        // whose ~42 ms deep paths the ~24 ms windows cannot actually hide
+        // — the throttle is the tail-budget backstop.
+        let aggressive = TierPlacement { hide_factor: 10.0, min_bytes: 1 };
+
+        let mk = || GraphBuilder::fwd_bwd_chain(4, 8 << 20, 10e9, 24, 1e9);
+        let mut a = mk();
+        let ra = Compiler::new(hw3.clone())
+            .pass_before("exec-order", aggressive.clone())
+            .verify(true)
+            .compile(&mut a)
+            .unwrap();
+        assert!(ra.retiered >= 1, "fixture must rehome something");
+        let sa = simulate(&a, &ra.order, &hw3);
+
+        let mut p = mk();
+        let rp = Compiler::new(hw3.clone()).verify(true).compile(&mut p).unwrap();
+        let sp = simulate(&p, &rp.order, &hw3);
+        assert!(
+            sa.makespan_us > sp.makespan_us,
+            "detours must be exposed for this test: {} !> {}",
+            sa.makespan_us,
+            sp.makespan_us
+        );
+
+        let mut g = mk();
+        let r = Compiler::new(hw3)
+            .pass_before("exec-order", aggressive)
+            .slo_us(sp.makespan_us * 1.02)
+            .slo_throttle()
+            .verify(true)
+            .compile(&mut g)
+            .unwrap();
+        let s = simulate(&g, &r.order, &hw3);
+        assert!(r.vetoed >= 1, "no detour vetoed");
+        assert!(r.vetoed <= r.retiered);
+        assert!(
+            s.makespan_us < sa.makespan_us,
+            "veto must claw back makespan: {} !< {}",
+            s.makespan_us,
+            sa.makespan_us
+        );
+        assert!(s.peak_device_bytes <= sa.peak_device_bytes);
     }
 }

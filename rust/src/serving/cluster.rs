@@ -51,7 +51,7 @@
 use anyhow::Result;
 
 use crate::kvcache::PrefixIndex;
-use crate::memory::PoolHandle;
+use crate::memory::{LeaseLedger, PoolHandle};
 use crate::sim::Fabric;
 
 use super::engine::{EngineConfig, FabricPressure, SimServingEngine};
@@ -74,6 +74,32 @@ pub struct ClusterConfig {
     /// no completion feedback) instead of live-state online routing.
     /// Arrival times are still honoured — only the placement is blind.
     pub static_partition: bool,
+    /// Peer-HBM harvesting: idle replicas lend spare HBM as a revocable
+    /// middle tier between local HBM and the pool. `None` (the default)
+    /// reproduces the lease-free cluster bit-for-bit.
+    pub peer_harvest: Option<PeerHarvestConfig>,
+}
+
+/// Lender-side policy for the peer-HBM harvest protocol.
+#[derive(Debug, Clone, Copy)]
+pub struct PeerHarvestConfig {
+    /// Spare HBM each replica exposes for borrowing when idle (bytes).
+    pub spare_bytes: u64,
+    /// A replica stays open for new borrows while its outstanding token
+    /// work is at or below this.
+    pub lend_below_tokens: u64,
+    /// A lender whose outstanding work rises above this revokes: its
+    /// borrowed-out blocks demote to the pool (never dropped). Loads in
+    /// the band between the two thresholds close the lender to *new*
+    /// borrows without disturbing live leases (hysteresis).
+    pub revoke_above_tokens: u64,
+}
+
+impl Default for PeerHarvestConfig {
+    /// Lend only when fully idle; any assigned work revokes.
+    fn default() -> Self {
+        Self { spare_bytes: 0, lend_below_tokens: 0, revoke_above_tokens: 0 }
+    }
 }
 
 impl ClusterConfig {
@@ -86,6 +112,7 @@ impl ClusterConfig {
             route: RoutePolicy::LeastLoaded,
             fabric,
             static_partition: false,
+            peer_harvest: None,
         }
     }
 
@@ -101,6 +128,11 @@ impl ClusterConfig {
 
     pub fn with_static_partition(mut self, on: bool) -> Self {
         self.static_partition = on;
+        self
+    }
+
+    pub fn with_peer_harvest(mut self, ph: PeerHarvestConfig) -> Self {
+        self.peer_harvest = Some(ph);
         self
     }
 }
@@ -153,6 +185,18 @@ pub struct ClusterReport {
     /// Summed bytes fetched from tiers below the pool across replicas
     /// (demoted prefix blocks). 0 on untiered setups.
     pub cold_fetch_bytes: u64,
+    /// Summed bytes read from borrowed peer HBM across replicas — KV
+    /// traffic the harvested middle tier absorbed instead of the pool.
+    pub peer_fetch_bytes: u64,
+    /// Summed bytes written into borrowed peer HBM across replicas.
+    pub peer_store_bytes: u64,
+    /// High-water mark of Σ borrowed bytes across all lenders.
+    pub borrowed_bytes_peak: u64,
+    /// Lease revocation events (lender load spikes that found live
+    /// leases).
+    pub peer_revocations: u64,
+    /// Bytes revocations demoted from peer HBM into the pool.
+    pub peer_revoked_bytes: u64,
 }
 
 impl ClusterReport {
@@ -173,6 +217,8 @@ pub struct SimCluster {
     /// reported to the router.
     seen: Vec<usize>,
     dispatched: u64,
+    /// Shared peer-HBM lease broker; `Some` iff harvesting is configured.
+    lease: Option<LeaseLedger>,
 }
 
 impl SimCluster {
@@ -186,7 +232,7 @@ impl SimCluster {
         // One prefix index across all replicas: with the pool shared too,
         // a prefix prefilled anywhere is an admission hit everywhere.
         let index = PrefixIndex::new();
-        let engines: Vec<SimServingEngine> = (0..cfg.n_replicas)
+        let mut engines: Vec<SimServingEngine> = (0..cfg.n_replicas)
             .map(|_| {
                 SimServingEngine::with_pool_and_index(
                     cfg.engine.clone(),
@@ -195,9 +241,19 @@ impl SimCluster {
                 )
             })
             .collect();
+        // Peer harvesting: one shared lease ledger; every replica is both
+        // a registered lender (its spare HBM) and a potential borrower.
+        let lease = cfg.peer_harvest.map(|ph| {
+            let lease = LeaseLedger::new();
+            for (i, e) in engines.iter_mut().enumerate() {
+                lease.register_lender(i as u16, ph.spare_bytes);
+                e.set_peer_lease(lease.clone(), i as u16);
+            }
+            lease
+        });
         let router = Router::new(cfg.n_replicas, cfg.route);
         let seen = vec![0; cfg.n_replicas];
-        Self { cfg, engines, router, pool, seen, dispatched: 0 }
+        Self { cfg, engines, router, pool, seen, dispatched: 0, lease }
     }
 
     /// The shared remote pool (cloneable handle).
@@ -236,10 +292,12 @@ impl SimCluster {
     fn views(&self) -> Vec<ReplicaView> {
         self.engines
             .iter()
-            .map(|e| ReplicaView {
+            .enumerate()
+            .map(|(i, e)| ReplicaView {
                 outstanding_tokens: e.outstanding_tokens(),
                 kv_headroom_tokens: e.kv_headroom_tokens(),
                 pool_pressure: e.pool_pressure(),
+                lending_bytes: self.lease.as_ref().map_or(0, |l| l.lent(i as u16)),
                 now_us: e.now_us(),
             })
             .collect()
@@ -262,12 +320,53 @@ impl SimCluster {
             }
             let Some(i) = laggard else { return Ok(()) };
             let k = self.engines.iter().filter(|e| e.has_transfer_traffic()).count();
+            // The peer edge is contended separately, by the replicas with
+            // KV actually homed at peers in this window.
+            let peer_k = self.engines.iter().filter(|e| e.kv.peer_kv_bytes > 0).count();
+            let peer_slowdown = match (&self.lease, &self.cfg.engine.hw.peer) {
+                (Some(_), Some(link)) => self.cfg.fabric.slowdown(link.gbps, peer_k),
+                _ => 1.0,
+            };
             let pressure = FabricPressure {
                 d2r_slowdown: self.cfg.fabric.slowdown(self.cfg.engine.hw.d2r_gbps, k),
                 r2d_slowdown: self.cfg.fabric.slowdown(self.cfg.engine.hw.r2d_gbps, k),
+                peer_slowdown,
             };
+            self.broker_peer_leases(&pressure);
             self.engines[i].step(&pressure)?;
             self.feed_completions(i);
+        }
+    }
+
+    /// One brokering pass of the harvest protocol: open/close lenders by
+    /// their live load and revoke leases whose lender spiked. Revocation
+    /// is conservative — `begin_revoke` closes the lender and each
+    /// borrower demotes its borrowed blocks peer→pool (reserve-first,
+    /// exactly once); a full pool parks the blocks at the peer and a
+    /// later pass retries. No-op without a configured lease.
+    fn broker_peer_leases(&mut self, pressure: &FabricPressure) {
+        let Some(lease) = self.lease.clone() else { return };
+        let ph = self.cfg.peer_harvest.expect("lease implies harvest config");
+        for r in 0..self.engines.len() {
+            let load = self.engines[r].outstanding_tokens();
+            let id = r as u16;
+            if load > ph.revoke_above_tokens {
+                // First pass closes the lease and counts the revocation;
+                // later passes only retry demotions that failed on a full
+                // pool (is_open is already false, nothing double-counts).
+                if lease.is_open(id) {
+                    lease.begin_revoke(id);
+                }
+                if lease.lent(id) > 0 {
+                    for j in 0..self.engines.len() {
+                        if j != r {
+                            self.engines[j].revoke_peer(id, pressure);
+                        }
+                    }
+                }
+            } else {
+                lease.set_open(id, load <= ph.lend_below_tokens);
+            }
         }
     }
 
@@ -310,6 +409,8 @@ impl SimCluster {
         let flops_saved: f64 = per_replica.iter().map(|r| r.prefill_flops_saved).sum();
         let deduped: u64 = per_replica.iter().map(|r| r.pool_bytes_deduped).sum();
         let cold_fetch: u64 = per_replica.iter().map(|r| r.cold_fetch_bytes).sum();
+        let peer_fetch: u64 = per_replica.iter().map(|r| r.peer_fetch_bytes).sum();
+        let peer_store: u64 = per_replica.iter().map(|r| r.peer_store_bytes).sum();
         ClusterReport {
             dispatched: self.dispatched,
             completed,
@@ -339,6 +440,11 @@ impl SimCluster {
             prefill_flops_saved: flops_saved,
             pool_bytes_deduped: deduped,
             cold_fetch_bytes: cold_fetch,
+            peer_fetch_bytes: peer_fetch,
+            peer_store_bytes: peer_store,
+            borrowed_bytes_peak: self.lease.as_ref().map_or(0, |l| l.borrowed_peak()),
+            peer_revocations: self.lease.as_ref().map_or(0, |l| l.revocations()),
+            peer_revoked_bytes: self.lease.as_ref().map_or(0, |l| l.revoked_bytes()),
             per_replica,
         }
     }
@@ -514,6 +620,78 @@ mod tests {
         assert_eq!(report.prefix_hit_blocks, 16);
         assert_eq!(report.pool_bytes_deduped, 16 * block);
         assert!(report.prefill_flops_saved > 0.0);
+    }
+
+    /// End-to-end harvest protocol: a loaded replica borrows the idle
+    /// sibling's HBM, decode fetches ride the peer edge, and routing work
+    /// onto the lender revokes the lease — every borrowed byte demotes to
+    /// the pool, never dropped.
+    #[test]
+    fn peer_harvest_borrows_then_revokes_on_lender_load() {
+        let h = hw().with_peer_link(400.0, 5.0);
+        let engine = EngineConfig::hierarchical(h, small_model());
+        let mk = |id, t, p, g| Request {
+            id,
+            arrival_us: t,
+            prompt_tokens: p,
+            gen_tokens: g,
+            block_hashes: vec![],
+        };
+        // A keeps replica 0 busy long past B's arrival; B lands on the
+        // idle lender (replica 1) and triggers the revocation.
+        let wl = vec![mk(0, 0.0, 1024, 100), mk(1, 100_000.0, 512, 50)];
+        let report = SimCluster::new(
+            ClusterConfig::new(engine, 2)
+                .with_peer_harvest(PeerHarvestConfig {
+                    spare_bytes: GB,
+                    ..PeerHarvestConfig::default()
+                }),
+        )
+        .run(wl)
+        .unwrap();
+        assert_eq!(report.completed, 2);
+        assert_eq!(report.rejected, 0);
+        assert!(report.borrowed_bytes_peak > 0, "replica 0 must borrow: {report:?}");
+        assert!(report.peer_fetch_bytes > 0, "decode must fetch over the peer edge");
+        assert!(report.peer_revocations >= 1, "loading the lender must revoke");
+        assert!(report.peer_revoked_bytes > 0);
+        // Conservation: everything demoted landed in the pool ledger.
+        assert!(report.pool_peak_bytes <= report.pool_capacity_bytes);
+    }
+
+    /// Harvesting with zero spare capacity is the protocol's fixpoint:
+    /// all the wiring engages (lease registered, broker runs, router
+    /// sees lending bytes of 0) but no borrow can ever match, so the run
+    /// must reproduce the lease-free cluster exactly.
+    #[test]
+    fn zero_spare_harvest_is_bit_identical_to_disabled() {
+        let h = hw().with_peer_link(400.0, 5.0);
+        let wl = WorkloadConfig {
+            mean_interarrival_us: 30_000.0,
+            ..WorkloadConfig::short_sequence(12, 23)
+        }
+        .generate();
+        let off = SimCluster::new(ClusterConfig::new(
+            EngineConfig::hierarchical(h.clone(), small_model()),
+            2,
+        ))
+        .run(wl.clone())
+        .unwrap();
+        let on = SimCluster::new(
+            ClusterConfig::new(EngineConfig::hierarchical(h, small_model()), 2)
+                .with_peer_harvest(PeerHarvestConfig::default()),
+        )
+        .run(wl)
+        .unwrap();
+        assert_eq!(on.peer_fetch_bytes, 0);
+        assert_eq!(on.peer_store_bytes, 0);
+        assert_eq!(on.borrowed_bytes_peak, 0);
+        assert_eq!(on.peer_revocations, 0);
+        assert_eq!(on.total_time_us, off.total_time_us, "zero-spare must be a fixpoint");
+        assert_eq!(on.kv_transfer_bytes, off.kv_transfer_bytes);
+        assert_eq!(on.exposed_transfer_us, off.exposed_transfer_us);
+        assert_eq!(on.peak_device_bytes, off.peak_device_bytes);
+        assert_eq!(on.throughput_tok_per_s, off.throughput_tok_per_s);
     }
 
     /// The shared pool is a real constraint: one replica's residency can

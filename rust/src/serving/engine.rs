@@ -46,7 +46,7 @@ use anyhow::Result;
 
 use crate::graph::Tier;
 use crate::kvcache::{KvCacheManager, KvPolicy, NsaConfig, PrefixIndex};
-use crate::memory::{PoolHandle, TieredLedger};
+use crate::memory::{LeaseLedger, PoolHandle, TieredLedger};
 use crate::sim::HwConfig;
 
 use super::metrics::{stats, ServingReport};
@@ -169,11 +169,15 @@ pub struct FabricPressure {
     pub d2r_slowdown: f64,
     /// Multiplier (≥ 1.0) on the R2D bandwidth term.
     pub r2d_slowdown: f64,
+    /// Multiplier (≥ 1.0) on the device↔device peer edge — contention on
+    /// the harvested-HBM link, counted separately from the pool fabric.
+    pub peer_slowdown: f64,
 }
 
 impl FabricPressure {
     /// No contention: private, fully-provisioned link.
-    pub const NONE: Self = Self { d2r_slowdown: 1.0, r2d_slowdown: 1.0 };
+    pub const NONE: Self =
+        Self { d2r_slowdown: 1.0, r2d_slowdown: 1.0, peer_slowdown: 1.0 };
 }
 
 /// Stack order of a tier for canonical sorting (device first, then down
@@ -181,10 +185,12 @@ impl FabricPressure {
 fn tier_rank(t: Tier) -> u8 {
     match t {
         Tier::Device => 0,
-        Tier::Remote | Tier::Host => 1,
-        Tier::Dram => 2,
-        Tier::Cxl => 3,
-        Tier::Ssd => 4,
+        // Borrowed peer HBM sits between local HBM and the pool.
+        Tier::Peer(_) => 1,
+        Tier::Remote | Tier::Host => 2,
+        Tier::Dram => 3,
+        Tier::Cxl => 4,
+        Tier::Ssd => 5,
     }
 }
 
@@ -261,6 +267,15 @@ pub struct SimServingEngine {
     /// Bytes read from tiers *below* the pool (demoted prefix blocks the
     /// prefill and decode steps touched). 0 on untiered setups.
     cold_fetch_bytes: u64,
+    /// Bytes fetched from borrowed peer HBM (reads that would otherwise
+    /// have crossed the pool fabric — the peer-hit byte count).
+    peer_fetch_bytes: u64,
+    /// Bytes written back into borrowed peer HBM.
+    peer_store_bytes: u64,
+    /// Peak bytes of this engine's KV homed at peers at any instant.
+    peer_kv_bytes_peak: u64,
+    /// Bytes this engine demoted peer→pool when lenders revoked.
+    peer_revoked_bytes: u64,
 }
 
 impl SimServingEngine {
@@ -336,7 +351,45 @@ impl SimServingEngine {
             prefill_flops_saved: 0.0,
             pool_bytes_deduped: 0,
             cold_fetch_bytes: 0,
+            peer_fetch_bytes: 0,
+            peer_store_bytes: 0,
+            peer_kv_bytes_peak: 0,
+            peer_revoked_bytes: 0,
         }
+    }
+
+    /// Join the cluster's peer-HBM lease protocol: the KV manager may home
+    /// private blocks at idle sibling replicas through `lease`, and this
+    /// engine is addressed as `replica` (its own spare HBM is registered
+    /// by the orchestrator, not here). Without this call the engine never
+    /// touches peer HBM — the disabled configuration is bit-identical to
+    /// the lease-free engine.
+    pub fn set_peer_lease(&mut self, lease: LeaseLedger, replica: u16) {
+        self.kv.set_peer_lease(lease, replica);
+    }
+
+    /// Borrower-side valve: stop (or resume) placing *new* blocks at
+    /// peers. Existing leases are untouched.
+    pub fn set_peer_enabled(&mut self, on: bool) {
+        self.kv.set_peer_enabled(on);
+    }
+
+    /// A lender revoked: demote every block this engine borrowed from
+    /// `lender` into the pool. The copies move over the pool fabric's
+    /// write direction, exposed (revocation is not hidden under compute).
+    /// Returns the bytes demoted.
+    pub fn revoke_peer(&mut self, lender: u16, fabric: &FabricPressure) -> u64 {
+        let moved = self.kv.revoke_peer(lender);
+        if moved > 0 {
+            let t = self.cfg.hw.d2r_us_slowed(moved, fabric.d2r_slowdown);
+            self.clock_us += t;
+            self.exposed_transfer_us += t;
+            self.fabric_stall_us += t - self.cfg.hw.d2r_us(moved);
+            self.kv_transfer_bytes += moved;
+            self.peer_revoked_bytes += moved;
+            self.note_peak();
+        }
+        moved
     }
 
     /// Run the whole workload to completion and report (the pre-refactor
@@ -546,6 +599,7 @@ impl SimServingEngine {
             self.cfg.model.prefill_flops_per_token * admit.hit_tokens as f64;
         self.pool_bytes_deduped += admit.deduped_bytes;
         self.cold_fetch_bytes += admit.cold_fetch.iter().map(|&(_, b)| b).sum::<u64>();
+        self.peer_store_bytes += admit.cost.peer_store.iter().map(|&(_, b)| b).sum::<u64>();
 
         let t = if let Some(sc) = self.step_compiler.as_mut() {
             let spec = StepSpec {
@@ -557,6 +611,8 @@ impl SimServingEngine {
                 prefix_fetch_bytes: admit.prefix_fetch_bytes,
                 kv_writeback_bytes: admit.cost.d2r_bytes,
                 cold_fetch: admit.cold_fetch.clone(),
+                peer_fetch: admit.cost.peer_fetch.clone(),
+                peer_store: admit.cost.peer_store.clone(),
                 cpu_us: admit.cost.cpu_us,
                 defrag_us: admit.cost.defrag_us,
                 slo_us: None, // the SLO bounds decode steps, not prefill
@@ -593,9 +649,26 @@ impl SimServingEngine {
             let cold_us: f64 =
                 admit.cold_fetch.iter().map(|&(t, b)| self.cfg.hw.fetch_us(t, b)).sum();
             let cold_bytes: u64 = admit.cold_fetch.iter().map(|&(_, b)| b).sum();
-            let transfer_us = d2r_us.max(pf_us).max(cold_us);
-            let transfer_free_us = d2r_free_us.max(pf_free_us).max(cold_us);
-            if admit.cost.d2r_bytes + admit.prefix_fetch_bytes + cold_bytes > 0 {
+            // Harvested-HBM writebacks ride the peer edge, which overlaps
+            // the pool directions (a separate physical link).
+            let peer_us: f64 = admit
+                .cost
+                .peer_store
+                .iter()
+                .map(|&(l, b)| {
+                    self.cfg.hw.evict_us_slowed(Tier::Peer(l), b, fabric.peer_slowdown)
+                })
+                .sum();
+            let peer_free_us: f64 = admit
+                .cost
+                .peer_store
+                .iter()
+                .map(|&(l, b)| self.cfg.hw.evict_us(Tier::Peer(l), b))
+                .sum();
+            let peer_bytes: u64 = admit.cost.peer_store.iter().map(|&(_, b)| b).sum();
+            let transfer_us = d2r_us.max(pf_us).max(cold_us).max(peer_us);
+            let transfer_free_us = d2r_free_us.max(pf_free_us).max(cold_us).max(peer_free_us);
+            if admit.cost.d2r_bytes + admit.prefix_fetch_bytes + cold_bytes + peer_bytes > 0 {
                 if self.cfg.overlap_transfers {
                     let exposed = (transfer_us - compute_us).max(0.0);
                     let exposed_free = (transfer_free_us - compute_us).max(0.0);
@@ -610,7 +683,8 @@ impl SimServingEngine {
             }
             self.kv_transfer_bytes +=
                 admit.cost.d2r_bytes + admit.cost.r2d_bytes + admit.prefix_fetch_bytes
-                    + cold_bytes;
+                    + cold_bytes
+                    + peer_bytes;
             t
         };
 
@@ -647,9 +721,19 @@ impl SimServingEngine {
         let mut r2d = 0u64;
         let mut d2r = 0u64;
         let mut cold: Vec<(Tier, u64)> = Vec::new();
+        let mut peer_fetch: Vec<(u16, u64)> = Vec::new();
+        let mut peer_store: Vec<(u16, u64)> = Vec::new();
         let mut cpu_us = 0.0;
         let mut defrag_us = 0.0;
         let mut preempted: Vec<usize> = Vec::new();
+        fn merge_peer(acc: &mut Vec<(u16, u64)>, add: &[(u16, u64)]) {
+            for &(l, b) in add {
+                match acc.iter_mut().find(|(al, _)| *al == l) {
+                    Some(e) => e.1 += b,
+                    None => acc.push((l, b)),
+                }
+            }
+        }
         for (i, a) in self.active.iter_mut().enumerate() {
             match self.kv.decode_step(a.req.id, &self.cfg.hw) {
                 Ok(c) => {
@@ -661,6 +745,8 @@ impl SimServingEngine {
                             None => cold.push((t, b)),
                         }
                     }
+                    merge_peer(&mut peer_fetch, &c.peer_fetch);
+                    merge_peer(&mut peer_store, &c.peer_store);
                     cpu_us += c.cpu_us;
                     defrag_us += c.defrag_us;
                     a.remaining = a.remaining.saturating_sub(1);
@@ -676,6 +762,11 @@ impl SimServingEngine {
         // steps with the same cold-fetch shape.
         cold.sort_by_key(|&(t, _)| tier_rank(t));
         self.cold_fetch_bytes += cold.iter().map(|&(_, b)| b).sum::<u64>();
+        // Same canonicalisation for the per-lender peer traffic.
+        peer_fetch.sort_by_key(|&(l, _)| l);
+        peer_store.sort_by_key(|&(l, _)| l);
+        self.peer_fetch_bytes += peer_fetch.iter().map(|&(_, b)| b).sum::<u64>();
+        self.peer_store_bytes += peer_store.iter().map(|&(_, b)| b).sum::<u64>();
         for &i in preempted.iter().rev() {
             let a = self.active.swap_remove(i);
             let _ = self.kv.retire(a.req.id);
@@ -727,6 +818,8 @@ impl SimServingEngine {
                 prefix_fetch_bytes: 0,
                 kv_writeback_bytes: d2r + drain,
                 cold_fetch: cold.clone(),
+                peer_fetch: peer_fetch.clone(),
+                peer_store: peer_store.clone(),
                 cpu_us,
                 defrag_us,
                 slo_us: slo,
@@ -780,7 +873,26 @@ impl SimServingEngine {
 
         let cold_bytes: u64 = cold.iter().map(|&(_, b)| b).sum();
         let cold_us: f64 = cold.iter().map(|&(t, b)| self.cfg.hw.fetch_us(t, b)).sum();
-        self.kv_transfer_bytes += r2d + d2r + cold_bytes;
+        // Peer fetches and stores share one device↔device edge, so they
+        // serialise with each other but overlap the pool directions.
+        let peer_us: f64 = peer_fetch
+            .iter()
+            .map(|&(l, b)| self.cfg.hw.fetch_us_slowed(Tier::Peer(l), b, fabric.peer_slowdown))
+            .sum::<f64>()
+            + peer_store
+                .iter()
+                .map(|&(l, b)| {
+                    self.cfg.hw.evict_us_slowed(Tier::Peer(l), b, fabric.peer_slowdown)
+                })
+                .sum::<f64>();
+        let peer_free_us: f64 = peer_fetch
+            .iter()
+            .map(|&(l, b)| self.cfg.hw.fetch_us(Tier::Peer(l), b))
+            .sum::<f64>()
+            + peer_store.iter().map(|&(l, b)| self.cfg.hw.evict_us(Tier::Peer(l), b)).sum::<f64>();
+        let peer_bytes: u64 = peer_fetch.iter().map(|&(_, b)| b).sum::<u64>()
+            + peer_store.iter().map(|&(_, b)| b).sum::<u64>();
+        self.kv_transfer_bytes += r2d + d2r + cold_bytes + peer_bytes;
         self.defrag_stall_us += defrag_us;
 
         let transfer_us = self
@@ -788,9 +900,15 @@ impl SimServingEngine {
             .hw
             .r2d_us_slowed(r2d, fabric.r2d_slowdown)
             .max(self.cfg.hw.d2r_us_slowed(d2r, fabric.d2r_slowdown))
-            .max(cold_us);
-        let transfer_free_us =
-            self.cfg.hw.r2d_us(r2d).max(self.cfg.hw.d2r_us(d2r)).max(cold_us);
+            .max(cold_us)
+            .max(peer_us);
+        let transfer_free_us = self
+            .cfg
+            .hw
+            .r2d_us(r2d)
+            .max(self.cfg.hw.d2r_us(d2r))
+            .max(cold_us)
+            .max(peer_free_us);
         let step_us = if self.cfg.overlap_transfers {
             // Graph-driven: transfers hide under the step's compute.
             let exposed = (transfer_us - compute_us).max(0.0);
@@ -798,7 +916,7 @@ impl SimServingEngine {
             self.exposed_transfer_us += exposed;
             self.fabric_stall_us += exposed - exposed_free;
             compute_us + exposed + cpu_us + defrag_us
-        } else if r2d + d2r + cold_bytes > 0 {
+        } else if r2d + d2r + cold_bytes + peer_bytes > 0 {
             self.exposed_transfer_us += transfer_us;
             self.fabric_stall_us += transfer_us - transfer_free_us;
             compute_us + transfer_us + cpu_us + defrag_us
@@ -831,6 +949,8 @@ impl SimServingEngine {
                 prefix_fetch_bytes: 0,
                 kv_writeback_bytes: bytes,
                 cold_fetch: vec![],
+                peer_fetch: vec![],
+                peer_store: vec![],
                 cpu_us: 0.0,
                 defrag_us: 0.0,
                 slo_us: None,
@@ -857,6 +977,7 @@ impl SimServingEngine {
             + self.cfg.model.act_bytes
             + self.kv.device_kv_bytes();
         self.peak_device_bytes = self.peak_device_bytes.max(total);
+        self.peer_kv_bytes_peak = self.peer_kv_bytes_peak.max(self.kv.peer_kv_bytes);
         self.residency.push((self.clock_us, total));
     }
 
@@ -912,6 +1033,10 @@ impl SimServingEngine {
             prefill_flops_saved: self.prefill_flops_saved,
             pool_bytes_deduped: self.pool_bytes_deduped,
             cold_fetch_bytes: self.cold_fetch_bytes,
+            peer_fetch_bytes: self.peer_fetch_bytes,
+            peer_store_bytes: self.peer_store_bytes,
+            peer_kv_bytes_peak: self.peer_kv_bytes_peak,
+            peer_revoked_bytes: self.peer_revoked_bytes,
             residency: self.residency,
         }
     }
@@ -1346,7 +1471,8 @@ mod tests {
         for r in wl {
             eng.enqueue(r);
         }
-        let contended = FabricPressure { d2r_slowdown: 2.0, r2d_slowdown: 2.0 };
+        let contended =
+            FabricPressure { d2r_slowdown: 2.0, r2d_slowdown: 2.0, peer_slowdown: 1.0 };
         while eng.step(&contended).unwrap() {}
         let slow = eng.report();
         assert!(

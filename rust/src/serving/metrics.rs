@@ -89,6 +89,16 @@ pub struct ServingReport {
     /// Bytes fetched from tiers *below* the pool (demoted prefix blocks
     /// touched by prefill or decode). 0 on untiered setups.
     pub cold_fetch_bytes: u64,
+    /// Bytes read from borrowed peer HBM — KV traffic the harvested
+    /// middle tier served instead of the pool fabric (peer hits).
+    pub peer_fetch_bytes: u64,
+    /// Bytes written into borrowed peer HBM (admission writebacks and
+    /// decode-tail stores that skipped the pool).
+    pub peer_store_bytes: u64,
+    /// Peak bytes of this engine's KV homed at peers at any instant.
+    pub peer_kv_bytes_peak: u64,
+    /// Bytes this engine demoted peer→pool when lenders revoked.
+    pub peer_revoked_bytes: u64,
     /// Device-residency curve: (time us, device bytes) samples taken at
     /// every admission/decode boundary, non-decreasing in time.
     pub residency: Vec<(f64, u64)>,

@@ -59,6 +59,25 @@
 //! router keeps hot templates on their warm replica when load allows
 //! (prefix affinity). `ServingReport::prefix_hit_blocks`,
 //! `prefill_flops_saved` and `pool_bytes_deduped` quantify the win.
+//!
+//! # Peer-HBM harvesting
+//!
+//! With [`cluster::PeerHarvestConfig`] set, idle replicas *lend* spare
+//! HBM as a revocable middle tier between local HBM and the pool
+//! (brokered by [`crate::memory::LeaseLedger`], costed on the
+//! [`crate::sim::PeerLink`] device↔device edge). A loaded borrower homes
+//! its private KV blocks at `Tier::Peer(lender)`; the compiled step graph
+//! lowers their fetches and writebacks as first-class `Prefetch`/`Store`
+//! cache ops on that edge, visible to the verifier and TransferSan. The
+//! lender/borrower contract is: lenders open and close with their own
+//! live load (hysteresis between the two token thresholds); a lender
+//! load spike **revokes** — every borrowed block demotes to the pool,
+//! reserve-destination-first and exactly once, so conservation holds
+//! through revocation and nothing is ever dropped. The router avoids
+//! live lenders within a load bucket so leases survive when an
+//! equally-good placement exists. `ServingReport::peer_fetch_bytes` /
+//! `ClusterReport::borrowed_bytes_peak` / `peer_revocations` quantify
+//! the protocol.
 
 pub mod cluster;
 mod engine;
@@ -67,7 +86,7 @@ mod request;
 mod router;
 pub mod step_graph;
 
-pub use cluster::{ClusterConfig, ClusterReport, SimCluster};
+pub use cluster::{ClusterConfig, ClusterReport, PeerHarvestConfig, SimCluster};
 pub use engine::{EngineConfig, FabricPressure, ModelCost, SimServingEngine};
 pub use metrics::{stats, ServingReport, Stats};
 pub use request::{template_prefix_hashes, Request, RequestTiming, WorkloadConfig};

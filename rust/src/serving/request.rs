@@ -71,6 +71,16 @@ pub struct WorkloadConfig {
     /// templates stay in the pool while the long zipf tail cools into
     /// DRAM/CXL/SSD.
     pub prefix_zipf_s: f64,
+    /// Number of burst phases in the trace. The arrival timeline is cut
+    /// into `2 × burst_phases` equal request segments alternating
+    /// calm/burst; burst segments draw their inter-arrival gaps with the
+    /// mean shrunk by [`burst_factor`](Self::burst_factor). 0 = the
+    /// stationary Poisson process (legacy trace, bit-identical — the rng
+    /// draw stream is unchanged, only the exponential's mean parameter
+    /// moves).
+    pub burst_phases: usize,
+    /// Inter-arrival compression during a burst phase (≥ 1; 1 = no-op).
+    pub burst_factor: f64,
 }
 
 impl WorkloadConfig {
@@ -89,6 +99,8 @@ impl WorkloadConfig {
             prefix_tokens: 0,
             prefix_block_tokens: 64,
             prefix_zipf_s: 0.0,
+            burst_phases: 0,
+            burst_factor: 1.0,
         }
     }
 
@@ -107,6 +119,8 @@ impl WorkloadConfig {
             prefix_tokens: 0,
             prefix_block_tokens: 64,
             prefix_zipf_s: 0.0,
+            burst_phases: 0,
+            burst_factor: 1.0,
         }
     }
 
@@ -153,13 +167,54 @@ impl WorkloadConfig {
         }
     }
 
+    /// Skewed + bursty open-loop trace for the peer-harvest evaluation:
+    /// shared templates drawn with zipfian skew (prefix affinity
+    /// concentrates the hot templates on a few replicas) and arrivals
+    /// alternating calm and burst phases (`factor`× compressed gaps).
+    /// The load asymmetry this produces is what opens lender windows on
+    /// the cold replicas and spikes the hot ones into revocation.
+    pub fn skewed_bursty(
+        n: usize,
+        mean_interarrival_us: f64,
+        phases: usize,
+        factor: f64,
+        seed: u64,
+    ) -> Self {
+        Self {
+            mean_interarrival_us,
+            burst_phases: phases,
+            burst_factor: factor.max(1.0),
+            prefix_share_ratio: 0.8,
+            prefix_templates: 8,
+            prefix_tokens: 512,
+            prefix_block_tokens: 64,
+            prefix_zipf_s: 1.2,
+            ..Self::short_sequence(n, seed)
+        }
+    }
+
+    /// True iff request index `i` of `n` falls in a burst segment of the
+    /// alternating calm/burst timeline.
+    fn in_burst(&self, i: usize) -> bool {
+        if self.burst_phases == 0 || self.burst_factor <= 1.0 {
+            return false;
+        }
+        let seg = (self.n_requests / (2 * self.burst_phases)).max(1);
+        (i / seg) % 2 == 1
+    }
+
     pub fn generate(&self) -> Vec<Request> {
         let mut rng = Rng::new(self.seed);
         let mut t = 0.0f64;
         (0..self.n_requests)
             .map(|i| {
                 if self.mean_interarrival_us > 0.0 {
-                    t += rng.exponential(self.mean_interarrival_us);
+                    let mean = if self.in_burst(i) {
+                        self.mean_interarrival_us / self.burst_factor
+                    } else {
+                        self.mean_interarrival_us
+                    };
+                    t += rng.exponential(mean);
                 }
                 let mut prompt_tokens = if self.prompt_min == self.prompt_max {
                     self.prompt_min
@@ -388,5 +443,75 @@ mod tests {
         for w in reqs.windows(2) {
             assert!(w[1].arrival_us >= w[0].arrival_us);
         }
+    }
+
+    #[test]
+    fn zero_burst_phases_is_bit_identical_to_stationary_trace() {
+        let calm = WorkloadConfig {
+            mean_interarrival_us: 1000.0,
+            ..WorkloadConfig::short_sequence(80, 9)
+        };
+        let zeroed = WorkloadConfig { burst_phases: 0, burst_factor: 4.0, ..calm.clone() };
+        for (a, b) in calm.generate().iter().zip(&zeroed.generate()) {
+            assert_eq!(a.arrival_us, b.arrival_us);
+            assert_eq!(a.prompt_tokens, b.prompt_tokens);
+            assert_eq!(a.gen_tokens, b.gen_tokens);
+        }
+    }
+
+    #[test]
+    fn burst_phases_compress_arrivals_without_touching_shapes() {
+        let calm = WorkloadConfig {
+            mean_interarrival_us: 1000.0,
+            ..WorkloadConfig::short_sequence(120, 9)
+        };
+        let bursty = WorkloadConfig { burst_phases: 2, burst_factor: 8.0, ..calm.clone() };
+        let a = calm.generate();
+        let b = bursty.generate();
+        // Same rng stream: request shapes identical, only spacing moves.
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+            assert_eq!(x.gen_tokens, y.gen_tokens);
+        }
+        assert!(b.last().unwrap().arrival_us < a.last().unwrap().arrival_us);
+        // Segment layout: 120 requests / (2 phases × 2) = 30 per segment,
+        // odd segments bursting. Mean gap inside a burst segment must sit
+        // far below the calm segments' (8× compression vs ~1.9× sampling
+        // noise at n=30).
+        let mean_gap = |r: &[Request], lo: usize, hi: usize| {
+            (lo + 1..hi).map(|i| r[i].arrival_us - r[i - 1].arrival_us).sum::<f64>()
+                / (hi - lo - 1) as f64
+        };
+        let calm_gap = mean_gap(&b, 0, 30);
+        let burst_gap = mean_gap(&b, 30, 60);
+        assert!(
+            burst_gap < calm_gap / 2.0,
+            "burst gap {burst_gap} !< half the calm gap {calm_gap}"
+        );
+    }
+
+    #[test]
+    fn skewed_bursty_trace_is_skewed_and_bursty() {
+        let cfg = WorkloadConfig::skewed_bursty(240, 500.0, 2, 8.0, 77);
+        let reqs = cfg.generate();
+        assert_eq!(reqs.len(), 240);
+        // Zipf-skewed template reuse: template 0's chain dominates.
+        let hot = template_prefix_hashes(0, cfg.prefix_tokens, cfg.prefix_block_tokens);
+        let shared = reqs.iter().filter(|r| !r.block_hashes.is_empty()).count();
+        let on_hot = reqs.iter().filter(|r| r.block_hashes == hot).count();
+        assert!(shared > 150, "share count {shared} off the 0.8 ratio");
+        assert!(
+            on_hot as f64 > 2.0 * shared as f64 / cfg.prefix_templates as f64,
+            "hot template {} not dominant over uniform share {}",
+            on_hot,
+            shared / cfg.prefix_templates
+        );
+        // Bursts present: arrivals monotone but not stationary.
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_us >= w[0].arrival_us);
+        }
+        let stationary =
+            WorkloadConfig { burst_phases: 0, ..cfg.clone() }.generate();
+        assert!(reqs.last().unwrap().arrival_us < stationary.last().unwrap().arrival_us);
     }
 }

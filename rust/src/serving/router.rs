@@ -39,6 +39,12 @@ pub struct ReplicaView {
     pub kv_headroom_tokens: u64,
     /// Occupancy of the replica's (possibly shared) remote pool, [0, 1].
     pub pool_pressure: f64,
+    /// Bytes of HBM this replica is currently lending to peers under the
+    /// harvest protocol (0 when harvesting is off or it lends nothing).
+    /// Loading an active lender forces a revocation — every borrowed
+    /// block demotes to the pool — so the router steers work away from
+    /// live lenders when an equally-loaded non-lender exists.
+    pub lending_bytes: u64,
     /// The replica's local clock (us).
     pub now_us: f64,
 }
@@ -108,8 +114,12 @@ impl Router {
                 // Outstanding work dominates; a replica that lacks the KV
                 // headroom for this request (it would defrag or preempt
                 // to take it) is pushed to the back of the ranking. Among
-                // replicas in the same load bucket, the one that last
+                // replicas in the same load bucket, active lenders lose —
+                // loading one revokes its leases and demotes every
+                // borrowed block to the pool — then the one that last
                 // served this request's prefix template wins the tie.
+                // With harvesting off, `lending_bytes` is 0 everywhere
+                // and the ordering is exactly the pre-harvest chain.
                 let need = (req.prompt_tokens + req.gen_tokens) as u64;
                 let root = req.block_hashes.first().copied();
                 views
@@ -119,7 +129,13 @@ impl Router {
                         let starved = v.kv_headroom_tokens < need;
                         let miss =
                             root.map_or(false, |h| self.affinity.get(&h) != Some(i));
-                        (starved, v.outstanding_tokens / AFFINITY_SLACK, miss, v.outstanding_tokens)
+                        (
+                            starved,
+                            v.outstanding_tokens / AFFINITY_SLACK,
+                            v.lending_bytes > 0,
+                            miss,
+                            v.outstanding_tokens,
+                        )
                     })
                     .map(|(i, _)| i)
                     .unwrap()
@@ -243,6 +259,42 @@ mod tests {
         // lighter replica wins even against an affinity-free near-tie.
         assert_eq!(r.route_live(&req(3, 100, 50), &views(500, 0)), 1);
         assert_eq!(r.route_live(&req(4, 100, 50), &views(0, 500)), 0);
+    }
+
+    #[test]
+    fn route_live_avoids_active_lenders_within_a_bucket() {
+        let mut r = Router::new(2, RoutePolicy::LeastLoaded);
+        // Replica 0 is marginally lighter but lending HBM to a peer;
+        // loading it would revoke the lease. Same bucket → pick 1.
+        let views = vec![
+            ReplicaView {
+                outstanding_tokens: 10,
+                kv_headroom_tokens: 1 << 30,
+                lending_bytes: 4 << 20,
+                ..Default::default()
+            },
+            ReplicaView {
+                outstanding_tokens: 20,
+                kv_headroom_tokens: 1 << 30,
+                ..Default::default()
+            },
+        ];
+        assert_eq!(r.route_live(&req(0, 100, 50), &views), 1);
+        // A full bucket of extra load overrides lender avoidance.
+        let views2 = vec![
+            ReplicaView {
+                outstanding_tokens: 10,
+                kv_headroom_tokens: 1 << 30,
+                lending_bytes: 4 << 20,
+                ..Default::default()
+            },
+            ReplicaView {
+                outstanding_tokens: 10 + AFFINITY_SLACK,
+                kv_headroom_tokens: 1 << 30,
+                ..Default::default()
+            },
+        ];
+        assert_eq!(r.route_live(&req(1, 100, 50), &views2), 0);
     }
 
     #[test]

@@ -88,6 +88,16 @@ pub struct StepSpec {
     /// `src` is the cold tier, so the simulator charges the full
     /// multi-hop fabric path and TransferSan can prove the read sound.
     pub cold_fetch: Vec<(Tier, u64)>,
+    /// KV bytes the step fetches from borrowed peer HBM, one entry per
+    /// lender replica. Lowered as `Prefetch { src: Tier::Peer(r) }`, so
+    /// the simulator costs the device↔device edge and TransferSan's
+    /// `peer::revoked_read` lint guards the read. Empty without a lease.
+    pub peer_fetch: Vec<(u16, u64)>,
+    /// KV bytes the step persists *to* borrowed peer HBM (peer-homed
+    /// tail writebacks), per lender. Lowered as
+    /// `Store { dst: Tier::Peer(r) }`; never deferrable — the peer edge
+    /// is the fast path, deferring it would be backwards.
+    pub peer_store: Vec<(u16, u64)>,
     /// Host-side sparse-block processing (us).
     pub cpu_us: f64,
     /// Allocator defragmentation stall (us).
@@ -113,11 +123,14 @@ pub struct StepKey {
     prefix_bucket: u64,
     /// Per-cold-tier fetch bytes (block-granular; empty on 2-tier).
     cold_bucket: Vec<(Tier, u64)>,
+    /// Per-lender peer fetch/store bytes (block-granular; empty without
+    /// a lease).
+    peer_bucket: (Vec<(u16, u64)>, Vec<(u16, u64)>),
     flops_bits: u64,
     compute_bytes: u64,
     host_us_bits: u64,
     slo_bits: u64,
-    fabric_bits: (u64, u64),
+    fabric_bits: (u64, u64, u64),
 }
 
 impl StepKey {
@@ -128,11 +141,16 @@ impl StepKey {
             kv_bytes_bucket: (spec.kv_fetch_bytes, spec.kv_writeback_bytes),
             prefix_bucket: spec.prefix_fetch_bytes,
             cold_bucket: spec.cold_fetch.clone(),
+            peer_bucket: (spec.peer_fetch.clone(), spec.peer_store.clone()),
             flops_bits: spec.compute_flops.to_bits(),
             compute_bytes: spec.compute_bytes,
             host_us_bits: (spec.cpu_us + spec.defrag_us).to_bits(),
             slo_bits: spec.slo_us.map(f64::to_bits).unwrap_or(u64::MAX),
-            fabric_bits: (fabric.d2r_slowdown.to_bits(), fabric.r2d_slowdown.to_bits()),
+            fabric_bits: (
+                fabric.d2r_slowdown.to_bits(),
+                fabric.r2d_slowdown.to_bits(),
+                fabric.peer_slowdown.to_bits(),
+            ),
         }
     }
 }
@@ -230,10 +248,15 @@ impl StepCompiler {
     ) -> Result<CompiledStep, CompileError> {
         // Fold the cluster's per-window fabric pressure into the session
         // hardware, per direction (the compile-time view of contention).
-        let contended = fabric.d2r_slowdown > 1.0 || fabric.r2d_slowdown > 1.0;
+        let contended = fabric.d2r_slowdown > 1.0
+            || fabric.r2d_slowdown > 1.0
+            || fabric.peer_slowdown > 1.0;
         let mut chw = self.hw.clone();
         chw.d2r_gbps /= fabric.d2r_slowdown.max(1.0);
         chw.r2d_gbps /= fabric.r2d_slowdown.max(1.0);
+        if let Some(p) = &mut chw.peer {
+            p.gbps /= fabric.peer_slowdown.max(1.0);
+        }
 
         let mut g = lower(spec, self.overlap);
         // The serving throttle is spill-only: no prefetch deferral (decode
@@ -275,8 +298,10 @@ impl StepCompiler {
             exposed_free_us: exposed_free,
             moved_r2d: spec.kv_fetch_bytes
                 + spec.prefix_fetch_bytes
-                + spec.cold_fetch.iter().map(|&(_, b)| b).sum::<u64>(),
-            moved_d2r: spec.kv_writeback_bytes - report.deferred_bytes,
+                + spec.cold_fetch.iter().map(|&(_, b)| b).sum::<u64>()
+                + spec.peer_fetch.iter().map(|&(_, b)| b).sum::<u64>(),
+            moved_d2r: spec.kv_writeback_bytes - report.deferred_bytes
+                + spec.peer_store.iter().map(|&(_, b)| b).sum::<u64>(),
             deferred_d2r: report.deferred_bytes,
             throttled: report.throttled,
             chunk_splits: report.chunked,
@@ -363,6 +388,40 @@ fn lower(spec: &StepSpec, overlap: bool) -> Graph {
         ));
     }
 
+    // Peer-edge traffic: borrowed blocks fetched from (and persisted to)
+    // a lender replica's HBM. Tensors are home at the `Peer` tier so the
+    // verifier, TransferSan's `peer::revoked_read` lint, and the
+    // simulator all see the device↔device edge as a first-class source.
+    let mut peer_tensors = Vec::new();
+    let mut peer_pf = Vec::new();
+    for (i, &(lender, bytes)) in spec.peer_fetch.iter().enumerate() {
+        if bytes == 0 {
+            continue;
+        }
+        let tier = Tier::Peer(lender);
+        let t = g.add_tensor(format!("kv.peer.{i}"), bytes, tier);
+        peer_tensors.push(t);
+        peer_pf.push(g.add_op(
+            format!("prefetch.kv.peer.{i}"),
+            OpKind::Prefetch { tensor: t, src: tier },
+            vec![t],
+            vec![],
+        ));
+    }
+    let mut peer_st = Vec::new();
+    for (i, &(lender, bytes)) in spec.peer_store.iter().enumerate() {
+        if bytes == 0 {
+            continue;
+        }
+        let t = g.add_tensor(format!("kv.peerwb.{i}"), bytes, Tier::Device);
+        peer_st.push(g.add_op(
+            format!("store.kv.peerwb.{i}"),
+            OpKind::Store { tensor: t, dst: Tier::Peer(lender) },
+            vec![t],
+            vec![],
+        ));
+    }
+
     let pf = fetch.map(|t| g.add_op("prefetch.kv.fetch", OpKind::prefetch(t), vec![t], vec![]));
     let st = wb.map(|t| g.add_op("store.kv.writeback", OpKind::store(t), vec![t], vec![]));
 
@@ -384,6 +443,8 @@ fn lower(spec: &StepSpec, overlap: bool) -> Graph {
                 .flatten()
                 .chain(prefix_pf.iter().copied())
                 .chain(cold_pf.iter().copied())
+                .chain(peer_pf.iter().copied())
+                .chain(peer_st.iter().copied())
             {
                 g.add_control_dep(c, dep);
             }
@@ -392,15 +453,21 @@ fn lower(spec: &StepSpec, overlap: bool) -> Graph {
     });
 
     let host_us = spec.cpu_us + spec.defrag_us;
-    if host_us > 0.0 || fetch.is_some() || !prefix_tensors.is_empty() || !cold_tensors.is_empty() {
+    if host_us > 0.0
+        || fetch.is_some()
+        || !prefix_tensors.is_empty()
+        || !cold_tensors.is_empty()
+        || !peer_tensors.is_empty()
+    {
         // The host tail consumes the fetched blocks (sparse gather over
-        // the touched set, prefix and cold-tier blocks included) and runs
-        // after everything else in the step — CPU sparse-block processing
-        // serialises (§7.3.3).
+        // the touched set, prefix, cold-tier and peer blocks included)
+        // and runs after everything else in the step — CPU sparse-block
+        // processing serialises (§7.3.3).
         let inputs: Vec<_> = fetch
             .into_iter()
             .chain(prefix_tensors.iter().copied())
             .chain(cold_tensors.iter().copied())
+            .chain(peer_tensors.iter().copied())
             .collect();
         let h = g.add_op("step.host", OpKind::HostWork { us: host_us }, inputs, vec![]);
         for dep in [compute, pf, st]
@@ -408,6 +475,8 @@ fn lower(spec: &StepSpec, overlap: bool) -> Graph {
             .flatten()
             .chain(prefix_pf.iter().copied())
             .chain(cold_pf.iter().copied())
+            .chain(peer_pf.iter().copied())
+            .chain(peer_st.iter().copied())
         {
             g.add_control_dep(h, dep);
         }
@@ -434,6 +503,8 @@ mod tests {
             prefix_fetch_bytes: 0,
             kv_writeback_bytes: wb_mb * MB,
             cold_fetch: vec![],
+            peer_fetch: vec![],
+            peer_store: vec![],
             cpu_us: 5.0,
             defrag_us: 0.0,
             slo_us: slo,
@@ -486,7 +557,7 @@ mod tests {
         let slow = sc
             .compile(
                 &decode_spec(8, None),
-                &FabricPressure { d2r_slowdown: 2.0, r2d_slowdown: 2.0 },
+                &FabricPressure { d2r_slowdown: 2.0, r2d_slowdown: 2.0, peer_slowdown: 1.0 },
             )
             .unwrap();
         assert_eq!(sc.misses, 2, "pressure must key separately");
@@ -507,6 +578,8 @@ mod tests {
             prefix_fetch_bytes: 0,
             kv_writeback_bytes: 4 * MB,
             cold_fetch: vec![],
+            peer_fetch: vec![],
+            peer_store: vec![],
             cpu_us: 0.0,
             defrag_us: 0.0,
             slo_us: None,
@@ -528,6 +601,8 @@ mod tests {
             prefix_fetch_bytes: prefix_bytes,
             kv_writeback_bytes: 0,
             cold_fetch: vec![],
+            peer_fetch: vec![],
+            peer_store: vec![],
             cpu_us: 0.0,
             defrag_us: 0.0,
             slo_us: None,
@@ -631,6 +706,8 @@ mod tests {
                 prefix_fetch_bytes: 0,
                 kv_writeback_bytes: 4 * MB,
                 cold_fetch: vec![],
+            peer_fetch: vec![],
+            peer_store: vec![],
                 cpu_us: 0.0,
                 defrag_us: 0.0,
                 slo_us: None,

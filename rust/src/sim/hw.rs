@@ -51,6 +51,23 @@ pub struct HwConfig {
     /// Optional N-level tier stack below the device. `None` means the
     /// legacy two-home model (device + pool) with exactly the costs above.
     pub tiers: Option<TierTopology>,
+    /// Optional device↔device fabric edge for harvested peer-HBM homes
+    /// ([`Tier::Peer`]). `None` means no peer tier exists: peer transfers
+    /// conservatively fall back to the pool-link cost, and nothing in the
+    /// two-home or N-tier cost model changes — the peer-disabled fixpoint.
+    pub peer: Option<PeerLink>,
+}
+
+/// The device↔device edge peer-HBM harvesting rides: a sibling replica's
+/// spare HBM reached over the SuperNode's direct device fabric, bypassing
+/// the pool hop. Typically higher bandwidth and lower latency than the
+/// device↔pool link — that gap is the whole point of borrowing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PeerLink {
+    /// Device↔device bandwidth (GB/s), symmetric.
+    pub gbps: f64,
+    /// One-way latency per transfer (us).
+    pub latency_us: f64,
 }
 
 pub const GB: u64 = 1024 * 1024 * 1024;
@@ -74,6 +91,7 @@ impl HwConfig {
             device_capacity: 96 * GB,
             remote_capacity: 1024 * GB,
             tiers: None,
+            peer: None,
         }
     }
 
@@ -95,6 +113,7 @@ impl HwConfig {
             device_capacity: 1 << 30,
             remote_capacity: 1 << 40,
             tiers: None,
+            peer: None,
         }
     }
 
@@ -157,6 +176,25 @@ impl HwConfig {
         self
     }
 
+    /// Install a device↔device peer edge for harvested peer-HBM homes.
+    pub fn with_peer_link(mut self, gbps: f64, latency_us: f64) -> Self {
+        self.peer = Some(PeerLink { gbps, latency_us });
+        self
+    }
+
+    /// Duration of a transfer over the peer edge (us), with a contention
+    /// slowdown on the bandwidth term only. Without a configured
+    /// [`PeerLink`] this conservatively degrades to the pool-link cost
+    /// (`up` selects the r2d vs d2r expression), so a `Tier::Peer` op in
+    /// a peer-less config never costs *less* than the pool round trip.
+    fn peer_us_slowed(&self, bytes: u64, slowdown: f64, up: bool) -> f64 {
+        match &self.peer {
+            Some(link) => link.latency_us + slowdown * (bytes as f64 / (link.gbps * 1e9) * 1e6),
+            None if up => self.r2d_us_slowed(bytes, slowdown),
+            None => self.d2r_us_slowed(bytes, slowdown),
+        }
+    }
+
     /// Duration of a `src`-tier → Device transfer (a tiered `Prefetch`).
     /// Falls back to the legacy [`r2d_us`](Self::r2d_us) expression —
     /// bit-for-bit — when no topology is installed or `src` is one of the
@@ -169,6 +207,9 @@ impl HwConfig {
     /// applied to the bandwidth term only (per-hop latency never
     /// stretches).
     pub fn fetch_us_slowed(&self, src: Tier, bytes: u64, slowdown: f64) -> f64 {
+        if src.is_peer() {
+            return self.peer_us_slowed(bytes, slowdown, true);
+        }
         if let Some(topo) = &self.tiers {
             if let Some(i) = topo.index_of(src) {
                 if i > 0 {
@@ -186,6 +227,9 @@ impl HwConfig {
 
     /// [`evict_us`](Self::evict_us) with a fabric-contention slowdown.
     pub fn evict_us_slowed(&self, dst: Tier, bytes: u64, slowdown: f64) -> f64 {
+        if dst.is_peer() {
+            return self.peer_us_slowed(bytes, slowdown, false);
+        }
         if let Some(topo) = &self.tiers {
             if let Some(i) = topo.index_of(dst) {
                 if i > 0 {
@@ -201,6 +245,11 @@ impl HwConfig {
     /// promotes — this degrades to the pool-link cost as a conservative
     /// stand-in rather than panicking.
     pub fn promote_us(&self, src: Tier, dst: Tier, bytes: u64) -> f64 {
+        if src.is_peer() || dst.is_peer() {
+            // Revocation demotions (Peer → pool) and lease installs
+            // (pool → Peer) are bottlenecked on the peer edge.
+            return self.peer_us_slowed(bytes, 1.0, src.is_peer());
+        }
         if let Some(topo) = &self.tiers {
             if let (Some(i), Some(j)) = (topo.index_of(src), topo.index_of(dst)) {
                 if i != j {

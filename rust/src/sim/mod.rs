@@ -34,5 +34,5 @@ mod hw;
 mod window;
 
 pub use engine::{duration_us, simulate, stream_of, Interval, SimResult, Stream};
-pub use hw::{Fabric, HwConfig, TierLink, TierTopology, GB, MB};
+pub use hw::{Fabric, HwConfig, PeerLink, TierLink, TierTopology, GB, MB};
 pub use window::SimTrace;

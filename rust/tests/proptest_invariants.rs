@@ -57,10 +57,18 @@
 //!     DAGs, compiling with `tiers = two_tier(hw)` and the TierPlacement
 //!     pass enabled produces a bit-identical schedule (order, op kinds,
 //!     simulated makespan/peak/bytes) to the legacy no-topology compile.
+//!  P18 The lease ledger conserves harvested bytes: under random
+//!     borrow/release/revoke/demote interleavings across several lenders
+//!     and a capacity-limited pool, every lender's lent bytes match the
+//!     reference model, `total_lent + revoked_bytes` always equals
+//!     `borrowed − released` (no byte minted or dropped), every revoked
+//!     byte lands in the pool exactly once (`pool.used == revoked_bytes`),
+//!     failed demotions change nothing, and no lease ever exceeds its
+//!     lender's registered spare capacity.
 
 use hyperoffload::graph::{Graph, GraphBuilder, OpKind, Tier};
 use hyperoffload::kvcache::{KvCacheManager, KvPolicy, NsaConfig, PrefixIndex};
-use hyperoffload::memory::{DeviceAllocator, PoolHandle, SharedAcquire, TieredLedger};
+use hyperoffload::memory::{DeviceAllocator, LeaseLedger, PoolHandle, SharedAcquire, TieredLedger};
 use hyperoffload::passes::{
     refine, AnalysisCache, CompileError, Compiler, ExecOrderConfig, LifetimeAnalysis,
     OffloadPolicy, SloThrottle,
@@ -86,6 +94,7 @@ fn hw(rng: &mut Rng) -> HwConfig {
         device_capacity: 1 << 36,
         remote_capacity: 1 << 42,
         tiers: None,
+        peer: None,
     }
 }
 
@@ -277,6 +286,9 @@ fn p7_cluster_conserves_requests_pool_and_time() {
             prefix_templates: 0,
             prefix_tokens: 0,
             prefix_block_tokens: 64,
+            prefix_zipf_s: 0.0,
+            burst_phases: 0,
+            burst_factor: 1.0,
         }
         .generate();
         let n_requests = wl.len() as u64;
@@ -1128,5 +1140,172 @@ fn p17_two_tier_topology_bit_identical_to_legacy_compiles() {
             s2.exposed_comm_us.to_bits(),
             "seed {seed}: exposed time not bit-identical"
         );
+    }
+}
+
+#[test]
+fn p18_lease_ledger_conserves_harvested_bytes_under_revocation() {
+    use std::collections::HashMap;
+
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed + 19_000);
+        let n_lenders = rng.usize(2, 6) as u16;
+        let lease = LeaseLedger::new();
+        // A pool small enough that demotions genuinely fail sometimes
+        // (the park-at-peer retry path), large enough that most land.
+        let pool = PoolHandle::new(rng.gen_range(64, 512) * 1024);
+        let mut cap: HashMap<u16, u64> = HashMap::new();
+        for r in 0..n_lenders {
+            let c = rng.gen_range(32, 256) * 1024;
+            lease.register_lender(r, c);
+            cap.insert(r, c);
+        }
+
+        // Reference model.
+        let mut lent: HashMap<u16, u64> = (0..n_lenders).map(|r| (r, 0)).collect();
+        let mut borrowed = 0u64; // Σ bytes ever handed out on lease
+        let mut released = 0u64; // Σ bytes returned by retire/preempt
+        let mut demoted = 0u64; // Σ bytes revocation moved into the pool
+        let mut revocations = 0u64;
+
+        for _ in 0..300 {
+            match rng.usize(0, 10) {
+                0..=3 => {
+                    // Anonymous borrow (admission picks any open lender).
+                    let bytes = rng.gen_range(1, 48 * 1024);
+                    let before = lease.total_lent();
+                    match lease.try_borrow(u16::MAX, bytes) {
+                        Some(l) => {
+                            *lent.get_mut(&l).unwrap() += bytes;
+                            borrowed += bytes;
+                            assert!(
+                                lent[&l] <= cap[&l],
+                                "seed {seed}: lease overdrew lender {l}'s spare capacity"
+                            );
+                        }
+                        None => {
+                            assert_eq!(
+                                lease.total_lent(),
+                                before,
+                                "seed {seed}: failed borrow moved bytes"
+                            );
+                            for r in 0..n_lenders {
+                                assert!(
+                                    lease.headroom(r) < bytes,
+                                    "seed {seed}: lender {r} had room yet the borrow failed"
+                                );
+                            }
+                        }
+                    }
+                }
+                4 => {
+                    // Growth borrow against a specific lender.
+                    let r = rng.gen_range(0, n_lenders as u64) as u16;
+                    let bytes = rng.gen_range(1, 48 * 1024);
+                    let had_room = lease.is_open(r) && cap[&r] - lent[&r] >= bytes;
+                    let ok = lease.borrow_from(r, bytes);
+                    assert_eq!(ok, had_room, "seed {seed}: borrow_from disagreed with the model");
+                    if ok {
+                        *lent.get_mut(&r).unwrap() += bytes;
+                        borrowed += bytes;
+                    }
+                }
+                5 => {
+                    // Lender load eases or tightens: toggle openness.
+                    let r = rng.gen_range(0, n_lenders as u64) as u16;
+                    lease.set_open(r, rng.next_f64() < 0.7);
+                }
+                6 => {
+                    // Borrower retires or is preempted: bytes come home
+                    // without touching the pool.
+                    let r = rng.gen_range(0, n_lenders as u64) as u16;
+                    if lent[&r] > 0 {
+                        let bytes = rng.gen_range(1, lent[&r] + 1);
+                        lease.release(r, bytes);
+                        *lent.get_mut(&r).unwrap() -= bytes;
+                        released += bytes;
+                    }
+                }
+                _ => {
+                    // Load spike: revoke, then sweep the lease to the pool
+                    // in random chunks until done or the pool fills.
+                    let r = rng.gen_range(0, n_lenders as u64) as u16;
+                    let out = lease.begin_revoke(r);
+                    assert_eq!(out, lent[&r], "seed {seed}: revoke saw stale lent bytes");
+                    assert!(!lease.is_open(r), "seed {seed}: revoked lender still open");
+                    if out > 0 {
+                        revocations += 1;
+                    }
+                    let mut remaining = out;
+                    while remaining > 0 {
+                        let chunk = rng.gen_range(1, remaining + 1);
+                        let pool_before = pool.used();
+                        if lease.demote(r, chunk, &pool) {
+                            *lent.get_mut(&r).unwrap() -= chunk;
+                            demoted += chunk;
+                            remaining -= chunk;
+                            assert_eq!(
+                                pool.used(),
+                                pool_before + chunk,
+                                "seed {seed}: demoted bytes missed the pool"
+                            );
+                        } else {
+                            // Full pool: the chunk stays parked on lease.
+                            assert_eq!(
+                                pool.used(),
+                                pool_before,
+                                "seed {seed}: failed demote leaked"
+                            );
+                            assert_eq!(
+                                lease.lent(r),
+                                lent[&r],
+                                "seed {seed}: failed demote retired bytes"
+                            );
+                            break;
+                        }
+                    }
+                }
+            }
+
+            // The invariants, after every operation.
+            for r in 0..n_lenders {
+                assert_eq!(lease.lent(r), lent[&r], "seed {seed}: lender {r} diverged from model");
+                assert!(lent[&r] <= cap[&r], "seed {seed}: model overdrew lender {r}");
+            }
+            let total: u64 = lent.values().sum();
+            assert_eq!(lease.total_lent(), total, "seed {seed}: total lent diverged");
+            assert_eq!(
+                total + demoted,
+                borrowed - released,
+                "seed {seed}: bytes minted or dropped (lent {total} + demoted {demoted} \
+                 != borrowed {borrowed} - released {released})"
+            );
+            assert_eq!(lease.revoked_bytes(), demoted, "seed {seed}: revoked-byte counter drifted");
+            assert_eq!(
+                pool.used(),
+                demoted,
+                "seed {seed}: pool holds a byte revocation never sent"
+            );
+            assert_eq!(lease.revocations(), revocations, "seed {seed}: revocation count drifted");
+            assert!(lease.borrowed_peak() >= total, "seed {seed}: peak below a live total");
+        }
+
+        // Drain: every lease comes home one way or the other, and the
+        // pool ends holding exactly the revoked bytes — each moved once.
+        for r in 0..n_lenders {
+            if lent[&r] > 0 {
+                lease.release(r, lent[&r]);
+                released += lent[&r];
+                *lent.get_mut(&r).unwrap() = 0;
+            }
+            // A demote against an empty lease must be a clean no-op, not
+            // a double-free into the pool.
+            let pool_before = pool.used();
+            assert!(!lease.demote(r, 1, &pool), "seed {seed}: empty lease demoted");
+            assert_eq!(pool.used(), pool_before, "seed {seed}: double-free into the pool");
+        }
+        assert_eq!(lease.total_lent(), 0, "seed {seed}: drain left bytes on lease");
+        assert_eq!(demoted, borrowed - released, "seed {seed}: drain broke conservation");
+        assert_eq!(pool.used(), demoted, "seed {seed}: pool total wrong after drain");
     }
 }
